@@ -1,0 +1,121 @@
+"""AOT compiler: lower Layer-2 models to HLO text artifacts for Rust.
+
+This is the *only* place Python touches the training stack; it runs once at
+build time (``make artifacts``). For every :class:`~compile.model.ModelSpec`
+it emits
+
+- ``<name>.grad.hlo.txt`` — (params, x, y1h) -> (loss, grad_flat)
+- ``<name>.eval.hlo.txt`` — (params, x, y1h) -> (loss, n_correct)
+- ``<name>.meta.json``    — shapes, flat-parameter segment layout, inits
+- plus a ``manifest.json`` over the whole set.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: M.ModelSpec, which: str) -> str:
+    """Lower the grad or eval entry point of one spec to HLO text."""
+    layout = spec.layout()
+    pspec = jax.ShapeDtypeStruct((layout.total,), jax.numpy.float32)
+    xspec, yspec = spec.input_specs()
+    fn = M.grad_fn(spec) if which == "grad" else M.eval_fn(spec)
+    lowered = jax.jit(fn).lower(pspec, xspec, yspec)
+    return to_hlo_text(lowered)
+
+
+def meta_for(spec: M.ModelSpec) -> dict:
+    layout = spec.layout()
+    xspec, yspec = spec.input_specs()
+    return {
+        "name": spec.name,
+        "kind": spec.kind,
+        "batch": spec.batch,
+        "dim": spec.dim,
+        "classes": spec.classes,
+        "hidden": spec.hidden,
+        "vocab": spec.vocab,
+        "seq": spec.seq,
+        "d_model": spec.d_model,
+        "n_heads": spec.n_heads,
+        "n_layers": spec.n_layers,
+        "param_count": layout.total,
+        "segments": layout.meta(),
+        "x_shape": list(xspec.shape),
+        "x_dtype": str(xspec.dtype),
+        "y_shape": list(yspec.shape),
+        "y_dtype": str(yspec.dtype),
+        "outputs": {
+            "grad": ["loss f32[]", f"grad f32[{layout.total}]"],
+            "eval": ["loss f32[]", "n_correct f32[]"],
+        },
+    }
+
+
+def build(out_dir: str, names: list, verbose: bool = True) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+    for name in names:
+        spec = M.SPECS_BY_NAME[name]
+        meta = meta_for(spec)
+        for which in ("grad", "eval"):
+            path = os.path.join(out_dir, f"{name}.{which}.hlo.txt")
+            text = lower_spec(spec, which)
+            with open(path, "w") as f:
+                f.write(text)
+            if verbose:
+                print(f"  wrote {path} ({len(text) / 1024:.0f} KiB)")
+        mpath = os.path.join(out_dir, f"{name}.meta.json")
+        with open(mpath, "w") as f:
+            json.dump(meta, f, indent=2)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "meta": f"{name}.meta.json",
+                "grad": f"{name}.grad.hlo.txt",
+                "eval": f"{name}.eval.hlo.txt",
+                "param_count": meta["param_count"],
+            }
+        )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"manifest: {len(manifest['artifacts'])} artifact families")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        nargs="*",
+        default=[s.name for s in M.DEFAULT_SPECS],
+        choices=[s.name for s in M.DEFAULT_SPECS],
+    )
+    args = ap.parse_args()
+    build(args.out_dir, args.models)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

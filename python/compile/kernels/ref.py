@@ -1,0 +1,33 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Layer-1 kernel has an exact reference here; pytest asserts
+``assert_allclose(kernel, ref)`` across a hypothesis-driven sweep of
+shapes/dtypes (python/tests/test_kernels.py). The references are also the
+ground truth for the Layer-2 model tests and, transitively, for the Rust
+native engine (rust/src/model) which re-implements the same math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(x, w)
+
+
+def bias_relu_ref(x: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.maximum(x + b, 0.0)
+
+
+def softmax_xent_ref(z: jax.Array, y1h: jax.Array) -> jax.Array:
+    """Mean cross-entropy of logits against one-hot labels (stable)."""
+    logp = jax.nn.log_softmax(z, axis=-1)
+    return -jnp.mean(jnp.sum(logp * y1h, axis=-1))
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.matmul(x, w) + b
+
+
+def dense_relu_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.maximum(jnp.matmul(x, w) + b, 0.0)

@@ -1,0 +1,330 @@
+"""Layer-2 JAX models: the paper's workloads over *flat* parameter vectors.
+
+The Rust coordinator owns model state as a flat ``f32[P]`` vector (that is
+what the consensus update (eq. 5-6) averages), so every model here is a pure
+function of ``(params_flat, x, y_onehot)``. The segment layout is exported
+in the artifact metadata (see aot.py) so the Rust side can initialise and
+slice the same vector.
+
+Models (paper §5 / Appendix B):
+- ``lrm``  — logistic regression (cross-entropy).
+- ``mlp2`` — 2-hidden-layer fully-connected net, Table 1 (256-256-10).
+- ``transformer`` — a tiny decoder-only LM, the "modern workload"
+  extension exercised by the e2e example (not in the paper's eval; kept
+  because the coordinator is model-agnostic and this proves it).
+
+All dense GEMMs route through the Layer-1 Pallas kernels.
+"""
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bias_relu, matmul, softmax_xent
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One named tensor inside the flat parameter vector."""
+
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "glorot_uniform" | "zeros" | "normal_scaled"
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclass
+class ParamLayout:
+    segments: List[Segment] = field(default_factory=list)
+
+    @property
+    def total(self) -> int:
+        return sum(s.size for s in self.segments)
+
+    def offsets(self) -> Dict[str, int]:
+        out, off = {}, 0
+        for s in self.segments:
+            out[s.name] = off
+            off += s.size
+        return out
+
+    def unflatten(self, flat: jax.Array) -> Dict[str, jax.Array]:
+        out, off = {}, 0
+        for s in self.segments:
+            out[s.name] = flat[off : off + s.size].reshape(s.shape)
+            off += s.size
+        return out
+
+    def init_flat(self, key: jax.Array) -> jax.Array:
+        """Reference initialiser (tests only — Rust owns init at runtime)."""
+        chunks = []
+        for s in self.segments:
+            key, sub = jax.random.split(key)
+            if s.init == "zeros":
+                chunks.append(jnp.zeros((s.size,), jnp.float32))
+            elif s.init == "glorot_uniform":
+                fan_in = s.shape[0] if len(s.shape) > 1 else s.size
+                fan_out = s.shape[-1]
+                lim = math.sqrt(6.0 / (fan_in + fan_out))
+                chunks.append(
+                    jax.random.uniform(
+                        sub, (s.size,), jnp.float32, minval=-lim, maxval=lim
+                    )
+                )
+            elif s.init == "normal_scaled":
+                scale = 1.0 / math.sqrt(max(1, s.shape[-1]))
+                chunks.append(jax.random.normal(sub, (s.size,), jnp.float32) * scale)
+            else:
+                raise ValueError(f"unknown init {s.init}")
+        return jnp.concatenate(chunks)
+
+    def meta(self) -> List[dict]:
+        out, off = [], 0
+        for s in self.segments:
+            out.append(
+                {
+                    "name": s.name,
+                    "shape": list(s.shape),
+                    "offset": off,
+                    "size": s.size,
+                    "init": s.init,
+                }
+            )
+            off += s.size
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Model specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Static shape description of one artifact family."""
+
+    name: str
+    kind: str  # "lrm" | "mlp2" | "transformer"
+    batch: int
+    # classification models
+    dim: int = 0
+    classes: int = 0
+    hidden: int = 0
+    # transformer
+    vocab: int = 0
+    seq: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_layers: int = 0
+
+    def layout(self) -> ParamLayout:
+        if self.kind == "lrm":
+            return ParamLayout(
+                [
+                    Segment("w", (self.dim, self.classes), "glorot_uniform"),
+                    Segment("b", (self.classes,), "zeros"),
+                ]
+            )
+        if self.kind == "mlp2":
+            h = self.hidden
+            return ParamLayout(
+                [
+                    Segment("w1", (self.dim, h), "glorot_uniform"),
+                    Segment("b1", (h,), "zeros"),
+                    Segment("w2", (h, h), "glorot_uniform"),
+                    Segment("b2", (h,), "zeros"),
+                    Segment("w3", (h, self.classes), "glorot_uniform"),
+                    Segment("b3", (self.classes,), "zeros"),
+                ]
+            )
+        if self.kind == "transformer":
+            dm, v = self.d_model, self.vocab
+            segs = [
+                Segment("embed", (v, dm), "normal_scaled"),
+                Segment("pos", (self.seq, dm), "normal_scaled"),
+            ]
+            for i in range(self.n_layers):
+                p = f"blk{i}."
+                segs += [
+                    Segment(p + "wq", (dm, dm), "glorot_uniform"),
+                    Segment(p + "wk", (dm, dm), "glorot_uniform"),
+                    Segment(p + "wv", (dm, dm), "glorot_uniform"),
+                    Segment(p + "wo", (dm, dm), "glorot_uniform"),
+                    Segment(p + "ln1_g", (dm,), "zeros"),  # stored as gamma-1
+                    Segment(p + "ln1_b", (dm,), "zeros"),
+                    Segment(p + "w_up", (dm, 4 * dm), "glorot_uniform"),
+                    Segment(p + "b_up", (4 * dm,), "zeros"),
+                    Segment(p + "w_dn", (4 * dm, dm), "glorot_uniform"),
+                    Segment(p + "b_dn", (dm,), "zeros"),
+                    Segment(p + "ln2_g", (dm,), "zeros"),
+                    Segment(p + "ln2_b", (dm,), "zeros"),
+                ]
+            segs += [
+                Segment("lnf_g", (dm,), "zeros"),
+                Segment("lnf_b", (dm,), "zeros"),
+                Segment("w_out", (dm, v), "glorot_uniform"),
+            ]
+            return ParamLayout(segs)
+        raise ValueError(f"unknown model kind {self.kind}")
+
+    def input_specs(self) -> Tuple[jax.ShapeDtypeStruct, jax.ShapeDtypeStruct]:
+        """(x, y_onehot) example specs for lowering."""
+        if self.kind == "transformer":
+            x = jax.ShapeDtypeStruct((self.batch, self.seq), jnp.int32)
+            y = jax.ShapeDtypeStruct((self.batch, self.seq, self.vocab), jnp.float32)
+        else:
+            x = jax.ShapeDtypeStruct((self.batch, self.dim), jnp.float32)
+            y = jax.ShapeDtypeStruct((self.batch, self.classes), jnp.float32)
+        return x, y
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (all GEMMs via Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def _lrm_logits(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    return matmul(x, p["w"]) + p["b"]
+
+
+def _mlp2_logits(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    h1 = bias_relu(matmul(x, p["w1"]), p["b1"])
+    h2 = bias_relu(matmul(h1, p["w2"]), p["b2"])
+    return matmul(h2, p["w3"]) + p["b3"]
+
+
+def _layernorm(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * (1.0 + g) + b
+
+
+def _transformer_logits(
+    p: Dict[str, jax.Array], x: jax.Array, spec: ModelSpec
+) -> jax.Array:
+    b, t = x.shape
+    dm, nh = spec.d_model, spec.n_heads
+    hd = dm // nh
+    h = p["embed"][x] + p["pos"][None, :, :]
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for i in range(spec.n_layers):
+        pre = f"blk{i}."
+        hn = _layernorm(h, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        flat = hn.reshape(b * t, dm)
+        q = matmul(flat, p[pre + "wq"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        k = matmul(flat, p[pre + "wk"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        v = matmul(flat, p[pre + "wv"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b * t, dm)
+        h = h + matmul(ctx, p[pre + "wo"]).reshape(b, t, dm)
+        hn = _layernorm(h, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        up = bias_relu(matmul(hn.reshape(b * t, dm), p[pre + "w_up"]), p[pre + "b_up"])
+        dn = matmul(up, p[pre + "w_dn"]) + p[pre + "b_dn"]
+        h = h + dn.reshape(b, t, dm)
+    h = _layernorm(h, p["lnf_g"], p["lnf_b"])
+    return matmul(h.reshape(b * t, dm), p["w_out"]).reshape(b, t, spec.vocab)
+
+
+def logits_fn(spec: ModelSpec) -> Callable:
+    layout = spec.layout()
+
+    def logits(flat: jax.Array, x: jax.Array) -> jax.Array:
+        p = layout.unflatten(flat)
+        if spec.kind == "lrm":
+            return _lrm_logits(p, x)
+        if spec.kind == "mlp2":
+            return _mlp2_logits(p, x)
+        if spec.kind == "transformer":
+            return _transformer_logits(p, x, spec)
+        raise ValueError(spec.kind)
+
+    return logits
+
+
+def loss_fn(spec: ModelSpec) -> Callable:
+    """(flat, x, y_onehot) -> mean cross-entropy scalar."""
+    logits = logits_fn(spec)
+
+    def loss(flat: jax.Array, x: jax.Array, y1h: jax.Array) -> jax.Array:
+        z = logits(flat, x)
+        if spec.kind == "transformer":
+            z = z.reshape(-1, spec.vocab)
+            y1h = y1h.reshape(-1, spec.vocab)
+        return softmax_xent(z, y1h)
+
+    return loss
+
+
+def grad_fn(spec: ModelSpec) -> Callable:
+    """(flat, x, y_onehot) -> (loss, grad_flat) — the training artifact."""
+    vg = jax.value_and_grad(loss_fn(spec))
+
+    def run(flat, x, y1h):
+        loss, g = vg(flat, x, y1h)
+        return loss, g
+
+    return run
+
+
+def eval_fn(spec: ModelSpec) -> Callable:
+    """(flat, x, y_onehot) -> (loss, n_correct) — the evaluation artifact."""
+    logits = logits_fn(spec)
+
+    def run(flat, x, y1h):
+        z = logits(flat, x)
+        if spec.kind == "transformer":
+            zf = z.reshape(-1, spec.vocab)
+            yf = y1h.reshape(-1, spec.vocab)
+        else:
+            zf, yf = z, y1h
+        loss = softmax_xent(zf, yf)
+        correct = jnp.sum(
+            (jnp.argmax(zf, axis=-1) == jnp.argmax(yf, axis=-1)).astype(jnp.float32)
+        )
+        return loss, correct
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Default artifact set (see aot.py / Makefile)
+# ---------------------------------------------------------------------------
+
+DEFAULT_SPECS: List[ModelSpec] = [
+    # Paper §5: LRM on PCA-reduced MNIST / CIFAR-10 analogues.
+    ModelSpec("lrm_d64_c10_b256", "lrm", batch=256, dim=64, classes=10),
+    ModelSpec("lrm_d128_c10_b256", "lrm", batch=256, dim=128, classes=10),
+    # Paper Table 1: 2NN 256-256-10 (inputs PCA'd to 256 dims).
+    ModelSpec("mlp2_d256_h256_c10_b1024", "mlp2", batch=1024, dim=256, classes=10, hidden=256),
+    ModelSpec("mlp2_d64_h256_c10_b256", "mlp2", batch=256, dim=64, classes=10, hidden=256),
+    # Modern-workload extension for the e2e example.
+    ModelSpec(
+        "tfm_v64_t32_d64_h4_l2_b16",
+        "transformer",
+        batch=16,
+        vocab=64,
+        seq=32,
+        d_model=64,
+        n_heads=4,
+        n_layers=2,
+    ),
+    # Tiny smoke spec used by tests.
+    ModelSpec("lrm_d8_c4_b16", "lrm", batch=16, dim=8, classes=4),
+]
+
+SPECS_BY_NAME = {s.name: s for s in DEFAULT_SPECS}

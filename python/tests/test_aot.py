@@ -1,0 +1,102 @@
+"""AOT pipeline tests: lowering, metadata, and HLO-text invariants.
+
+These validate the python half of the interchange contract the Rust
+runtime (rust/src/runtime) relies on: parameter ordering, tuple outputs,
+and parseable HLO text.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+SMOKE = "lrm_d8_c4_b16"
+
+
+@pytest.fixture(scope="module")
+def smoke_hlo():
+    return aot.lower_spec(M.SPECS_BY_NAME[SMOKE], "grad")
+
+
+def test_hlo_text_has_entry(smoke_hlo):
+    assert "ENTRY" in smoke_hlo
+    assert "HloModule" in smoke_hlo
+
+
+def _entry_layout(hlo: str) -> str:
+    """The `entry_computation_layout={(...)->(...)}` clause of the header."""
+    head = hlo[: hlo.index("\n")]
+    key = "entry_computation_layout="
+    return head[head.index(key) + len(key) :]
+
+
+def test_hlo_text_parameter_order(smoke_hlo):
+    """Entry params must be (params_flat, x, y) in that order."""
+    spec = M.SPECS_BY_NAME[SMOKE]
+    layout = spec.layout()
+    sig = _entry_layout(smoke_hlo).split("->")[0]
+    p, x, y = (
+        f"f32[{layout.total}]",
+        f"f32[{spec.batch},{spec.dim}]",
+        f"f32[{spec.batch},{spec.classes}]",
+    )
+    assert sig.index(p) < sig.index(x) < sig.index(y), sig
+
+
+def test_hlo_output_is_tuple(smoke_hlo):
+    """return_tuple=True -> root is a (loss, grad) tuple."""
+    spec = M.SPECS_BY_NAME[SMOKE]
+    layout = spec.layout()
+    ret = _entry_layout(smoke_hlo).split("->")[1]
+    assert ret.strip().startswith("(")  # tuple return type
+    assert "f32[]" in ret  # scalar loss
+    assert f"f32[{layout.total}]" in ret  # flat gradient
+
+
+def test_meta_matches_layout():
+    for spec in M.DEFAULT_SPECS:
+        meta = aot.meta_for(spec)
+        layout = spec.layout()
+        assert meta["param_count"] == layout.total
+        assert len(meta["segments"]) == len(layout.segments)
+        assert meta["x_shape"] == list(spec.input_specs()[0].shape)
+
+
+def test_build_writes_artifact_set(tmp_path):
+    aot.build(str(tmp_path), [SMOKE], verbose=False)
+    names = sorted(os.listdir(tmp_path))
+    assert names == [
+        f"{SMOKE}.eval.hlo.txt",
+        f"{SMOKE}.grad.hlo.txt",
+        f"{SMOKE}.meta.json",
+        "manifest.json",
+    ]
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["artifacts"][0]["name"] == SMOKE
+    meta = json.loads((tmp_path / f"{SMOKE}.meta.json").read_text())
+    assert meta["param_count"] == M.SPECS_BY_NAME[SMOKE].layout().total
+
+
+def test_lowered_grad_executes_and_matches_eager():
+    """jit-compiled artifact function == eager function on same inputs."""
+    spec = M.SPECS_BY_NAME[SMOKE]
+    layout = spec.layout()
+    flat = layout.init_flat(jax.random.PRNGKey(0))
+    rs = np.random.RandomState(0)
+    x = jnp.asarray(rs.randn(spec.batch, spec.dim).astype(np.float32))
+    y = jnp.asarray(
+        np.eye(spec.classes, dtype=np.float32)[
+            rs.randint(0, spec.classes, spec.batch)
+        ]
+    )
+    fn = M.grad_fn(spec)
+    l_eager, g_eager = fn(flat, x, y)
+    l_jit, g_jit = jax.jit(fn)(flat, x, y)
+    np.testing.assert_allclose(float(l_eager), float(l_jit), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_eager), np.asarray(g_jit), rtol=1e-4, atol=1e-6)

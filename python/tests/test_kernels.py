@@ -1,0 +1,220 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including awkward non-tile-multiple sizes) and
+asserts allclose against ``compile.kernels.ref``. This is the CORE
+correctness signal for the compute layer: everything above (the L2 model,
+the AOT artifacts, the Rust PJRT engine) inherits from these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bias_relu, matmul, softmax_xent
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=70)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(seed, *shape):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS)
+def test_matmul_matches_ref(m, k, n, seed):
+    x, w = rand(seed, m, k), rand(seed + 1, k, n)
+    got = matmul(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(
+        np.asarray(got), ref.matmul_ref(x, w), rtol=2e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(1, 1, 1), (128, 128, 128), (129, 127, 130), (256, 64, 10), (7, 300, 3)],
+)
+def test_matmul_edge_shapes(m, k, n):
+    x, w = rand(0, m, k), rand(1, k, n)
+    got = matmul(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(
+        np.asarray(got), ref.matmul_ref(x, w), rtol=5e-4, atol=5e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 40), k=st.integers(2, 40), n=st.integers(2, 40), seed=SEEDS)
+def test_matmul_grad_matches_autodiff_of_ref(m, k, n, seed):
+    x, w = rand(seed, m, k), rand(seed + 7, k, n)
+
+    def f_kernel(x, w):
+        return jnp.sum(matmul(x, w) ** 2)
+
+    def f_ref(x, w):
+        return jnp.sum(ref.matmul_ref(x, w) ** 2)
+
+    gx1, gw1 = jax.grad(f_kernel, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(w))
+    gx2, gw2 = jax.grad(f_ref, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw2), rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_zero_inputs():
+    x = np.zeros((5, 9), np.float32)
+    w = np.zeros((9, 4), np.float32)
+    np.testing.assert_array_equal(np.asarray(matmul(jnp.asarray(x), jnp.asarray(w))), 0.0)
+
+
+def test_matmul_identity():
+    x = rand(3, 16, 16)
+    eye = np.eye(16, dtype=np.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul(jnp.asarray(x), jnp.asarray(eye))), x, rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# bias_relu
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=DIMS, cols=DIMS, seed=SEEDS)
+def test_bias_relu_matches_ref(rows, cols, seed):
+    x, b = rand(seed, rows, cols), rand(seed + 3, cols)
+    got = bias_relu(jnp.asarray(x), jnp.asarray(b))
+    np.testing.assert_allclose(
+        np.asarray(got), ref.bias_relu_ref(x, b), rtol=1e-6, atol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(2, 50), cols=st.integers(2, 50), seed=SEEDS)
+def test_bias_relu_grad(rows, cols, seed):
+    x, b = rand(seed, rows, cols), rand(seed + 3, cols)
+
+    def f1(x, b):
+        return jnp.sum(bias_relu(x, b) * 3.0)
+
+    def f2(x, b):
+        return jnp.sum(ref.bias_relu_ref(x, b) * 3.0)
+
+    g1 = jax.grad(f1, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(b))
+    g2 = jax.grad(f2, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(b))
+    for a, bb in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-5, atol=1e-5)
+
+
+def test_bias_relu_all_negative_is_zero():
+    x = -np.abs(rand(0, 8, 8)) - 1.0
+    b = np.zeros(8, np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(bias_relu(jnp.asarray(x), jnp.asarray(b))), 0.0
+    )
+
+
+# ---------------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------------
+
+
+def onehot(seed, rows, classes):
+    idx = np.random.RandomState(seed).randint(0, classes, size=rows)
+    out = np.zeros((rows, classes), np.float32)
+    out[np.arange(rows), idx] = 1.0
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 70), classes=st.integers(2, 40), seed=SEEDS)
+def test_softmax_xent_matches_ref(rows, classes, seed):
+    z = rand(seed, rows, classes)
+    y = onehot(seed + 1, rows, classes)
+    got = softmax_xent(jnp.asarray(z), jnp.asarray(y))
+    want = ref.softmax_xent_ref(jnp.asarray(z), jnp.asarray(y))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(2, 40), classes=st.integers(2, 20), seed=SEEDS)
+def test_softmax_xent_grad(rows, classes, seed):
+    z = rand(seed, rows, classes)
+    y = onehot(seed + 1, rows, classes)
+    g1 = jax.grad(lambda z: softmax_xent(z, jnp.asarray(y)))(jnp.asarray(z))
+    g2 = jax.grad(lambda z: ref.softmax_xent_ref(z, jnp.asarray(y)))(jnp.asarray(z))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-6)
+
+
+def test_softmax_xent_is_shift_invariant():
+    z = rand(2, 9, 5)
+    y = onehot(3, 9, 5)
+    a = softmax_xent(jnp.asarray(z), jnp.asarray(y))
+    b = softmax_xent(jnp.asarray(z + 100.0), jnp.asarray(y))
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-4)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    z = np.array([[1e4, -1e4], [-1e4, 1e4]], np.float32)
+    y = np.eye(2, dtype=np.float32)
+    got = float(softmax_xent(jnp.asarray(z), jnp.asarray(y)))
+    assert np.isfinite(got) and got < 1e-3
+
+
+def test_softmax_xent_uniform_logits_is_log_c():
+    for c in (2, 10, 33):
+        z = np.zeros((4, c), np.float32)
+        y = onehot(0, 4, c)
+        got = float(softmax_xent(jnp.asarray(z), jnp.asarray(y)))
+        np.testing.assert_allclose(got, np.log(c), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dtype sweeps (TPU deployment story: bf16 activations through the MXU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [(16, 16, 16), (33, 17, 9)])
+def test_matmul_dtypes(dtype, m, k, n):
+    x = jnp.asarray(rand(0, m, k), dtype=dtype)
+    w = jnp.asarray(rand(1, k, n), dtype=dtype)
+    got = matmul(x, w)
+    assert got.dtype == dtype
+    want = ref.matmul_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    tol = 5e-5 if dtype == jnp.float32 else 0.15  # bf16: 8-bit mantissa
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bias_relu_dtypes(dtype):
+    x = jnp.asarray(rand(2, 12, 8), dtype=dtype)
+    b = jnp.asarray(rand(3, 8), dtype=dtype)
+    got = bias_relu(x, b)
+    assert got.dtype == dtype
+    want = ref.bias_relu_ref(x.astype(jnp.float32), b.astype(jnp.float32))
+    tol = 1e-6 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+def test_matmul_block_boundary_shapes():
+    """Shapes straddling the 128 tile edge must not corrupt edges."""
+    for m, k, n in [(127, 128, 129), (128, 129, 127), (255, 1, 257)]:
+        x, w = rand(4, m, k), rand(5, k, n)
+        got = np.asarray(matmul(jnp.asarray(x), jnp.asarray(w)))
+        want = x @ w
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+        # explicitly check the last row/col (padding bugs live there)
+        np.testing.assert_allclose(got[-1, :], want[-1, :], rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(got[:, -1], want[:, -1], rtol=1e-3, atol=1e-3)

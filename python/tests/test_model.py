@@ -1,0 +1,138 @@
+"""Layer-2 correctness: flat-parameter models vs pure-jnp reference models.
+
+The kernel-backed models (compile.model) must agree with hand-written
+pure-jnp versions both in value and in gradient — this is what licenses the
+Rust native engine to use the same math as its oracle.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def ref_loss_for(spec: M.ModelSpec):
+    layout = spec.layout()
+
+    def lrm(flat, x, y):
+        p = layout.unflatten(flat)
+        z = x @ p["w"] + p["b"]
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(z) * y, axis=-1))
+
+    def mlp2(flat, x, y):
+        p = layout.unflatten(flat)
+        h1 = jnp.maximum(x @ p["w1"] + p["b1"], 0.0)
+        h2 = jnp.maximum(h1 @ p["w2"] + p["b2"], 0.0)
+        z = h2 @ p["w3"] + p["b3"]
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(z) * y, axis=-1))
+
+    return {"lrm": lrm, "mlp2": mlp2}[spec.kind]
+
+
+def make_batch(spec, seed=0):
+    rs = np.random.RandomState(seed)
+    if spec.kind == "transformer":
+        x = rs.randint(0, spec.vocab, size=(spec.batch, spec.seq)).astype(np.int32)
+        yi = rs.randint(0, spec.vocab, size=(spec.batch, spec.seq))
+        y = np.eye(spec.vocab, dtype=np.float32)[yi]
+    else:
+        x = rs.randn(spec.batch, spec.dim).astype(np.float32)
+        yi = rs.randint(0, spec.classes, size=spec.batch)
+        y = np.eye(spec.classes, dtype=np.float32)[yi]
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+SMALL = [
+    M.ModelSpec("t_lrm", "lrm", batch=32, dim=12, classes=5),
+    M.ModelSpec("t_mlp2", "mlp2", batch=16, dim=10, classes=4, hidden=24),
+]
+
+
+@pytest.mark.parametrize("spec", SMALL, ids=lambda s: s.name)
+def test_loss_matches_reference(spec):
+    layout = spec.layout()
+    flat = layout.init_flat(jax.random.PRNGKey(1))
+    x, y = make_batch(spec)
+    got = float(M.loss_fn(spec)(flat, x, y))
+    want = float(ref_loss_for(spec)(flat, x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("spec", SMALL, ids=lambda s: s.name)
+def test_grad_matches_reference(spec):
+    layout = spec.layout()
+    flat = layout.init_flat(jax.random.PRNGKey(2))
+    x, y = make_batch(spec, seed=3)
+    loss1, g1 = M.grad_fn(spec)(flat, x, y)
+    loss2, g2 = jax.value_and_grad(ref_loss_for(spec))(flat, x, y)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", SMALL, ids=lambda s: s.name)
+def test_sgd_descends(spec):
+    """A few SGD steps on a fixed batch must reduce the loss."""
+    layout = spec.layout()
+    flat = layout.init_flat(jax.random.PRNGKey(3))
+    x, y = make_batch(spec, seed=4)
+    fn = jax.jit(M.grad_fn(spec))
+    loss0, g = fn(flat, x, y)
+    for _ in range(5):
+        flat = flat - 0.5 * g
+        loss, g = fn(flat, x, y)
+    assert float(loss) < float(loss0)
+
+
+def test_layout_roundtrip():
+    spec = M.ModelSpec("t", "mlp2", batch=4, dim=6, classes=3, hidden=8)
+    layout = spec.layout()
+    flat = jnp.arange(layout.total, dtype=jnp.float32)
+    p = layout.unflatten(flat)
+    # segments tile the vector exactly, in order, no overlap
+    off = 0
+    for seg in layout.segments:
+        v = p[seg.name].reshape(-1)
+        np.testing.assert_array_equal(
+            np.asarray(v), np.arange(off, off + seg.size, dtype=np.float32)
+        )
+        off += seg.size
+    assert off == layout.total
+
+
+def test_layout_meta_consistent():
+    for spec in M.DEFAULT_SPECS:
+        layout = spec.layout()
+        meta = layout.meta()
+        assert sum(m["size"] for m in meta) == layout.total
+        off = 0
+        for m in meta:
+            assert m["offset"] == off
+            assert m["size"] == int(np.prod(m["shape"]))
+            off += m["size"]
+
+
+def test_transformer_param_count():
+    spec = M.SPECS_BY_NAME["tfm_v64_t32_d64_h4_l2_b16"]
+    layout = spec.layout()
+    dm, v, t, L = spec.d_model, spec.vocab, spec.seq, spec.n_layers
+    expect = v * dm + t * dm
+    expect += L * (4 * dm * dm + 4 * dm + dm * 4 * dm + 4 * dm + 4 * dm * dm + dm)
+    expect += 2 * dm + dm * v
+    assert layout.total == expect
+
+
+def test_eval_counts_correct_predictions():
+    spec = M.ModelSpec("t", "lrm", batch=8, dim=4, classes=3)
+    layout = spec.layout()
+    # Zero params -> uniform logits -> argmax = class 0 for every row.
+    flat = jnp.zeros((layout.total,))
+    x = jnp.asarray(np.random.RandomState(0).randn(8, 4).astype(np.float32))
+    yi = np.array([0, 0, 1, 2, 0, 1, 2, 0])
+    y = jnp.asarray(np.eye(3, dtype=np.float32)[yi])
+    loss, correct = M.eval_fn(spec)(flat, x, y)
+    assert float(correct) == float((yi == 0).sum())
+    np.testing.assert_allclose(float(loss), math.log(3), rtol=1e-5)

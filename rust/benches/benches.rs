@@ -1,0 +1,284 @@
+//! `cargo bench` — hot-path and end-to-end benchmarks.
+//!
+//! No criterion in the offline vendor set, so this carries a small
+//! criterion-style harness: warmup, N timed samples, mean/median/p95,
+//! and a throughput column where meaningful. Benchmarks:
+//!
+//! hot paths (the Layer-3 per-iteration costs):
+//!   mix/*          — eq. (6) Metropolis averaging over flat params
+//!   metropolis/*   — consensus-matrix construction
+//!   dtur/step      — Algorithm 2 threshold decision
+//!   grad/native-*  — native engine gradient (LRM / 2NN)
+//!   grad/pjrt-*    — PJRT artifact gradient (when artifacts built)
+//!
+//! end-to-end (figure-scale workloads, small iteration counts):
+//!   iter/cb-dybw, iter/cb-full — one full training iteration
+//!
+//! Filter with `cargo bench -- <substring>`.
+
+use std::time::Instant;
+
+use dybw::consensus::mixing::ParamBuffers;
+use dybw::consensus::ConsensusMatrix;
+use dybw::coordinator::dtur::Dtur;
+use dybw::coordinator::setup::{Backend, Setup};
+use dybw::coordinator::Algorithm;
+use dybw::data::batch::BatchSampler;
+use dybw::data::synthetic::{gaussian_mixture, MixtureSpec};
+use dybw::engine::{AnyBatch, GradEngine, NativeEngine};
+use dybw::graph::topology;
+use dybw::model::ModelMeta;
+use dybw::straggler::{Dist, StragglerModel};
+use dybw::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// mini-harness
+// ---------------------------------------------------------------------------
+
+struct BenchResult {
+    name: String,
+    mean_ns: f64,
+    median_ns: f64,
+    p95_ns: f64,
+    throughput: Option<String>,
+}
+
+fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchResult {
+    // warmup
+    for _ in 0..3.max(samples / 10) {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    times.sort_by(f64::total_cmp);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        median_ns: times[times.len() / 2],
+        p95_ns: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+        throughput: None,
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.1}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    println!(
+        "{:<34} mean {:>10}  median {:>10}  p95 {:>10}{}",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.median_ns),
+        fmt_ns(r.p95_ns),
+        r.throughput
+            .as_ref()
+            .map(|t| format!("  [{t}]"))
+            .unwrap_or_default()
+    );
+}
+
+fn wants(filter: &Option<String>, name: &str) -> bool {
+    filter.as_ref().map_or(true, |f| name.contains(f.as_str()))
+}
+
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let filter: Option<String> = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-') && a != "--bench");
+    println!("# dybw benchmarks (filter: {:?})\n", filter);
+
+    bench_mixing(&filter);
+    bench_metropolis(&filter);
+    bench_dtur(&filter);
+    bench_native_grad(&filter);
+    bench_pjrt_grad(&filter);
+    bench_end_to_end(&filter);
+}
+
+fn bench_mixing(filter: &Option<String>) {
+    for (n, p) in [(6usize, 85_002usize), (6, 1_000_000), (16, 85_002)] {
+        let name = format!("mix/n{n}_p{}k", p / 1000);
+        if !wants(filter, &name) {
+            continue;
+        }
+        let mut rng = Rng::new(0);
+        let g = topology::random_connected(n, 0.5, &mut rng);
+        let pm = ConsensusMatrix::metropolis_full(&g);
+        let init: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..p).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut bufs = ParamBuffers::from_initial(init);
+        let mut r = bench(&name, 30, || bufs.mix(&pm));
+        // bytes touched per mix ≈ reads of all sources per row + writes
+        let edges: usize = (0..n).map(|j| pm.row(j).len()).sum();
+        let bytes = (edges * p + n * p) * 4;
+        r.throughput = Some(format!(
+            "{:.1} GB/s",
+            bytes as f64 / r.mean_ns
+        ));
+        print_result(&r);
+    }
+}
+
+fn bench_metropolis(filter: &Option<String>) {
+    for n in [6usize, 16, 64] {
+        let name = format!("metropolis/n{n}");
+        if !wants(filter, &name) {
+            continue;
+        }
+        let mut rng = Rng::new(1);
+        let g = topology::random_connected(n, 0.3, &mut rng);
+        let mut flip = false;
+        let r = bench(&name, 200, || {
+            let active: Vec<bool> = (0..n).map(|i| (i % 2 == 0) ^ flip).collect();
+            flip = !flip;
+            let p = ConsensusMatrix::metropolis(&g, &active);
+            std::hint::black_box(p.n);
+        });
+        print_result(&r);
+    }
+}
+
+fn bench_dtur(filter: &Option<String>) {
+    let name = "dtur/step_n16";
+    if !wants(filter, name) {
+        return;
+    }
+    let mut rng = Rng::new(2);
+    let g = topology::random_connected(16, 0.3, &mut rng);
+    let mut dtur = Dtur::new(&g);
+    let model = StragglerModel::homogeneous(16, Dist::ShiftedExp { base: 0.05, rate: 20.0 });
+    let r = bench(name, 500, || {
+        let t = model.sample_iteration(&mut rng);
+        std::hint::black_box(dtur.step(&t).theta);
+    });
+    print_result(&r);
+}
+
+fn grad_fixture(meta: &ModelMeta, seed: u64) -> (Vec<f32>, AnyBatch, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut data = gaussian_mixture(
+        &MixtureSpec::mnist_like(meta.dim, meta.batch * 2),
+        &mut rng,
+    );
+    data.classes = meta.classes;
+    for y in data.y.iter_mut() {
+        *y %= meta.classes as u32;
+    }
+    let batch = AnyBatch::Dense(BatchSampler::new(seed).sample(&data, meta.batch));
+    let w = meta.init_params(&mut rng);
+    let g = vec![0.0f32; meta.param_count];
+    (w, batch, g)
+}
+
+fn bench_native_grad(filter: &Option<String>) {
+    let cases = [
+        ("grad/native-lrm_d64_b256", ModelMeta::lrm(64, 10, 256)),
+        ("grad/native-mlp2_d64_b256", ModelMeta::mlp2(64, 256, 10, 256)),
+        (
+            "grad/native-mlp2_d256_b1024",
+            ModelMeta::mlp2(256, 256, 10, 1024),
+        ),
+    ];
+    for (name, meta) in cases {
+        if !wants(filter, name) {
+            continue;
+        }
+        let (w, batch, mut g) = grad_fixture(&meta, 3);
+        let mut eng = NativeEngine::new(meta.clone()).unwrap();
+        let mut r = bench(name, 20, || {
+            std::hint::black_box(eng.grad_into(&w, &batch, &mut g).unwrap());
+        });
+        let flops = grad_flops(&meta);
+        r.throughput = Some(format!("{:.2} GFLOP/s", flops / r.mean_ns));
+        print_result(&r);
+    }
+}
+
+/// Approximate FLOPs of one fwd+bwd (GEMMs only).
+fn grad_flops(meta: &ModelMeta) -> f64 {
+    let b = meta.batch as f64;
+    let d = meta.dim as f64;
+    let c = meta.classes as f64;
+    match meta.kind {
+        dybw::model::ModelKind::Lrm => 3.0 * 2.0 * b * d * c,
+        dybw::model::ModelKind::Mlp2 => {
+            let h = meta.hidden as f64;
+            // fwd: bdh + bhh + bhc ; bwd: ~2x
+            3.0 * 2.0 * (b * d * h + b * h * h + b * h * c)
+        }
+        _ => 0.0,
+    }
+}
+
+fn bench_pjrt_grad(filter: &Option<String>) {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(set) = dybw::runtime::ArtifactSet::load(&dir) else {
+        println!("(skipping grad/pjrt-*: run `make artifacts`)");
+        return;
+    };
+    for name_art in ["lrm_d64_c10_b256", "mlp2_d64_h256_c10_b256"] {
+        let name = format!("grad/pjrt-{name_art}");
+        if !wants(filter, &name) {
+            continue;
+        }
+        let art = set.get(name_art).unwrap();
+        let client = dybw::runtime::shared_client().unwrap();
+        let model = dybw::runtime::LoadedModel::compile(art, client).unwrap();
+        let (w, batch, mut g) = grad_fixture(&model.meta, 4);
+        let mut r = bench(&name, 20, || {
+            std::hint::black_box(model.grad_into(&w, &batch, &mut g).unwrap());
+        });
+        let flops = grad_flops(&model.meta);
+        r.throughput = Some(format!("{:.2} GFLOP/s", flops / r.mean_ns));
+        print_result(&r);
+    }
+}
+
+fn bench_end_to_end(filter: &Option<String>) {
+    for (name, algo) in [
+        ("iter/cb-dybw", Algorithm::CbDybw),
+        ("iter/cb-full", Algorithm::CbFull),
+        ("iter/ps-sync", Algorithm::PsSync),
+    ] {
+        if !wants(filter, name) {
+            continue;
+        }
+        let mut s = Setup::default();
+        s.algo = algo;
+        s.backend = Backend::Native;
+        s.train_n = 6_000;
+        s.test_n = 1_024;
+        s.train.iters = 10;
+        s.train.eval_every = 0;
+        let r = bench(name, 8, || {
+            let mut trainer = s.build_sim().unwrap();
+            let h = trainer.run().unwrap();
+            std::hint::black_box(h.iters.len());
+        });
+        // report per-iteration cost (10 iterations per sample, ignoring
+        // the fixed setup cost which dominates small runs)
+        println!(
+            "{:<34} mean {:>10}  (~{} per training iteration incl. setup)",
+            name,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.mean_ns / 10.0)
+        );
+    }
+}

@@ -1,0 +1,167 @@
+//! Dense consensus-matrix analysis helpers.
+//!
+//! Tools behind the theory-facing tests and the `dybw analyze` command:
+//! products Φ_{k:s} = P(s)···P(k) (eq. 8), deviation from the uniform
+//! matrix (Lemma 2's geometric bound), and the spectral gap 1-λ₂ that
+//! governs the consensus mixing rate.
+
+use super::ConsensusMatrix;
+
+pub type Dense = Vec<Vec<f64>>;
+
+/// C = A · B (row-major dense).
+pub fn matmul(a: &Dense, b: &Dense) -> Dense {
+    let n = a.len();
+    let m = b[0].len();
+    let k = b.len();
+    let mut c = vec![vec![0.0; m]; n];
+    for i in 0..n {
+        for l in 0..k {
+            let av = a[i][l];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..m {
+                c[i][j] += av * b[l][j];
+            }
+        }
+    }
+    c
+}
+
+/// Φ over a sequence of consensus matrices (applied left-to-right).
+pub fn product(mats: &[ConsensusMatrix]) -> Dense {
+    assert!(!mats.is_empty());
+    let mut acc = mats[0].to_dense();
+    for m in &mats[1..] {
+        acc = matmul(&acc, &m.to_dense());
+    }
+    acc
+}
+
+/// max_{i,j} |Φ_ij - 1/N| — Lemma 2's quantity.
+pub fn uniform_deviation(phi: &Dense) -> f64 {
+    let n = phi.len() as f64;
+    phi.iter()
+        .flatten()
+        .map(|&v| (v - 1.0 / n).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Second-largest eigenvalue modulus of a doubly-stochastic symmetric P,
+/// estimated by power iteration on the mean-deflated operator
+/// x ↦ P(x - x̄·1). For symmetric P this is the mixing factor per round.
+pub fn lambda2(p: &ConsensusMatrix, iters: usize) -> f64 {
+    let d = p.to_dense();
+    let n = d.len();
+    let mut x: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 - 0.5).collect();
+    deflate(&mut x);
+    normalize(&mut x);
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                y[i] += d[i][j] * x[j];
+            }
+        }
+        deflate(&mut y);
+        lam = norm(&y);
+        if lam < 1e-300 {
+            return 0.0;
+        }
+        for v in y.iter_mut() {
+            *v /= lam;
+        }
+        x = y;
+    }
+    lam
+}
+
+fn deflate(x: &mut [f64]) {
+    let mean = x.iter().sum::<f64>() / x.len() as f64;
+    for v in x.iter_mut() {
+        *v -= mean;
+    }
+}
+
+fn norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+fn normalize(x: &mut [f64]) {
+    let nn = norm(x);
+    if nn > 0.0 {
+        for v in x.iter_mut() {
+            *v /= nn;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn product_of_doubly_stochastic_is_doubly_stochastic() {
+        let g = topology::random_connected(6, 0.5, &mut Rng::new(1));
+        let mats: Vec<ConsensusMatrix> = (0..5)
+            .map(|s| {
+                let mut rng = Rng::new(s);
+                let active: Vec<bool> = (0..6).map(|_| rng.uniform() < 0.7).collect();
+                ConsensusMatrix::metropolis(&g, &active)
+            })
+            .collect();
+        let phi = product(&mats);
+        for row in &phi {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-10);
+        }
+        for j in 0..6 {
+            let s: f64 = phi.iter().map(|r| r[j]).sum();
+            assert!((s - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn phi_converges_to_uniform_geometrically() {
+        // Lemma 1/2: |Φ_{k:1}(i,j) - 1/N| → 0 geometrically.
+        let g = topology::random_connected(6, 0.5, &mut Rng::new(2));
+        let p = ConsensusMatrix::metropolis_full(&g);
+        let mut phi = p.to_dense();
+        let mut prev = uniform_deviation(&phi);
+        let mut shrank = 0;
+        for _ in 0..100 {
+            phi = matmul(&phi, &p.to_dense());
+            let dev = uniform_deviation(&phi);
+            if dev < prev {
+                shrank += 1;
+            }
+            prev = dev;
+        }
+        assert!(prev < 1e-6, "deviation={prev}");
+        assert!(shrank >= 90);
+    }
+
+    #[test]
+    fn lambda2_bounds() {
+        let g = topology::complete(8);
+        let p = ConsensusMatrix::metropolis_full(&g);
+        let l = lambda2(&p, 200);
+        assert!(l < 0.2, "complete graph should mix almost instantly: {l}");
+
+        let ring = topology::ring(16);
+        let pr = ConsensusMatrix::metropolis_full(&ring);
+        let lr = lambda2(&pr, 500);
+        assert!(lr > 0.8 && lr < 1.0, "ring mixes slowly: {lr}");
+    }
+
+    #[test]
+    fn lambda2_identity_is_one() {
+        let p = ConsensusMatrix::identity(5);
+        let l = lambda2(&p, 100);
+        assert!((l - 1.0).abs() < 1e-9, "{l}");
+    }
+}

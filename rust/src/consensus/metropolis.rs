@@ -1,0 +1,212 @@
+//! Metropolis weights on the time-varying active graph (Assumption 1).
+//!
+//! At iteration k only a subset of workers participates (those whose local
+//! update beat the DTUR threshold); the active edge set is
+//! `E_k = {(i,j) ∈ E : i and j both active}`. The Metropolis rule
+//!
+//! ```text
+//! P_ij(k) = 1 / (1 + max(p_i(k), p_j(k)))   if (i,j) ∈ E_k
+//! P_ii(k) = 1 - Σ_{j ∈ S_i(k)} P_ij(k)
+//! P_ij(k) = 0                                otherwise
+//! ```
+//!
+//! with `p_i(k) = |S_i(k)|` the active degree, yields a **doubly
+//! stochastic, symmetric** matrix for every k — the property Theorems 1-2
+//! lean on (products Φ_{k:s} stay doubly stochastic, Lemma 1). Workers
+//! that miss the threshold get the identity row `P_ii = 1`: they keep
+//! their local update and rejoin later (the backup-worker semantics).
+
+use crate::graph::Graph;
+
+/// Sparse row-major doubly-stochastic consensus matrix.
+///
+/// `rows[j]` lists `(i, P_ij)` over the *incoming* support of worker j —
+/// exactly the worker set whose parameters j averages in eq. (6). By
+/// symmetry of the Metropolis rule the same structure serves both row and
+/// column views.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConsensusMatrix {
+    pub n: usize,
+    rows: Vec<Vec<(usize, f64)>>,
+}
+
+impl ConsensusMatrix {
+    /// Identity (every worker keeps its own parameters).
+    pub fn identity(n: usize) -> Self {
+        ConsensusMatrix {
+            n,
+            rows: (0..n).map(|i| vec![(i, 1.0)]).collect(),
+        }
+    }
+
+    /// Metropolis matrix for the given participation pattern.
+    ///
+    /// `active[v]` marks workers whose local update arrived within the
+    /// iteration's threshold. Edges contribute only when both endpoints
+    /// are active.
+    pub fn metropolis(g: &Graph, active: &[bool]) -> Self {
+        let n = g.n();
+        assert_eq!(active.len(), n);
+        // active degree p_i(k)
+        let deg: Vec<usize> = (0..n)
+            .map(|v| {
+                if !active[v] {
+                    0
+                } else {
+                    g.neighbors(v).filter(|&u| active[u]).count()
+                }
+            })
+            .collect();
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        for j in 0..n {
+            if !active[j] || deg[j] == 0 {
+                rows[j].push((j, 1.0));
+                continue;
+            }
+            let mut self_weight = 1.0;
+            for i in g.neighbors(j).filter(|&u| active[u]) {
+                let w = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+                rows[j].push((i, w));
+                self_weight -= w;
+            }
+            rows[j].push((j, self_weight));
+            debug_assert!(self_weight > -1e-12, "negative self weight at {j}");
+        }
+        for r in rows.iter_mut() {
+            r.sort_unstable_by_key(|&(i, _)| i);
+        }
+        ConsensusMatrix { n, rows }
+    }
+
+    /// Full participation (cb-Full baseline): every worker active.
+    pub fn metropolis_full(g: &Graph) -> Self {
+        Self::metropolis(g, &vec![true; g.n()])
+    }
+
+    /// Incoming support of worker j: the S_j(k) ∪ {j} it averages over.
+    pub fn row(&self, j: usize) -> &[(usize, f64)] {
+        &self.rows[j]
+    }
+
+    /// β(k): smallest strictly positive entry (paper's β, per-matrix).
+    pub fn min_positive(&self) -> f64 {
+        self.rows
+            .iter()
+            .flatten()
+            .map(|&(_, w)| w)
+            .filter(|&w| w > 1e-15)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Dense copy (analysis/tests only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut m = vec![vec![0.0; self.n]; self.n];
+        for (j, row) in self.rows.iter().enumerate() {
+            for &(i, w) in row {
+                m[j][i] = w;
+            }
+        }
+        m
+    }
+
+    /// Verify double stochasticity + non-negativity to `tol`.
+    pub fn check_doubly_stochastic(&self, tol: f64) -> Result<(), String> {
+        let mut col = vec![0.0f64; self.n];
+        for (j, row) in self.rows.iter().enumerate() {
+            let mut s = 0.0;
+            for &(i, w) in row {
+                if w < -tol {
+                    return Err(format!("negative weight P[{j}][{i}] = {w}"));
+                }
+                s += w;
+                col[i] += w;
+            }
+            if (s - 1.0).abs() > tol {
+                return Err(format!("row {j} sums to {s}"));
+            }
+        }
+        for (i, &c) in col.iter().enumerate() {
+            if (c - 1.0).abs() > tol {
+                return Err(format!("col {i} sums to {c}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_participation_doubly_stochastic() {
+        for seed in 0..10 {
+            let g = topology::random_connected(8, 0.4, &mut Rng::new(seed));
+            let p = ConsensusMatrix::metropolis_full(&g);
+            p.check_doubly_stochastic(1e-12).unwrap();
+        }
+    }
+
+    #[test]
+    fn partial_participation_doubly_stochastic() {
+        let mut rng = Rng::new(3);
+        for seed in 0..20 {
+            let g = topology::random_connected(10, 0.35, &mut Rng::new(seed));
+            let active: Vec<bool> = (0..10).map(|_| rng.uniform() < 0.6).collect();
+            let p = ConsensusMatrix::metropolis(&g, &active);
+            p.check_doubly_stochastic(1e-12).unwrap();
+        }
+    }
+
+    #[test]
+    fn inactive_worker_keeps_identity_row() {
+        let g = topology::complete(4);
+        let active = vec![true, false, true, true];
+        let p = ConsensusMatrix::metropolis(&g, &active);
+        assert_eq!(p.row(1), &[(1, 1.0)]);
+        // and nobody averages from worker 1
+        for j in [0usize, 2, 3] {
+            assert!(p.row(j).iter().all(|&(i, _)| i != 1));
+        }
+    }
+
+    #[test]
+    fn symmetric_weights() {
+        let g = topology::random_connected(9, 0.4, &mut Rng::new(7));
+        let p = ConsensusMatrix::metropolis_full(&g);
+        let d = p.to_dense();
+        for a in 0..9 {
+            for b in 0..9 {
+                assert!((d[a][b] - d[b][a]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_hand_computed_triangle() {
+        // Triangle graph, all active: deg = 2 everywhere,
+        // off-diagonal = 1/3, diagonal = 1/3.
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]);
+        let p = ConsensusMatrix::metropolis_full(&g);
+        let d = p.to_dense();
+        for a in 0..3 {
+            for b in 0..3 {
+                assert!((d[a][b] - 1.0 / 3.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn min_positive_of_identity_is_one() {
+        assert_eq!(ConsensusMatrix::identity(5).min_positive(), 1.0);
+    }
+
+    #[test]
+    fn all_inactive_gives_identity() {
+        let g = topology::ring(6);
+        let p = ConsensusMatrix::metropolis(&g, &vec![false; 6]);
+        assert_eq!(p, ConsensusMatrix::identity(6));
+    }
+}

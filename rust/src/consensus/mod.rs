@@ -1,0 +1,14 @@
+//! Consensus-matrix substrate (paper Assumption 1 + eq. (6)).
+//!
+//! - [`metropolis`] — non-negative Metropolis weight rule on the
+//!   time-varying active graph; guarantees every `P(k)` doubly stochastic.
+//! - [`mixing`] — the eq. (6) parameter-averaging step over flat vectors.
+//! - [`matrix`] — dense matrix helpers: products Φ_{k:s}, uniform-limit
+//!   deviation (Lemma 2), spectral gap — used by analysis tools + tests.
+
+pub mod compress;
+pub mod matrix;
+pub mod metropolis;
+pub mod mixing;
+
+pub use metropolis::ConsensusMatrix;

@@ -1,0 +1,219 @@
+//! Training algorithms: who participates, how long an iteration takes.
+//!
+//! Each algorithm maps the iteration's compute-time vector t_·(k) to an
+//! [`IterPlan`]: the participation mask (⇒ the consensus matrix P(k)),
+//! the iteration duration T(k), and whether mixing is gossip (eq. 6) or
+//! exact parameter-server averaging.
+//!
+//! | name        | waits for                      | mixing    | paper role |
+//! |-------------|--------------------------------|-----------|------------|
+//! | cb-DyBW     | first P-link (DTUR θ(k))       | Metropolis| Alg. 1+2   |
+//! | cb-Full     | all workers                    | Metropolis| §5 baseline|
+//! | cb-Static b | fastest N-b workers (fixed b)  | Metropolis| §1 static  |
+//! | PS-Sync     | all workers                    | exact avg | §1 related |
+//! | PS-Backup b | fastest N-b workers            | exact avg | [34]-style |
+//!
+//! The static/PS variants use a *global* threshold (the (N-b)-th order
+//! statistic of t) rather than per-node neighbour picks so the active set
+//! stays symmetric and P(k) doubly stochastic — see DESIGN.md §Baselines.
+
+use super::dtur::Dtur;
+use crate::graph::Graph;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Algorithm {
+    /// The paper's contribution: dynamic backup workers via DTUR.
+    CbDybw,
+    /// Conventional consensus with full participation.
+    CbFull,
+    /// Fixed number of backup workers b (manually configured, the
+    /// stale-synchronous strawman the paper argues against).
+    CbStaticBackup { b: usize },
+    /// Synchronous parameter server (exact averaging, waits for all).
+    PsSync,
+    /// Parameter server with b backup workers (Chen et al. 2016).
+    PsBackup { b: usize },
+}
+
+impl Algorithm {
+    pub fn name(&self) -> String {
+        match self {
+            Algorithm::CbDybw => "cb-DyBW".into(),
+            Algorithm::CbFull => "cb-Full".into(),
+            Algorithm::CbStaticBackup { b } => format!("cb-Static(b={b})"),
+            Algorithm::PsSync => "PS-Sync".into(),
+            Algorithm::PsBackup { b } => format!("PS-Backup(b={b})"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "cb-dybw" | "dybw" => Some(Algorithm::CbDybw),
+            "cb-full" | "full" => Some(Algorithm::CbFull),
+            "ps-sync" | "ps" => Some(Algorithm::PsSync),
+            _ => {
+                if let Some(b) = s.strip_prefix("cb-static:") {
+                    b.parse().ok().map(|b| Algorithm::CbStaticBackup { b })
+                } else if let Some(b) = s.strip_prefix("ps-backup:") {
+                    b.parse().ok().map(|b| Algorithm::PsBackup { b })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    pub fn is_ps(&self) -> bool {
+        matches!(self, Algorithm::PsSync | Algorithm::PsBackup { .. })
+    }
+
+    pub fn needs_dtur(&self) -> bool {
+        matches!(self, Algorithm::CbDybw)
+    }
+}
+
+/// The per-iteration plan derived from compute times.
+#[derive(Debug, Clone)]
+pub struct IterPlan {
+    /// T(k): the iteration's duration on the virtual clock.
+    pub duration: f64,
+    /// θ(k) when a threshold rule produced the plan (NaN otherwise).
+    pub theta: f64,
+    /// Participation mask (all true for full/PS-sync).
+    pub active: Vec<bool>,
+    /// Exact averaging (PS) instead of Metropolis gossip.
+    pub ps_style: bool,
+}
+
+impl IterPlan {
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// avg_j b_j(k): mean backup workers per node — Fig. 1(d)'s series.
+    /// b_j(k) = |N_j| - |active neighbours of j| (0 for PS-style full).
+    pub fn backup_avg(&self, g: &Graph) -> f64 {
+        let n = g.n();
+        let mut total = 0usize;
+        for j in 0..n {
+            total += g.neighbors(j).filter(|&i| !self.active[i]).count();
+        }
+        total as f64 / n as f64
+    }
+}
+
+/// Compute the plan for iteration k.
+pub fn plan(
+    algo: Algorithm,
+    t: &[f64],
+    dtur: Option<&mut Dtur>,
+) -> IterPlan {
+    let n = t.len();
+    match algo {
+        Algorithm::CbDybw => {
+            let dtur = dtur.expect("cb-DyBW requires DTUR state");
+            let dec = dtur.step(t);
+            IterPlan {
+                duration: dec.theta,
+                theta: dec.theta,
+                active: dec.active,
+                ps_style: false,
+            }
+        }
+        Algorithm::CbFull | Algorithm::PsSync => IterPlan {
+            duration: t.iter().copied().fold(0.0, f64::max),
+            theta: f64::NAN,
+            active: vec![true; n],
+            ps_style: algo.is_ps(),
+        },
+        Algorithm::CbStaticBackup { b } | Algorithm::PsBackup { b } => {
+            let wait = n.saturating_sub(b).max(1);
+            let mut sorted: Vec<f64> = t.to_vec();
+            sorted.sort_by(f64::total_cmp);
+            let theta = sorted[wait - 1];
+            IterPlan {
+                duration: theta,
+                theta,
+                active: t.iter().map(|&tj| tj <= theta).collect(),
+                ps_style: algo.is_ps(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Algorithm::parse("cb-dybw"), Some(Algorithm::CbDybw));
+        assert_eq!(Algorithm::parse("full"), Some(Algorithm::CbFull));
+        assert_eq!(
+            Algorithm::parse("cb-static:2"),
+            Some(Algorithm::CbStaticBackup { b: 2 })
+        );
+        assert_eq!(
+            Algorithm::parse("ps-backup:1"),
+            Some(Algorithm::PsBackup { b: 1 })
+        );
+        assert_eq!(Algorithm::parse("wat"), None);
+    }
+
+    #[test]
+    fn full_waits_for_slowest() {
+        let t = vec![0.1, 0.9, 0.2];
+        let p = plan(Algorithm::CbFull, &t, None);
+        assert_eq!(p.duration, 0.9);
+        assert_eq!(p.active_count(), 3);
+        assert!(!p.ps_style);
+    }
+
+    #[test]
+    fn static_backup_order_statistic() {
+        let t = vec![0.5, 0.1, 0.9, 0.3];
+        let p = plan(Algorithm::CbStaticBackup { b: 1 }, &t, None);
+        // waits for fastest 3 -> threshold = 0.5
+        assert_eq!(p.duration, 0.5);
+        assert_eq!(p.active, vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn ps_backup_is_ps_style() {
+        let t = vec![0.5, 0.1, 0.9, 0.3];
+        let p = plan(Algorithm::PsBackup { b: 2 }, &t, None);
+        assert!(p.ps_style);
+        assert_eq!(p.active_count(), 2);
+        assert_eq!(p.duration, 0.3);
+    }
+
+    #[test]
+    fn backup_avg_counts_inactive_neighbours() {
+        let g = topology::complete(4);
+        let p = IterPlan {
+            duration: 1.0,
+            theta: 1.0,
+            active: vec![true, true, true, false],
+            ps_style: false,
+        };
+        // every node has 3 neighbours; nodes 0-2 see one inactive (node 3),
+        // node 3 sees none inactive
+        assert!((p.backup_avg(&g) - 3.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dybw_duration_leq_full() {
+        // Corollary 4: E[T_p] <= E[T_full]. Check the per-draw analogue:
+        // DTUR's theta never exceeds max(t).
+        let g = topology::random_connected(8, 0.4, &mut crate::util::rng::Rng::new(0));
+        let mut dtur = Dtur::new(&g);
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..100 {
+            let t: Vec<f64> = (0..8).map(|_| rng.uniform_in(0.05, 1.0)).collect();
+            let tmax = t.iter().copied().fold(0.0, f64::max);
+            let p = plan(Algorithm::CbDybw, &t, Some(&mut dtur));
+            assert!(p.duration <= tmax + 1e-12);
+        }
+    }
+}

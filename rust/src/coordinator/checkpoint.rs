@@ -1,0 +1,183 @@
+//! Checkpointing: save/resume training state (framework feature).
+//!
+//! A checkpoint captures iteration counter, virtual clock, and every
+//! worker's parameter vector. Format: a JSON header (versioned, with a
+//! content checksum) followed by raw little-endian f32 data — readable
+//! from numpy with a two-line loader, cheap to write from the hot loop.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::consensus::mixing::ParamBuffers;
+use crate::util::json::Json;
+
+const MAGIC: &str = "dybw-ckpt-v1";
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub iteration: usize,
+    pub clock: f64,
+    pub model: String,
+    pub params: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn from_buffers(iteration: usize, clock: f64, model: &str, bufs: &ParamBuffers) -> Self {
+        Checkpoint {
+            iteration,
+            clock,
+            model: model.to_string(),
+            params: (0..bufs.n()).map(|j| bufs.get(j).to_vec()).collect(),
+        }
+    }
+
+    /// FNV-1a over the raw parameter bytes (corruption check).
+    fn checksum(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for row in &self.params {
+            for v in row {
+                for b in v.to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x1000_0000_01b3);
+                }
+            }
+        }
+        h
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut header = Json::obj();
+        header
+            .set("magic", MAGIC.into())
+            .set("iteration", self.iteration.into())
+            .set("clock", self.clock.into())
+            .set("model", self.model.as_str().into())
+            .set("workers", self.params.len().into())
+            .set("dim", self.params.first().map(|p| p.len()).unwrap_or(0).into())
+            .set("checksum", format!("{:016x}", self.checksum()).into());
+        let htext = header.to_string();
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&(htext.len() as u64).to_le_bytes())?;
+        f.write_all(htext.as_bytes())?;
+        for row in &self.params {
+            // SAFETY: f32 slice -> bytes view of the same length*4
+            let bytes = unsafe {
+                std::slice::from_raw_parts(row.as_ptr() as *const u8, row.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("cannot open checkpoint {}: {e}", path.display()))?;
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        anyhow::ensure!(hlen < 1 << 20, "absurd header length");
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("bad checkpoint header: {e}"))?;
+        anyhow::ensure!(
+            header.get("magic").and_then(|v| v.as_str()) == Some(MAGIC),
+            "not a dybw checkpoint"
+        );
+        let workers = header.get("workers").and_then(|v| v.as_usize()).unwrap_or(0);
+        let dim = header.get("dim").and_then(|v| v.as_usize()).unwrap_or(0);
+        let mut params = Vec::with_capacity(workers);
+        let mut raw = vec![0u8; dim * 4];
+        for _ in 0..workers {
+            f.read_exact(&mut raw)?;
+            let mut row = vec![0.0f32; dim];
+            for (i, chunk) in raw.chunks_exact(4).enumerate() {
+                row[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            params.push(row);
+        }
+        let ckpt = Checkpoint {
+            iteration: header.get("iteration").and_then(|v| v.as_usize()).unwrap_or(0),
+            clock: header.get("clock").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            model: header
+                .get("model")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            params,
+        };
+        let want = header.get("checksum").and_then(|v| v.as_str()).unwrap_or("");
+        let got = format!("{:016x}", ckpt.checksum());
+        anyhow::ensure!(want == got, "checkpoint corrupted: checksum {got} != {want}");
+        Ok(ckpt)
+    }
+
+    pub fn into_buffers(self) -> ParamBuffers {
+        ParamBuffers::from_initial(self.params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Rng::new(7);
+        Checkpoint {
+            iteration: 123,
+            clock: 45.5,
+            model: "lrm_d8_c4_b16".into(),
+            params: (0..4)
+                .map(|_| (0..36).map(|_| rng.normal() as f32).collect())
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("dybw_ckpt_test");
+        let path = dir.join("a.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        let l = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, l);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = std::env::temp_dir().join("dybw_ckpt_corrupt");
+        let path = dir.join("b.ckpt");
+        sample().save(&path).unwrap();
+        // flip one byte in the payload
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 3;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("corrupted"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_non_checkpoints() {
+        let dir = std::env::temp_dir().join("dybw_ckpt_reject");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, b"\x05\x00\x00\x00\x00\x00\x00\x00hello").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn buffers_roundtrip() {
+        let c = sample();
+        let bufs = c.clone().into_buffers();
+        let c2 = Checkpoint::from_buffers(c.iteration, c.clock, &c.model, &bufs);
+        assert_eq!(c.params, c2.params);
+    }
+}

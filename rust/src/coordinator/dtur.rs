@@ -1,0 +1,259 @@
+//! DTUR — Distributed Threshold-based Update Rule (paper §4.1, Alg. 2).
+//!
+//! cb-DyBW needs, at every iteration k, a threshold θ(k): workers whose
+//! local update lands within θ(k) join S(k) and mix; the rest become
+//! backup workers for the round. DTUR picks θ(k) as the *earliest* moment
+//! at which some not-yet-established link of the connecting path P
+//! completes (both endpoints done), which simultaneously (a) makes θ as
+//! small as the topology allows — minimising per-iteration time, eq. (21)
+//! — and (b) guarantees that after each d-iteration epoch every link of P
+//! has been established at least once, i.e. the union graph
+//! E_{md+1} ∪ … ∪ E_{md+d} ⊇ P is connected: exactly Assumption 2's
+//! B-bounded-connectivity with B = d, which the convergence proof needs.
+//!
+//! Epoch bookkeeping: P' collects established P-links; it resets every d
+//! iterations. If the epoch's remaining iterations are exactly the
+//! remaining unestablished links, DTUR must establish a *new* link each
+//! round (the paper's "iteration k continues until one such link is
+//! established").
+
+use crate::graph::{paths, Graph};
+
+/// Decision for one iteration.
+#[derive(Debug, Clone)]
+pub struct DturDecision {
+    /// θ(k): the iteration's cut-off time (= the iteration duration).
+    pub theta: f64,
+    /// active[j] ⇔ t_j(k) ≤ θ(k) — worker j participates in eq. (6).
+    pub active: Vec<bool>,
+    /// Path links newly established this iteration (indices into `path`).
+    pub established_now: Vec<usize>,
+    /// Epoch position l ∈ [1, d] AFTER this iteration.
+    pub epoch_pos: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Dtur {
+    /// The connecting path P (d = path.len() links spanning all workers).
+    path: Vec<(usize, usize)>,
+    /// P': established[i] ⇔ path[i] ∈ P' this epoch.
+    established: Vec<bool>,
+    /// Iterations completed in the current epoch (0..d).
+    epoch_pos: usize,
+}
+
+impl Dtur {
+    pub fn new(g: &Graph) -> Self {
+        let path = paths::connecting_path(g);
+        let established = vec![false; path.len()];
+        Dtur {
+            path,
+            established,
+            epoch_pos: 0,
+        }
+    }
+
+    /// d — the epoch length (= |P|).
+    pub fn d(&self) -> usize {
+        self.path.len()
+    }
+
+    pub fn path(&self) -> &[(usize, usize)] {
+        &self.path
+    }
+
+    /// Is path link `idx` already in P' this epoch?
+    pub fn is_established(&self, idx: usize) -> bool {
+        self.established[idx]
+    }
+
+    /// One iteration of Algorithm 2 given the compute times t_j(k).
+    pub fn step(&mut self, t: &[f64]) -> DturDecision {
+        assert!(!self.path.is_empty(), "DTUR needs >= 2 workers");
+        // θ(k) = min over unestablished P-links of the link completion time
+        // max(t_i, t_j) — the first moment a desired link exists.
+        let mut theta = f64::INFINITY;
+        for (idx, &(a, b)) in self.path.iter().enumerate() {
+            if !self.established[idx] {
+                theta = theta.min(t[a].max(t[b]));
+            }
+        }
+        // Degenerate case (possible when a caller feeds +inf for workers
+        // that never finished): no unestablished link can complete. Fall
+        // back to waiting out all finite finishers — the iteration makes
+        // no path progress, the epoch simply continues next round.
+        if !theta.is_finite() {
+            theta = t
+                .iter()
+                .copied()
+                .filter(|x| x.is_finite())
+                .fold(0.0, f64::max);
+            let active: Vec<bool> = t.iter().map(|&tj| tj <= theta).collect();
+            self.epoch_pos += 1;
+            if self.epoch_pos >= self.d() {
+                self.established.iter_mut().for_each(|e| *e = false);
+                self.epoch_pos = 0;
+            }
+            return DturDecision {
+                theta,
+                active,
+                established_now: Vec::new(),
+                epoch_pos: self.epoch_pos,
+            };
+        }
+        // Everyone whose update beat θ participates.
+        let active: Vec<bool> = t.iter().map(|&tj| tj <= theta).collect();
+        // All P-links whose endpoints both beat θ establish now (at least
+        // the argmin link).
+        let mut established_now = Vec::new();
+        for (idx, &(a, b)) in self.path.iter().enumerate() {
+            if !self.established[idx] && t[a].max(t[b]) <= theta {
+                self.established[idx] = true;
+                established_now.push(idx);
+            }
+        }
+        debug_assert!(!established_now.is_empty());
+        self.epoch_pos += 1;
+        // Epoch ends after d iterations; P' resets (paper: "P' is reset to
+        // be empty at the end of this epoch"). Also reset early if every
+        // link established — remaining iterations would have no target.
+        if self.epoch_pos >= self.d() || self.established.iter().all(|&e| e) {
+            self.established.iter_mut().for_each(|e| *e = false);
+            self.epoch_pos = 0;
+        }
+        DturDecision {
+            theta,
+            active,
+            established_now,
+            epoch_pos: self.epoch_pos,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology;
+    use crate::straggler::{Dist, StragglerModel};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn theta_is_min_link_completion() {
+        let g = topology::ring(4); // path will span 4 nodes, 3 links
+        let mut dtur = Dtur::new(&g);
+        assert_eq!(dtur.d(), 3);
+        let t = vec![0.1, 0.5, 0.2, 0.9];
+        let dec = dtur.step(&t);
+        // fastest possible P-link completion: the link among path links
+        // with smallest max(t_i, t_j)
+        let want = dtur
+            .path()
+            .iter()
+            .map(|&(a, b)| t[a].max(t[b]))
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(dec.theta, want);
+        // active = beat theta
+        for (j, &a) in dec.active.iter().enumerate() {
+            assert_eq!(a, t[j] <= dec.theta);
+        }
+        assert!(!dec.established_now.is_empty());
+    }
+
+    #[test]
+    fn epoch_establishes_whole_path() {
+        // Over one epoch (d iterations), every P-link must establish —
+        // the Assumption-2 connectivity guarantee.
+        let mut rng = Rng::new(1);
+        for seed in 0..10 {
+            let g = topology::random_connected(8, 0.35, &mut Rng::new(seed));
+            let mut dtur = Dtur::new(&g);
+            let d = dtur.d();
+            let model = StragglerModel::homogeneous(8, Dist::Uniform { lo: 0.05, hi: 0.3 });
+            let mut seen = vec![false; d];
+            for _ in 0..d {
+                let t = model.sample_iteration(&mut rng);
+                let dec = dtur.step(&t);
+                for idx in dec.established_now {
+                    seen[idx] = true;
+                }
+                if dec.epoch_pos == 0 {
+                    break; // epoch ended (possibly early)
+                }
+            }
+            assert!(
+                seen.iter().all(|&s| s),
+                "seed {seed}: epoch ended without covering P: {seen:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn epoch_resets() {
+        let g = topology::ring(5);
+        let mut dtur = Dtur::new(&g);
+        let d = dtur.d();
+        let mut rng = Rng::new(3);
+        let model = StragglerModel::homogeneous(5, Dist::Uniform { lo: 0.1, hi: 0.2 });
+        let mut resets = 0;
+        for _ in 0..3 * d {
+            let t = model.sample_iteration(&mut rng);
+            let dec = dtur.step(&t);
+            if dec.epoch_pos == 0 {
+                resets += 1;
+            }
+        }
+        assert!(resets >= 3, "expected >= 3 epoch resets, got {resets}");
+    }
+
+    #[test]
+    fn straggler_excluded_but_path_progresses() {
+        let g = topology::complete(5);
+        let mut dtur = Dtur::new(&g);
+        // worker 4 is a massive straggler every iteration
+        for _ in 0..dtur.d() {
+            let t = vec![0.1, 0.12, 0.11, 0.13, 10.0];
+            let dec = dtur.step(&t);
+            // theta never waits for the straggler unless its link is the
+            // only one left
+            if dec.theta < 10.0 {
+                assert!(!dec.active[4]);
+            }
+        }
+    }
+
+    #[test]
+    fn infinite_times_degenerate_case_is_safe() {
+        // Regression (live driver, debug builds): when every remaining
+        // unestablished P-link touches a worker that never finished
+        // (t = +inf), step must not panic and must not mark progress.
+        let g = topology::ring(4); // path: 3 links
+        let mut dtur = Dtur::new(&g);
+        // establish exactly the links NOT touching worker w_inf first
+        let t_all = vec![0.1, 0.1, 0.1, 0.1];
+        let d1 = dtur.step(&t_all); // establishes all 3 links at once
+        assert_eq!(d1.established_now.len(), 3);
+        // new epoch; now feed +inf for two adjacent workers so SOME links
+        // are uncompletable; run until only inf-links remain
+        for _ in 0..dtur.d() * 2 {
+            let mut t = vec![0.05, 0.06, f64::INFINITY, f64::INFINITY];
+            let dec = dtur.step(&t);
+            assert!(dec.theta.is_finite());
+            assert!(!dec.active[2] || dec.theta == f64::INFINITY);
+            t[2] = 0.05; // irrelevant; loop just exercises state
+        }
+    }
+
+    #[test]
+    fn at_least_one_new_link_per_iteration() {
+        let mut rng = Rng::new(5);
+        let g = topology::random_connected(10, 0.3, &mut Rng::new(42));
+        let mut dtur = Dtur::new(&g);
+        let model = StragglerModel::homogeneous(10, Dist::ShiftedExp { base: 0.05, rate: 10.0 });
+        for _ in 0..50 {
+            let t = model.sample_iteration(&mut rng);
+            let dec = dtur.step(&t);
+            assert!(!dec.established_now.is_empty());
+            assert!(dec.theta.is_finite() && dec.theta > 0.0);
+        }
+    }
+}

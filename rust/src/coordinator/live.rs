@@ -1,0 +1,475 @@
+//! Live driver: real threads, real clocks, real termination commands.
+//!
+//! One OS thread per worker; gradient compute goes through the shared
+//! [`ComputeServer`](crate::engine::server); straggler slowness is
+//! injected as interruptible sleep on top of the real compute time. The
+//! leader (main thread) plays the paper's distributed protocol verbatim:
+//!
+//! 1. all workers start iteration k simultaneously;
+//! 2. as local updates complete, workers announce them (`Done`);
+//! 3. for cb-DyBW the leader watches for the first establishment of a
+//!    not-yet-established link of P — at that moment it *terminates the
+//!    iteration network-wide* (the paper's "send a command to the rest
+//!    workers to terminate the current iteration"); stragglers abort
+//!    their wait, keep their local update, and sit the round out;
+//! 4. participants exchange parameters (shared board = the network) and
+//!    apply the Metropolis average; everyone barriers into k+1.
+//!
+//! This driver exists to prove the stack composes end-to-end in wall
+//! clock (e2e example); the figures use the deterministic sim driver.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::consensus::ConsensusMatrix;
+use crate::engine::server::ComputeClient;
+use crate::engine::{AnyBatch, BatchSource};
+use crate::graph::Graph;
+use crate::metrics::{EvalRecord, IterRecord, RunHistory};
+use crate::straggler::StragglerModel;
+use crate::util::rng::Rng;
+
+use super::algorithm::Algorithm;
+use super::dtur::Dtur;
+use super::sim::TrainConfig;
+
+/// Leader -> worker messages.
+enum Cmd {
+    Start { k: usize, delay_s: f64 },
+    Mix { active: Vec<bool> },
+    Stop,
+}
+
+/// Worker -> leader messages.
+struct DoneMsg {
+    loss: f32,
+    terminated: bool,
+    /// Compute failed (shape mismatch, engine error, ...). The leader
+    /// aborts the run with a real error instead of hanging.
+    failed: bool,
+}
+
+struct WorkerChans {
+    cmd_tx: Sender<Cmd>,
+    done_rx: Receiver<DoneMsg>,
+    ack_rx: Receiver<usize>,
+}
+
+/// Shared "network": slot j holds worker j's latest locally-updated
+/// parameters w̃_j(k) (post eq. 5), then its post-mix w_j(k).
+type Board = Arc<Vec<Mutex<Vec<f32>>>>;
+
+pub struct LiveOutcome {
+    pub history: RunHistory,
+    /// Real seconds the whole run took (incl. eval overhead).
+    pub wall_seconds: f64,
+}
+
+/// Run training with real threads. `time_scale` converts the straggler
+/// model's virtual seconds into real sleep seconds (e.g. 0.05 makes a
+/// "2s" straggler a 100ms sleep so the example finishes quickly).
+#[allow(clippy::too_many_arguments)]
+pub fn run_live(
+    graph: Graph,
+    algo: Algorithm,
+    cfg: TrainConfig,
+    straggler: StragglerModel,
+    compute: ComputeClient,
+    sources: Vec<Box<dyn BatchSource>>,
+    eval_batches: Vec<AnyBatch>,
+    initial: Vec<f32>,
+    time_scale: f64,
+) -> anyhow::Result<LiveOutcome> {
+    anyhow::ensure!(
+        matches!(algo, Algorithm::CbDybw | Algorithm::CbFull),
+        "live driver implements the consensus algorithms (got {})",
+        algo.name()
+    );
+    let n = graph.n();
+    anyhow::ensure!(sources.len() == n && straggler.n() == n);
+    let run_start = Instant::now();
+
+    let board: Board = Arc::new((0..n).map(|_| Mutex::new(initial.clone())).collect());
+    // iteration id whose in-flight waits should abort (0 = none)
+    let terminate = Arc::new(AtomicUsize::new(0));
+
+    // ---- spawn workers ----------------------------------------------------
+    let mut chans = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for (j, source) in sources.into_iter().enumerate() {
+        let (cmd_tx, cmd_rx) = channel::<Cmd>();
+        let (done_tx, done_rx) = channel::<DoneMsg>();
+        let (ack_tx, ack_rx) = channel::<usize>();
+        let board = Arc::clone(&board);
+        let terminate = Arc::clone(&terminate);
+        let graph = graph.clone();
+        let compute = compute.clone();
+        let cfg_l = cfg.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("dybw-worker-{j}"))
+                .spawn(move || {
+                    worker_loop(
+                        j, graph, cfg_l, compute, source, board, terminate, cmd_rx, done_tx,
+                        ack_tx,
+                    )
+                })?,
+        );
+        chans.push(WorkerChans {
+            cmd_tx,
+            done_rx,
+            ack_rx,
+        });
+    }
+
+    // ---- leader loop -------------------------------------------------------
+    let mut history = RunHistory::new(&algo.name(), "live", "synthetic", n);
+    let mut dtur = algo.needs_dtur().then(|| Dtur::new(&graph));
+    let mut rng = Rng::new(cfg.seed ^ 0x11FE);
+    let mut clock = 0.0f64;
+
+    // initial eval
+    history
+        .evals
+        .push(eval_on_board(&board, &eval_batches, &compute, 0, clock)?);
+
+    for k in 1..=cfg.iters {
+        let t = straggler.sample_iteration(&mut rng);
+        let iter_start = Instant::now();
+        for (j, ch) in chans.iter().enumerate() {
+            ch.cmd_tx
+                .send(Cmd::Start {
+                    k,
+                    delay_s: t[j] * time_scale,
+                })
+                .map_err(|_| anyhow::anyhow!("worker {j} died"))?;
+        }
+
+        // Collect Done; for cb-DyBW fire the termination command at the
+        // moment the first unestablished P-link completes.
+        let mut done = vec![false; n];
+        let mut losses = vec![0.0f32; n];
+        let mut terminated_flag = vec![false; n];
+        let mut fired = !algo.needs_dtur(); // cb-Full never terminates
+        let mut pending = n;
+        let mut theta_real = f64::NAN;
+        while pending > 0 {
+            for (j, ch) in chans.iter().enumerate() {
+                if done[j] {
+                    continue;
+                }
+                if let Ok(msg) = ch.done_rx.try_recv() {
+                    anyhow::ensure!(
+                        !msg.failed,
+                        "worker {j} compute failed at iteration {k} (see log)"
+                    );
+                    done[j] = true;
+                    losses[j] = msg.loss;
+                    terminated_flag[j] = msg.terminated;
+                    pending -= 1;
+                    if !fired {
+                        let finished: Vec<bool> = (0..n)
+                            .map(|i| done[i] && !terminated_flag[i])
+                            .collect();
+                        if let Some(d) = dtur.as_ref() {
+                            let hit = d
+                                .path()
+                                .iter()
+                                .enumerate()
+                                .any(|(idx, &(a, b))| {
+                                    !d.is_established(idx) && finished[a] && finished[b]
+                                });
+                            if hit {
+                                fired = true;
+                                theta_real = iter_start.elapsed().as_secs_f64();
+                                terminate.store(k, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                }
+            }
+            if pending > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        let duration = if theta_real.is_nan() {
+            iter_start.elapsed().as_secs_f64()
+        } else {
+            theta_real
+        };
+        terminate.store(0, Ordering::SeqCst);
+
+        // Active set + DTUR bookkeeping (advance the epoch state with the
+        // *virtual* times so sim and live share Algorithm 2 semantics).
+        let active: Vec<bool> = if let Some(d) = dtur.as_mut() {
+            // feed DTUR the realised finish pattern: genuine finishers get
+            // their virtual t, terminated ones +inf so they're excluded
+            let t_eff: Vec<f64> = (0..n)
+                .map(|j| if terminated_flag[j] { f64::INFINITY } else { t[j] })
+                .collect();
+            d.step(&t_eff).active
+        } else {
+            vec![true; n]
+        };
+
+        for ch in &chans {
+            ch.cmd_tx
+                .send(Cmd::Mix {
+                    active: active.clone(),
+                })
+                .map_err(|_| anyhow::anyhow!("worker died"))?;
+        }
+        for ch in &chans {
+            ch.ack_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker died before ack"))?;
+        }
+
+        clock += duration;
+        let active_count = active.iter().filter(|&&a| a).count();
+        let backup_avg = {
+            let mut total = 0usize;
+            for j in 0..n {
+                total += graph.neighbors(j).filter(|&i| !active[i]).count();
+            }
+            total as f64 / n as f64
+        };
+        history.iters.push(IterRecord {
+            k,
+            duration,
+            clock,
+            train_loss: losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64,
+            active: active_count,
+            backup_avg,
+            theta: theta_real,
+        });
+
+        if cfg.eval_every > 0 && k % cfg.eval_every == 0 {
+            history
+                .evals
+                .push(eval_on_board(&board, &eval_batches, &compute, k, clock)?);
+        }
+    }
+
+    for ch in &chans {
+        let _ = ch.cmd_tx.send(Cmd::Stop);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+    }
+    Ok(LiveOutcome {
+        history,
+        wall_seconds: run_start.elapsed().as_secs_f64(),
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    j: usize,
+    graph: Graph,
+    cfg: TrainConfig,
+    compute: ComputeClient,
+    mut source: Box<dyn BatchSource>,
+    board: Board,
+    terminate: Arc<AtomicUsize>,
+    cmd_rx: Receiver<Cmd>,
+    done_tx: Sender<DoneMsg>,
+    ack_tx: Sender<usize>,
+) {
+    let mut w: Vec<f32> = board[j].lock().unwrap().clone();
+    let mut wtilde: Vec<f32> = w.clone();
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            Cmd::Stop => break,
+            Cmd::Start { k, delay_s } => {
+                let start = Instant::now();
+                let batch = source.next_train(cfg.batch_size);
+                let (loss, grad) = match compute.grad(w.clone(), batch) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        crate::util::log::log(
+                            crate::util::log::Level::Error,
+                            "live",
+                            &format!("worker {j} compute failed: {e}"),
+                        );
+                        let _ = done_tx.send(DoneMsg {
+                            loss: f32::NAN,
+                            terminated: false,
+                            failed: true,
+                        });
+                        break;
+                    }
+                };
+                // Straggler injection: wait out the remaining virtual
+                // compute time, abortable by the termination command.
+                let mut terminated = false;
+                while start.elapsed().as_secs_f64() < delay_s {
+                    if terminate.load(Ordering::SeqCst) == k {
+                        terminated = true;
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(300));
+                }
+                // eq. (5): local update (kept even when terminated).
+                let eta = cfg.lr(k) as f32;
+                wtilde.copy_from_slice(&w);
+                crate::util::vecmath::axpy(&mut wtilde, -eta, &grad);
+                *board[j].lock().unwrap() = wtilde.clone();
+                let _ = done_tx.send(DoneMsg {
+                    loss,
+                    terminated,
+                    failed: false,
+                });
+            }
+            Cmd::Mix { active } => {
+                if active[j] {
+                    // eq. (6) over the active neighbourhood.
+                    let p = ConsensusMatrix::metropolis(&graph, &active);
+                    let row = p.row(j);
+                    let mut next = vec![0.0f32; w.len()];
+                    for &(i, wt) in row {
+                        let src = board[i].lock().unwrap();
+                        crate::util::vecmath::axpy(&mut next, wt as f32, &src);
+                    }
+                    w = next;
+                } else {
+                    w.copy_from_slice(&wtilde);
+                }
+                *board[j].lock().unwrap() = w.clone();
+                let _ = ack_tx.send(j);
+            }
+        }
+    }
+}
+
+fn eval_on_board(
+    board: &Board,
+    eval_batches: &[AnyBatch],
+    compute: &ComputeClient,
+    k: usize,
+    clock: f64,
+) -> anyhow::Result<EvalRecord> {
+    let n = board.len();
+    let dim = board[0].lock().unwrap().len();
+    let mut avg = vec![0.0f32; dim];
+    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for slot in board.iter() {
+        rows.push(slot.lock().unwrap().clone());
+    }
+    for r in &rows {
+        crate::util::vecmath::axpy(&mut avg, 1.0 / n as f32, r);
+    }
+    let consensus_error = rows
+        .iter()
+        .map(|r| crate::util::vecmath::dist(r, &avg))
+        .fold(0.0, f64::max);
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in eval_batches {
+        let (l, c) = compute.eval(avg.clone(), b.clone())?;
+        let r = b.rows();
+        loss_sum += l as f64 * r as f64;
+        correct += c;
+        total += r;
+    }
+    Ok(EvalRecord {
+        k,
+        clock,
+        test_loss: loss_sum / total.max(1) as f64,
+        test_error: 1.0 - correct as f64 / total.max(1) as f64,
+        consensus_error,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::setup::Setup;
+    use crate::data::batch::BatchSampler;
+    use crate::data::partition::{split, Partition};
+    use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
+    use crate::engine::server::ComputeServer;
+    use crate::engine::{DenseSource, NativeEngine};
+    use crate::graph::topology;
+    use crate::model::ModelMeta;
+    use crate::straggler::Dist;
+
+    fn run(algo: Algorithm, iters: usize) -> LiveOutcome {
+        let n = 4;
+        let mut rng = Rng::new(3);
+        let g = topology::random_connected(n, 0.6, &mut rng);
+        let meta = ModelMeta::lrm(8, 10, 32);
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(8, 1500), &mut rng);
+        let (train, test) = data.split(1280);
+        let shards = split(&train, n, Partition::Iid, &mut rng);
+        let sources: Vec<Box<dyn BatchSource>> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(j, s)| Box::new(DenseSource::new(s, 50 + j as u64)) as Box<dyn BatchSource>)
+            .collect();
+        let eval: Vec<AnyBatch> = BatchSampler::full_batches(
+            &test.subset(&(0..192).collect::<Vec<_>>()),
+            32,
+        )
+        .into_iter()
+        .map(AnyBatch::Dense)
+        .collect();
+        let m2 = meta.clone();
+        let (_srv, client) =
+            ComputeServer::spawn(move || Ok(Box::new(NativeEngine::new(m2)?) as _)).unwrap();
+        let straggler = StragglerModel {
+            base: Dist::Uniform { lo: 0.02, hi: 0.05 },
+            worker_scale: vec![1.0; n],
+            persistent: vec![1.0; n],
+            transient_prob: 0.2,
+            transient_factor: 6.0,
+            force_one_straggler: true,
+            outages: Vec::new(),
+        };
+        let cfg = TrainConfig {
+            iters,
+            batch_size: 32,
+            eval_every: iters,
+            seed: 5,
+            ..Default::default()
+        };
+        let init = meta.init_params(&mut rng);
+        run_live(
+            g, algo, cfg, straggler, client, sources, eval, init, 1.0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn live_dybw_trains_in_real_time() {
+        let out = run(Algorithm::CbDybw, 12);
+        assert_eq!(out.history.iters.len(), 12);
+        let first = &out.history.evals[0];
+        let last = out.history.evals.last().unwrap();
+        assert!(last.test_loss < first.test_loss, "{first:?} -> {last:?}");
+        assert!(out.wall_seconds > 0.1); // really slept
+    }
+
+    #[test]
+    fn live_dybw_faster_than_full() {
+        let a = run(Algorithm::CbDybw, 10);
+        let b = run(Algorithm::CbFull, 10);
+        // cb-Full waits out every 6x straggler sleep; DyBW terminates them.
+        assert!(
+            a.history.total_time() < b.history.total_time(),
+            "dybw {:.3}s vs full {:.3}s",
+            a.history.total_time(),
+            b.history.total_time()
+        );
+    }
+
+    #[test]
+    fn setup_used_by_example_compiles() {
+        // ensure Setup and live driver agree on types (smoke)
+        let s = Setup::default();
+        let _ = s.to_json();
+    }
+}

@@ -1,0 +1,22 @@
+//! Layer-3 coordinator: the paper's training algorithms.
+//!
+//! - [`dtur`] — Algorithm 2, the threshold rule choosing backup workers.
+//! - [`algorithm`] — cb-DyBW (Algorithm 1), the cb-Full baseline, and the
+//!   static-backup / parameter-server comparison points.
+//! - [`sim`] — the deterministic discrete-event driver: real gradients
+//!   (native or PJRT engines), virtual compute times from the straggler
+//!   model. Regenerates every figure reproducibly from one seed.
+//! - [`live`] — the wall-clock driver: one OS thread per worker, real
+//!   sleeps for stragglers, gradient execution through a compute-server
+//!   thread. Used by the e2e example to prove the stack composes.
+//! - [`setup`] — config -> trainer wiring shared by CLI/experiments.
+
+pub mod algorithm;
+pub mod checkpoint;
+pub mod dtur;
+pub mod live;
+pub mod setup;
+pub mod sim;
+
+pub use algorithm::Algorithm;
+pub use sim::{SimTrainer, TrainConfig};

@@ -1,0 +1,445 @@
+//! Experiment wiring: declarative spec -> ready-to-run trainer.
+//!
+//! Shared by the CLI (`dybw train`), the figure harnesses
+//! (src/experiments), the examples, and the benches, so every entry point
+//! builds runs the exact same way. Specs serialise to/from JSON (the
+//! config-file format of `dybw train --config`).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::coordinator::{Algorithm, SimTrainer, TrainConfig};
+use crate::data::batch::BatchSampler;
+use crate::data::partition::{split, Partition};
+use crate::data::synthetic::{gaussian_mixture, markov_sequences, MixtureSpec};
+use crate::engine::{AnyBatch, BatchSource, DenseSource, GradEngine, NativeEngine, SeqSource};
+use crate::graph::topology::{self, Topology};
+use crate::model::{ModelKind, ModelMeta};
+use crate::runtime::{shared_client, ArtifactSet, LoadedModel, PjrtEngine};
+use crate::straggler::{Dist, StragglerModel};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Which dataset profile to synthesise (paper: MNIST / CIFAR-10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetProfile {
+    MnistLike,
+    CifarLike,
+}
+
+impl DatasetProfile {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mnist" | "mnist-like" => Some(DatasetProfile::MnistLike),
+            "cifar" | "cifar-like" => Some(DatasetProfile::CifarLike),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetProfile::MnistLike => "mnist-like",
+            DatasetProfile::CifarLike => "cifar-like",
+        }
+    }
+
+    pub fn mixture(&self, dim: usize, n: usize) -> MixtureSpec {
+        match self {
+            DatasetProfile::MnistLike => MixtureSpec::mnist_like(dim, n),
+            DatasetProfile::CifarLike => MixtureSpec::cifar_like(dim, n),
+        }
+    }
+}
+
+/// Compute backend.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust engines (lrm/mlp2 only).
+    Native,
+    /// AOT JAX/Pallas artifacts through PJRT.
+    Pjrt { artifacts_dir: PathBuf },
+}
+
+/// Full experiment specification.
+#[derive(Debug, Clone)]
+pub struct Setup {
+    pub workers: usize,
+    pub topology: Topology,
+    pub algo: Algorithm,
+    /// Model selected by artifact-family name (e.g. "lrm_d64_c10_b256").
+    /// Shapes are parsed out of the name's meta when PJRT, or rebuilt
+    /// natively for lrm/mlp2.
+    pub model: String,
+    pub dataset: DatasetProfile,
+    pub partition: Partition,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub straggler_base: Dist,
+    pub straggler_factor: f64,
+    pub force_straggler: bool,
+    pub backend: Backend,
+    pub train: TrainConfig,
+}
+
+impl Default for Setup {
+    fn default() -> Self {
+        Setup {
+            workers: 6,
+            topology: Topology::RandomConnected,
+            algo: Algorithm::CbDybw,
+            model: "lrm_d64_c10_b256".into(),
+            dataset: DatasetProfile::MnistLike,
+            partition: Partition::Iid,
+            train_n: 12_000,
+            test_n: 2_048,
+            straggler_base: Dist::ShiftedExp { base: 0.08, rate: 25.0 },
+            straggler_factor: 4.0,
+            force_straggler: true,
+            backend: Backend::Native,
+            train: TrainConfig::default(),
+        }
+    }
+}
+
+impl Setup {
+    /// Resolve the ModelMeta: from the artifact set when PJRT, otherwise
+    /// reconstructed natively from the model name.
+    pub fn resolve_meta(&self) -> anyhow::Result<ModelMeta> {
+        match &self.backend {
+            Backend::Pjrt { artifacts_dir } => {
+                let art = ArtifactSet::load_family(artifacts_dir, &self.model)?;
+                Ok(art.meta)
+            }
+            Backend::Native => parse_model_name(&self.model),
+        }
+    }
+
+    fn build_engine(&self, meta: &ModelMeta) -> anyhow::Result<Box<dyn GradEngine>> {
+        match &self.backend {
+            Backend::Native => Ok(Box::new(NativeEngine::new(meta.clone())?)),
+            Backend::Pjrt { artifacts_dir } => {
+                let art = ArtifactSet::load_family(artifacts_dir, &self.model)?;
+                let model = LoadedModel::compile(&art, shared_client()?)?;
+                Ok(Box::new(PjrtEngine::new(Rc::new(model))))
+            }
+        }
+    }
+
+    /// Build the simulation trainer.
+    pub fn build_sim(&self) -> anyhow::Result<SimTrainer> {
+        let meta = self.resolve_meta()?;
+        let mut train_cfg = self.train.clone();
+        // artifact batch shape is fixed; keep config consistent
+        train_cfg.batch_size = meta.batch;
+
+        let mut rng = Rng::new(self.train.seed);
+        let graph = topology::build(self.topology, self.workers, &mut rng);
+
+        let mut straggler = StragglerModel {
+            base: self.straggler_base,
+            worker_scale: (0..self.workers).map(|_| rng.uniform_in(0.8, 1.25)).collect(),
+            persistent: vec![1.0; self.workers],
+            transient_prob: 0.15,
+            transient_factor: self.straggler_factor,
+            force_one_straggler: self.force_straggler,
+            outages: Vec::new(),
+        };
+        if !self.force_straggler && self.straggler_factor <= 1.0 {
+            straggler.transient_prob = 0.0;
+        }
+
+        let (sources, eval_batches) = self.build_data(&meta, &mut rng)?;
+        let engine = self.build_engine(&meta)?;
+        let init = meta.init_params(&mut rng);
+        SimTrainer::new(
+            graph,
+            self.algo,
+            train_cfg,
+            straggler,
+            engine,
+            sources,
+            eval_batches,
+            init,
+        )
+    }
+
+    /// Synthesize + partition data, build per-worker sources + eval set.
+    pub fn build_data(
+        &self,
+        meta: &ModelMeta,
+        rng: &mut Rng,
+    ) -> anyhow::Result<(Vec<Box<dyn BatchSource>>, Vec<AnyBatch>)> {
+        match meta.kind {
+            ModelKind::Transformer => {
+                let train = markov_sequences(meta.vocab, meta.seq, self.train_n, rng);
+                let test = markov_sequences(meta.vocab, meta.seq, self.test_n.min(512), rng);
+                // contiguous even split of sequences
+                let per = train.n() / self.workers;
+                anyhow::ensure!(per > 0, "too few sequences per worker");
+                let sources: Vec<Box<dyn BatchSource>> = (0..self.workers)
+                    .map(|j| {
+                        let shard = crate::data::SeqDataset {
+                            vocab: train.vocab,
+                            seq: train.seq,
+                            tokens: train.tokens
+                                [j * per * train.seq..(j + 1) * per * train.seq]
+                                .to_vec(),
+                        };
+                        Box::new(SeqSource::new(shard, self.train.seed + 100 + j as u64))
+                            as Box<dyn BatchSource>
+                    })
+                    .collect();
+                // eval: fixed batches of artifact batch size
+                let mut sampler = BatchSampler::new(self.train.seed + 999);
+                let n_eval = (test.n() / meta.batch).max(1);
+                let eval_batches: Vec<AnyBatch> = (0..n_eval)
+                    .map(|_| AnyBatch::Seq(sampler.sample_seq(&test, meta.batch)))
+                    .collect();
+                Ok((sources, eval_batches))
+            }
+            _ => {
+                let total = self.train_n + self.test_n;
+                let data = gaussian_mixture(&self.dataset.mixture(meta.dim, total), rng);
+                let (train, test) = data.split(self.train_n);
+                anyhow::ensure!(
+                    meta.classes == test.classes,
+                    "model classes {} != dataset classes {}",
+                    meta.classes,
+                    test.classes
+                );
+                let shards = split(&train, self.workers, self.partition, rng);
+                let sources: Vec<Box<dyn BatchSource>> = shards
+                    .into_iter()
+                    .enumerate()
+                    .map(|(j, s)| {
+                        Box::new(DenseSource::new(s, self.train.seed + 100 + j as u64))
+                            as Box<dyn BatchSource>
+                    })
+                    .collect();
+                // truncate test to a multiple of the artifact batch
+                let usable = (test.n() / meta.batch) * meta.batch;
+                anyhow::ensure!(usable > 0, "test set smaller than one batch");
+                let idx: Vec<usize> = (0..usable).collect();
+                let eval_batches: Vec<AnyBatch> =
+                    BatchSampler::full_batches(&test.subset(&idx), meta.batch)
+                        .into_iter()
+                        .map(AnyBatch::Dense)
+                        .collect();
+                Ok((sources, eval_batches))
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------- JSON
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("workers", self.workers.into())
+            .set("topology", self.topology.name().into())
+            .set("algo", self.algo.name().to_lowercase().into())
+            .set("model", self.model.as_str().into())
+            .set("dataset", self.dataset.name().into())
+            .set(
+                "partition",
+                match self.partition {
+                    Partition::Iid => "iid".to_string(),
+                    Partition::LabelShards => "shards".to_string(),
+                    Partition::Dirichlet { alpha } => format!("dirichlet:{alpha}"),
+                }
+                .into(),
+            )
+            .set("train_n", self.train_n.into())
+            .set("test_n", self.test_n.into())
+            .set("straggler_factor", self.straggler_factor.into())
+            .set("force_straggler", self.force_straggler.into())
+            .set("iters", self.train.iters.into())
+            .set("lr0", self.train.lr0.into())
+            .set("lr_decay", self.train.lr_decay.into())
+            .set("eval_every", self.train.eval_every.into())
+            .set("seed", (self.train.seed as i64).into())
+            .set(
+                "backend",
+                match &self.backend {
+                    Backend::Native => "native".into(),
+                    Backend::Pjrt { artifacts_dir } => {
+                        format!("pjrt:{}", artifacts_dir.display())
+                    }
+                }
+                .into(),
+            );
+        o
+    }
+
+    /// Apply JSON fields over the current values (partial configs OK).
+    pub fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
+        if let Some(v) = j.get("workers").and_then(|v| v.as_usize()) {
+            self.workers = v;
+        }
+        if let Some(v) = j.get("topology").and_then(|v| v.as_str()) {
+            self.topology =
+                Topology::parse(v).ok_or_else(|| anyhow::anyhow!("bad topology '{v}'"))?;
+        }
+        if let Some(v) = j.get("algo").and_then(|v| v.as_str()) {
+            self.algo = Algorithm::parse(v).ok_or_else(|| anyhow::anyhow!("bad algo '{v}'"))?;
+        }
+        if let Some(v) = j.get("model").and_then(|v| v.as_str()) {
+            self.model = v.to_string();
+        }
+        if let Some(v) = j.get("dataset").and_then(|v| v.as_str()) {
+            self.dataset =
+                DatasetProfile::parse(v).ok_or_else(|| anyhow::anyhow!("bad dataset '{v}'"))?;
+        }
+        if let Some(v) = j.get("partition").and_then(|v| v.as_str()) {
+            self.partition =
+                Partition::parse(v).ok_or_else(|| anyhow::anyhow!("bad partition '{v}'"))?;
+        }
+        if let Some(v) = j.get("train_n").and_then(|v| v.as_usize()) {
+            self.train_n = v;
+        }
+        if let Some(v) = j.get("test_n").and_then(|v| v.as_usize()) {
+            self.test_n = v;
+        }
+        if let Some(v) = j.get("straggler").and_then(|v| v.as_str()) {
+            self.straggler_base =
+                Dist::parse(v).ok_or_else(|| anyhow::anyhow!("bad straggler '{v}'"))?;
+        }
+        if let Some(v) = j.get("straggler_factor").and_then(|v| v.as_f64()) {
+            self.straggler_factor = v;
+        }
+        if let Some(v) = j.get("force_straggler").and_then(|v| v.as_bool()) {
+            self.force_straggler = v;
+        }
+        if let Some(v) = j.get("iters").and_then(|v| v.as_usize()) {
+            self.train.iters = v;
+        }
+        if let Some(v) = j.get("lr0").and_then(|v| v.as_f64()) {
+            self.train.lr0 = v;
+        }
+        if let Some(v) = j.get("lr_decay").and_then(|v| v.as_f64()) {
+            self.train.lr_decay = v;
+        }
+        if let Some(v) = j.get("eval_every").and_then(|v| v.as_usize()) {
+            self.train.eval_every = v;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
+            self.train.seed = v as u64;
+        }
+        if let Some(v) = j.get("backend").and_then(|v| v.as_str()) {
+            self.backend = match v {
+                "native" => Backend::Native,
+                s if s.starts_with("pjrt") => {
+                    let dir = s.strip_prefix("pjrt:").unwrap_or("artifacts");
+                    Backend::Pjrt {
+                        artifacts_dir: PathBuf::from(dir),
+                    }
+                }
+                _ => anyhow::bail!("bad backend '{v}'"),
+            };
+        }
+        Ok(())
+    }
+}
+
+/// Reconstruct a ModelMeta from an artifact-style name, e.g.
+/// `lrm_d64_c10_b256` or `mlp2_d256_h256_c10_b1024`.
+pub fn parse_model_name(name: &str) -> anyhow::Result<ModelMeta> {
+    let mut dim = 0usize;
+    let mut classes = 0usize;
+    let mut hidden = 0usize;
+    let mut batch = 0usize;
+    let parts: Vec<&str> = name.split('_').collect();
+    anyhow::ensure!(!parts.is_empty(), "empty model name");
+    for p in &parts[1..] {
+        if let Some(v) = p.strip_prefix('d').and_then(|x| x.parse().ok()) {
+            dim = v;
+        } else if let Some(v) = p.strip_prefix('h').and_then(|x| x.parse().ok()) {
+            hidden = v;
+        } else if let Some(v) = p.strip_prefix('c').and_then(|x| x.parse().ok()) {
+            classes = v;
+        } else if let Some(v) = p.strip_prefix('b').and_then(|x| x.parse().ok()) {
+            batch = v;
+        }
+    }
+    anyhow::ensure!(
+        dim > 0 && classes > 0 && batch > 0,
+        "cannot parse model name '{name}' (want e.g. lrm_d64_c10_b256)"
+    );
+    match parts[0] {
+        "lrm" => Ok(ModelMeta::lrm(dim, classes, batch)),
+        "mlp2" => {
+            anyhow::ensure!(hidden > 0, "mlp2 name needs h<hidden>");
+            Ok(ModelMeta::mlp2(dim, hidden, classes, batch))
+        }
+        other => anyhow::bail!("native backend cannot build '{other}' (use --backend pjrt)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_model_names() {
+        let m = parse_model_name("lrm_d64_c10_b256").unwrap();
+        assert_eq!((m.dim, m.classes, m.batch), (64, 10, 256));
+        let m = parse_model_name("mlp2_d256_h256_c10_b1024").unwrap();
+        assert_eq!(m.hidden, 256);
+        assert!(parse_model_name("tfm_v64_t32_d64_h4_l2_b16").is_err());
+        assert!(parse_model_name("lrm_nonsense").is_err());
+    }
+
+    #[test]
+    fn default_setup_builds_and_runs_briefly() {
+        let mut s = Setup::default();
+        s.model = "lrm_d16_c10_b64".into();
+        s.train_n = 2000;
+        s.test_n = 512;
+        s.train.iters = 8;
+        s.train.eval_every = 4;
+        let mut trainer = s.build_sim().unwrap();
+        let h = trainer.run().unwrap();
+        assert_eq!(h.iters.len(), 8);
+        assert_eq!(h.workers, 6);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut s = Setup::default();
+        s.workers = 10;
+        s.algo = Algorithm::CbFull;
+        s.partition = Partition::Dirichlet { alpha: 0.5 };
+        let j = s.to_json();
+        let mut s2 = Setup::default();
+        s2.apply_json(&j).unwrap();
+        assert_eq!(s2.workers, 10);
+        assert_eq!(s2.algo, Algorithm::CbFull);
+        assert_eq!(s2.partition, Partition::Dirichlet { alpha: 0.5 });
+    }
+
+    #[test]
+    fn bad_json_fields_error() {
+        let mut s = Setup::default();
+        let j = Json::parse(r#"{"topology": "dodecahedron"}"#).unwrap();
+        assert!(s.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn transformer_data_builds() {
+        let s = Setup {
+            model: "tfm_v64_t32_d64_h4_l2_b16".into(),
+            train_n: 64,
+            test_n: 32,
+            ..Default::default()
+        };
+        // native backend can't build the transformer engine, but the data
+        // path is exercised via a hand-made meta
+        let mut meta = ModelMeta::lrm(4, 2, 16);
+        meta.kind = ModelKind::Transformer;
+        meta.vocab = 64;
+        meta.seq = 32;
+        meta.batch = 16;
+        let mut rng = Rng::new(0);
+        let (sources, evals) = s.build_data(&meta, &mut rng).unwrap();
+        assert_eq!(sources.len(), 6);
+        assert!(!evals.is_empty());
+    }
+}

@@ -1,0 +1,498 @@
+//! The discrete-event simulation driver.
+//!
+//! Runs Algorithm 1 (cb-DyBW) or a baseline with **real gradients** and a
+//! **virtual clock**: per-worker compute times t_j(k) come from the
+//! straggler model (the thing the authors' multi-machine testbed provided
+//! physically), everything else — eq. (5) local updates, eq. (6)
+//! Metropolis mixing, DTUR thresholds, evaluation — is executed exactly.
+//! Deterministic given the config seed, so every figure regenerates
+//! bit-identically.
+
+use crate::consensus::mixing::ParamBuffers;
+use crate::consensus::ConsensusMatrix;
+use crate::engine::{AnyBatch, BatchSource, GradEngine};
+use crate::graph::Graph;
+use crate::metrics::{EvalRecord, IterRecord, RunHistory};
+use crate::straggler::StragglerModel;
+use crate::util::rng::Rng;
+use crate::util::vecmath;
+
+use super::algorithm::{plan, Algorithm};
+use super::dtur::Dtur;
+
+/// Hyperparameters of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub iters: usize,
+    pub batch_size: usize,
+    /// η(k) = lr0 · lr_decay^k (paper: η₀·δ^k with δ=0.95 per *epoch*-ish
+    /// cadence; we apply the decay every `lr_decay_every` iterations).
+    pub lr0: f64,
+    pub lr_decay: f64,
+    pub lr_decay_every: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            iters: 200,
+            batch_size: 256,
+            lr0: 0.2,
+            lr_decay: 0.95,
+            lr_decay_every: 10,
+            eval_every: 10,
+            seed: 2021,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn lr(&self, k: usize) -> f64 {
+        self.lr0 * self.lr_decay.powi((k / self.lr_decay_every.max(1)) as i32)
+    }
+}
+
+/// The simulation trainer. Generic over the gradient engine (native or
+/// PJRT) and the per-worker batch sources.
+pub struct SimTrainer {
+    pub graph: Graph,
+    pub algo: Algorithm,
+    pub cfg: TrainConfig,
+    pub straggler: StragglerModel,
+    /// One engine shared across workers (executed sequentially; engines
+    /// carry scratch only, parameters live in `params`).
+    engine: Box<dyn GradEngine>,
+    sources: Vec<Box<dyn BatchSource>>,
+    eval_batches: Vec<AnyBatch>,
+    params: ParamBuffers,
+    dtur: Option<Dtur>,
+    rng: Rng,
+    clock: f64,
+    grad_buf: Vec<f32>,
+    /// Optional per-iteration observer (e.g. live progress printing).
+    pub on_iter: Option<Box<dyn FnMut(&IterRecord)>>,
+    /// When set, compute times replay this trace instead of sampling the
+    /// straggler model — variance-free A/B of algorithms on identical
+    /// timing realisations.
+    pub trace: Option<crate::straggler::trace::TraceReplay>,
+    /// When set, the eq. (6) exchange is compressed with error feedback
+    /// (consensus::compress); accumulates simulated wire bytes.
+    pub compression: Option<CompressionState>,
+    /// Starting iteration (for checkpoint resume).
+    start_k: usize,
+}
+
+/// Compressed-gossip state: the operator + one error-feedback buffer per
+/// worker + the running wire-byte counter.
+pub struct CompressionState {
+    pub comp: Box<dyn crate::consensus::compress::Compressor>,
+    pub efs: Vec<crate::consensus::compress::ErrorFeedback>,
+    pub wire_bytes: usize,
+}
+
+impl CompressionState {
+    pub fn new(comp: Box<dyn crate::consensus::compress::Compressor>, n: usize, dim: usize) -> Self {
+        CompressionState {
+            comp,
+            efs: (0..n)
+                .map(|_| crate::consensus::compress::ErrorFeedback::new(dim))
+                .collect(),
+            wire_bytes: 0,
+        }
+    }
+}
+
+impl SimTrainer {
+    /// `initial` params are cloned to every worker (paper: common w(0)).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        graph: Graph,
+        algo: Algorithm,
+        cfg: TrainConfig,
+        straggler: StragglerModel,
+        engine: Box<dyn GradEngine>,
+        sources: Vec<Box<dyn BatchSource>>,
+        eval_batches: Vec<AnyBatch>,
+        initial: Vec<f32>,
+    ) -> anyhow::Result<Self> {
+        let n = graph.n();
+        anyhow::ensure!(n >= 2, "need >= 2 workers");
+        anyhow::ensure!(sources.len() == n, "one batch source per worker");
+        anyhow::ensure!(straggler.n() == n, "straggler model size mismatch");
+        anyhow::ensure!(initial.len() == engine.param_count(), "bad init length");
+        anyhow::ensure!(graph.is_connected(), "graph must be connected");
+        let params = ParamBuffers::from_initial(vec![initial; n]);
+        let dtur = algo.needs_dtur().then(|| Dtur::new(&graph));
+        let rng = Rng::new(cfg.seed ^ 0xD1B2_57A1);
+        let p = engine.param_count();
+        Ok(SimTrainer {
+            graph,
+            algo,
+            cfg,
+            straggler,
+            engine,
+            sources,
+            eval_batches,
+            params,
+            dtur,
+            rng,
+            clock: 0.0,
+            grad_buf: vec![0.0; p],
+            on_iter: None,
+            trace: None,
+            compression: None,
+            start_k: 0,
+        })
+    }
+
+    /// Network-average parameters ȳ(k).
+    pub fn average_params(&self) -> Vec<f32> {
+        self.params.average()
+    }
+
+    /// Snapshot the current state as a checkpoint.
+    pub fn checkpoint(&self, model: &str) -> super::checkpoint::Checkpoint {
+        super::checkpoint::Checkpoint::from_buffers(
+            self.start_k + self.cfg.iters,
+            self.clock,
+            model,
+            &self.params,
+        )
+    }
+
+    /// Resume from a checkpoint: restores parameters, clock, and the
+    /// iteration counter (subsequent `run` continues from there).
+    pub fn restore(&mut self, ckpt: super::checkpoint::Checkpoint) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            ckpt.params.len() == self.graph.n(),
+            "checkpoint has {} workers, trainer has {}",
+            ckpt.params.len(),
+            self.graph.n()
+        );
+        anyhow::ensure!(
+            ckpt.params[0].len() == self.engine.param_count(),
+            "checkpoint param dim mismatch"
+        );
+        self.clock = ckpt.clock;
+        self.start_k = ckpt.iteration;
+        self.params = ParamBuffers::from_initial(ckpt.params);
+        Ok(())
+    }
+
+    pub fn params(&self) -> &ParamBuffers {
+        &self.params
+    }
+
+    /// Evaluate average params on the held-out set.
+    pub fn evaluate(&mut self, k: usize) -> anyhow::Result<EvalRecord> {
+        let avg = self.params.average();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let mut rows = 0usize;
+        for b in &self.eval_batches {
+            let (loss, corr) = self.engine.eval(&avg, b)?;
+            let r = b.rows();
+            loss_sum += loss as f64 * r as f64;
+            correct += corr;
+            rows += r;
+        }
+        anyhow::ensure!(rows > 0, "empty eval set");
+        Ok(EvalRecord {
+            k,
+            clock: self.clock,
+            test_loss: loss_sum / rows as f64,
+            test_error: 1.0 - correct as f64 / rows as f64,
+            consensus_error: self.params.consensus_error(),
+        })
+    }
+
+    /// Run the full training loop, returning the recorded history.
+    pub fn run(&mut self) -> anyhow::Result<RunHistory> {
+        let n = self.graph.n();
+        let mut history = RunHistory::new(
+            &self.algo.name(),
+            self.engine.backend(),
+            "synthetic",
+            n,
+        );
+        // initial eval (k = start)
+        let e0 = self.evaluate(self.start_k)?;
+        history.evals.push(e0);
+
+        for k in (self.start_k + 1)..=(self.start_k + self.cfg.iters) {
+            // --- timing: draw t_j(k), derive the participation plan -----
+            let t = match self.trace.as_mut() {
+                Some(replay) => replay.next_iteration(),
+                None => self.straggler.sample_iteration_at(k, &mut self.rng),
+            };
+            let iter_plan = plan(self.algo, &t, self.dtur.as_mut());
+            let eta = self.cfg.lr(k) as f32;
+
+            // --- eq. (5): local SGD step at every worker ----------------
+            // (Stragglers compute too — they are just not waited for; the
+            //  PS baselines discard non-participant updates below.)
+            let mut loss_sum = 0.0f64;
+            for j in 0..n {
+                let batch = self.sources[j].next_train(self.cfg.batch_size);
+                let loss = self
+                    .engine
+                    .grad_into(self.params.get(j), &batch, &mut self.grad_buf)?;
+                loss_sum += loss as f64;
+                if !iter_plan.ps_style || iter_plan.active[j] {
+                    vecmath::axpy(self.params.get_mut(j), -eta, &self.grad_buf);
+                }
+            }
+
+            // --- eq. (6): mixing ----------------------------------------
+            if iter_plan.ps_style {
+                // Exact averaging of participants, broadcast to everyone.
+                let active_rows: Vec<&[f32]> = (0..n)
+                    .filter(|&j| iter_plan.active[j])
+                    .map(|j| self.params.get(j))
+                    .collect();
+                let avg = vecmath::mean_of(&active_rows);
+                for j in 0..n {
+                    self.params.get_mut(j).copy_from_slice(&avg);
+                }
+            } else {
+                let p = ConsensusMatrix::metropolis(&self.graph, &iter_plan.active);
+                debug_assert!(p.check_doubly_stochastic(1e-9).is_ok());
+                match self.compression.as_mut() {
+                    Some(cs) => {
+                        cs.wire_bytes += self.params.mix_compressed(&p, &*cs.comp, &mut cs.efs);
+                    }
+                    None => self.params.mix(&p),
+                }
+            }
+
+            // --- bookkeeping --------------------------------------------
+            self.clock += iter_plan.duration;
+            let rec = IterRecord {
+                k,
+                duration: iter_plan.duration,
+                clock: self.clock,
+                train_loss: loss_sum / n as f64,
+                active: iter_plan.active_count(),
+                backup_avg: iter_plan.backup_avg(&self.graph),
+                theta: iter_plan.theta,
+            };
+            if let Some(cb) = self.on_iter.as_mut() {
+                cb(&rec);
+            }
+            history.iters.push(rec);
+
+            if self.cfg.eval_every > 0 && k % self.cfg.eval_every == 0 {
+                let e = self.evaluate(k)?;
+                history.evals.push(e);
+            }
+        }
+        Ok(history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::{split, Partition};
+    use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
+    use crate::engine::{DenseSource, NativeEngine};
+    use crate::graph::topology;
+    use crate::model::ModelMeta;
+
+    fn build(algo: Algorithm, iters: usize, seed: u64) -> SimTrainer {
+        let n = 6;
+        let mut rng = Rng::new(seed);
+        let g = topology::random_connected(n, 0.5, &mut rng);
+        let meta = ModelMeta::lrm(8, 10, 64);
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(8, 3000), &mut rng);
+        let (train, test) = data.split(2560);
+        let shards = split(&train, n, Partition::Iid, &mut rng);
+        let sources: Vec<Box<dyn BatchSource>> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(j, s)| Box::new(DenseSource::new(s, seed + j as u64)) as Box<dyn BatchSource>)
+            .collect();
+        let eval_batches: Vec<AnyBatch> = crate::data::batch::BatchSampler::full_batches(
+            &test.subset(&(0..384).collect::<Vec<_>>()),
+            64,
+        )
+        .into_iter()
+        .map(AnyBatch::Dense)
+        .collect();
+        let engine = Box::new(NativeEngine::new(meta.clone()).unwrap());
+        let straggler = StragglerModel::paper_default(n, &mut rng);
+        let init = meta.init_params(&mut rng);
+        let cfg = TrainConfig {
+            iters,
+            batch_size: 64,
+            eval_every: 10,
+            seed,
+            ..Default::default()
+        };
+        SimTrainer::new(g, algo, cfg, straggler, engine, sources, eval_batches, init).unwrap()
+    }
+
+    #[test]
+    fn cb_dybw_trains_and_records() {
+        let mut t = build(Algorithm::CbDybw, 60, 1);
+        let h = t.run().unwrap();
+        assert_eq!(h.iters.len(), 60);
+        assert!(h.evals.len() >= 6);
+        // learning happened
+        let first = h.evals.first().unwrap();
+        let last = h.evals.last().unwrap();
+        assert!(
+            last.test_loss < first.test_loss * 0.8,
+            "loss {} -> {}",
+            first.test_loss,
+            last.test_loss
+        );
+        // error drops below chance
+        assert!(last.test_error < 0.5, "err {}", last.test_error);
+        // dynamic backup workers actually engaged
+        assert!(h.mean_backup_workers() > 0.1);
+    }
+
+    #[test]
+    fn cb_full_trains_but_slower_clock() {
+        let mut a = build(Algorithm::CbDybw, 50, 2);
+        let mut b = build(Algorithm::CbFull, 50, 2);
+        let ha = a.run().unwrap();
+        let hb = b.run().unwrap();
+        // Same iteration count, same convergence order, but DyBW's clock
+        // advanced much less (the paper's headline effect).
+        assert!(
+            ha.total_time() < 0.7 * hb.total_time(),
+            "dybw {}s vs full {}s",
+            ha.total_time(),
+            hb.total_time()
+        );
+        // full participation: zero backup workers
+        assert!(hb.mean_backup_workers() < 1e-9);
+    }
+
+    #[test]
+    fn ps_sync_equals_centralized_sgd_consensus() {
+        let mut t = build(Algorithm::PsSync, 30, 3);
+        let h = t.run().unwrap();
+        // Exact averaging every round → consensus error stays ~0.
+        let last = h.evals.last().unwrap();
+        assert!(last.consensus_error < 1e-4, "{}", last.consensus_error);
+        assert!(last.test_loss < h.evals[0].test_loss);
+    }
+
+    #[test]
+    fn static_backup_reduces_duration() {
+        let mut a = build(Algorithm::CbStaticBackup { b: 2 }, 40, 4);
+        let mut b = build(Algorithm::CbFull, 40, 4);
+        let ha = a.run().unwrap();
+        let hb = b.run().unwrap();
+        assert!(ha.mean_iter_duration() < hb.mean_iter_duration());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let h1 = build(Algorithm::CbDybw, 25, 7).run().unwrap();
+        let h2 = build(Algorithm::CbDybw, 25, 7).run().unwrap();
+        assert_eq!(h1.total_time(), h2.total_time());
+        let e1 = h1.evals.last().unwrap();
+        let e2 = h2.evals.last().unwrap();
+        assert_eq!(e1.test_loss, e2.test_loss);
+        assert_eq!(e1.test_error, e2.test_error);
+    }
+
+    #[test]
+    fn consensus_error_stays_bounded() {
+        let mut t = build(Algorithm::CbDybw, 80, 9);
+        let h = t.run().unwrap();
+        for e in &h.evals {
+            assert!(e.consensus_error.is_finite());
+            assert!(e.consensus_error < 10.0, "consensus diverged: {e:?}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_continues_training() {
+        // run 40 iters, checkpoint, restore into a fresh trainer, run 20
+        // more: counters continue and the loss keeps dropping.
+        let mut a = build(Algorithm::CbDybw, 40, 12);
+        let h1 = a.run().unwrap();
+        let ckpt = a.checkpoint("lrm_test");
+        assert_eq!(ckpt.iteration, 40);
+
+        let mut b = build(Algorithm::CbDybw, 20, 12);
+        b.restore(ckpt).unwrap();
+        let h2 = b.run().unwrap();
+        assert_eq!(h2.iters.first().unwrap().k, 41);
+        assert_eq!(h2.iters.last().unwrap().k, 60);
+        // resumed clock starts where the checkpoint left off
+        assert!(h2.iters[0].clock > h1.total_time());
+        // still learning (loss at resume <= initial-eval loss of run 1)
+        let resumed_first = h2.evals.first().unwrap().test_loss;
+        let original_first = h1.evals.first().unwrap().test_loss;
+        assert!(resumed_first < original_first * 0.9);
+    }
+
+    #[test]
+    fn checkpoint_restore_rejects_mismatch() {
+        let a = build(Algorithm::CbDybw, 5, 13);
+        let ckpt = a.checkpoint("x");
+        let mut bad = ckpt.clone();
+        bad.params.pop(); // wrong worker count
+        let mut b = build(Algorithm::CbDybw, 5, 13);
+        assert!(b.restore(bad).is_err());
+    }
+
+    #[test]
+    fn trace_replay_gives_identical_timing_across_algorithms() {
+        use crate::straggler::trace::{Trace, TraceReplay};
+        let mut rng = Rng::new(14);
+        let model = crate::straggler::StragglerModel::paper_default(6, &mut rng);
+        let trace = Trace::record(&model, 30, &mut rng);
+
+        let mut a = build(Algorithm::CbDybw, 30, 15);
+        a.trace = Some(TraceReplay::new(trace.clone()).unwrap());
+        let ha = a.run().unwrap();
+        let mut b = build(Algorithm::CbFull, 30, 15);
+        b.trace = Some(TraceReplay::new(trace.clone()).unwrap());
+        let hb = b.run().unwrap();
+        // cb-Full's durations must equal the trace's per-iteration max —
+        // the A/B is variance-free.
+        for (rec, row) in hb.iters.iter().zip(&trace.times) {
+            let tmax = row.iter().copied().fold(0.0, f64::max);
+            assert!((rec.duration - tmax).abs() < 1e-12);
+        }
+        // and DyBW is pathwise never slower (Corollary 4, per-draw)
+        for (ra, rb) in ha.iters.iter().zip(&hb.iters) {
+            assert!(ra.duration <= rb.duration + 1e-12);
+        }
+    }
+
+    #[test]
+    fn compressed_training_tracks_exact() {
+        use crate::consensus::compress::TopK;
+        use crate::coordinator::sim::CompressionState;
+        let mut exact = build(Algorithm::CbDybw, 60, 16);
+        let he = exact.run().unwrap();
+        let mut comp = build(Algorithm::CbDybw, 60, 16);
+        let dim = comp.params().dim();
+        comp.compression = Some(CompressionState::new(
+            Box::new(TopK { k: dim / 4 }),
+            6,
+            dim,
+        ));
+        let hc = comp.run().unwrap();
+        let wire = comp.compression.as_ref().unwrap().wire_bytes;
+        assert!(wire > 0);
+        let (le, lc) = (
+            he.final_eval().unwrap().test_loss,
+            hc.final_eval().unwrap().test_loss,
+        );
+        assert!(
+            lc < le * 1.25,
+            "compressed training diverged: exact {le} vs compressed {lc}"
+        );
+    }
+}

@@ -1,0 +1,226 @@
+//! Mini-batch sampling: the C_j(k) of eq. (4).
+//!
+//! Each worker draws a uniform mini-batch (with replacement across
+//! iterations, without within a batch when possible) from its local shard
+//! D_j. Batches are materialised into flat buffers matching the AOT
+//! artifact input layout: `x: f32[B, D]` and one-hot `y: f32[B, C]`
+//! (tokens `i32[B, T]` + one-hot `f32[B, T, V]` for the transformer).
+
+use super::{Dataset, SeqDataset};
+use crate::util::rng::Rng;
+
+/// A classification batch in artifact layout.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub bsz: usize,
+    pub dim: usize,
+    pub classes: usize,
+    /// f32[bsz, dim] row-major
+    pub x: Vec<f32>,
+    /// f32[bsz, classes] one-hot
+    pub y1h: Vec<f32>,
+    /// integer labels (for native-engine eval)
+    pub y: Vec<u32>,
+}
+
+/// A token batch in artifact layout (LM: target = input shifted by one,
+/// with the final target wrapping to token 0 — consistent train/eval).
+#[derive(Debug, Clone)]
+pub struct SeqBatch {
+    pub bsz: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    /// i32[bsz, seq]
+    pub tokens: Vec<i32>,
+    /// f32[bsz, seq, vocab] one-hot of next-token targets
+    pub y1h: Vec<f32>,
+}
+
+/// Sampler over a worker's local shard.
+#[derive(Debug, Clone)]
+pub struct BatchSampler {
+    rng: Rng,
+}
+
+impl BatchSampler {
+    pub fn new(seed: u64) -> Self {
+        BatchSampler { rng: Rng::new(seed) }
+    }
+
+    /// Draw a batch of size `bsz`. If the shard is smaller than `bsz`,
+    /// sampling is with replacement (the estimator in eq. (4) stays
+    /// unbiased either way).
+    pub fn sample(&mut self, data: &Dataset, bsz: usize) -> Batch {
+        assert!(data.n() > 0, "empty shard");
+        let idx: Vec<usize> = if data.n() >= bsz {
+            self.rng.choose_k(data.n(), bsz)
+        } else {
+            (0..bsz).map(|_| self.rng.below(data.n())).collect()
+        };
+        let mut x = Vec::with_capacity(bsz * data.dim);
+        let mut y1h = vec![0.0f32; bsz * data.classes];
+        let mut y = Vec::with_capacity(bsz);
+        for (row, &i) in idx.iter().enumerate() {
+            x.extend_from_slice(data.row(i));
+            let label = data.y[i];
+            y1h[row * data.classes + label as usize] = 1.0;
+            y.push(label);
+        }
+        Batch {
+            bsz,
+            dim: data.dim,
+            classes: data.classes,
+            x,
+            y1h,
+            y,
+        }
+    }
+
+    /// Draw a whole dataset as consecutive batches (for evaluation).
+    pub fn full_batches(data: &Dataset, bsz: usize) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < data.n() {
+            let take = bsz.min(data.n() - i);
+            let idx: Vec<usize> = (i..i + take).collect();
+            let sub = data.subset(&idx);
+            let mut x = sub.x.clone();
+            // pad the tail batch by repeating the last row so artifact
+            // shapes stay fixed; `valid` rows tracked by caller via y len
+            let mut y1h = vec![0.0f32; bsz * data.classes];
+            let mut y = sub.y.clone();
+            for (row, &label) in sub.y.iter().enumerate() {
+                y1h[row * data.classes + label as usize] = 1.0;
+            }
+            while y.len() < bsz {
+                let last = (sub.n() - 1) * data.dim;
+                let row_copy: Vec<f32> = sub.x[last..last + data.dim].to_vec();
+                x.extend_from_slice(&row_copy);
+                let label = *sub.y.last().unwrap();
+                y1h[y.len() * data.classes + label as usize] = 1.0;
+                y.push(label);
+            }
+            out.push(Batch {
+                bsz,
+                dim: data.dim,
+                classes: data.classes,
+                x,
+                y1h,
+                y,
+            });
+            i += take;
+        }
+        out
+    }
+
+    /// Draw a token batch for the LM workload.
+    pub fn sample_seq(&mut self, data: &SeqDataset, bsz: usize) -> SeqBatch {
+        assert!(data.n() > 0);
+        let idx: Vec<usize> = if data.n() >= bsz {
+            self.rng.choose_k(data.n(), bsz)
+        } else {
+            (0..bsz).map(|_| self.rng.below(data.n())).collect()
+        };
+        let (t, v) = (data.seq, data.vocab);
+        let mut tokens = Vec::with_capacity(bsz * t);
+        let mut y1h = vec![0.0f32; bsz * t * v];
+        for (row, &i) in idx.iter().enumerate() {
+            let seq = data.row(i);
+            tokens.extend_from_slice(seq);
+            for pos in 0..t {
+                let target = if pos + 1 < t { seq[pos + 1] } else { 0 };
+                y1h[row * t * v + pos * v + target as usize] = 1.0;
+            }
+        }
+        SeqBatch {
+            bsz,
+            seq: t,
+            vocab: v,
+            tokens,
+            y1h,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gaussian_mixture, markov_sequences, MixtureSpec};
+
+    fn data(n: usize) -> Dataset {
+        gaussian_mixture(&MixtureSpec::mnist_like(6, n), &mut Rng::new(0))
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = data(100);
+        let mut s = BatchSampler::new(1);
+        let b = s.sample(&d, 32);
+        assert_eq!(b.x.len(), 32 * 6);
+        assert_eq!(b.y1h.len(), 32 * 10);
+        assert_eq!(b.y.len(), 32);
+    }
+
+    #[test]
+    fn onehot_consistent_with_labels() {
+        let d = data(50);
+        let mut s = BatchSampler::new(2);
+        let b = s.sample(&d, 16);
+        for row in 0..16 {
+            let hot: Vec<usize> = (0..10)
+                .filter(|&c| b.y1h[row * 10 + c] == 1.0)
+                .collect();
+            assert_eq!(hot, vec![b.y[row] as usize]);
+            let sum: f32 = b.y1h[row * 10..(row + 1) * 10].iter().sum();
+            assert_eq!(sum, 1.0);
+        }
+    }
+
+    #[test]
+    fn small_shard_samples_with_replacement() {
+        let d = data(5);
+        let mut s = BatchSampler::new(3);
+        let b = s.sample(&d, 64);
+        assert_eq!(b.bsz, 64);
+        assert_eq!(b.y.len(), 64);
+    }
+
+    #[test]
+    fn batches_differ_across_draws() {
+        let d = data(500);
+        let mut s = BatchSampler::new(4);
+        let a = s.sample(&d, 32);
+        let b = s.sample(&d, 32);
+        assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn full_batches_cover_all_rows() {
+        let d = data(70);
+        let bs = BatchSampler::full_batches(&d, 32);
+        assert_eq!(bs.len(), 3);
+        let total: usize = bs.iter().map(|b| b.y.len()).sum();
+        assert_eq!(total, 32 * 3); // padded
+        // first 70 labels match the dataset
+        let mut labels = Vec::new();
+        for b in &bs {
+            labels.extend_from_slice(&b.y);
+        }
+        assert_eq!(&labels[..70], &d.y[..]);
+    }
+
+    #[test]
+    fn seq_batch_targets_shifted() {
+        let sd = markov_sequences(8, 5, 20, &mut Rng::new(5));
+        let mut s = BatchSampler::new(6);
+        let b = s.sample_seq(&sd, 4);
+        assert_eq!(b.tokens.len(), 4 * 5);
+        assert_eq!(b.y1h.len(), 4 * 5 * 8);
+        for row in 0..4 {
+            for pos in 0..4 {
+                let next = b.tokens[row * 5 + pos + 1] as usize;
+                assert_eq!(b.y1h[row * 5 * 8 + pos * 8 + next], 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Data substrate: datasets, synthesis, PCA, partitioning, batching.
+//!
+//! The paper trains on MNIST and CIFAR-10, PCA-reduced, evenly partitioned
+//! across workers. Real datasets are not available in this offline
+//! environment, so [`synthetic`] generates Gaussian-mixture classification
+//! data with MNIST-like / CIFAR-like difficulty profiles (see DESIGN.md
+//! §Substitutions); [`pca`] implements the paper's PCA reduction;
+//! [`partition`] implements the even i.i.d. split plus a non-i.i.d.
+//! label-shard split (the analysis covers both); [`batch`] draws the
+//! mini-batches C_j(k) of eq. (4).
+
+pub mod batch;
+pub mod partition;
+pub mod pca;
+pub mod synthetic;
+
+/// A dense classification dataset: row-major features + integer labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub dim: usize,
+    pub classes: usize,
+    /// len = n() * dim, row-major.
+    pub x: Vec<f32>,
+    /// len = n().
+    pub y: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Split into (train, test) at `train_n` examples.
+    pub fn split(mut self, train_n: usize) -> (Dataset, Dataset) {
+        assert!(train_n <= self.n());
+        let test_x = self.x.split_off(train_n * self.dim);
+        let test_y = self.y.split_off(train_n);
+        let test = Dataset {
+            dim: self.dim,
+            classes: self.classes,
+            x: test_x,
+            y: test_y,
+        };
+        (self, test)
+    }
+
+    /// Select rows by index into a new dataset.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset {
+            dim: self.dim,
+            classes: self.classes,
+            x,
+            y,
+        }
+    }
+
+    /// Per-class example counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.classes];
+        for &y in &self.y {
+            c[y as usize] += 1;
+        }
+        c
+    }
+}
+
+/// Token-sequence dataset for the transformer workload.
+#[derive(Debug, Clone)]
+pub struct SeqDataset {
+    pub vocab: usize,
+    pub seq: usize,
+    /// len = n() * seq; input tokens.
+    pub tokens: Vec<i32>,
+}
+
+impl SeqDataset {
+    pub fn n(&self) -> usize {
+        if self.seq == 0 {
+            0
+        } else {
+            self.tokens.len() / self.seq
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq..(i + 1) * self.seq]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            dim: 2,
+            classes: 2,
+            x: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            y: vec![0, 1, 0],
+        }
+    }
+
+    #[test]
+    fn rows_and_counts() {
+        let d = tiny();
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.row(1), &[2.0, 3.0]);
+        assert_eq!(d.class_counts(), vec![2, 1]);
+    }
+
+    #[test]
+    fn split_sizes() {
+        let (tr, te) = tiny().split(2);
+        assert_eq!(tr.n(), 2);
+        assert_eq!(te.n(), 1);
+        assert_eq!(te.row(0), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn subset_picks_rows() {
+        let d = tiny();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.row(0), &[4.0, 5.0]);
+        assert_eq!(s.y, vec![0, 0]);
+    }
+}

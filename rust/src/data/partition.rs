@@ -1,0 +1,264 @@
+//! Partitioning D = ∪_j D_j across workers (paper §2.1 / Appendix B).
+//!
+//! The paper evenly partitions all training data among workers (6,000
+//! MNIST / 5,000 CIFAR examples each) — the i.i.d. case. The analysis also
+//! covers non-i.i.d. local datasets, so we provide the standard
+//! label-shard split (each worker holds a few label shards, à la
+//! McMahan et al.) and a Dirichlet split with tunable concentration.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    /// Shuffle then even contiguous split — i.i.d. local datasets.
+    Iid,
+    /// Sort by label, cut into `2·workers` shards, deal 2 shards each —
+    /// each worker sees only a couple of classes.
+    LabelShards,
+    /// Dirichlet(α) class mixture per worker; α→∞ ≈ i.i.d., α→0 extreme skew.
+    Dirichlet { alpha: f64 },
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> Option<Partition> {
+        if s == "iid" {
+            return Some(Partition::Iid);
+        }
+        if s == "shards" || s == "label_shards" {
+            return Some(Partition::LabelShards);
+        }
+        if let Some(a) = s.strip_prefix("dirichlet:") {
+            return a.parse().ok().map(|alpha| Partition::Dirichlet { alpha });
+        }
+        None
+    }
+}
+
+/// Split `data` into `workers` local datasets.
+pub fn split(data: &Dataset, workers: usize, how: Partition, rng: &mut Rng) -> Vec<Dataset> {
+    assert!(workers >= 1);
+    let idx_sets: Vec<Vec<usize>> = match how {
+        Partition::Iid => iid_indices(data.n(), workers, rng),
+        Partition::LabelShards => shard_indices(data, workers, rng),
+        Partition::Dirichlet { alpha } => dirichlet_indices(data, workers, alpha, rng),
+    };
+    idx_sets.iter().map(|idx| data.subset(idx)).collect()
+}
+
+fn iid_indices(n: usize, workers: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let take = base + usize::from(w < extra);
+        out.push(idx[start..start + take].to_vec());
+        start += take;
+    }
+    out
+}
+
+fn shard_indices(data: &Dataset, workers: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..data.n()).collect();
+    idx.sort_by_key(|&i| data.y[i]);
+    let shards_per_worker = 2usize;
+    let n_shards = workers * shards_per_worker;
+    let shard_len = data.n().div_ceil(n_shards);
+    let mut shards: Vec<Vec<usize>> = idx.chunks(shard_len).map(|c| c.to_vec()).collect();
+    // pad with empty shards if division was ragged
+    while shards.len() < n_shards {
+        shards.push(Vec::new());
+    }
+    let mut order: Vec<usize> = (0..n_shards).collect();
+    rng.shuffle(&mut order);
+    (0..workers)
+        .map(|w| {
+            let mut v: Vec<usize> = order[w * shards_per_worker..(w + 1) * shards_per_worker]
+                .iter()
+                .flat_map(|&s| shards[s].iter().copied())
+                .collect();
+            v.sort_unstable();
+            v
+        })
+        .collect()
+}
+
+fn dirichlet_indices(
+    data: &Dataset,
+    workers: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    // Per class: draw worker proportions ~ Dirichlet(α) via normalized
+    // Gamma(α, 1) samples (Marsaglia-Tsang would be overkill; for α ≥ 0.05
+    // the sum-of-exponentials approximation below — Gamma via
+    // Johnk/accept-reject fallback — is adequate: we use the simple
+    // power-of-uniform trick for α<1 and sum of exponentials for integer
+    // part).
+    let gamma = |rng: &mut Rng, a: f64| -> f64 {
+        // Johnk-ish: Gamma(a) = Gamma(a_int) + Gamma(a_frac)
+        let mut x = 0.0;
+        let ai = a.floor() as usize;
+        for _ in 0..ai {
+            x += rng.exponential(1.0);
+        }
+        let frac = a - ai as f64;
+        if frac > 1e-9 {
+            // Ahrens-Dieter GS for shape < 1
+            loop {
+                let u = rng.uniform();
+                let v = rng.uniform().max(1e-300);
+                let b = 1.0 + frac / std::f64::consts::E;
+                let p = b * u;
+                if p <= 1.0 {
+                    let g = p.powf(1.0 / frac);
+                    if v <= (-g).exp() {
+                        x += g;
+                        break;
+                    }
+                } else {
+                    let g = -((b - p) / frac).ln();
+                    if v <= g.powf(frac - 1.0) {
+                        x += g;
+                        break;
+                    }
+                }
+            }
+        }
+        x
+    };
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); workers];
+    for c in 0..data.classes {
+        let mut class_idx: Vec<usize> =
+            (0..data.n()).filter(|&i| data.y[i] as usize == c).collect();
+        rng.shuffle(&mut class_idx);
+        let mut props: Vec<f64> = (0..workers).map(|_| gamma(rng, alpha).max(1e-12)).collect();
+        let total: f64 = props.iter().sum();
+        for p in props.iter_mut() {
+            *p /= total;
+        }
+        let mut start = 0usize;
+        for (w, p) in props.iter().enumerate() {
+            let take = if w + 1 == workers {
+                class_idx.len() - start
+            } else {
+                ((p * class_idx.len() as f64).round() as usize).min(class_idx.len() - start)
+            };
+            out[w].extend_from_slice(&class_idx[start..start + take]);
+            start += take;
+        }
+    }
+    for v in out.iter_mut() {
+        v.sort_unstable();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
+
+    fn data(n: usize, seed: u64) -> Dataset {
+        gaussian_mixture(&MixtureSpec::mnist_like(8, n), &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn iid_split_covers_everything_evenly() {
+        let d = data(1000, 0);
+        let parts = split(&d, 6, Partition::Iid, &mut Rng::new(1));
+        assert_eq!(parts.len(), 6);
+        let total: usize = parts.iter().map(|p| p.n()).sum();
+        assert_eq!(total, 1000);
+        for p in &parts {
+            assert!(p.n() == 166 || p.n() == 167);
+        }
+    }
+
+    #[test]
+    fn iid_partition_no_duplicates() {
+        let d = data(300, 2);
+        let parts = split(&d, 4, Partition::Iid, &mut Rng::new(3));
+        // feature sums must add to the global sum (each row used once)
+        let global: f64 = d.x.iter().map(|&v| v as f64).sum();
+        let partsum: f64 = parts
+            .iter()
+            .map(|p| p.x.iter().map(|&v| v as f64).sum::<f64>())
+            .sum();
+        assert!((global - partsum).abs() < 1e-2);
+    }
+
+    #[test]
+    fn iid_local_class_distribution_balanced() {
+        let d = data(5000, 4);
+        let parts = split(&d, 5, Partition::Iid, &mut Rng::new(5));
+        for p in &parts {
+            for &c in &p.class_counts() {
+                // expected 100 per class per worker; loose bounds
+                assert!(c > 50 && c < 160, "class count {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn shards_are_skewed() {
+        let d = data(2000, 6);
+        let parts = split(&d, 5, Partition::LabelShards, &mut Rng::new(7));
+        let total: usize = parts.iter().map(|p| p.n()).sum();
+        assert_eq!(total, 2000);
+        // Each worker holds 2 shards of label-sorted data; a shard can
+        // straddle class boundaries, so allow up to 6 — but the split must
+        // be clearly non-i.i.d.: nobody sees all 10 classes, and on
+        // average workers see few.
+        let mut distinct_total = 0usize;
+        for p in &parts {
+            let distinct = p.class_counts().iter().filter(|&&c| c > 0).count();
+            assert!(distinct <= 6, "worker saw {distinct} classes");
+            distinct_total += distinct;
+        }
+        assert!(distinct_total as f64 / parts.len() as f64 <= 5.0);
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_is_skewed_large_alpha_balanced() {
+        let d = data(4000, 8);
+        let skewed = split(&d, 4, Partition::Dirichlet { alpha: 0.1 }, &mut Rng::new(9));
+        let balanced = split(&d, 4, Partition::Dirichlet { alpha: 100.0 }, &mut Rng::new(9));
+        let imbalance = |parts: &[Dataset]| -> f64 {
+            parts
+                .iter()
+                .map(|p| {
+                    let counts = p.class_counts();
+                    let n = p.n().max(1) as f64;
+                    // max class share
+                    counts.iter().map(|&c| c as f64 / n).fold(0.0, f64::max)
+                })
+                .sum::<f64>()
+                / parts.len() as f64
+        };
+        assert!(imbalance(&skewed) > imbalance(&balanced) + 0.1);
+        let total: usize = skewed.iter().map(|p| p.n()).sum();
+        assert_eq!(total, 4000);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Partition::parse("iid"), Some(Partition::Iid));
+        assert_eq!(Partition::parse("shards"), Some(Partition::LabelShards));
+        assert_eq!(
+            Partition::parse("dirichlet:0.5"),
+            Some(Partition::Dirichlet { alpha: 0.5 })
+        );
+        assert_eq!(Partition::parse("nope"), None);
+    }
+
+    #[test]
+    fn single_worker_gets_everything() {
+        let d = data(100, 10);
+        let parts = split(&d, 1, Partition::Iid, &mut Rng::new(11));
+        assert_eq!(parts[0].n(), 100);
+    }
+}

@@ -1,0 +1,259 @@
+//! PCA dimensionality reduction (paper §5: MNIST 784 / CIFAR 3072 inputs
+//! are PCA-reduced before training "to enhance the training efficiency").
+//!
+//! Implemented as mean-centering + top-k principal directions via power
+//! iteration with Gram-deflation, computed directly against the data
+//! matrix (two mat-vec passes per iteration) so the d×d covariance is
+//! never materialised — that keeps CIFAR-scale d=3072 tractable.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// A fitted PCA transform.
+#[derive(Debug, Clone)]
+pub struct Pca {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Feature means, len in_dim.
+    pub mean: Vec<f32>,
+    /// Row-major (out_dim × in_dim) projection, rows orthonormal.
+    pub components: Vec<f32>,
+    /// Explained variance per component (descending).
+    pub variance: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit top-`k` components on `data` with `iters` power iterations each.
+    pub fn fit(data: &Dataset, k: usize, iters: usize, rng: &mut Rng) -> Pca {
+        let (n, d) = (data.n(), data.dim);
+        assert!(k <= d && n > 1);
+        // feature means
+        let mut mean = vec![0.0f64; d];
+        for i in 0..n {
+            for (m, v) in mean.iter_mut().zip(data.row(i)) {
+                *m += *v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mean_f32: Vec<f32> = mean.iter().map(|&m| m as f32).collect();
+
+        let mut components = Vec::with_capacity(k * d);
+        let mut variance = Vec::with_capacity(k);
+        let mut basis: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..k {
+            // random start, orthogonal to found components
+            let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            orthogonalize(&mut v, &basis);
+            normalize(&mut v);
+            let mut lambda = 0.0f64;
+            for _ in 0..iters {
+                // w = (1/n) Xᶜᵀ (Xᶜ v)  where Xᶜ is the centered data
+                let mut w = vec![0.0f64; d];
+                for i in 0..n {
+                    let row = data.row(i);
+                    let mut proj = 0.0f64;
+                    for j in 0..d {
+                        proj += (row[j] as f64 - mean[j]) * v[j];
+                    }
+                    for j in 0..d {
+                        w[j] += proj * (row[j] as f64 - mean[j]);
+                    }
+                }
+                for x in w.iter_mut() {
+                    *x /= n as f64;
+                }
+                orthogonalize(&mut w, &basis);
+                lambda = norm(&w);
+                if lambda < 1e-12 {
+                    break;
+                }
+                for x in w.iter_mut() {
+                    *x /= lambda;
+                }
+                v = w;
+            }
+            variance.push(lambda);
+            components.extend(v.iter().map(|&x| x as f32));
+            basis.push(v);
+        }
+        Pca {
+            in_dim: d,
+            out_dim: k,
+            mean: mean_f32,
+            components,
+            variance,
+        }
+    }
+
+    /// Project a dataset into the fitted subspace.
+    pub fn transform(&self, data: &Dataset) -> Dataset {
+        assert_eq!(data.dim, self.in_dim);
+        let n = data.n();
+        let mut x = vec![0.0f32; n * self.out_dim];
+        for i in 0..n {
+            let row = data.row(i);
+            for c in 0..self.out_dim {
+                let comp = &self.components[c * self.in_dim..(c + 1) * self.in_dim];
+                let mut acc = 0.0f32;
+                for j in 0..self.in_dim {
+                    acc += (row[j] - self.mean[j]) * comp[j];
+                }
+                x[i * self.out_dim + c] = acc;
+            }
+        }
+        Dataset {
+            dim: self.out_dim,
+            classes: data.classes,
+            x,
+            y: data.y.clone(),
+        }
+    }
+}
+
+fn orthogonalize(v: &mut [f64], basis: &[Vec<f64>]) {
+    for b in basis {
+        let dot: f64 = v.iter().zip(b).map(|(a, c)| a * c).sum();
+        for (x, c) in v.iter_mut().zip(b) {
+            *x -= dot * c;
+        }
+    }
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
+
+    /// Build data with a known dominant direction.
+    fn anisotropic(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0f32; n * d];
+        for i in 0..n {
+            let big = rng.normal() * 10.0; // huge variance along axis 0
+            for j in 0..d {
+                let noise = rng.normal() * 0.5;
+                x[i * d + j] = (if j == 0 { big } else { 0.0 } + noise) as f32;
+            }
+        }
+        Dataset {
+            dim: d,
+            classes: 2,
+            x,
+            y: vec![0; n],
+        }
+    }
+
+    #[test]
+    fn finds_dominant_direction() {
+        let data = anisotropic(400, 8, 1);
+        let pca = Pca::fit(&data, 2, 30, &mut Rng::new(2));
+        // first component ≈ ±e0
+        let c0 = &pca.components[0..8];
+        assert!(c0[0].abs() > 0.99, "c0 = {c0:?}");
+        assert!(pca.variance[0] > 10.0 * pca.variance[1]);
+    }
+
+    #[test]
+    fn components_orthonormal() {
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(20, 500), &mut Rng::new(3));
+        let pca = Pca::fit(&data, 5, 25, &mut Rng::new(4));
+        for a in 0..5 {
+            for b in a..5 {
+                let dot: f64 = (0..20)
+                    .map(|j| {
+                        pca.components[a * 20 + j] as f64 * pca.components[b * 20 + j] as f64
+                    })
+                    .sum();
+                if a == b {
+                    assert!((dot - 1.0).abs() < 1e-3, "({a},{b}) dot={dot}");
+                } else {
+                    assert!(dot.abs() < 1e-3, "({a},{b}) dot={dot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn variances_descending() {
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(16, 400), &mut Rng::new(5));
+        let pca = Pca::fit(&data, 6, 25, &mut Rng::new(6));
+        for w in pca.variance.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9, "{:?}", pca.variance);
+        }
+    }
+
+    #[test]
+    fn transform_shape_and_centering() {
+        let data = anisotropic(200, 10, 7);
+        let pca = Pca::fit(&data, 3, 20, &mut Rng::new(8));
+        let t = pca.transform(&data);
+        assert_eq!(t.dim, 3);
+        assert_eq!(t.n(), 200);
+        // projected data is (approximately) mean-centered
+        for c in 0..3 {
+            let mean: f64 =
+                (0..t.n()).map(|i| t.row(i)[c] as f64).sum::<f64>() / t.n() as f64;
+            assert!(mean.abs() < 0.2, "component {c} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn projection_preserves_class_structure() {
+        // PCA to 8 dims should keep the mixture separable: nearest class
+        // mean in PCA space still beats chance comfortably.
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(32, 1500), &mut Rng::new(9));
+        let pca = Pca::fit(&data, 8, 25, &mut Rng::new(10));
+        let proj = pca.transform(&data);
+        // quick NCM accuracy in projected space
+        let half = proj.n() / 2;
+        let d = proj.dim;
+        let mut means = vec![0.0f64; proj.classes * d];
+        let mut counts = vec![0usize; proj.classes];
+        for i in 0..half {
+            let c = proj.y[i] as usize;
+            counts[c] += 1;
+            for (m, v) in means[c * d..(c + 1) * d].iter_mut().zip(proj.row(i)) {
+                *m += *v as f64;
+            }
+        }
+        for c in 0..proj.classes {
+            for m in means[c * d..(c + 1) * d].iter_mut() {
+                *m /= counts[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in half..proj.n() {
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..proj.classes {
+                let dist: f64 = means[c * d..(c + 1) * d]
+                    .iter()
+                    .zip(proj.row(i))
+                    .map(|(m, v)| (m - *v as f64).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == proj.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / (proj.n() - half) as f64;
+        assert!(acc > 0.5, "acc = {acc}");
+    }
+}

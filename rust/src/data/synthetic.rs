@@ -1,0 +1,235 @@
+//! Synthetic dataset generators (the offline stand-ins for MNIST/CIFAR-10).
+//!
+//! Gaussian-mixture classification: class c draws features from
+//! N(μ_c, σ²I) with class means placed at distance `separation` on a
+//! random orthant-ish layout. Two presets match the paper's two datasets
+//! in *difficulty ordering* — the CIFAR-like preset has lower separation
+//! and heavier within-class noise, so (like the paper's Fig. 1) its error
+//! floor is markedly higher than the MNIST-like preset's. Sizes default to
+//! the paper's: 60k/10k (MNIST-like), 50k/10k (CIFAR-like), scaled down by
+//! callers that need speed.
+
+use super::{Dataset, SeqDataset};
+use crate::util::rng::Rng;
+
+/// Gaussian-mixture generator parameters.
+#[derive(Debug, Clone)]
+pub struct MixtureSpec {
+    pub dim: usize,
+    pub classes: usize,
+    pub n: usize,
+    /// Distance scale between class means.
+    pub separation: f64,
+    /// Within-class standard deviation.
+    pub noise: f64,
+}
+
+impl MixtureSpec {
+    /// MNIST-like: well separated, easy for a linear model (paper reaches
+    /// ~90% LRM accuracy).
+    pub fn mnist_like(dim: usize, n: usize) -> Self {
+        MixtureSpec {
+            dim,
+            classes: 10,
+            n,
+            separation: 3.0,
+            noise: 1.0,
+        }
+    }
+
+    /// CIFAR-like: overlapping classes, hard for a linear model (paper's
+    /// LRM test error stays ~60-70%).
+    pub fn cifar_like(dim: usize, n: usize) -> Self {
+        MixtureSpec {
+            dim,
+            classes: 10,
+            n,
+            separation: 0.9,
+            noise: 1.3,
+        }
+    }
+}
+
+/// Generate a mixture dataset. Class means are unit-ish random Gaussian
+/// directions scaled by `separation`; features add N(0, noise²) noise.
+pub fn gaussian_mixture(spec: &MixtureSpec, rng: &mut Rng) -> Dataset {
+    let MixtureSpec {
+        dim,
+        classes,
+        n,
+        separation,
+        noise,
+    } = *spec;
+    // class means
+    let mut means = vec![0.0f32; classes * dim];
+    for c in 0..classes {
+        for d in 0..dim {
+            means[c * dim + d] = (rng.normal() * separation / (dim as f64).sqrt()) as f32;
+        }
+    }
+    let mut x = vec![0.0f32; n * dim];
+    let mut y = vec![0u32; n];
+    for i in 0..n {
+        let c = rng.below(classes);
+        y[i] = c as u32;
+        let mu = &means[c * dim..(c + 1) * dim];
+        let row = &mut x[i * dim..(i + 1) * dim];
+        for (r, m) in row.iter_mut().zip(mu) {
+            *r = *m + (rng.normal() * noise) as f32;
+        }
+    }
+    Dataset {
+        dim,
+        classes,
+        x,
+        y,
+    }
+}
+
+/// Markov-chain token sequences for the transformer workload: a random
+/// banded transition matrix gives the LM a learnable structure (loss can
+/// fall well below log(vocab)).
+pub fn markov_sequences(vocab: usize, seq: usize, n: usize, rng: &mut Rng) -> SeqDataset {
+    assert!(vocab >= 2);
+    // Row-stochastic transition matrix concentrated on a band of 4 tokens.
+    let band = 4usize.min(vocab);
+    let mut trans = vec![0.0f64; vocab * vocab];
+    for a in 0..vocab {
+        let mut weights = vec![0.0f64; vocab];
+        let mut total = 0.0;
+        for off in 0..band {
+            let b = (a + 1 + off * 3) % vocab;
+            let w = rng.uniform_in(0.5, 1.5);
+            weights[b] += w;
+            total += w;
+        }
+        // small uniform smoothing
+        for (b, w) in weights.iter_mut().enumerate() {
+            trans[a * vocab + b] = (*w + 0.02) / (total + 0.02 * vocab as f64);
+        }
+    }
+    let mut tokens = Vec::with_capacity(n * seq);
+    for _ in 0..n {
+        let mut cur = rng.below(vocab);
+        for _ in 0..seq {
+            tokens.push(cur as i32);
+            // sample next from transition row
+            let mut u = rng.uniform();
+            let row = &trans[cur * vocab..(cur + 1) * vocab];
+            let mut next = vocab - 1;
+            for (b, &p) in row.iter().enumerate() {
+                if u < p {
+                    next = b;
+                    break;
+                }
+                u -= p;
+            }
+            cur = next;
+        }
+    }
+    SeqDataset { vocab, seq, tokens }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixture_shapes_and_label_range() {
+        let mut rng = Rng::new(0);
+        let d = gaussian_mixture(&MixtureSpec::mnist_like(16, 500), &mut rng);
+        assert_eq!(d.n(), 500);
+        assert_eq!(d.dim, 16);
+        assert!(d.y.iter().all(|&y| (y as usize) < d.classes));
+        // all classes present with high probability
+        assert!(d.class_counts().iter().all(|&c| c > 10));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gaussian_mixture(&MixtureSpec::mnist_like(8, 100), &mut Rng::new(7));
+        let b = gaussian_mixture(&MixtureSpec::mnist_like(8, 100), &mut Rng::new(7));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn mnist_like_is_linearly_separable_ish() {
+        // Nearest-class-mean classifier must beat 70% on the easy preset
+        // and do markedly worse on the hard preset.
+        let easy = eval_ncm(&MixtureSpec::mnist_like(32, 2000), 11);
+        let hard = eval_ncm(&MixtureSpec::cifar_like(32, 2000), 11);
+        assert!(easy > 0.7, "easy acc = {easy}");
+        assert!(hard < easy - 0.15, "hard={hard} easy={easy}");
+    }
+
+    fn eval_ncm(spec: &MixtureSpec, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let d = gaussian_mixture(spec, &mut rng);
+        // estimate class means from first half, evaluate on second half
+        let half = d.n() / 2;
+        let mut means = vec![0.0f64; d.classes * d.dim];
+        let mut counts = vec![0usize; d.classes];
+        for i in 0..half {
+            let c = d.y[i] as usize;
+            counts[c] += 1;
+            for (m, v) in means[c * d.dim..(c + 1) * d.dim].iter_mut().zip(d.row(i)) {
+                *m += *v as f64;
+            }
+        }
+        for c in 0..d.classes {
+            if counts[c] > 0 {
+                for m in means[c * d.dim..(c + 1) * d.dim].iter_mut() {
+                    *m /= counts[c] as f64;
+                }
+            }
+        }
+        let mut correct = 0usize;
+        for i in half..d.n() {
+            let row = d.row(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..d.classes {
+                let dist: f64 = means[c * d.dim..(c + 1) * d.dim]
+                    .iter()
+                    .zip(row)
+                    .map(|(m, v)| (m - *v as f64).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == d.y[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / (d.n() - half) as f64
+    }
+
+    #[test]
+    fn markov_tokens_in_range() {
+        let mut rng = Rng::new(3);
+        let s = markov_sequences(32, 16, 50, &mut rng);
+        assert_eq!(s.n(), 50);
+        assert!(s.tokens.iter().all(|&t| t >= 0 && (t as usize) < 32));
+    }
+
+    #[test]
+    fn markov_has_structure() {
+        // The banded chain makes some bigrams much more common than the
+        // uniform baseline.
+        let mut rng = Rng::new(5);
+        let v = 16;
+        let s = markov_sequences(v, 64, 200, &mut rng);
+        let mut bigrams = vec![0usize; v * v];
+        for i in 0..s.n() {
+            let row = s.row(i);
+            for w in row.windows(2) {
+                bigrams[w[0] as usize * v + w[1] as usize] += 1;
+            }
+        }
+        let total: usize = bigrams.iter().sum();
+        let max = *bigrams.iter().max().unwrap();
+        // uniform would put ~total/v² in each cell; structure ⇒ >> that
+        assert!(max as f64 > 4.0 * total as f64 / (v * v) as f64);
+    }
+}

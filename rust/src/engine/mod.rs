@@ -1,0 +1,210 @@
+//! Gradient engines: the interface between the coordinator and compute.
+//!
+//! A [`GradEngine`] turns (flat params, batch) into (loss, flat gradient)
+//! — eq. (4)-(5)'s local computation. Two implementations:
+//!
+//! - [`NativeEngine`] — pure Rust (model::{lrm,mlp}); oracle + fallback.
+//! - [`crate::runtime::PjrtEngine`] — the production path: executes the
+//!   AOT-compiled JAX/Pallas artifact through the PJRT C API.
+//!
+//! Engines are stateful (`&mut self`) so implementations can reuse
+//! scratch/device buffers across iterations without allocating on the hot
+//! path.
+
+pub mod server;
+
+use crate::data::batch::{Batch, BatchSampler, SeqBatch};
+use crate::data::{Dataset, SeqDataset};
+use crate::model::{lrm, mlp, ModelKind, ModelMeta};
+
+/// A batch of either workload family, in artifact input layout.
+#[derive(Debug, Clone)]
+pub enum AnyBatch {
+    Dense(Batch),
+    Seq(SeqBatch),
+}
+
+impl AnyBatch {
+    pub fn dense(&self) -> anyhow::Result<&Batch> {
+        match self {
+            AnyBatch::Dense(b) => Ok(b),
+            AnyBatch::Seq(_) => anyhow::bail!("expected dense batch, got token batch"),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            AnyBatch::Dense(b) => b.bsz,
+            AnyBatch::Seq(b) => b.bsz * b.seq, // per-token predictions
+        }
+    }
+}
+
+pub trait GradEngine {
+    /// Total flat parameter count P.
+    fn param_count(&self) -> usize;
+
+    /// Compute mean loss and write the flat gradient into `grad_out`.
+    fn grad_into(
+        &mut self,
+        w: &[f32],
+        batch: &AnyBatch,
+        grad_out: &mut [f32],
+    ) -> anyhow::Result<f32>;
+
+    /// Mean loss + number of correct predictions over the batch.
+    fn eval(&mut self, w: &[f32], batch: &AnyBatch) -> anyhow::Result<(f32, usize)>;
+
+    /// Human-readable backend tag (for logs/reports).
+    fn backend(&self) -> &'static str;
+}
+
+/// A per-worker source of training batches + a shared eval set.
+pub trait BatchSource: Send {
+    /// Draw the next training mini-batch C_j(k) from this worker's shard.
+    fn next_train(&mut self, bsz: usize) -> AnyBatch;
+    /// Number of examples in this worker's shard.
+    fn shard_len(&self) -> usize;
+}
+
+/// Dense classification source over a worker's local shard D_j.
+pub struct DenseSource {
+    shard: Dataset,
+    sampler: BatchSampler,
+}
+
+impl DenseSource {
+    pub fn new(shard: Dataset, seed: u64) -> Self {
+        DenseSource {
+            shard,
+            sampler: BatchSampler::new(seed),
+        }
+    }
+}
+
+impl BatchSource for DenseSource {
+    fn next_train(&mut self, bsz: usize) -> AnyBatch {
+        AnyBatch::Dense(self.sampler.sample(&self.shard, bsz))
+    }
+
+    fn shard_len(&self) -> usize {
+        self.shard.n()
+    }
+}
+
+/// Token-sequence source (transformer workload).
+pub struct SeqSource {
+    shard: SeqDataset,
+    sampler: BatchSampler,
+}
+
+impl SeqSource {
+    pub fn new(shard: SeqDataset, seed: u64) -> Self {
+        SeqSource {
+            shard,
+            sampler: BatchSampler::new(seed),
+        }
+    }
+}
+
+impl BatchSource for SeqSource {
+    fn next_train(&mut self, bsz: usize) -> AnyBatch {
+        AnyBatch::Seq(self.sampler.sample_seq(&self.shard, bsz))
+    }
+
+    fn shard_len(&self) -> usize {
+        self.shard.n()
+    }
+}
+
+/// Pure-Rust engine for LRM and MLP2.
+pub struct NativeEngine {
+    meta: ModelMeta,
+    lrm_scratch: lrm::LrmScratch,
+    mlp_scratch: mlp::MlpScratch,
+}
+
+impl NativeEngine {
+    pub fn new(meta: ModelMeta) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            matches!(meta.kind, ModelKind::Lrm | ModelKind::Mlp2),
+            "native engine supports lrm/mlp2 only (got {}); use the PJRT engine",
+            meta.kind.name()
+        );
+        Ok(NativeEngine {
+            meta,
+            lrm_scratch: Default::default(),
+            mlp_scratch: Default::default(),
+        })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+}
+
+impl GradEngine for NativeEngine {
+    fn param_count(&self) -> usize {
+        self.meta.param_count
+    }
+
+    fn grad_into(
+        &mut self,
+        w: &[f32],
+        batch: &AnyBatch,
+        grad_out: &mut [f32],
+    ) -> anyhow::Result<f32> {
+        let batch = batch.dense()?;
+        Ok(match self.meta.kind {
+            ModelKind::Lrm => lrm::grad(&self.meta, w, batch, grad_out, &mut self.lrm_scratch),
+            ModelKind::Mlp2 => mlp::grad(&self.meta, w, batch, grad_out, &mut self.mlp_scratch),
+            ModelKind::Transformer => unreachable!("checked in new()"),
+        })
+    }
+
+    fn eval(&mut self, w: &[f32], batch: &AnyBatch) -> anyhow::Result<(f32, usize)> {
+        let batch = batch.dense()?;
+        Ok(match self.meta.kind {
+            ModelKind::Lrm => lrm::eval(&self.meta, w, batch, &mut self.lrm_scratch),
+            ModelKind::Mlp2 => mlp::eval(&self.meta, w, batch, &mut self.mlp_scratch),
+            ModelKind::Transformer => unreachable!("checked in new()"),
+        })
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batch::BatchSampler;
+    use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_engine_lrm_roundtrip() {
+        let meta = ModelMeta::lrm(8, 10, 32);
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(8, 100), &mut Rng::new(0));
+        let batch = BatchSampler::new(1).sample(&data, 32);
+        let batch = AnyBatch::Dense(batch);
+        let mut eng = NativeEngine::new(meta.clone()).unwrap();
+        let w = meta.init_params(&mut Rng::new(2));
+        let mut g = vec![0.0f32; eng.param_count()];
+        let loss = eng.grad_into(&w, &batch, &mut g).unwrap();
+        assert!(loss > 0.0 && loss.is_finite());
+        assert!(g.iter().any(|&v| v != 0.0));
+        let (le, correct) = eng.eval(&w, &batch).unwrap();
+        assert!((le - loss).abs() < 1e-6);
+        assert!(correct <= 32);
+        assert_eq!(eng.backend(), "native");
+    }
+
+    #[test]
+    fn native_engine_rejects_transformer() {
+        let mut meta = ModelMeta::lrm(4, 2, 8);
+        meta.kind = ModelKind::Transformer;
+        assert!(NativeEngine::new(meta).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Compute server: cross-thread access to thread-pinned engines.
+//!
+//! The `xla` crate's PJRT handles are Rc-backed (thread-local), but the
+//! live-mode coordinator runs one OS thread per worker. The standard fix
+//! is an executor-service pattern: one dedicated compute thread owns the
+//! engine (client + compiled executables) and serves `(w, batch) ->
+//! (loss, grad)` requests over channels. XLA's CPU backend parallelises
+//! each execution internally, so serialising the *dispatch* costs little;
+//! it also mirrors a real deployment where workers share an accelerator.
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use super::{AnyBatch, GradEngine};
+
+enum Request {
+    Grad {
+        w: Vec<f32>,
+        batch: AnyBatch,
+        reply: Sender<anyhow::Result<(f32, Vec<f32>)>>,
+    },
+    Eval {
+        w: Vec<f32>,
+        batch: AnyBatch,
+        reply: Sender<anyhow::Result<(f32, usize)>>,
+    },
+}
+
+/// Handle workers use to submit compute. Clone freely across threads.
+#[derive(Clone)]
+pub struct ComputeClient {
+    tx: Sender<Request>,
+    param_count: usize,
+}
+
+impl ComputeClient {
+    pub fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    pub fn grad(&self, w: Vec<f32>, batch: AnyBatch) -> anyhow::Result<(f32, Vec<f32>)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Grad { w, batch, reply })
+            .map_err(|_| anyhow::anyhow!("compute server gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("compute server died"))?
+    }
+
+    pub fn eval(&self, w: Vec<f32>, batch: AnyBatch) -> anyhow::Result<(f32, usize)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Eval { w, batch, reply })
+            .map_err(|_| anyhow::anyhow!("compute server gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("compute server died"))?
+    }
+}
+
+/// The server; dropping it (after all clients) stops the thread.
+pub struct ComputeServer {
+    handle: Option<JoinHandle<()>>,
+    tx: Option<Sender<Request>>,
+    param_count: usize,
+}
+
+impl ComputeServer {
+    /// `factory` runs ON the compute thread (so it may build Rc-backed
+    /// PJRT engines); it must be Send itself.
+    pub fn spawn<F>(factory: F) -> anyhow::Result<(ComputeServer, ComputeClient)>
+    where
+        F: FnOnce() -> anyhow::Result<Box<dyn GradEngine>> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Request>();
+        let (init_tx, init_rx) = channel::<anyhow::Result<usize>>();
+        let handle = std::thread::Builder::new()
+            .name("dybw-compute".into())
+            .spawn(move || {
+                let mut engine = match factory() {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(e.param_count()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut grad_buf = vec![0.0f32; engine.param_count()];
+                for req in rx {
+                    match req {
+                        Request::Grad { w, batch, reply } => {
+                            let res = engine
+                                .grad_into(&w, &batch, &mut grad_buf)
+                                .map(|loss| (loss, grad_buf.clone()));
+                            let _ = reply.send(res);
+                        }
+                        Request::Eval { w, batch, reply } => {
+                            let _ = reply.send(engine.eval(&w, &batch));
+                        }
+                    }
+                }
+            })?;
+        let param_count = init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("compute thread crashed during init"))??;
+        let client = ComputeClient {
+            tx: tx.clone(),
+            param_count,
+        };
+        Ok((
+            ComputeServer {
+                handle: Some(handle),
+                tx: Some(tx),
+                param_count,
+            },
+            client,
+        ))
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_count
+    }
+}
+
+impl Drop for ComputeServer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batch::BatchSampler;
+    use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
+    use crate::engine::NativeEngine;
+    use crate::model::ModelMeta;
+    use crate::util::rng::Rng;
+
+    fn batch() -> AnyBatch {
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(8, 100), &mut Rng::new(0));
+        AnyBatch::Dense(BatchSampler::new(1).sample(&data, 16))
+    }
+
+    #[test]
+    fn serves_grad_requests_from_many_threads() {
+        let meta = ModelMeta::lrm(8, 10, 16);
+        let m2 = meta.clone();
+        let (_server, client) =
+            ComputeServer::spawn(move || Ok(Box::new(NativeEngine::new(m2)?) as _)).unwrap();
+        assert_eq!(client.param_count(), meta.param_count);
+        let w = meta.init_params(&mut Rng::new(2));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = client.clone();
+                let w = w.clone();
+                let b = batch();
+                std::thread::spawn(move || c.grad(w, b).unwrap())
+            })
+            .collect();
+        for h in handles {
+            let (loss, g) = h.join().unwrap();
+            assert!(loss.is_finite() && loss > 0.0);
+            assert_eq!(g.len(), meta.param_count);
+        }
+    }
+
+    #[test]
+    fn eval_works() {
+        let meta = ModelMeta::lrm(8, 10, 16);
+        let m2 = meta.clone();
+        let (_server, client) =
+            ComputeServer::spawn(move || Ok(Box::new(NativeEngine::new(m2)?) as _)).unwrap();
+        let w = vec![0.0f32; meta.param_count];
+        let (loss, correct) = client.eval(w, batch()).unwrap();
+        assert!((loss - (10f32).ln()).abs() < 1e-4);
+        assert!(correct <= 16);
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let res = ComputeServer::spawn(|| anyhow::bail!("nope"));
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,313 @@
+//! The paper's figures and table, regenerated.
+//!
+//! Scale note: the paper trains real MNIST/CIFAR on a 6-machine NFS+MPI
+//! testbed; we train the synthetic stand-ins (DESIGN.md §Substitutions)
+//! under the simulated straggler model. Absolute losses/durations differ;
+//! the *comparisons* the paper reports — similar iteration counts, 55-70%
+//! iteration-duration reduction, ~60%+ convergence-time reduction, a
+//! visibly time-varying backup-worker count — are the reproduction target
+//! (EXPERIMENTS.md records paper-vs-measured for each).
+
+use std::path::Path;
+
+use crate::coordinator::setup::{DatasetProfile, Setup};
+use crate::coordinator::Algorithm;
+use crate::graph::topology;
+use crate::metrics::export;
+use crate::metrics::RunHistory;
+use crate::model::ModelMeta;
+
+use super::{render_duration_table, render_eval_table, render_time_table};
+
+/// Run one (algo, dataset, model) cell and export its CSVs.
+pub(crate) fn run_cell(
+    base: &Setup,
+    algo: Algorithm,
+    dataset: DatasetProfile,
+    model: &str,
+    iters: usize,
+    out_dir: &Path,
+    tag: &str,
+) -> anyhow::Result<RunHistory> {
+    let mut s = base.clone();
+    s.algo = algo;
+    s.dataset = dataset;
+    s.model = model.to_string();
+    s.train.iters = iters;
+    s.train.eval_every = (iters / 25).max(1);
+    let mut trainer = s.build_sim()?;
+    let mut h = trainer.run()?;
+    h.dataset = dataset.name().into();
+    h.model = model.into();
+    let prefix = format!("{tag}.{}.{}", dataset.name(), algo.name().to_lowercase());
+    export::write_csv(&h, out_dir, &prefix)?;
+    export::write_json(&h, out_dir, &prefix)?;
+    Ok(h)
+}
+
+fn err_loss_duration_figure(
+    base: &Setup,
+    model: &str,
+    iters: usize,
+    out_dir: &Path,
+    tag: &str,
+    title: &str,
+) -> anyhow::Result<String> {
+    let mut out = format!("=== {title} ===\n");
+    for dataset in [DatasetProfile::MnistLike, DatasetProfile::CifarLike] {
+        let dybw = run_cell(base, Algorithm::CbDybw, dataset, model, iters, out_dir, tag)?;
+        let full = run_cell(base, Algorithm::CbFull, dataset, model, iters, out_dir, tag)?;
+        out.push_str(&format!(
+            "\n--- {} / {} / {} workers ---\n",
+            dataset.name(),
+            model,
+            base.workers
+        ));
+        out.push_str("(a)+(b) error & loss vs iteration:\n");
+        out.push_str(&render_eval_table(&dybw, &full));
+        out.push_str("(c)+(d) iteration duration & backup workers:\n");
+        out.push_str(&render_duration_table(&dybw, &full));
+    }
+    Ok(out)
+}
+
+/// Figure 1: LRM on MNIST-like and CIFAR-like, 6 workers.
+pub fn fig1(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    let iters = if quick { 40 } else { 400 };
+    err_loss_duration_figure(
+        base,
+        "lrm_d64_c10_b256",
+        iters,
+        out_dir,
+        "fig1",
+        "Figure 1: cb-DyBW vs cb-Full, LRM (6 workers)",
+    )
+}
+
+/// Figure 2: the 10-worker connected network (topology report).
+pub fn fig2(base: &Setup) -> anyhow::Result<String> {
+    let g = topology::paper_fig2(base.train.seed);
+    let mut out = String::from("=== Figure 2: 10-worker connected network ===\n");
+    out.push_str(&format!(
+        "nodes={} edges={} diameter={:?} connected={}\n",
+        g.n(),
+        g.edge_count(),
+        crate::graph::paths::diameter(&g),
+        g.is_connected()
+    ));
+    for v in 0..g.n() {
+        let nbrs: Vec<String> = g.neighbors(v).map(|u| u.to_string()).collect();
+        out.push_str(&format!("  worker {v}: neighbours [{}]\n", nbrs.join(", ")));
+    }
+    let p = crate::graph::paths::connecting_path(&g);
+    out.push_str(&format!(
+        "DTUR connecting path P ({} links): {:?}\n",
+        p.len(),
+        p
+    ));
+    Ok(out)
+}
+
+/// Figure 3: impact of batch size (paper: 1,024 is the sweet spot).
+pub fn fig3(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    let iters = if quick { 30 } else { 250 };
+    let batches: &[usize] = if quick { &[64, 256] } else { &[128, 256, 512, 1024, 2048] };
+    let mut out = String::from("=== Figure 3: impact of batch size (LRM, cb-DyBW) ===\n");
+    for dataset in [DatasetProfile::MnistLike, DatasetProfile::CifarLike] {
+        out.push_str(&format!("\n--- {} ---\n", dataset.name()));
+        out.push_str(&format!(
+            "{:>8} | {:>10} {:>12} {:>14} {:>16}\n",
+            "batch", "final err%", "final loss", "mean T(k) (s)", "loss @ t*0.5"
+        ));
+        for &bsz in batches {
+            let mut s = base.clone();
+            s.algo = Algorithm::CbDybw;
+            s.dataset = dataset;
+            s.model = format!("lrm_d64_c10_b{bsz}");
+            s.train.iters = iters;
+            s.train.eval_every = (iters / 20).max(1);
+            // compute time grows with batch size: scale the straggler base
+            let scale = bsz as f64 / 256.0;
+            s.straggler_base = crate::straggler::Dist::ShiftedExp {
+                base: 0.08 * scale,
+                rate: 25.0 / scale,
+            };
+            let mut trainer = s.build_sim()?;
+            let h = trainer.run()?;
+            let prefix = format!("fig3.{}.b{bsz}", dataset.name());
+            export::write_csv(&h, out_dir, &prefix)?;
+            let final_eval = h.final_eval().unwrap();
+            let half_t = h.total_time() * 0.5;
+            let mid = h
+                .evals
+                .iter()
+                .take_while(|e| e.clock <= half_t)
+                .last()
+                .map(|e| format!("{:.4}", e.test_loss))
+                .unwrap_or_else(|| "-".into());
+            out.push_str(&format!(
+                "{:>8} | {:>10.1} {:>12.4} {:>14.3} {:>16}\n",
+                bsz,
+                final_eval.test_error * 100.0,
+                final_eval.test_loss,
+                h.mean_iter_duration(),
+                mid
+            ));
+        }
+    }
+    out.push_str(
+        "\n(paper: marginal improvement shrinks with batch size; 1,024 balances\n progress per iteration against iteration duration)\n",
+    );
+    Ok(out)
+}
+
+/// Figure 4: 2NN (Table 1 architecture) on both datasets.
+pub fn fig4(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    let iters = if quick { 30 } else { 300 };
+    let model = if quick { "mlp2_d64_h64_c10_b128" } else { "mlp2_d64_h256_c10_b256" };
+    err_loss_duration_figure(
+        base,
+        model,
+        iters,
+        out_dir,
+        "fig4",
+        "Figure 4: cb-DyBW vs cb-Full, 2NN (6 workers)",
+    )
+}
+
+/// Figure 5: 2NN loss versus wall-clock time + convergence-time reduction.
+pub fn fig5(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    let iters = if quick { 30 } else { 300 };
+    let model = if quick { "mlp2_d64_h64_c10_b128" } else { "mlp2_d64_h256_c10_b256" };
+    let mut out = String::from("=== Figure 5: loss vs time, 2NN ===\n");
+    // Targets sit just above each run's loss floor (the paper's 0.1/0.75
+    // are for real MNIST/CIFAR; our mixtures bottom out higher).
+    for (dataset, target) in [
+        (DatasetProfile::MnistLike, 0.45),
+        (DatasetProfile::CifarLike, 2.2),
+    ] {
+        let dybw = run_cell(base, Algorithm::CbDybw, dataset, model, iters, out_dir, "fig5")?;
+        let full = run_cell(base, Algorithm::CbFull, dataset, model, iters, out_dir, "fig5")?;
+        out.push_str(&format!("\n--- {} ---\n", dataset.name()));
+        out.push_str(&render_time_table(&dybw, &full, &[target]));
+    }
+    Ok(out)
+}
+
+/// Figure 6: LRM on the 10-worker network (Appendix B).
+pub fn fig6(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    let iters = if quick { 30 } else { 300 };
+    let mut b10 = base.clone();
+    b10.workers = 10;
+    err_loss_duration_figure(
+        &b10,
+        "lrm_d64_c10_b256",
+        iters,
+        out_dir,
+        "fig6",
+        "Figure 6: cb-DyBW vs cb-Full, LRM (10 workers, Fig. 2 network)",
+    )
+}
+
+/// Figure 7: LRM loss versus time (Appendix B).
+pub fn fig7(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    let iters = if quick { 30 } else { 300 };
+    let mut b10 = base.clone();
+    b10.workers = 10;
+    let mut out = String::from("=== Figure 7: loss vs time, LRM (10 workers) ===\n");
+    for (dataset, target) in [
+        (DatasetProfile::MnistLike, 0.5),
+        (DatasetProfile::CifarLike, 2.2),
+    ] {
+        let dybw = run_cell(&b10, Algorithm::CbDybw, dataset, "lrm_d64_c10_b256", iters, out_dir, "fig7")?;
+        let full = run_cell(&b10, Algorithm::CbFull, dataset, "lrm_d64_c10_b256", iters, out_dir, "fig7")?;
+        out.push_str(&format!("\n--- {} ---\n", dataset.name()));
+        out.push_str(&render_time_table(&dybw, &full, &[target]));
+    }
+    Ok(out)
+}
+
+/// Table 1: the 2NN architecture (parameter inventory).
+pub fn table1() -> anyhow::Result<String> {
+    let meta = ModelMeta::mlp2(256, 256, 10, 1024);
+    let mut out = String::from("=== Table 1: 2NN architecture (inputs PCA'd to 256) ===\n");
+    out.push_str(&format!(
+        "{:<28} {:>14} {:>10}\n",
+        "layer", "shape", "params"
+    ));
+    let rows = [
+        ("Fully Connected + ReLU", "w1/b1"),
+        ("Fully Connected + ReLU", "w2/b2"),
+        ("Fully Connected + SoftMax", "w3/b3"),
+    ];
+    for (i, (label, _)) in rows.iter().enumerate() {
+        let w = &meta.segments[i * 2];
+        let b = &meta.segments[i * 2 + 1];
+        out.push_str(&format!(
+            "{:<28} {:>14} {:>10}\n",
+            label,
+            format!("{}x{}", w.shape[0], w.shape[1]),
+            w.size + b.size
+        ));
+    }
+    out.push_str(&format!(
+        "{:<28} {:>14} {:>10}\n",
+        "total", "", meta.param_count
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_setup() -> Setup {
+        let mut s = Setup::default();
+        s.train_n = 2400;
+        s.test_n = 1024;
+        s.train.seed = 11;
+        s
+    }
+
+    #[test]
+    fn table1_matches_paper_architecture() {
+        let t = table1().unwrap();
+        assert!(t.contains("256x256"));
+        assert!(t.contains("256x10"));
+    }
+
+    #[test]
+    fn fig2_prints_connected_topology() {
+        let t = fig2(&Setup::default()).unwrap();
+        assert!(t.contains("connected=true"));
+        assert!(t.contains("9 links"));
+    }
+
+    #[test]
+    fn fig1_quick_shows_reduction() {
+        let dir = std::env::temp_dir().join("dybw_fig1_test");
+        let out = fig1(&quick_setup(), &dir, true).unwrap();
+        assert!(out.contains("duration reduction"));
+        assert!(out.contains("mnist-like"));
+        assert!(out.contains("cifar-like"));
+        // CSVs written
+        assert!(dir.join("fig1.mnist-like.cb-dybw.iters.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig3_quick_runs() {
+        let dir = std::env::temp_dir().join("dybw_fig3_test");
+        let out = fig3(&quick_setup(), &dir, true).unwrap();
+        assert!(out.contains("batch"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig5_quick_reports_time_to_loss() {
+        let dir = std::env::temp_dir().join("dybw_fig5_test");
+        let out = fig5(&quick_setup(), &dir, true).unwrap();
+        assert!(out.contains("time to loss"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,191 @@
+//! Experiment harnesses: regenerate every table and figure in the paper.
+//!
+//! | id       | paper artefact                            | harness |
+//! |----------|-------------------------------------------|---------|
+//! | fig1     | Fig. 1: LRM err/loss/duration/backup, 6 w | [`figures::fig1`] |
+//! | fig2     | Fig. 2: the 10-worker connected network   | [`figures::fig2`] |
+//! | fig3     | Fig. 3: impact of batch size              | [`figures::fig3`] |
+//! | fig4     | Fig. 4: 2NN err/loss/duration/backup      | [`figures::fig4`] |
+//! | fig5     | Fig. 5: 2NN loss vs wall-clock time       | [`figures::fig5`] |
+//! | fig6     | Fig. 6: LRM on the 10-worker network      | [`figures::fig6`] |
+//! | fig7     | Fig. 7: LRM loss vs wall-clock time       | [`figures::fig7`] |
+//! | table1   | Table 1: 2NN architecture                 | [`figures::table1`] |
+//! | speedup  | Cor. 2/3: linear speedup in N             | [`speedup::run`] |
+//! | baselines| §1/§related: static-b + PS comparisons    | [`ablation::baselines`] |
+//! | topology | β^{NB} sensitivity: ring/grid/complete    | [`ablation::topology`] |
+//! | severity | straggler-severity sweep (crossover)      | [`ablation::severity`] |
+//!
+//! Each harness prints the same series the paper plots (downsampled for
+//! stdout) and writes full-resolution CSV/JSON under `--out-dir`.
+
+pub mod ablation;
+pub mod figures;
+pub mod speedup;
+
+use std::path::Path;
+
+use crate::coordinator::setup::Setup;
+use crate::metrics::RunHistory;
+
+/// All experiment ids, in presentation order.
+pub const ALL: &[&str] = &[
+    "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "speedup", "baselines",
+    "topology", "severity", "compression",
+];
+
+/// Dispatch by id. `quick` shrinks workloads (used by tests/CI).
+pub fn run(id: &str, base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    match id {
+        "fig1" => figures::fig1(base, out_dir, quick),
+        "fig2" => figures::fig2(base),
+        "fig3" => figures::fig3(base, out_dir, quick),
+        "fig4" => figures::fig4(base, out_dir, quick),
+        "fig5" => figures::fig5(base, out_dir, quick),
+        "fig6" => figures::fig6(base, out_dir, quick),
+        "fig7" => figures::fig7(base, out_dir, quick),
+        "table1" => figures::table1(),
+        "speedup" => speedup::run(base, out_dir, quick),
+        "baselines" => ablation::baselines(base, out_dir, quick),
+        "topology" => ablation::topology(base, out_dir, quick),
+        "severity" => ablation::severity(base, out_dir, quick),
+        "compression" => ablation::compression(base, out_dir, quick),
+        "all" => {
+            let mut out = String::new();
+            for id in ALL {
+                out.push_str(&run(id, base, out_dir, quick)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        _ => anyhow::bail!("unknown experiment '{id}' (known: {ALL:?} or 'all')"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared rendering helpers
+// ---------------------------------------------------------------------------
+
+/// Downsample an iteration-indexed series to ~`points` rows.
+pub(crate) fn sample_series(len: usize, points: usize) -> Vec<usize> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let step = (len / points.max(1)).max(1);
+    let mut idx: Vec<usize> = (0..len).step_by(step).collect();
+    if *idx.last().unwrap() != len - 1 {
+        idx.push(len - 1);
+    }
+    idx
+}
+
+/// Two-run aligned eval table: err and loss per iteration (Fig 1a/1b style).
+pub(crate) fn render_eval_table(a: &RunHistory, b: &RunHistory) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>6} | {:>10} {:>10} | {:>10} {:>10}   (test error %, train-side loss from eval)\n",
+        "iter",
+        format!("{} err", a.algo),
+        format!("{} err", b.algo),
+        format!("{} loss", a.algo),
+        format!("{} loss", b.algo),
+    ));
+    let n = a.evals.len().min(b.evals.len());
+    for i in sample_series(n, 12) {
+        let (ea, eb) = (&a.evals[i], &b.evals[i]);
+        out.push_str(&format!(
+            "{:>6} | {:>10.1} {:>10.1} | {:>10.4} {:>10.4}\n",
+            ea.k,
+            ea.test_error * 100.0,
+            eb.test_error * 100.0,
+            ea.test_loss,
+            eb.test_loss
+        ));
+    }
+    out
+}
+
+/// Duration + backup-worker table (Fig 1c/1d style).
+pub(crate) fn render_duration_table(a: &RunHistory, b: &RunHistory) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>6} | {:>12} {:>12} | {:>12}\n",
+        "iter",
+        format!("{} T(k)", a.algo),
+        format!("{} T(k)", b.algo),
+        "backup b(k)"
+    ));
+    let n = a.iters.len().min(b.iters.len());
+    for i in sample_series(n, 10) {
+        out.push_str(&format!(
+            "{:>6} | {:>11.3}s {:>11.3}s | {:>12.2}\n",
+            a.iters[i].k, a.iters[i].duration, b.iters[i].duration, a.iters[i].backup_avg
+        ));
+    }
+    out.push_str(&format!(
+        "  mean | {:>11.3}s {:>11.3}s | {:>12.2}   -> duration reduction {:.0}%\n",
+        a.mean_iter_duration(),
+        b.mean_iter_duration(),
+        a.mean_backup_workers(),
+        (1.0 - a.mean_iter_duration() / b.mean_iter_duration()) * 100.0
+    ));
+    out
+}
+
+/// Loss-versus-time table (Fig 5/7 style).
+pub(crate) fn render_time_table(a: &RunHistory, b: &RunHistory, targets: &[f64]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>10} | {:>12} {:>12}   (test loss at wall-clock time)\n",
+        "time", &a.algo, &b.algo
+    ));
+    let t_max = a.total_time().max(b.total_time());
+    for frac in [0.05, 0.1, 0.2, 0.35, 0.5, 0.7, 0.85, 1.0] {
+        let t = t_max * frac;
+        let pick = |h: &RunHistory| {
+            h.evals
+                .iter()
+                .take_while(|e| e.clock <= t)
+                .last()
+                .map(|e| format!("{:.4}", e.test_loss))
+                .unwrap_or_else(|| "-".into())
+        };
+        out.push_str(&format!("{:>9.1}s | {:>12} {:>12}\n", t, pick(a), pick(b)));
+    }
+    for &target in targets {
+        let fmt = |v: Option<f64>| v.map(|x| format!("{x:.1}s")).unwrap_or_else(|| "n/a".into());
+        let (ta, tb) = (a.time_to_test_loss(target), b.time_to_test_loss(target));
+        out.push_str(&format!(
+            "  time to loss {:.2}: {} vs {}{}\n",
+            target,
+            fmt(ta),
+            fmt(tb),
+            match (ta, tb) {
+                (Some(x), Some(y)) if y > 0.0 =>
+                    format!("  -> convergence-time reduction {:.0}%", (1.0 - x / y) * 100.0),
+                _ => String::new(),
+            }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_series_covers_ends() {
+        let idx = sample_series(100, 10);
+        assert_eq!(*idx.first().unwrap(), 0);
+        assert_eq!(*idx.last().unwrap(), 99);
+        assert!(idx.len() <= 12);
+        assert!(sample_series(0, 5).is_empty());
+        assert_eq!(sample_series(3, 10), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let s = Setup::default();
+        assert!(run("fig99", &s, Path::new("/tmp"), true).is_err());
+    }
+}

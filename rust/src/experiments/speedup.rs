@@ -1,0 +1,78 @@
+//! Linear-speedup validation (Corollaries 2-3).
+//!
+//! Theory: with η = √(N/K) the convergence rate is O(1/√(NK) + 1/K), so
+//! the number of iterations to reach ε-accuracy scales like 1/N — "linear
+//! speedup for convergence". We sweep N, hold everything else fixed
+//! (including the TOTAL dataset size, so more workers = more parallel
+//! data), and report iterations-to-target and the N·K̃ product, which the
+//! theory predicts approximately constant once K is large enough.
+
+use std::path::Path;
+
+use crate::coordinator::setup::Setup;
+use crate::coordinator::Algorithm;
+use crate::metrics::export;
+
+pub fn run(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    let ns: &[usize] = if quick { &[2, 4] } else { &[2, 4, 6, 8, 12, 16] };
+    let iters = if quick { 60 } else { 400 };
+    let target = 0.55; // test loss target for the easy LRM task
+    let mut out = String::from("=== Linear speedup (Corollary 2/3): iterations to target vs N ===\n");
+    out.push_str(&format!(
+        "{:>4} | {:>12} {:>10} {:>12} {:>14}\n",
+        "N", "iters to", "N x K", "final loss", "mean T(k) (s)"
+    ));
+    let mut prev_k: Option<usize> = None;
+    for &n in ns {
+        let mut s = base.clone();
+        s.workers = n;
+        s.algo = Algorithm::CbDybw;
+        s.model = "lrm_d64_c10_b256".into();
+        s.train.iters = iters;
+        s.train.eval_every = 5;
+        // Corollary 2's schedule: η = √(N/K) (clamped for stability).
+        s.train.lr0 = (n as f64 / iters as f64).sqrt().min(0.5);
+        s.train.lr_decay = 1.0;
+        let mut trainer = s.build_sim()?;
+        let h = trainer.run()?;
+        export::write_csv(&h, out_dir, &format!("speedup.n{n}"))?;
+        let k_target = h.iters_to_test_loss(target);
+        let final_loss = h.final_eval().map(|e| e.test_loss).unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "{:>4} | {:>12} {:>10} {:>12.4} {:>14.3}\n",
+            n,
+            k_target.map(|k| k.to_string()).unwrap_or_else(|| "n/a".into()),
+            k_target.map(|k| (n * k).to_string()).unwrap_or_else(|| "-".into()),
+            final_loss,
+            h.mean_iter_duration()
+        ));
+        if let (Some(prev), Some(cur)) = (prev_k, k_target) {
+            // monotone non-increasing iterations with more workers
+            // (allow slack for stochastic wiggle)
+            if cur as f64 > prev as f64 * 1.5 {
+                out.push_str(&format!(
+                    "  !! speedup violated between N and previous row ({prev} -> {cur})\n"
+                ));
+            }
+        }
+        prev_k = k_target.or(prev_k);
+    }
+    out.push_str("(theory: K_eps ~ 1/(eps^2 N); N x K approximately constant)\n");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_quick_runs() {
+        let mut s = Setup::default();
+        s.train_n = 2400;
+        s.test_n = 1024;
+        let dir = std::env::temp_dir().join("dybw_speedup_test");
+        let out = run(&s, &dir, true).unwrap();
+        assert!(out.contains("N x K"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,149 @@
+//! Communication-graph substrate (paper §2.1).
+//!
+//! Workers are nodes of an undirected graph `G = (N, E)`; an edge (i, j)
+//! means i and j can exchange parameter updates. The paper assumes `G` is
+//! strongly connected (w.l.o.g.) and evaluates on randomly generated
+//! connected graphs of 6 and 10 workers (Fig. 2).
+//!
+//! - [`Graph`] — adjacency-set representation + invariants
+//! - [`topology`] — generators: ring, complete, star, grid, random-connected
+//! - [`paths`] — BFS distances, diameter, and the "shortest path that
+//!   connects all nodes" P required by DTUR (paper §4.1)
+
+pub mod paths;
+pub mod topology;
+
+use std::collections::BTreeSet;
+
+/// Undirected simple graph over nodes `0..n`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    n: usize,
+    adj: Vec<BTreeSet<usize>>,
+}
+
+impl Graph {
+    pub fn empty(n: usize) -> Self {
+        Graph {
+            n,
+            adj: vec![BTreeSet::new(); n],
+        }
+    }
+
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut g = Graph::empty(n);
+        for &(a, b) in edges {
+            g.add_edge(a, b);
+        }
+        g
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn add_edge(&mut self, a: usize, b: usize) {
+        assert!(a < self.n && b < self.n && a != b, "bad edge ({a},{b})");
+        self.adj[a].insert(b);
+        self.adj[b].insert(a);
+    }
+
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.adj[a].contains(&b)
+    }
+
+    /// Neighbours of `v`, NOT including `v` itself.
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = usize> + '_ {
+        self.adj[v].iter().copied()
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|s| s.len()).sum::<usize>() / 2
+    }
+
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.edge_count());
+        for a in 0..self.n {
+            for &b in &self.adj[a] {
+                if a < b {
+                    out.push((a, b));
+                }
+            }
+        }
+        out
+    }
+
+    /// Is the graph connected? (Assumption: W.l.o.g. `G` strongly connected.)
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &u in &self.adj[v] {
+                if !seen[u] {
+                    seen[u] = true;
+                    count += 1;
+                    stack.push(u);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// The closed neighbourhood N_j = {i | (i,j) ∈ E} ∪ {j} (paper §2.1).
+    pub fn closed_neighborhood(&self, v: usize) -> Vec<usize> {
+        let mut out: Vec<usize> = self.adj[v].iter().copied().collect();
+        out.push(v);
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edges_are_undirected() {
+        let g = Graph::from_edges(3, &[(0, 1)]);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 2));
+        assert_eq!(g.edge_count(), 1);
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (0, 1)]);
+        assert_eq!(g.edge_count(), 1);
+    }
+
+    #[test]
+    fn connectivity() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert!(g.is_connected());
+        let g2 = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        assert!(!g2.is_connected());
+    }
+
+    #[test]
+    fn closed_neighborhood_includes_self() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2)]);
+        assert_eq!(g.closed_neighborhood(0), vec![0, 1, 2]);
+        assert_eq!(g.closed_neighborhood(3), vec![3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_loop_rejected() {
+        let mut g = Graph::empty(2);
+        g.add_edge(1, 1);
+    }
+}

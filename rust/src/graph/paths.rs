@@ -1,0 +1,231 @@
+//! Shortest paths, diameter, and the DTUR connecting path P (paper §4.1).
+//!
+//! DTUR needs "the shortest path that connects all nodes" — the minimal
+//! link set touching every worker. A minimal connecting link set is a
+//! spanning tree (N-1 edges); when the graph admits a Hamiltonian path the
+//! tree degenerates to an actual path. Finding a shortest Hamiltonian path
+//! is NP-hard, so we use the paper-faithful practical reading: try a
+//! greedy DFS Hamiltonian-path heuristic first, fall back to a BFS
+//! spanning tree. Both give |P| = d = N-1, which is what Algorithm 2
+//! consumes (an epoch = d iterations, one P-link established per
+//! iteration). The choice is documented in DESIGN.md §DTUR.
+
+use super::Graph;
+
+/// BFS distances from `src`; `usize::MAX` marks unreachable nodes.
+pub fn bfs_dist(g: &Graph, src: usize) -> Vec<usize> {
+    let mut dist = vec![usize::MAX; g.n()];
+    let mut queue = std::collections::VecDeque::new();
+    dist[src] = 0;
+    queue.push_back(src);
+    while let Some(v) = queue.pop_front() {
+        for u in g.neighbors(v) {
+            if dist[u] == usize::MAX {
+                dist[u] = dist[v] + 1;
+                queue.push_back(u);
+            }
+        }
+    }
+    dist
+}
+
+/// Graph diameter (max shortest-path distance); None if disconnected.
+pub fn diameter(g: &Graph) -> Option<usize> {
+    let mut best = 0;
+    for v in 0..g.n() {
+        let d = bfs_dist(g, v);
+        for &x in &d {
+            if x == usize::MAX {
+                return None;
+            }
+            best = best.max(x);
+        }
+    }
+    Some(best)
+}
+
+/// Shortest path (as a node list) between two nodes, if any.
+pub fn shortest_path(g: &Graph, src: usize, dst: usize) -> Option<Vec<usize>> {
+    let mut prev = vec![usize::MAX; g.n()];
+    let mut dist = vec![usize::MAX; g.n()];
+    let mut queue = std::collections::VecDeque::new();
+    dist[src] = 0;
+    queue.push_back(src);
+    while let Some(v) = queue.pop_front() {
+        if v == dst {
+            break;
+        }
+        for u in g.neighbors(v) {
+            if dist[u] == usize::MAX {
+                dist[u] = dist[v] + 1;
+                prev[u] = v;
+                queue.push_back(u);
+            }
+        }
+    }
+    if dist[dst] == usize::MAX {
+        return None;
+    }
+    let mut path = vec![dst];
+    let mut cur = dst;
+    while cur != src {
+        cur = prev[cur];
+        path.push(cur);
+    }
+    path.reverse();
+    Some(path)
+}
+
+/// The DTUR connecting path P: a minimal set of d = N-1 links spanning all
+/// workers, as an ordered edge list (the order DTUR establishes them in).
+///
+/// Strategy: greedy DFS longest-simple-path from the max-degree node; if
+/// it visits every node we have a true Hamiltonian path, otherwise we
+/// return a BFS spanning tree's edges in discovery order.
+pub fn connecting_path(g: &Graph) -> Vec<(usize, usize)> {
+    assert!(g.is_connected(), "DTUR requires a connected graph");
+    let n = g.n();
+    if n <= 1 {
+        return Vec::new();
+    }
+    // Greedy Hamiltonian-path attempt from each of a few start nodes.
+    let mut starts: Vec<usize> = (0..n).collect();
+    starts.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+    for &s in starts.iter().take(4.min(n)) {
+        if let Some(path) = greedy_ham_path(g, s) {
+            return path.windows(2).map(|w| ord(w[0], w[1])).collect();
+        }
+    }
+    // Fallback: BFS spanning tree in discovery order.
+    let mut seen = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    let mut edges = Vec::with_capacity(n - 1);
+    seen[starts[0]] = true;
+    queue.push_back(starts[0]);
+    while let Some(v) = queue.pop_front() {
+        for u in g.neighbors(v) {
+            if !seen[u] {
+                seen[u] = true;
+                edges.push(ord(v, u));
+                queue.push_back(u);
+            }
+        }
+    }
+    edges
+}
+
+fn ord(a: usize, b: usize) -> (usize, usize) {
+    if a < b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// Greedy simple path: always step to the unvisited neighbour with fewest
+/// unvisited neighbours (Warnsdorff-style). Returns the node order when it
+/// covers all of G.
+fn greedy_ham_path(g: &Graph, start: usize) -> Option<Vec<usize>> {
+    let n = g.n();
+    let mut visited = vec![false; n];
+    let mut path = vec![start];
+    visited[start] = true;
+    let mut cur = start;
+    while path.len() < n {
+        let next = g
+            .neighbors(cur)
+            .filter(|&u| !visited[u])
+            .min_by_key(|&u| g.neighbors(u).filter(|&w| !visited[w]).count())?;
+        visited[next] = true;
+        path.push(next);
+        cur = next;
+    }
+    Some(path)
+}
+
+/// Check that an edge list spans all n nodes and is connected as a subgraph.
+pub fn spans_all(n: usize, edges: &[(usize, usize)]) -> bool {
+    if n == 0 {
+        return true;
+    }
+    let sub = Graph::from_edges(n, edges);
+    // spanning connectivity: the edge-induced subgraph plus isolated nodes
+    // must be connected, i.e. every node touched and one component.
+    let mut touched = vec![false; n];
+    for &(a, b) in edges {
+        touched[a] = true;
+        touched[b] = true;
+    }
+    (n == 1 || touched.iter().all(|&t| t)) && sub.is_connected()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topology;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bfs_on_ring() {
+        let g = topology::ring(6);
+        let d = bfs_dist(&g, 0);
+        assert_eq!(d, vec![0, 1, 2, 3, 2, 1]);
+        assert_eq!(diameter(&g), Some(3));
+    }
+
+    #[test]
+    fn shortest_path_endpoints() {
+        let g = topology::ring(8);
+        let p = shortest_path(&g, 0, 4).unwrap();
+        assert_eq!(p.len(), 5);
+        assert_eq!(p[0], 0);
+        assert_eq!(*p.last().unwrap(), 4);
+        for w in p.windows(2) {
+            assert!(g.has_edge(w[0], w[1]));
+        }
+    }
+
+    #[test]
+    fn connecting_path_spans_everything() {
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            for &n in &[2usize, 3, 6, 10, 15] {
+                let g = topology::random_connected(n, 0.3, &mut rng);
+                let p = connecting_path(&g);
+                assert_eq!(p.len(), n - 1, "n={n} seed={seed}");
+                assert!(spans_all(n, &p), "n={n} seed={seed}");
+                for &(a, b) in &p {
+                    assert!(g.has_edge(a, b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn connecting_path_on_ring_is_hamiltonian() {
+        let g = topology::ring(10);
+        let p = connecting_path(&g);
+        assert_eq!(p.len(), 9);
+        // ring has a Hamiltonian path; each node appears <= 2 times
+        let mut count = vec![0usize; 10];
+        for &(a, b) in &p {
+            count[a] += 1;
+            count[b] += 1;
+        }
+        assert!(count.iter().all(|&c| c <= 2));
+    }
+
+    #[test]
+    fn connecting_path_star_is_tree() {
+        let g = topology::star(6);
+        let p = connecting_path(&g);
+        assert_eq!(p.len(), 5);
+        assert!(spans_all(6, &p));
+    }
+
+    #[test]
+    fn diameter_disconnected_none() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        assert_eq!(diameter(&g), None);
+    }
+}

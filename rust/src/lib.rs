@@ -1,0 +1,29 @@
+//! dybw — straggler-resilient consensus-based distributed training with
+//! dynamic backup workers (reproduction of Xiong, Yan, Singh & Li, 2021).
+//!
+//! Three-layer architecture:
+//! - **Layer 3 (this crate)** — the Rust coordinator: consensus graph,
+//!   Metropolis mixing, straggler model, DTUR backup-worker selection,
+//!   cb-DyBW / cb-Full / baseline training loops, metrics, benches.
+//! - **Layer 2 (python/compile/model.py)** — JAX models (LRM, 2NN,
+//!   tiny transformer) over flat parameter vectors, AOT-lowered to HLO
+//!   text artifacts at build time.
+//! - **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled
+//!   matmul, fused bias+ReLU, fused softmax-xent) inside the Layer-2
+//!   models.
+//!
+//! Python never runs at training time: the [`runtime`] module loads the
+//! artifacts through the PJRT C API (`xla` crate) and the coordinator
+//! drives them from Rust.
+
+pub mod consensus;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod straggler;
+pub mod util;

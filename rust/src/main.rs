@@ -1,0 +1,374 @@
+//! `dybw` — the launcher.
+//!
+//! Subcommands:
+//! - `train`    — run one training job from flags / a JSON config
+//! - `figure`   — regenerate a paper figure/table (or `all`)
+//! - `topology` — inspect a consensus graph + its DTUR path
+//! - `artifacts`— list and validate the AOT artifact set
+//! - `analyze`  — consensus-theory numbers (λ₂, β, mixing forecast)
+
+use std::path::PathBuf;
+
+use dybw::coordinator::setup::{Backend, DatasetProfile, Setup};
+use dybw::coordinator::Algorithm;
+use dybw::data::partition::Partition;
+use dybw::experiments;
+use dybw::graph::topology::{self, Topology};
+use dybw::metrics::export;
+use dybw::metrics::summary::Comparison;
+use dybw::runtime::ArtifactSet;
+use dybw::straggler::Dist;
+use dybw::util::cli::{Args, CliError, Command};
+use dybw::util::json::Json;
+use dybw::util::rng::Rng;
+
+fn main() {
+    dybw::util::log::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let Some(sub) = argv.first() else {
+        print_global_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match sub.as_str() {
+        "train" => cmd_train(rest),
+        "figure" => cmd_figure(rest),
+        "topology" => cmd_topology(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "analyze" => cmd_analyze(rest),
+        "trace" => cmd_trace(rest),
+        "help" | "--help" | "-h" => {
+            print_global_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' — try `dybw help`"),
+    }
+}
+
+fn print_global_help() {
+    println!(
+        "dybw — straggler-resilient distributed training with dynamic backup workers\n\
+         \n\
+         USAGE: dybw <subcommand> [options]\n\
+         \n\
+         SUBCOMMANDS:\n\
+         \x20 train      run one training job (cb-DyBW or a baseline)\n\
+         \x20 figure     regenerate a paper figure: table1 fig1..fig7 speedup baselines topology severity | all\n\
+         \x20 topology   inspect a consensus graph and its DTUR connecting path\n\
+         \x20 artifacts  list + validate AOT artifacts (built by `make artifacts`)\n\
+         \x20 analyze    consensus-theory report (lambda2, beta, mixing forecast)\n\
+         \x20 trace      record a straggler timing trace / A-B algorithms on one\n\
+         \n\
+         Run `dybw <subcommand> --help` for options."
+    );
+}
+
+fn setup_opts(cmd: Command) -> Command {
+    cmd.opt("workers", "6", "number of workers N")
+        .opt("topology", "random", "ring|grid|star|complete|random")
+        .opt("algo", "cb-dybw", "cb-dybw|cb-full|cb-static:<b>|ps-sync|ps-backup:<b>")
+        .opt("model", "lrm_d64_c10_b256", "model/artifact name")
+        .opt("dataset", "mnist", "mnist|cifar synthetic profile")
+        .opt("partition", "iid", "iid|shards|dirichlet:<alpha>")
+        .opt("train-n", "12000", "training examples (total)")
+        .opt("test-n", "2048", "test examples")
+        .opt("straggler", "sexp:0.08,25", "base compute-time dist (det|uniform|sexp|pareto|lognormal)")
+        .opt("straggler-factor", "4", "transient straggler slowdown factor")
+        .opt("iters", "200", "training iterations K")
+        .opt("lr0", "0.2", "initial learning rate")
+        .opt("lr-decay", "0.95", "learning-rate decay")
+        .opt("eval-every", "10", "evaluate every k iterations")
+        .opt("seed", "2021", "master RNG seed")
+        .opt("backend", "native", "native|pjrt[:dir]")
+        .opt("config", "", "JSON config file (flags override)")
+}
+
+fn setup_from_args(a: &Args) -> anyhow::Result<Setup> {
+    let mut s = Setup::default();
+    // config file first, flags override
+    let cfg_path = a.get("config");
+    if !cfg_path.is_empty() {
+        let text = std::fs::read_to_string(cfg_path)
+            .map_err(|e| anyhow::anyhow!("cannot read config {cfg_path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad config: {e}"))?;
+        s.apply_json(&j)?;
+    }
+    s.workers = a.get_usize("workers")?;
+    s.topology = Topology::parse(a.get("topology"))
+        .ok_or_else(|| anyhow::anyhow!("bad --topology"))?;
+    s.algo = Algorithm::parse(a.get("algo")).ok_or_else(|| anyhow::anyhow!("bad --algo"))?;
+    s.model = a.get("model").to_string();
+    s.dataset = DatasetProfile::parse(a.get("dataset"))
+        .ok_or_else(|| anyhow::anyhow!("bad --dataset"))?;
+    s.partition = Partition::parse(a.get("partition"))
+        .ok_or_else(|| anyhow::anyhow!("bad --partition"))?;
+    s.train_n = a.get_usize("train-n")?;
+    s.test_n = a.get_usize("test-n")?;
+    s.straggler_base = Dist::parse(a.get("straggler"))
+        .ok_or_else(|| anyhow::anyhow!("bad --straggler"))?;
+    s.straggler_factor = a.get_f64("straggler-factor")?;
+    s.train.iters = a.get_usize("iters")?;
+    s.train.lr0 = a.get_f64("lr0")?;
+    s.train.lr_decay = a.get_f64("lr-decay")?;
+    s.train.eval_every = a.get_usize("eval-every")?;
+    s.train.seed = a.get_u64("seed")?;
+    s.backend = match a.get("backend") {
+        "native" => Backend::Native,
+        b if b.starts_with("pjrt") => Backend::Pjrt {
+            artifacts_dir: PathBuf::from(b.strip_prefix("pjrt:").unwrap_or("artifacts")),
+        },
+        other => anyhow::bail!("bad --backend '{other}'"),
+    };
+    Ok(s)
+}
+
+fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = setup_opts(Command::new("dybw train", "run one training job"))
+        .opt("out-dir", "results", "where to write CSV/JSON histories")
+        .flag("compare-full", "also run cb-Full and print the comparison")
+        .opt("target-loss", "0.5", "target test loss for time-to-loss reporting");
+    let a = parse_or_exit(&cmd, argv)?;
+    let s = setup_from_args(&a)?;
+    let out_dir = PathBuf::from(a.get("out-dir"));
+
+    println!("# dybw train: {} / {} / {} workers / {} backend", s.algo.name(), s.model, s.workers, match &s.backend { Backend::Native => "native", Backend::Pjrt { .. } => "pjrt" });
+    let mut trainer = s.build_sim()?;
+    trainer.on_iter = Some(Box::new(|r| {
+        if r.k % 50 == 0 {
+            println!(
+                "  k={:<5} T(k)={:.3}s clock={:.1}s loss={:.4} active={} backup={:.2}",
+                r.k, r.duration, r.clock, r.train_loss, r.active, r.backup_avg
+            );
+        }
+    }));
+    let h = trainer.run()?;
+    export::write_csv(&h, &out_dir, "train")?;
+    export::write_json(&h, &out_dir, "train")?;
+    print_history_summary(&h);
+
+    if a.flag("compare-full") {
+        let mut s2 = s.clone();
+        s2.algo = Algorithm::CbFull;
+        let hb = s2.build_sim()?.run()?;
+        export::write_csv(&hb, &out_dir, "train.full")?;
+        let c = Comparison::new(&h, &hb, a.get_f64("target-loss")?);
+        println!("\n## comparison vs cb-Full\n{}", c.render());
+    }
+    println!("(histories written under {})", out_dir.display());
+    Ok(())
+}
+
+fn print_history_summary(h: &dybw::metrics::RunHistory) {
+    println!("\n## summary: {}", h.algo);
+    println!("  iterations          : {}", h.iters.len());
+    println!("  total virtual time  : {:.1}s", h.total_time());
+    println!("  mean iter duration  : {:.3}s", h.mean_iter_duration());
+    println!("  mean backup workers : {:.2}", h.mean_backup_workers());
+    if let Some(e) = h.final_eval() {
+        println!(
+            "  final test loss/err : {:.4} / {:.1}%  (consensus err {:.2e})",
+            e.test_loss,
+            e.test_error * 100.0,
+            e.consensus_error
+        );
+    }
+}
+
+fn cmd_figure(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = setup_opts(Command::new(
+        "dybw figure",
+        "regenerate a paper figure/table",
+    ))
+    .positional("id", "table1|fig1..fig7|speedup|baselines|topology|severity|all")
+    .opt("out-dir", "results", "CSV/JSON output dir")
+    .flag("quick", "shrunk workloads (CI)");
+    let a = parse_or_exit(&cmd, argv)?;
+    let id = a
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("which figure? (e.g. `dybw figure fig1`)\n\n{}", cmd.usage()))?;
+    let base = setup_from_args(&a)?;
+    let out_dir = PathBuf::from(a.get("out-dir"));
+    let report = experiments::run(id, &base, &out_dir, a.flag("quick"))?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_topology(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dybw topology", "inspect a consensus graph")
+        .opt("workers", "6", "number of workers")
+        .opt("topology", "random", "ring|grid|star|complete|random")
+        .opt("seed", "2021", "seed");
+    let a = parse_or_exit(&cmd, argv)?;
+    let kind = Topology::parse(a.get("topology")).ok_or_else(|| anyhow::anyhow!("bad topology"))?;
+    let mut rng = Rng::new(a.get_u64("seed")?);
+    let g = topology::build(kind, a.get_usize("workers")?, &mut rng);
+    println!(
+        "topology={} n={} edges={} connected={} diameter={:?}",
+        kind.name(),
+        g.n(),
+        g.edge_count(),
+        g.is_connected(),
+        dybw::graph::paths::diameter(&g)
+    );
+    for v in 0..g.n() {
+        let nbrs: Vec<String> = g.neighbors(v).map(|u| u.to_string()).collect();
+        println!("  worker {v}: [{}]", nbrs.join(", "));
+    }
+    let p = dybw::graph::paths::connecting_path(&g);
+    println!("DTUR path P (d={}): {:?}", p.len(), p);
+    Ok(())
+}
+
+fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dybw artifacts", "list + validate AOT artifacts")
+        .opt("dir", "artifacts", "artifacts directory")
+        .flag("compile", "also compile each artifact on the PJRT client");
+    let a = parse_or_exit(&cmd, argv)?;
+    let dir = PathBuf::from(a.get("dir"));
+    let set = ArtifactSet::load(&dir)?;
+    println!("{} artifact families in {}:", set.artifacts.len(), dir.display());
+    for art in &set.artifacts {
+        art.meta.validate()?;
+        print!(
+            "  {:<28} kind={:<11} P={:<8} batch={}",
+            art.meta.name,
+            art.meta.kind.name(),
+            art.meta.param_count,
+            art.meta.batch
+        );
+        if a.flag("compile") {
+            let client = dybw::runtime::shared_client()?;
+            let t0 = std::time::Instant::now();
+            let _m = dybw::runtime::LoadedModel::compile(art, client)?;
+            print!("  [compiled in {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_analyze(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dybw analyze", "consensus-theory report")
+        .opt("workers", "6", "number of workers")
+        .opt("topology", "random", "graph kind")
+        .opt("seed", "2021", "seed");
+    let a = parse_or_exit(&cmd, argv)?;
+    let kind = Topology::parse(a.get("topology")).ok_or_else(|| anyhow::anyhow!("bad topology"))?;
+    let mut rng = Rng::new(a.get_u64("seed")?);
+    let g = topology::build(kind, a.get_usize("workers")?, &mut rng);
+    let p = dybw::consensus::ConsensusMatrix::metropolis_full(&g);
+    p.check_doubly_stochastic(1e-9)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let l2 = dybw::consensus::matrix::lambda2(&p, 300);
+    let beta = p.min_positive();
+    println!("graph: {} n={} edges={}", kind.name(), g.n(), g.edge_count());
+    println!("metropolis P(full): doubly stochastic OK");
+    println!("  beta (min positive entry)   = {beta:.4}");
+    println!("  lambda2 (mixing factor)     = {l2:.4}");
+    println!("  rounds to halve disagreement = {:.1}", (0.5f64).ln() / l2.ln());
+    let d = dybw::graph::paths::connecting_path(&g).len();
+    println!("  DTUR epoch length d          = {d}  (Assumption 2: B = d)");
+    Ok(())
+}
+
+fn cmd_trace(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = setup_opts(Command::new(
+        "dybw trace",
+        "record a compute-time trace, or A/B algorithms on a recorded one",
+    ))
+    .positional("action", "record | ab")
+    .opt("trace-file", "results/trace.csv", "trace CSV path")
+    .opt("trace-iters", "200", "iterations to record");
+    let a = parse_or_exit(&cmd, argv)?;
+    let action = a
+        .positionals
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("action: record | ab\n\n{}", cmd.usage()))?;
+    let s = setup_from_args(&a)?;
+    let path = PathBuf::from(a.get("trace-file"));
+    match action {
+        "record" => {
+            let mut rng = Rng::new(s.train.seed);
+            let model = dybw::straggler::StragglerModel {
+                base: s.straggler_base,
+                worker_scale: (0..s.workers).map(|_| rng.uniform_in(0.8, 1.25)).collect(),
+                persistent: vec![1.0; s.workers],
+                transient_prob: 0.15,
+                transient_factor: s.straggler_factor,
+                force_one_straggler: s.force_straggler,
+                outages: Vec::new(),
+            };
+            let trace = dybw::straggler::trace::Trace::record(
+                &model,
+                a.get_usize("trace-iters")?,
+                &mut rng,
+            );
+            trace.save_csv(&path)?;
+            println!(
+                "recorded {} iterations x {} workers -> {} (worker means: {:?})",
+                trace.len(),
+                trace.workers,
+                path.display(),
+                trace
+                    .worker_means()
+                    .iter()
+                    .map(|m| format!("{m:.3}"))
+                    .collect::<Vec<_>>()
+            );
+        }
+        "ab" => {
+            use dybw::straggler::trace::{Trace, TraceReplay};
+            let trace = Trace::load_csv(&path)?;
+            anyhow::ensure!(
+                trace.workers == s.workers,
+                "trace has {} workers, setup {}",
+                trace.workers,
+                s.workers
+            );
+            println!("A/B on identical timing trace ({} iters):", trace.len());
+            let mut results = Vec::new();
+            for algo in [Algorithm::CbDybw, Algorithm::CbFull] {
+                let mut s2 = s.clone();
+                s2.algo = algo;
+                s2.train.iters = s2.train.iters.min(trace.len());
+                let mut tr = s2.build_sim()?;
+                tr.trace = Some(TraceReplay::new(trace.clone())?);
+                let h = tr.run()?;
+                println!(
+                    "  {:<10} total {:.1}s  mean T(k) {:.3}s  final loss {:.4}",
+                    h.algo,
+                    h.total_time(),
+                    h.mean_iter_duration(),
+                    h.final_eval().map(|e| e.test_loss).unwrap_or(f64::NAN)
+                );
+                results.push(h);
+            }
+            let c = Comparison::new(&results[0], &results[1], 0.55);
+            println!("\n{}", c.render());
+        }
+        other => anyhow::bail!("unknown trace action '{other}' (record | ab)"),
+    }
+    Ok(())
+}
+
+fn parse_or_exit(cmd: &Command, argv: &[String]) -> anyhow::Result<Args> {
+    match cmd.parse(argv) {
+        Ok(a) => Ok(a),
+        Err(CliError(msg)) => {
+            anyhow::bail!("{msg}")
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! CSV / JSON export of run histories (the raw material for replotting
+//! the paper's figures with any external tool).
+
+use std::io::Write;
+use std::path::Path;
+
+use super::RunHistory;
+use crate::util::json::Json;
+
+/// Write `<prefix>.iters.csv` and `<prefix>.evals.csv`.
+pub fn write_csv(h: &RunHistory, dir: &Path, prefix: &str) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut f = std::fs::File::create(dir.join(format!("{prefix}.iters.csv")))?;
+    writeln!(f, "k,duration,clock,train_loss,active,backup_avg,theta")?;
+    for r in &h.iters {
+        writeln!(
+            f,
+            "{},{:.6},{:.6},{:.6},{},{:.4},{:.6}",
+            r.k, r.duration, r.clock, r.train_loss, r.active, r.backup_avg, r.theta
+        )?;
+    }
+    let mut f = std::fs::File::create(dir.join(format!("{prefix}.evals.csv")))?;
+    writeln!(f, "k,clock,test_loss,test_error,consensus_error")?;
+    for e in &h.evals {
+        writeln!(
+            f,
+            "{},{:.6},{:.6},{:.6},{:.8}",
+            e.k, e.clock, e.test_loss, e.test_error, e.consensus_error
+        )?;
+    }
+    Ok(())
+}
+
+/// Serialise a run summary as JSON.
+pub fn to_json(h: &RunHistory) -> Json {
+    let mut obj = Json::obj();
+    obj.set("algo", h.algo.as_str().into())
+        .set("model", h.model.as_str().into())
+        .set("dataset", h.dataset.as_str().into())
+        .set("workers", h.workers.into())
+        .set("iterations", h.iters.len().into())
+        .set("total_time", h.total_time().into())
+        .set("mean_iter_duration", h.mean_iter_duration().into())
+        .set("mean_backup_workers", h.mean_backup_workers().into());
+    if let Some(e) = h.final_eval() {
+        obj.set("final_test_loss", e.test_loss.into())
+            .set("final_test_error", e.test_error.into())
+            .set("final_consensus_error", e.consensus_error.into());
+    }
+    let evals: Vec<Json> = h
+        .evals
+        .iter()
+        .map(|e| {
+            let mut o = Json::obj();
+            o.set("k", e.k.into())
+                .set("clock", e.clock.into())
+                .set("test_loss", e.test_loss.into())
+                .set("test_error", e.test_error.into());
+            o
+        })
+        .collect();
+    obj.set("evals", Json::Arr(evals));
+    obj
+}
+
+pub fn write_json(h: &RunHistory, dir: &Path, prefix: &str) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(
+        dir.join(format!("{prefix}.json")),
+        to_json(h).to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{EvalRecord, IterRecord};
+
+    fn h() -> RunHistory {
+        let mut h = RunHistory::new("cb-full", "lrm", "x", 4);
+        h.iters.push(IterRecord {
+            k: 0,
+            duration: 0.5,
+            clock: 0.5,
+            train_loss: 2.3,
+            active: 4,
+            backup_avg: 0.0,
+            theta: f64::NAN,
+        });
+        h.evals.push(EvalRecord {
+            k: 0,
+            clock: 0.5,
+            test_loss: 2.2,
+            test_error: 0.9,
+            consensus_error: 0.0,
+        });
+        h
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("dybw_test_csv");
+        write_csv(&h(), &dir, "t").unwrap();
+        let iters = std::fs::read_to_string(dir.join("t.iters.csv")).unwrap();
+        assert_eq!(iters.lines().count(), 2);
+        assert!(iters.starts_with("k,duration"));
+        let evals = std::fs::read_to_string(dir.join("t.evals.csv")).unwrap();
+        assert!(evals.contains("2.2"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let j = to_json(&h());
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(re.path("algo").unwrap().as_str().unwrap(), "cb-full");
+        assert_eq!(re.path("workers").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(re.path("evals").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

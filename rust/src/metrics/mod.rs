@@ -1,0 +1,174 @@
+//! Metrics: per-iteration time series, summaries, CSV/JSON export.
+//!
+//! Every training run produces a [`RunHistory`]: one [`IterRecord`] per
+//! iteration (duration, losses, backup-worker counts — the series behind
+//! the paper's Figures 1/4/6) and periodic [`EvalRecord`]s (test error /
+//! loss versus wall-clock — Figures 5/7). [`summary`] computes the
+//! headline numbers (mean iteration duration, time-to-loss) the paper
+//! quotes in §5 and Appendix B.
+
+pub mod export;
+pub mod summary;
+
+/// One training iteration's observables.
+#[derive(Debug, Clone)]
+pub struct IterRecord {
+    pub k: usize,
+    /// Iteration duration T(k) in (virtual or real) seconds.
+    pub duration: f64,
+    /// Cumulative wall-clock at the END of this iteration.
+    pub clock: f64,
+    /// Mean training loss across participating workers' local batches.
+    pub train_loss: f64,
+    /// Number of active (non-backup) workers |V'(k)|.
+    pub active: usize,
+    /// Mean number of backup workers per node: avg_j b_j(k).
+    pub backup_avg: f64,
+    /// DTUR threshold θ(k) (= duration for cb-DyBW; NaN for baselines).
+    pub theta: f64,
+}
+
+/// One periodic evaluation on the held-out set (network-average params).
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub k: usize,
+    pub clock: f64,
+    pub test_loss: f64,
+    /// Fraction in [0,1] of misclassified test examples.
+    pub test_error: f64,
+    /// Max_j ||w_j - ȳ|| consensus disagreement at eval time.
+    pub consensus_error: f64,
+}
+
+/// Full run history.
+#[derive(Debug, Clone, Default)]
+pub struct RunHistory {
+    pub algo: String,
+    pub model: String,
+    pub dataset: String,
+    pub workers: usize,
+    pub iters: Vec<IterRecord>,
+    pub evals: Vec<EvalRecord>,
+}
+
+impl RunHistory {
+    pub fn new(algo: &str, model: &str, dataset: &str, workers: usize) -> Self {
+        RunHistory {
+            algo: algo.to_string(),
+            model: model.to_string(),
+            dataset: dataset.to_string(),
+            workers,
+            iters: Vec::new(),
+            evals: Vec::new(),
+        }
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.iters.last().map(|r| r.clock).unwrap_or(0.0)
+    }
+
+    pub fn mean_iter_duration(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().map(|r| r.duration).sum::<f64>() / self.iters.len() as f64
+    }
+
+    pub fn mean_backup_workers(&self) -> f64 {
+        if self.iters.is_empty() {
+            return 0.0;
+        }
+        self.iters.iter().map(|r| r.backup_avg).sum::<f64>() / self.iters.len() as f64
+    }
+
+    /// First wall-clock time at which the TRAIN loss fell to `target`
+    /// (smoothed over a small window to tame mini-batch noise).
+    pub fn time_to_train_loss(&self, target: f64) -> Option<f64> {
+        const W: usize = 5;
+        if self.iters.len() < W {
+            return None;
+        }
+        for i in W..=self.iters.len() {
+            let avg: f64 =
+                self.iters[i - W..i].iter().map(|r| r.train_loss).sum::<f64>() / W as f64;
+            if avg <= target {
+                return Some(self.iters[i - 1].clock);
+            }
+        }
+        None
+    }
+
+    /// First wall-clock time at which TEST loss fell to `target`.
+    pub fn time_to_test_loss(&self, target: f64) -> Option<f64> {
+        self.evals
+            .iter()
+            .find(|e| e.test_loss <= target)
+            .map(|e| e.clock)
+    }
+
+    /// First iteration at which TEST loss fell to `target`.
+    pub fn iters_to_test_loss(&self, target: f64) -> Option<usize> {
+        self.evals.iter().find(|e| e.test_loss <= target).map(|e| e.k)
+    }
+
+    pub fn final_eval(&self) -> Option<&EvalRecord> {
+        self.evals.last()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_history() -> RunHistory {
+        let mut h = RunHistory::new("cb-dybw", "lrm", "mnist-like", 6);
+        let mut clock = 0.0;
+        for k in 0..20 {
+            clock += 0.1;
+            h.iters.push(IterRecord {
+                k,
+                duration: 0.1,
+                clock,
+                train_loss: 2.0 / (k + 1) as f64,
+                active: 5,
+                backup_avg: 1.0,
+                theta: 0.1,
+            });
+            if k % 5 == 4 {
+                h.evals.push(EvalRecord {
+                    k,
+                    clock,
+                    test_loss: 2.0 / (k + 1) as f64,
+                    test_error: 0.5 / (k + 1) as f64,
+                    consensus_error: 0.01,
+                });
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn totals() {
+        let h = fake_history();
+        assert!((h.total_time() - 2.0).abs() < 1e-9);
+        assert!((h.mean_iter_duration() - 0.1).abs() < 1e-12);
+        assert!((h.mean_backup_workers() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_to_train_loss_monotone() {
+        let h = fake_history();
+        let t_easy = h.time_to_train_loss(1.0).unwrap();
+        let t_hard = h.time_to_train_loss(0.2).unwrap();
+        assert!(t_easy < t_hard);
+        assert!(h.time_to_train_loss(0.0001).is_none());
+    }
+
+    #[test]
+    fn time_to_test_loss_uses_evals() {
+        let h = fake_history();
+        assert_eq!(h.time_to_test_loss(0.5), Some(h.evals[0].clock).filter(|_| h.evals[0].test_loss <= 0.5).or(h.time_to_test_loss(0.5)));
+        assert!(h.iters_to_test_loss(0.11).is_some());
+        assert!(h.time_to_test_loss(1e-9).is_none());
+    }
+}

@@ -1,0 +1,160 @@
+//! Paper-style comparison tables.
+//!
+//! The paper's quantitative claims are comparative: "cb-DyBW reduces the
+//! duration of one iteration by 65-70% (Fig. 1c)", "reduces convergence
+//! time by 62% (Fig. 5)". [`Comparison`] computes exactly those ratios
+//! between a treatment run and a baseline run and renders the aligned
+//! rows the figure harnesses print.
+
+use super::RunHistory;
+
+/// Head-to-head of two runs (typically cb-DyBW vs cb-Full).
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub label_a: String,
+    pub label_b: String,
+    pub mean_iter_a: f64,
+    pub mean_iter_b: f64,
+    /// 1 - a/b : fraction of per-iteration time saved by A.
+    pub iter_duration_reduction: f64,
+    /// time-to-target-loss for each (None = never reached).
+    pub time_to_loss_a: Option<f64>,
+    pub time_to_loss_b: Option<f64>,
+    /// 1 - a/b when both reached the target.
+    pub convergence_time_reduction: Option<f64>,
+    pub iters_to_loss_a: Option<usize>,
+    pub iters_to_loss_b: Option<usize>,
+    pub target_loss: f64,
+}
+
+impl Comparison {
+    pub fn new(a: &RunHistory, b: &RunHistory, target_loss: f64) -> Comparison {
+        let t_a = a.time_to_test_loss(target_loss);
+        let t_b = b.time_to_test_loss(target_loss);
+        let conv_red = match (t_a, t_b) {
+            (Some(x), Some(y)) if y > 0.0 => Some(1.0 - x / y),
+            _ => None,
+        };
+        Comparison {
+            label_a: a.algo.clone(),
+            label_b: b.algo.clone(),
+            mean_iter_a: a.mean_iter_duration(),
+            mean_iter_b: b.mean_iter_duration(),
+            iter_duration_reduction: 1.0 - a.mean_iter_duration() / b.mean_iter_duration().max(1e-12),
+            time_to_loss_a: t_a,
+            time_to_loss_b: t_b,
+            convergence_time_reduction: conv_red,
+            iters_to_loss_a: a.iters_to_test_loss(target_loss),
+            iters_to_loss_b: b.iters_to_test_loss(target_loss),
+            target_loss,
+        }
+    }
+
+    /// Render the paper-style rows.
+    pub fn render(&self) -> String {
+        let fmt_opt = |v: Option<f64>| match v {
+            Some(x) => format!("{x:.1}s"),
+            None => "n/a".into(),
+        };
+        let fmt_opt_k = |v: Option<usize>| match v {
+            Some(x) => format!("{x}"),
+            None => "n/a".into(),
+        };
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<28} {:>14} {:>14}\n",
+            "", self.label_a, self.label_b
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>13.3}s {:>13.3}s\n",
+            "mean iteration duration", self.mean_iter_a, self.mean_iter_b
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>14} {:>14}\n",
+            "  -> reduction",
+            format!("{:.0}%", self.iter_duration_reduction * 100.0),
+            "-"
+        ));
+        out.push_str(&format!(
+            "{:<28} {:>14} {:>14}\n",
+            format!("time to test loss {:.2}", self.target_loss),
+            fmt_opt(self.time_to_loss_a),
+            fmt_opt(self.time_to_loss_b)
+        ));
+        if let Some(r) = self.convergence_time_reduction {
+            out.push_str(&format!(
+                "{:<28} {:>14} {:>14}\n",
+                "  -> reduction",
+                format!("{:.0}%", r * 100.0),
+                "-"
+            ));
+        }
+        out.push_str(&format!(
+            "{:<28} {:>14} {:>14}\n",
+            format!("iters to test loss {:.2}", self.target_loss),
+            fmt_opt_k(self.iters_to_loss_a),
+            fmt_opt_k(self.iters_to_loss_b)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{EvalRecord, IterRecord};
+
+    fn run(algo: &str, iter_dur: f64, evals: &[(usize, f64, f64)]) -> RunHistory {
+        let mut h = RunHistory::new(algo, "m", "d", 6);
+        let mut clock = 0.0;
+        let n = evals.last().map(|e| e.0 + 1).unwrap_or(10);
+        for k in 0..n {
+            clock += iter_dur;
+            h.iters.push(IterRecord {
+                k,
+                duration: iter_dur,
+                clock,
+                train_loss: 1.0,
+                active: 6,
+                backup_avg: 0.0,
+                theta: f64::NAN,
+            });
+            if let Some(e) = evals.iter().find(|e| e.0 == k) {
+                h.evals.push(EvalRecord {
+                    k,
+                    clock,
+                    test_loss: e.1,
+                    test_error: e.2,
+                    consensus_error: 0.0,
+                });
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn reductions_computed() {
+        // A reaches loss 0.5 at iteration 10 with 0.1s iters = 1.1s.
+        // B reaches loss 0.5 at iteration 10 with 0.3s iters = 3.3s.
+        let a = run("dybw", 0.1, &[(5, 0.8, 0.3), (10, 0.4, 0.2)]);
+        let b = run("full", 0.3, &[(5, 0.8, 0.3), (10, 0.4, 0.2)]);
+        let c = Comparison::new(&a, &b, 0.5);
+        assert!((c.iter_duration_reduction - (1.0 - 0.1 / 0.3)).abs() < 1e-9);
+        let r = c.convergence_time_reduction.unwrap();
+        assert!((r - (1.0 - 1.1 / 3.3)).abs() < 1e-6, "r={r}");
+        assert_eq!(c.iters_to_loss_a, Some(10));
+        let text = c.render();
+        assert!(text.contains("dybw"));
+        assert!(text.contains("reduction"));
+    }
+
+    #[test]
+    fn unreachable_target_is_none() {
+        let a = run("dybw", 0.1, &[(5, 0.8, 0.3)]);
+        let b = run("full", 0.3, &[(5, 0.8, 0.3)]);
+        let c = Comparison::new(&a, &b, 0.01);
+        assert!(c.time_to_loss_a.is_none());
+        assert!(c.convergence_time_reduction.is_none());
+        assert!(c.render().contains("n/a"));
+    }
+}

@@ -1,0 +1,329 @@
+//! Blocked single-precision GEMM kernels for the native engine.
+//!
+//! The native engine (rust/src/model/{lrm,mlp}.rs) is the pure-Rust oracle
+//! and fallback for the PJRT artifacts; its hot loops are these three
+//! GEMM variants (NN, TN, NT — all row-major). They use i-k-j loop order
+//! with a register-blocked inner loop the autovectoriser lifts to AVX,
+//! and shard the independent output-row ranges across scoped threads once
+//! the problem passes `PAR_FLOPS` (perf pass, EXPERIMENTS.md §Perf: the
+//! 2NN gradient went 16.4 ms → ~4 ms on this machine).
+
+/// Parallelise above this many multiply-adds (empirically where thread
+/// spawn cost is < 5% of the kernel).
+const PAR_FLOPS: usize = 1 << 21;
+
+fn threads_for(flops: usize) -> usize {
+    if flops < PAR_FLOPS {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Split `c` into `parts` row-chunks of `row_len` and run `f(chunk_index_range, chunk)`.
+fn par_rows<F>(c: &mut [f32], rows: usize, row_len: usize, parts: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(c.len(), rows * row_len);
+    if parts <= 1 || rows < 2 * parts {
+        f(0..rows, c);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(parts);
+    std::thread::scope(|s| {
+        let mut rest = c;
+        let mut start = 0usize;
+        while start < rows {
+            let take = chunk_rows.min(rows - start);
+            let (head, tail) = rest.split_at_mut(take * row_len);
+            let range = start..start + take;
+            let fref = &f;
+            s.spawn(move || fref(range, head));
+            rest = tail;
+            start += take;
+        }
+    });
+}
+
+/// c[m,n] += a[m,k] · b[k,n]   (row-major, accumulate)
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let parts = threads_for(m * k * n);
+    par_rows(c, m, n, parts, |rows, cc| {
+        // 4-row register blocking: each pass over a B row feeds four
+        // output rows, quartering B traffic (the kernel is B-bandwidth
+        // bound once B falls out of L1).
+        let mut iter = rows.clone();
+        let base = rows.start;
+        while iter.len() >= 4 {
+            let i = iter.start;
+            iter = (i + 4)..rows.end;
+            let (a0, a1, a2, a3) = (
+                &a[i * k..(i + 1) * k],
+                &a[(i + 1) * k..(i + 2) * k],
+                &a[(i + 2) * k..(i + 3) * k],
+                &a[(i + 3) * k..(i + 4) * k],
+            );
+            let ci = i - base;
+            let (c01, c23) = cc[ci * n..(ci + 4) * n].split_at_mut(2 * n);
+            let (c0, c1) = c01.split_at_mut(n);
+            let (c2, c3) = c23.split_at_mut(n);
+            for l in 0..k {
+                let (v0, v1, v2, v3) = (a0[l], a1[l], a2[l], a3[l]);
+                let brow = &b[l * n..(l + 1) * n];
+                // (a zip-based variant measured ~5% slower — see
+                //  EXPERIMENTS.md §Perf iteration 4; indexed form kept)
+                for j in 0..n {
+                    let bv = brow[j];
+                    c0[j] += v0 * bv;
+                    c1[j] += v1 * bv;
+                    c2[j] += v2 * bv;
+                    c3[j] += v3 * bv;
+                }
+            }
+        }
+        for i in iter {
+            let arow = &a[i * k..(i + 1) * k];
+            let ci = i - base;
+            let crow = &mut cc[ci * n..(ci + 1) * n];
+            for (l, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[l * n..(l + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// c[k,n] += aᵀ[k,m] · b[m,n]  where a is [m,k] row-major (i.e. c = aᵀ·b)
+///
+/// Parallel over output rows l (columns of a): each shard rescans a and b
+/// but writes a disjoint slice of c — b stays L2/L3-resident.
+pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    let parts = threads_for(m * k * n);
+    par_rows(c, k, n, parts, |lrange, cc| {
+        let l0 = lrange.start;
+        // 4-way blocking over input rows i: four (arow, brow) pairs per
+        // sweep of the output, quartering C read/write traffic (the TN
+        // bound — C is revisited once per input row otherwise).
+        let mut i = 0usize;
+        while i + 4 <= m {
+            let (a0, a1, a2, a3) = (
+                &a[i * k..(i + 1) * k],
+                &a[(i + 1) * k..(i + 2) * k],
+                &a[(i + 2) * k..(i + 3) * k],
+                &a[(i + 3) * k..(i + 4) * k],
+            );
+            let (b0, b1, b2, b3) = (
+                &b[i * n..(i + 1) * n],
+                &b[(i + 1) * n..(i + 2) * n],
+                &b[(i + 2) * n..(i + 3) * n],
+                &b[(i + 3) * n..(i + 4) * n],
+            );
+            for l in lrange.clone() {
+                let (v0, v1, v2, v3) = (a0[l], a1[l], a2[l], a3[l]);
+                let crow = &mut cc[(l - l0) * n..(l - l0 + 1) * n];
+                for j in 0..n {
+                    crow[j] += v0 * b0[j] + v1 * b1[j] + v2 * b2[j] + v3 * b3[j];
+                }
+            }
+            i += 4;
+        }
+        for i in i..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for l in lrange.clone() {
+                let av = arow[l];
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut cc[(l - l0) * n..(l - l0 + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// c[m,k] += a[m,n] · bᵀ[n,k]  where b is [k,n] row-major (i.e. c = a·bᵀ)
+pub fn gemm_nt(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    let parts = threads_for(m * k * n);
+    par_rows(c, m, k, parts, |rows, cc| {
+        // 4-way blocking over output rows i: each B row is dotted against
+        // four A rows per load, quartering B traffic.
+        let base = rows.start;
+        let mut i = rows.start;
+        while i + 4 <= rows.end {
+            let (a0, a1, a2, a3) = (
+                &a[i * n..(i + 1) * n],
+                &a[(i + 1) * n..(i + 2) * n],
+                &a[(i + 2) * n..(i + 3) * n],
+                &a[(i + 3) * n..(i + 4) * n],
+            );
+            let ci = i - base;
+            for l in 0..k {
+                let brow = &b[l * n..(l + 1) * n];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for j in 0..n {
+                    let bv = brow[j];
+                    s0 += a0[j] * bv;
+                    s1 += a1[j] * bv;
+                    s2 += a2[j] * bv;
+                    s3 += a3[j] * bv;
+                }
+                cc[ci * k + l] += s0;
+                cc[(ci + 1) * k + l] += s1;
+                cc[(ci + 2) * k + l] += s2;
+                cc[(ci + 3) * k + l] += s3;
+            }
+            i += 4;
+        }
+        for i in i..rows.end {
+            let arow = &a[i * n..(i + 1) * n];
+            let ci = i - base;
+            let crow = &mut cc[ci * k..(ci + 1) * k];
+            for (l, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[l * n..(l + 1) * n];
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *cv += acc;
+            }
+        }
+    });
+}
+
+/// Row-wise stable softmax in place over [rows, cols].
+pub fn softmax_rows(rows: usize, cols: usize, z: &mut [f32]) {
+    debug_assert_eq!(z.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut z[r * cols..(r + 1) * cols];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn naive_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for l in 0..k {
+                    acc += a[i * k + l] as f64 * b[l * n + j] as f64;
+                }
+                c[i * n + j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive() {
+        let mut rng = Rng::new(0);
+        let (m, k, n) = (13, 7, 9);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let mut c = vec![0.0f32; m * n];
+        gemm_nn(m, k, n, &a, &b, &mut c);
+        let want = naive_nn(m, k, n, &a, &b);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_transposed_naive() {
+        let mut rng = Rng::new(1);
+        let (m, k, n) = (11, 6, 8);
+        let a = rand_mat(&mut rng, m * k); // [m,k]
+        let b = rand_mat(&mut rng, m * n); // [m,n]
+        let mut c = vec![0.0f32; k * n];
+        gemm_tn(m, k, n, &a, &b, &mut c);
+        // naive: transpose a then nn
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for l in 0..k {
+                at[l * m + i] = a[i * k + l];
+            }
+        }
+        let want = naive_nn(k, m, n, &at, &b);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_transposed_naive() {
+        let mut rng = Rng::new(2);
+        let (m, n, k) = (10, 5, 7);
+        let a = rand_mat(&mut rng, m * n); // [m,n]
+        let b = rand_mat(&mut rng, k * n); // [k,n]
+        let mut c = vec![0.0f32; m * k];
+        gemm_nt(m, n, k, &a, &b, &mut c);
+        let mut bt = vec![0.0f32; n * k];
+        for i in 0..k {
+            for l in 0..n {
+                bt[l * k + i] = b[i * n + l];
+            }
+        }
+        let want = naive_nn(m, n, k, &a, &bt);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates() {
+        let a = vec![1.0f32, 0.0, 0.0, 1.0];
+        let b = vec![2.0f32, 0.0, 0.0, 2.0];
+        let mut c = vec![1.0f32; 4];
+        gemm_nn(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![3.0, 1.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_stable() {
+        let mut z = vec![1e4f32, 0.0, -1e4, 1.0, 2.0, 3.0];
+        softmax_rows(2, 3, &mut z);
+        for r in 0..2 {
+            let s: f32 = z[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(z[r * 3..(r + 1) * 3].iter().all(|v| v.is_finite()));
+        }
+        assert!(z[0] > 0.999); // extreme logit wins
+    }
+}

@@ -1,0 +1,221 @@
+//! Native logistic-regression engine (paper's LRM workload).
+//!
+//! Same math as the Layer-2 JAX model: z = xW + b, mean cross-entropy on
+//! one-hot labels, gradient dz = (softmax(z) - y)/B. Exact agreement with
+//! the PJRT artifact is asserted in rust/tests/runtime_pjrt.rs.
+
+use super::{linalg, ModelMeta};
+use crate::data::batch::Batch;
+
+/// Reusable scratch buffers (no allocation on the grad hot path).
+#[derive(Debug, Clone, Default)]
+pub struct LrmScratch {
+    z: Vec<f32>,
+}
+
+/// Compute mean loss and gradient into `grad` (len = param_count).
+pub fn grad(
+    meta: &ModelMeta,
+    w_flat: &[f32],
+    batch: &Batch,
+    grad_out: &mut [f32],
+    scratch: &mut LrmScratch,
+) -> f32 {
+    let (b, d, c) = (batch.bsz, meta.dim, meta.classes);
+    debug_assert_eq!(batch.dim, d);
+    debug_assert_eq!(w_flat.len(), meta.param_count);
+    debug_assert_eq!(grad_out.len(), meta.param_count);
+    let w = meta.slice(w_flat, "w");
+    let bias = meta.slice(w_flat, "b");
+
+    scratch.z.clear();
+    scratch.z.resize(b * c, 0.0);
+    let z = &mut scratch.z;
+    // z = x·W + bias
+    linalg::gemm_nn(b, d, c, &batch.x, w, z);
+    for r in 0..b {
+        for (zc, bc) in z[r * c..(r + 1) * c].iter_mut().zip(bias) {
+            *zc += *bc;
+        }
+    }
+    // loss before softmax overwrites z
+    let loss = xent_loss(b, c, z, &batch.y1h);
+    // dz = (softmax(z) - y)/B, computed in place
+    linalg::softmax_rows(b, c, z);
+    let inv_b = 1.0 / b as f32;
+    for (zv, yv) in z.iter_mut().zip(&batch.y1h) {
+        *zv = (*zv - *yv) * inv_b;
+    }
+    // gW = xᵀ·dz ; gb = Σ_rows dz
+    grad_out.fill(0.0);
+    {
+        let (gw, gb) = grad_out.split_at_mut(meta.segment("b").offset);
+        linalg::gemm_tn(b, d, c, &batch.x, z, gw);
+        for r in 0..b {
+            for (g, dzv) in gb.iter_mut().zip(&z[r * c..(r + 1) * c]) {
+                *g += *dzv;
+            }
+        }
+    }
+    loss
+}
+
+/// Mean loss + correct-prediction count (no gradient).
+pub fn eval(meta: &ModelMeta, w_flat: &[f32], batch: &Batch, scratch: &mut LrmScratch) -> (f32, usize) {
+    let (b, d, c) = (batch.bsz, meta.dim, meta.classes);
+    let w = meta.slice(w_flat, "w");
+    let bias = meta.slice(w_flat, "b");
+    scratch.z.clear();
+    scratch.z.resize(b * c, 0.0);
+    let z = &mut scratch.z;
+    linalg::gemm_nn(b, d, c, &batch.x, w, z);
+    for r in 0..b {
+        for (zc, bc) in z[r * c..(r + 1) * c].iter_mut().zip(bias) {
+            *zc += *bc;
+        }
+    }
+    let loss = xent_loss(b, c, z, &batch.y1h);
+    let mut correct = 0usize;
+    for r in 0..b {
+        let row = &z[r * c..(r + 1) * c];
+        let pred = argmax(row);
+        if pred == batch.y[r] as usize {
+            correct += 1;
+        }
+    }
+    (loss, correct)
+}
+
+/// Stable mean cross-entropy of raw logits against one-hot labels.
+pub(crate) fn xent_loss(b: usize, c: usize, z: &[f32], y1h: &[f32]) -> f32 {
+    let mut total = 0.0f64;
+    for r in 0..b {
+        let row = &z[r * c..(r + 1) * c];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln() + max;
+        let picked: f32 = row
+            .iter()
+            .zip(&y1h[r * c..(r + 1) * c])
+            .map(|(&zv, &yv)| zv * yv)
+            .sum();
+        total += (lse - picked) as f64;
+    }
+    (total / b as f64) as f32
+}
+
+pub(crate) fn argmax(row: &[f32]) -> usize {
+    let mut best = (f32::NEG_INFINITY, 0usize);
+    for (i, &v) in row.iter().enumerate() {
+        if v > best.0 {
+            best = (v, i);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batch::BatchSampler;
+    use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (ModelMeta, Batch, Vec<f32>) {
+        let meta = ModelMeta::lrm(8, 4, 16);
+        let mut data = gaussian_mixture(&MixtureSpec::mnist_like(8, 200), &mut Rng::new(0));
+        data.classes = 4;
+        for y in data.y.iter_mut() {
+            *y %= 4;
+        }
+        let batch = BatchSampler::new(1).sample(&data, 16);
+        let w = meta.init_params(&mut Rng::new(2));
+        (meta, batch, w)
+    }
+
+    #[test]
+    fn zero_params_uniform_loss() {
+        let (meta, batch, _) = setup();
+        let w = vec![0.0f32; meta.param_count];
+        let mut g = vec![0.0f32; meta.param_count];
+        let loss = grad(&meta, &w, &batch, &mut g, &mut LrmScratch::default());
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5, "loss={loss}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (meta, batch, w) = setup();
+        let mut g = vec![0.0f32; meta.param_count];
+        let mut scratch = LrmScratch::default();
+        let loss0 = grad(&meta, &w, &batch, &mut g, &mut scratch);
+        let eps = 1e-3f32;
+        // probe a spread of coordinates
+        for &i in &[0usize, 5, 17, 31, 33, 35] {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut gtmp = vec![0.0f32; meta.param_count];
+            let lp = grad(&meta, &wp, &batch, &mut gtmp, &mut scratch);
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let lm = grad(&meta, &wm, &batch, &mut gtmp, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[i]).abs() < 2e-3,
+                "coord {i}: fd={fd} analytic={} loss0={loss0}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let (meta, batch, mut w) = setup();
+        let mut g = vec![0.0f32; meta.param_count];
+        let mut scratch = LrmScratch::default();
+        let l0 = grad(&meta, &w, &batch, &mut g, &mut scratch);
+        for _ in 0..20 {
+            for (wv, gv) in w.iter_mut().zip(&g) {
+                *wv -= 0.5 * gv;
+            }
+            grad(&meta, &w, &batch, &mut g, &mut scratch);
+        }
+        let l1 = grad(&meta, &w, &batch, &mut g, &mut scratch);
+        assert!(l1 < l0 * 0.8, "l0={l0} l1={l1}");
+    }
+
+    #[test]
+    fn eval_consistent_with_grad_loss() {
+        let (meta, batch, w) = setup();
+        let mut g = vec![0.0f32; meta.param_count];
+        let mut scratch = LrmScratch::default();
+        let lg = grad(&meta, &w, &batch, &mut g, &mut scratch);
+        let (le, correct) = eval(&meta, &w, &batch, &mut scratch);
+        assert!((lg - le).abs() < 1e-6);
+        assert!(correct <= batch.bsz);
+    }
+
+    #[test]
+    fn training_improves_accuracy() {
+        let meta = ModelMeta::lrm(8, 10, 64);
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(8, 2000), &mut Rng::new(5));
+        let mut sampler = BatchSampler::new(6);
+        let mut w = meta.init_params(&mut Rng::new(7));
+        let mut g = vec![0.0f32; meta.param_count];
+        let mut scratch = LrmScratch::default();
+        let test = BatchSampler::new(8).sample(&data, 512);
+        let (_, c0) = eval(&meta, &w, &test, &mut scratch);
+        for _ in 0..150 {
+            let b = sampler.sample(&data, 64);
+            grad(&meta, &w, &b, &mut g, &mut scratch);
+            for (wv, gv) in w.iter_mut().zip(&g) {
+                *wv -= 0.3 * gv;
+            }
+        }
+        let (_, c1) = eval(&meta, &w, &test, &mut scratch);
+        assert!(
+            c1 as f64 > c0 as f64 + 0.2 * 512.0,
+            "accuracy {}→{} of 512",
+            c0,
+            c1
+        );
+    }
+}

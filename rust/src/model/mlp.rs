@@ -1,0 +1,284 @@
+//! Native 2NN engine (paper Table 1: FC+ReLU 256 → FC+ReLU 256 → FC 10).
+//!
+//! Forward: h1 = relu(x·W1+b1), h2 = relu(h1·W2+b2), z = h2·W3+b3,
+//! mean cross-entropy. Backward is the standard chain; all GEMMs through
+//! model::linalg. Agreement with the PJRT artifact asserted in
+//! rust/tests/runtime_pjrt.rs.
+
+use super::lrm::{argmax, xent_loss};
+use super::{linalg, ModelMeta};
+use crate::data::batch::Batch;
+
+/// Reusable forward/backward activations.
+#[derive(Debug, Clone, Default)]
+pub struct MlpScratch {
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    z: Vec<f32>,
+    dh1: Vec<f32>,
+    dh2: Vec<f32>,
+}
+
+impl MlpScratch {
+    fn reserve(&mut self, b: usize, h: usize, c: usize) {
+        self.h1.clear();
+        self.h1.resize(b * h, 0.0);
+        self.h2.clear();
+        self.h2.resize(b * h, 0.0);
+        self.z.clear();
+        self.z.resize(b * c, 0.0);
+        self.dh1.clear();
+        self.dh1.resize(b * h, 0.0);
+        self.dh2.clear();
+        self.dh2.resize(b * h, 0.0);
+    }
+}
+
+fn forward(
+    meta: &ModelMeta,
+    w_flat: &[f32],
+    batch: &Batch,
+    s: &mut MlpScratch,
+) {
+    let (b, d, h, c) = (batch.bsz, meta.dim, meta.hidden, meta.classes);
+    let w1 = meta.slice(w_flat, "w1");
+    let b1 = meta.slice(w_flat, "b1");
+    let w2 = meta.slice(w_flat, "w2");
+    let b2 = meta.slice(w_flat, "b2");
+    let w3 = meta.slice(w_flat, "w3");
+    let b3 = meta.slice(w_flat, "b3");
+    s.reserve(b, h, c);
+    // h1 = relu(x·W1 + b1)
+    linalg::gemm_nn(b, d, h, &batch.x, w1, &mut s.h1);
+    add_bias_relu(b, h, &mut s.h1, b1);
+    // h2 = relu(h1·W2 + b2)
+    linalg::gemm_nn(b, h, h, &s.h1, w2, &mut s.h2);
+    add_bias_relu(b, h, &mut s.h2, b2);
+    // z = h2·W3 + b3
+    linalg::gemm_nn(b, h, c, &s.h2, w3, &mut s.z);
+    for r in 0..b {
+        for (zc, bc) in s.z[r * c..(r + 1) * c].iter_mut().zip(b3) {
+            *zc += *bc;
+        }
+    }
+}
+
+/// Mean loss + gradient into `grad_out`.
+pub fn grad(
+    meta: &ModelMeta,
+    w_flat: &[f32],
+    batch: &Batch,
+    grad_out: &mut [f32],
+    s: &mut MlpScratch,
+) -> f32 {
+    let (b, d, h, c) = (batch.bsz, meta.dim, meta.hidden, meta.classes);
+    forward(meta, w_flat, batch, s);
+    let loss = xent_loss(b, c, &s.z, &batch.y1h);
+
+    // dz = (softmax - y)/B in place
+    linalg::softmax_rows(b, c, &mut s.z);
+    let inv_b = 1.0 / b as f32;
+    for (zv, yv) in s.z.iter_mut().zip(&batch.y1h) {
+        *zv = (*zv - *yv) * inv_b;
+    }
+
+    grad_out.fill(0.0);
+    let w2 = meta.slice(w_flat, "w2").to_vec(); // copies avoid aliasing grad_out splits
+    let w3 = meta.slice(w_flat, "w3").to_vec();
+
+    // Layer 3 grads: gW3 = h2ᵀ·dz ; gb3 = Σ dz ; dh2 = dz·W3ᵀ ⊙ relu'(h2)
+    {
+        let off = meta.segment("w3").offset;
+        let (head, tail) = grad_out.split_at_mut(off);
+        let (gw3, gb3) = tail.split_at_mut(meta.segment("w3").size);
+        linalg::gemm_tn(b, h, c, &s.h2, &s.z, gw3);
+        sum_rows(b, c, &s.z, gb3);
+        let _ = head;
+    }
+    linalg::gemm_nt(b, c, h, &s.z, &w3, &mut s.dh2);
+    relu_mask(&s.h2, &mut s.dh2);
+
+    // Layer 2 grads: gW2 = h1ᵀ·dh2 ; gb2 = Σ dh2 ; dh1 = dh2·W2ᵀ ⊙ relu'(h1)
+    {
+        let w2_off = meta.segment("w2").offset;
+        let b2_off = meta.segment("b2").offset;
+        let (_, tail) = grad_out.split_at_mut(w2_off);
+        let (gw2, rest) = tail.split_at_mut(meta.segment("w2").size);
+        let (gb2, _) = rest.split_at_mut(meta.segment("b2").size);
+        debug_assert_eq!(w2_off + meta.segment("w2").size, b2_off);
+        linalg::gemm_tn(b, h, h, &s.h1, &s.dh2, gw2);
+        sum_rows(b, h, &s.dh2, gb2);
+    }
+    linalg::gemm_nt(b, h, h, &s.dh2, &w2, &mut s.dh1);
+    relu_mask(&s.h1, &mut s.dh1);
+
+    // Layer 1 grads: gW1 = xᵀ·dh1 ; gb1 = Σ dh1
+    {
+        let (head, _) = grad_out.split_at_mut(meta.segment("w2").offset);
+        let (gw1, gb1) = head.split_at_mut(meta.segment("w1").size);
+        linalg::gemm_tn(b, d, h, &batch.x, &s.dh1, gw1);
+        sum_rows(b, h, &s.dh1, gb1);
+    }
+    loss
+}
+
+/// Mean loss + correct-prediction count.
+pub fn eval(meta: &ModelMeta, w_flat: &[f32], batch: &Batch, s: &mut MlpScratch) -> (f32, usize) {
+    let (b, c) = (batch.bsz, meta.classes);
+    forward(meta, w_flat, batch, s);
+    let loss = xent_loss(b, c, &s.z, &batch.y1h);
+    let mut correct = 0usize;
+    for r in 0..b {
+        if argmax(&s.z[r * c..(r + 1) * c]) == batch.y[r] as usize {
+            correct += 1;
+        }
+    }
+    (loss, correct)
+}
+
+fn add_bias_relu(rows: usize, cols: usize, m: &mut [f32], bias: &[f32]) {
+    for r in 0..rows {
+        for (v, bc) in m[r * cols..(r + 1) * cols].iter_mut().zip(bias) {
+            *v = (*v + *bc).max(0.0);
+        }
+    }
+}
+
+/// dx ⊙= 1[act > 0]  (activations already post-ReLU, so >0 is the mask)
+fn relu_mask(act: &[f32], dx: &mut [f32]) {
+    for (d, &a) in dx.iter_mut().zip(act) {
+        if a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+fn sum_rows(rows: usize, cols: usize, m: &[f32], out: &mut [f32]) {
+    for r in 0..rows {
+        for (o, v) in out.iter_mut().zip(&m[r * cols..(r + 1) * cols]) {
+            *o += *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batch::BatchSampler;
+    use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (ModelMeta, Batch, Vec<f32>) {
+        let meta = ModelMeta::mlp2(10, 24, 4, 16);
+        let mut data = gaussian_mixture(&MixtureSpec::mnist_like(10, 300), &mut Rng::new(0));
+        data.classes = 4;
+        for y in data.y.iter_mut() {
+            *y %= 4;
+        }
+        let batch = BatchSampler::new(1).sample(&data, 16);
+        let w = meta.init_params(&mut Rng::new(2));
+        (meta, batch, w)
+    }
+
+    #[test]
+    fn zero_params_uniform_loss() {
+        let (meta, batch, _) = setup();
+        let w = vec![0.0f32; meta.param_count];
+        let mut g = vec![0.0f32; meta.param_count];
+        let loss = grad(&meta, &w, &batch, &mut g, &mut MlpScratch::default());
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (meta, batch, w) = setup();
+        let mut g = vec![0.0f32; meta.param_count];
+        let mut s = MlpScratch::default();
+        grad(&meta, &w, &batch, &mut g, &mut s);
+        let eps = 1e-2f32;
+        // one coordinate from every segment
+        let coords: Vec<usize> = meta
+            .segments
+            .iter()
+            .map(|seg| seg.offset + seg.size / 2)
+            .collect();
+        let mut gtmp = vec![0.0f32; meta.param_count];
+        for &i in &coords {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let lp = grad(&meta, &wp, &batch, &mut gtmp, &mut s);
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let lm = grad(&meta, &wm, &batch, &mut gtmp, &mut s);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[i]).abs() < 5e-3 + 0.05 * fd.abs(),
+                "coord {i}: fd={fd} analytic={}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let (meta, batch, mut w) = setup();
+        let mut g = vec![0.0f32; meta.param_count];
+        let mut s = MlpScratch::default();
+        let l0 = grad(&meta, &w, &batch, &mut g, &mut s);
+        for _ in 0..30 {
+            for (wv, gv) in w.iter_mut().zip(&g) {
+                *wv -= 0.5 * gv;
+            }
+            grad(&meta, &w, &batch, &mut g, &mut s);
+        }
+        let l1 = grad(&meta, &w, &batch, &mut g, &mut s);
+        assert!(l1 < l0 * 0.7, "l0={l0} l1={l1}");
+    }
+
+    #[test]
+    fn eval_matches_grad_loss() {
+        let (meta, batch, w) = setup();
+        let mut g = vec![0.0f32; meta.param_count];
+        let mut s = MlpScratch::default();
+        let lg = grad(&meta, &w, &batch, &mut g, &mut s);
+        let (le, _) = eval(&meta, &w, &batch, &mut s);
+        assert!((lg - le).abs() < 1e-6);
+    }
+
+    #[test]
+    fn beats_linear_model_on_nonlinear_task() {
+        // XOR-ish labels: linear model stuck near 50%, 2NN should fit.
+        let mut rng = Rng::new(3);
+        let n = 1200;
+        let mut x = vec![0.0f32; n * 2];
+        let mut y = vec![0u32; n];
+        for i in 0..n {
+            let a = rng.normal() as f32;
+            let b = rng.normal() as f32;
+            x[i * 2] = a;
+            x[i * 2 + 1] = b;
+            y[i] = u32::from((a > 0.0) != (b > 0.0));
+        }
+        let data = crate::data::Dataset {
+            dim: 2,
+            classes: 2,
+            x,
+            y,
+        };
+        let meta = ModelMeta::mlp2(2, 32, 2, 64);
+        let mut w = meta.init_params(&mut Rng::new(4));
+        let mut g = vec![0.0f32; meta.param_count];
+        let mut s = MlpScratch::default();
+        let mut sampler = BatchSampler::new(5);
+        for _ in 0..400 {
+            let b = sampler.sample(&data, 64);
+            grad(&meta, &w, &b, &mut g, &mut s);
+            for (wv, gv) in w.iter_mut().zip(&g) {
+                *wv -= 0.8 * gv;
+            }
+        }
+        let test = BatchSampler::new(6).sample(&data, 512);
+        let (_, correct) = eval(&meta, &w, &test, &mut s);
+        assert!(correct > 440, "2NN should crack XOR: {correct}/512");
+    }
+}

@@ -1,0 +1,359 @@
+//! Model substrate: parameter layouts + native (pure-Rust) engines.
+//!
+//! Mirrors python/compile/model.py exactly: the same flat `f32[P]`
+//! parameter vector, the same segment order, the same init rules. The
+//! native LRM/MLP2 implementations serve three roles: (1) correctness
+//! oracle for the PJRT artifacts (cross-checked in rust/tests), (2) fast
+//! engine for simulation-heavy benches where PJRT dispatch would dominate,
+//! (3) fallback when `artifacts/` has not been built.
+//!
+//! The transformer exists only as a PJRT artifact — re-deriving its
+//! backward pass natively would duplicate the Layer-2 JAX autodiff it
+//! exists to exercise (see DESIGN.md §Inventory).
+
+pub mod linalg;
+pub mod lrm;
+pub mod mlp;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Init kinds, matching python `Segment.init` strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Init {
+    GlorotUniform,
+    Zeros,
+    NormalScaled,
+}
+
+impl Init {
+    pub fn parse(s: &str) -> Option<Init> {
+        Some(match s {
+            "glorot_uniform" => Init::GlorotUniform,
+            "zeros" => Init::Zeros,
+            "normal_scaled" => Init::NormalScaled,
+            _ => return None,
+        })
+    }
+}
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: Init,
+}
+
+/// Model kind tags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Lrm,
+    Mlp2,
+    Transformer,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        Some(match s {
+            "lrm" => ModelKind::Lrm,
+            "mlp2" => ModelKind::Mlp2,
+            "transformer" => ModelKind::Transformer,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Lrm => "lrm",
+            ModelKind::Mlp2 => "mlp2",
+            ModelKind::Transformer => "transformer",
+        }
+    }
+}
+
+/// Static model description — the Rust mirror of python `ModelSpec` plus
+/// its derived `ParamLayout`. Constructed directly or parsed from an
+/// artifact `.meta.json`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub kind: ModelKind,
+    pub batch: usize,
+    pub dim: usize,
+    pub classes: usize,
+    pub hidden: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub param_count: usize,
+    pub segments: Vec<Segment>,
+}
+
+impl ModelMeta {
+    pub fn lrm(dim: usize, classes: usize, batch: usize) -> ModelMeta {
+        let segments = layout(&[
+            ("w", vec![dim, classes], Init::GlorotUniform),
+            ("b", vec![classes], Init::Zeros),
+        ]);
+        ModelMeta {
+            name: format!("lrm_d{dim}_c{classes}_b{batch}"),
+            kind: ModelKind::Lrm,
+            batch,
+            dim,
+            classes,
+            hidden: 0,
+            vocab: 0,
+            seq: 0,
+            param_count: segments.iter().map(|s| s.size).sum(),
+            segments,
+        }
+    }
+
+    pub fn mlp2(dim: usize, hidden: usize, classes: usize, batch: usize) -> ModelMeta {
+        let segments = layout(&[
+            ("w1", vec![dim, hidden], Init::GlorotUniform),
+            ("b1", vec![hidden], Init::Zeros),
+            ("w2", vec![hidden, hidden], Init::GlorotUniform),
+            ("b2", vec![hidden], Init::Zeros),
+            ("w3", vec![hidden, classes], Init::GlorotUniform),
+            ("b3", vec![classes], Init::Zeros),
+        ]);
+        ModelMeta {
+            name: format!("mlp2_d{dim}_h{hidden}_c{classes}_b{batch}"),
+            kind: ModelKind::Mlp2,
+            batch,
+            dim,
+            classes,
+            hidden,
+            vocab: 0,
+            seq: 0,
+            param_count: segments.iter().map(|s| s.size).sum(),
+            segments,
+        }
+    }
+
+    /// Parse an artifact `.meta.json` produced by python/compile/aot.py.
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelMeta> {
+        let get_usize = |key: &str| -> usize {
+            j.get(key).and_then(|v| v.as_usize()).unwrap_or(0)
+        };
+        let kind_s = j
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("meta missing 'kind'"))?;
+        let kind = ModelKind::parse(kind_s)
+            .ok_or_else(|| anyhow::anyhow!("unknown model kind '{kind_s}'"))?;
+        let mut segments = Vec::new();
+        for seg in j
+            .get("segments")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("meta missing 'segments'"))?
+        {
+            let name = seg
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("segment missing name"))?
+                .to_string();
+            let shape: Vec<usize> = seg
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("segment missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            let init_s = seg.get("init").and_then(|v| v.as_str()).unwrap_or("zeros");
+            segments.push(Segment {
+                name,
+                shape: shape.clone(),
+                offset: seg.get("offset").and_then(|v| v.as_usize()).unwrap_or(0),
+                size: seg.get("size").and_then(|v| v.as_usize()).unwrap_or(0),
+                init: Init::parse(init_s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown init '{init_s}'"))?,
+            });
+        }
+        let meta = ModelMeta {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unnamed")
+                .to_string(),
+            kind,
+            batch: get_usize("batch"),
+            dim: get_usize("dim"),
+            classes: get_usize("classes"),
+            hidden: get_usize("hidden"),
+            vocab: get_usize("vocab"),
+            seq: get_usize("seq"),
+            param_count: get_usize("param_count"),
+            segments,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    /// Internal consistency: segments tile [0, param_count) exactly.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut off = 0usize;
+        for s in &self.segments {
+            anyhow::ensure!(
+                s.offset == off,
+                "segment {} offset {} != expected {off}",
+                s.name,
+                s.offset
+            );
+            anyhow::ensure!(
+                s.size == s.shape.iter().product::<usize>(),
+                "segment {} size mismatch",
+                s.name
+            );
+            off += s.size;
+        }
+        anyhow::ensure!(
+            off == self.param_count,
+            "segments tile {off} != param_count {}",
+            self.param_count
+        );
+        Ok(())
+    }
+
+    pub fn segment(&self, name: &str) -> &Segment {
+        self.segments
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("no segment '{name}'"))
+    }
+
+    /// View a named segment inside a flat parameter vector.
+    pub fn slice<'a>(&self, flat: &'a [f32], name: &str) -> &'a [f32] {
+        let s = self.segment(name);
+        &flat[s.offset..s.offset + s.size]
+    }
+
+    pub fn slice_mut<'a>(&self, flat: &'a mut [f32], name: &str) -> &'a mut [f32] {
+        let s = self.segment(name);
+        &mut flat[s.offset..s.offset + s.size]
+    }
+
+    /// Initialise a fresh flat parameter vector (same rules as python).
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.param_count];
+        for s in &self.segments {
+            let span = &mut out[s.offset..s.offset + s.size];
+            match s.init {
+                Init::Zeros => {}
+                Init::GlorotUniform => {
+                    let fan_in = if s.shape.len() > 1 { s.shape[0] } else { s.size };
+                    let fan_out = *s.shape.last().unwrap();
+                    let lim = (6.0 / (fan_in + fan_out) as f64).sqrt();
+                    for v in span.iter_mut() {
+                        *v = rng.uniform_in(-lim, lim) as f32;
+                    }
+                }
+                Init::NormalScaled => {
+                    let scale = 1.0 / (*s.shape.last().unwrap() as f64).sqrt();
+                    for v in span.iter_mut() {
+                        *v = (rng.normal() * scale) as f32;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn layout(specs: &[(&str, Vec<usize>, Init)]) -> Vec<Segment> {
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0usize;
+    for (name, shape, init) in specs {
+        let size: usize = shape.iter().product();
+        out.push(Segment {
+            name: name.to_string(),
+            shape: shape.clone(),
+            offset: off,
+            size,
+            init: *init,
+        });
+        off += size;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lrm_layout_matches_python() {
+        let m = ModelMeta::lrm(8, 4, 16);
+        assert_eq!(m.param_count, 36);
+        assert_eq!(m.segment("w").offset, 0);
+        assert_eq!(m.segment("b").offset, 32);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn mlp2_layout_matches_python() {
+        // mirror of mlp2_d64_h256_c10: 64*256+256+256*256+256+256*10+10
+        let m = ModelMeta::mlp2(64, 256, 10, 256);
+        assert_eq!(m.param_count, 64 * 256 + 256 + 256 * 256 + 256 + 256 * 10 + 10);
+        assert_eq!(m.param_count, 85002); // cross-checked against python
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let m = ModelMeta::lrm(10, 5, 4);
+        let p = m.init_params(&mut Rng::new(0));
+        let w = m.slice(&p, "w");
+        let b = m.slice(&p, "b");
+        assert!(w.iter().any(|&v| v != 0.0));
+        assert!(b.iter().all(|&v| v == 0.0));
+        let lim = (6.0f64 / 15.0).sqrt() as f32;
+        assert!(w.iter().all(|&v| v.abs() <= lim));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let m = ModelMeta::mlp2(6, 8, 3, 4);
+        let a = m.init_params(&mut Rng::new(9));
+        let b = m.init_params(&mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn from_json_parses_aot_meta() {
+        let src = r#"{
+            "name": "lrm_d8_c4_b16", "kind": "lrm", "batch": 16,
+            "dim": 8, "classes": 4, "hidden": 0, "vocab": 0, "seq": 0,
+            "d_model": 0, "n_heads": 0, "n_layers": 0,
+            "param_count": 36,
+            "segments": [
+                {"name": "w", "shape": [8, 4], "offset": 0, "size": 32, "init": "glorot_uniform"},
+                {"name": "b", "shape": [4], "offset": 32, "size": 4, "init": "zeros"}
+            ],
+            "x_shape": [16, 8], "x_dtype": "float32",
+            "y_shape": [16, 4], "y_dtype": "float32"
+        }"#;
+        let j = Json::parse(src).unwrap();
+        let m = ModelMeta::from_json(&j).unwrap();
+        assert_eq!(m.kind, ModelKind::Lrm);
+        assert_eq!(m.param_count, 36);
+        assert_eq!(m.segments.len(), 2);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_offsets() {
+        let src = r#"{
+            "name": "x", "kind": "lrm", "batch": 1, "dim": 2, "classes": 2,
+            "param_count": 6,
+            "segments": [
+                {"name": "w", "shape": [2, 2], "offset": 1, "size": 4, "init": "zeros"},
+                {"name": "b", "shape": [2], "offset": 4, "size": 2, "init": "zeros"}
+            ]
+        }"#;
+        let j = Json::parse(src).unwrap();
+        assert!(ModelMeta::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Artifact discovery: the contract with python/compile/aot.py.
+//!
+//! `artifacts/` holds, per model family `<name>`:
+//! `<name>.grad.hlo.txt`, `<name>.eval.hlo.txt`, `<name>.meta.json`,
+//! plus a `manifest.json` index. This module loads and validates that
+//! layout without touching PJRT (so it is unit-testable without a client).
+
+use std::path::{Path, PathBuf};
+
+use crate::model::ModelMeta;
+use crate::util::json::Json;
+
+/// One artifact family on disk.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub meta: ModelMeta,
+    pub grad_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+}
+
+/// All artifacts under a directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl ArtifactSet {
+    /// Load `dir/manifest.json` and every referenced family.
+    pub fn load(dir: &Path) -> anyhow::Result<ArtifactSet> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("bad manifest.json: {e}"))?;
+        let mut artifacts = Vec::new();
+        for entry in manifest
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?
+        {
+            let name = entry
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("manifest entry missing name"))?;
+            artifacts.push(Self::load_family(dir, name)?);
+        }
+        Ok(ArtifactSet {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Load a single family by name (no manifest needed).
+    pub fn load_family(dir: &Path, name: &str) -> anyhow::Result<Artifact> {
+        let meta_path = dir.join(format!("{name}.meta.json"));
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", meta_path.display()))?;
+        let meta_json = Json::parse(&meta_text)
+            .map_err(|e| anyhow::anyhow!("bad {}: {e}", meta_path.display()))?;
+        let meta = ModelMeta::from_json(&meta_json)?;
+        let grad_hlo = dir.join(format!("{name}.grad.hlo.txt"));
+        let eval_hlo = dir.join(format!("{name}.eval.hlo.txt"));
+        for p in [&grad_hlo, &eval_hlo] {
+            anyhow::ensure!(p.exists(), "missing artifact file {}", p.display());
+        }
+        Ok(Artifact {
+            meta,
+            grad_hlo,
+            eval_hlo,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.meta.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.meta.name.as_str()).collect()
+    }
+}
+
+/// Default artifacts directory: `$DYBW_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("DYBW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<ArtifactSet> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        ArtifactSet::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_built_artifacts_when_present() {
+        // Soft test: artifacts/ may not exist in a fresh checkout.
+        let Some(set) = repo_artifacts() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        assert!(set.get("lrm_d8_c4_b16").is_some());
+        for a in &set.artifacts {
+            a.meta.validate().unwrap();
+            assert!(a.grad_hlo.exists());
+            assert!(a.eval_hlo.exists());
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = ArtifactSet::load(Path::new("/nonexistent/nowhere")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn missing_family_errors() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.exists() {
+            assert!(ArtifactSet::load_family(&dir, "no_such_model").is_err());
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Compiled model executables + the PJRT gradient engine.
+//!
+//! A [`LoadedModel`] holds two compiled PJRT executables per model family
+//! (the `(loss, grad)` training entry point and the `(loss, n_correct)`
+//! eval entry point) plus the parameter-layout metadata. Compilation
+//! happens once; execution reuses host-side literals and is allocation-
+//! light. [`PjrtEngine`] adapts a shared `LoadedModel` to the coordinator's
+//! [`GradEngine`] interface — workers clone the `Arc`, so N workers share
+//! one compiled executable (PJRT executables are immutable + thread-safe).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use crate::data::batch::{Batch, SeqBatch};
+use crate::engine::{AnyBatch, GradEngine};
+use crate::model::{ModelKind, ModelMeta};
+
+use super::artifact::Artifact;
+
+/// f32 slice -> xla literal with the given dims.
+fn literal_f32(dims: &[usize], data: &[f32]) -> anyhow::Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// i32 slice -> xla literal with the given dims.
+fn literal_i32(dims: &[usize], data: &[i32]) -> anyhow::Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// A model family compiled onto the PJRT client.
+///
+/// PJRT handles in the `xla` crate are Rc-backed, so a `LoadedModel` is
+/// pinned to the thread that compiled it. Share across workers on the same
+/// thread with `Rc<LoadedModel>`; cross-thread access goes through
+/// `engine::server::ComputeServer`.
+pub struct LoadedModel {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    grad_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Parse HLO text, compile both entry points. One-time cost.
+    pub fn compile(artifact: &Artifact, client: xla::PjRtClient) -> anyhow::Result<Self> {
+        let grad_exe = compile_hlo(&client, &artifact.grad_hlo)?;
+        let eval_exe = compile_hlo(&client, &artifact.eval_hlo)?;
+        Ok(LoadedModel {
+            meta: artifact.meta.clone(),
+            client,
+            grad_exe,
+            eval_exe,
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    fn batch_literals(&self, batch: &AnyBatch) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+        match (self.meta.kind, batch) {
+            (ModelKind::Transformer, AnyBatch::Seq(b)) => self.seq_literals(b),
+            (ModelKind::Transformer, AnyBatch::Dense(_)) => {
+                anyhow::bail!("transformer artifact fed a dense batch")
+            }
+            (_, AnyBatch::Dense(b)) => self.dense_literals(b),
+            (_, AnyBatch::Seq(_)) => anyhow::bail!("dense artifact fed a token batch"),
+        }
+    }
+
+    fn dense_literals(&self, b: &Batch) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+        anyhow::ensure!(
+            b.bsz == self.meta.batch && b.dim == self.meta.dim && b.classes == self.meta.classes,
+            "batch shape ({}, {}, c{}) != artifact shape ({}, {}, c{})",
+            b.bsz,
+            b.dim,
+            b.classes,
+            self.meta.batch,
+            self.meta.dim,
+            self.meta.classes
+        );
+        Ok((
+            literal_f32(&[b.bsz, b.dim], &b.x)?,
+            literal_f32(&[b.bsz, b.classes], &b.y1h)?,
+        ))
+    }
+
+    fn seq_literals(&self, b: &SeqBatch) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+        anyhow::ensure!(
+            b.bsz == self.meta.batch && b.seq == self.meta.seq && b.vocab == self.meta.vocab,
+            "seq batch ({}, {}, v{}) != artifact ({}, {}, v{})",
+            b.bsz,
+            b.seq,
+            b.vocab,
+            self.meta.batch,
+            self.meta.seq,
+            self.meta.vocab
+        );
+        Ok((
+            literal_i32(&[b.bsz, b.seq], &b.tokens)?,
+            literal_f32(&[b.bsz, b.seq, b.vocab], &b.y1h)?,
+        ))
+    }
+
+    /// (loss, grad) — writes the flat gradient into `grad_out`.
+    pub fn grad_into(
+        &self,
+        w: &[f32],
+        batch: &AnyBatch,
+        grad_out: &mut [f32],
+    ) -> anyhow::Result<f32> {
+        anyhow::ensure!(w.len() == self.meta.param_count, "param length mismatch");
+        anyhow::ensure!(grad_out.len() == self.meta.param_count);
+        let pw = literal_f32(&[w.len()], w)?;
+        let (x, y) = self.batch_literals(batch)?;
+        let result = self.grad_exe.execute::<xla::Literal>(&[pw, x, y])?[0][0]
+            .to_literal_sync()?;
+        let (loss_lit, grad_lit) = result.to_tuple2()?;
+        let loss = loss_lit.get_first_element::<f32>()?;
+        grad_lit.copy_raw_to::<f32>(grad_out)?;
+        Ok(loss)
+    }
+
+    /// (loss, n_correct) on one batch.
+    pub fn eval(&self, w: &[f32], batch: &AnyBatch) -> anyhow::Result<(f32, usize)> {
+        anyhow::ensure!(w.len() == self.meta.param_count, "param length mismatch");
+        let pw = literal_f32(&[w.len()], w)?;
+        let (x, y) = self.batch_literals(batch)?;
+        let result = self.eval_exe.execute::<xla::Literal>(&[pw, x, y])?[0][0]
+            .to_literal_sync()?;
+        let (loss_lit, correct_lit) = result.to_tuple2()?;
+        Ok((
+            loss_lit.get_first_element::<f32>()?,
+            correct_lit.get_first_element::<f32>()? as usize,
+        ))
+    }
+}
+
+fn compile_hlo(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow::anyhow!("parse {} failed: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compile {} failed: {e}", path.display()))
+}
+
+/// GradEngine over a shared compiled model. Clone one per worker (same
+/// thread — see [`LoadedModel`]).
+pub struct PjrtEngine {
+    model: Rc<LoadedModel>,
+}
+
+impl PjrtEngine {
+    pub fn new(model: Rc<LoadedModel>) -> Self {
+        PjrtEngine { model }
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.model.meta
+    }
+}
+
+impl GradEngine for PjrtEngine {
+    fn param_count(&self) -> usize {
+        self.model.meta.param_count
+    }
+
+    fn grad_into(
+        &mut self,
+        w: &[f32],
+        batch: &AnyBatch,
+        grad_out: &mut [f32],
+    ) -> anyhow::Result<f32> {
+        self.model.grad_into(w, batch, grad_out)
+    }
+
+    fn eval(&mut self, w: &[f32], batch: &AnyBatch) -> anyhow::Result<(f32, usize)> {
+        self.model.eval(w, batch)
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+}

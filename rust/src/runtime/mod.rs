@@ -1,0 +1,41 @@
+//! PJRT runtime: load + execute the AOT artifacts from Rust.
+//!
+//! The production compute path: `python -m compile.aot` lowers the Layer-2
+//! JAX models (with Layer-1 Pallas kernels inlined) to HLO **text**; this
+//! module parses it (`HloModuleProto::from_text_file` — text, because the
+//! serialized protos from jax ≥ 0.5 carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects), compiles it once on the PJRT CPU client,
+//! and executes it per-iteration with zero Python anywhere near the loop.
+//!
+//! - [`artifact`] — discovery + metadata (`manifest.json`, `*.meta.json`)
+//! - [`exec`] — compiled model executables (grad + eval entry points)
+//! - [`PjrtEngine`] — [`crate::engine::GradEngine`] over a compiled model
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::ArtifactSet;
+pub use exec::{LoadedModel, PjrtEngine};
+
+use std::cell::RefCell;
+
+// The `xla` crate's PJRT handles are Rc-backed (single-threaded). One
+// client per thread; threads that need compute either own their engines or
+// go through `engine::server::ComputeServer`.
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// This thread's PJRT CPU client (created on first use, then cached).
+pub fn shared_client() -> anyhow::Result<xla::PjRtClient> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(
+                xla::PjRtClient::cpu()
+                    .map_err(|e| anyhow::anyhow!("PJRT CPU client init failed: {e}"))?,
+            );
+        }
+        Ok(slot.clone().unwrap())
+    })
+}

@@ -1,0 +1,298 @@
+//! Straggler substrate: per-worker compute-time model t_j(k) (paper §3.2.2).
+//!
+//! The paper treats the time worker j takes to compute its local update at
+//! iteration k as a random variable t_j(k), heterogeneous across workers
+//! ("different amount of time due to the different sizes of available
+//! local training data") and guarantees "at least one straggler in each
+//! iteration" in the experiments (Appendix B). The authors' testbed got
+//! this for free from real cluster noise; we simulate it (see DESIGN.md
+//! §Substitutions): a per-worker base distribution plus persistent and
+//! transient slowdown multipliers.
+
+pub mod trace;
+
+use crate::util::rng::Rng;
+
+/// A scheduled degradation window: worker `worker` runs `factor`x slower
+/// for iterations `from..to` (failure injection for tests/ablations —
+/// models a co-located job, thermal throttle, or partial outage).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Outage {
+    pub worker: usize,
+    pub from: usize,
+    pub to: usize,
+    pub factor: f64,
+}
+
+/// Base compute-time distribution families.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Dist {
+    /// Always exactly `base` seconds.
+    Deterministic { base: f64 },
+    /// Uniform in [lo, hi).
+    Uniform { lo: f64, hi: f64 },
+    /// base + Exponential(rate) — the classic shifted-exponential
+    /// straggler model (Lee et al., coded computation literature).
+    ShiftedExp { base: f64, rate: f64 },
+    /// Pareto(xm, alpha) — heavy-tailed ("tail at scale").
+    Pareto { xm: f64, alpha: f64 },
+    /// LogNormal(mu, sigma) of the underlying normal.
+    LogNormal { mu: f64, sigma: f64 },
+}
+
+impl Dist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Deterministic { base } => base,
+            Dist::Uniform { lo, hi } => rng.uniform_in(lo, hi),
+            Dist::ShiftedExp { base, rate } => base + rng.exponential(rate),
+            Dist::Pareto { xm, alpha } => rng.pareto(xm, alpha),
+            Dist::LogNormal { mu, sigma } => rng.lognormal(mu, sigma),
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Dist::Deterministic { base } => base,
+            Dist::Uniform { lo, hi } => 0.5 * (lo + hi),
+            Dist::ShiftedExp { base, rate } => base + 1.0 / rate,
+            Dist::Pareto { xm, alpha } => {
+                if alpha > 1.0 {
+                    alpha * xm / (alpha - 1.0)
+                } else {
+                    f64::INFINITY
+                }
+            }
+            Dist::LogNormal { mu, sigma } => (mu + 0.5 * sigma * sigma).exp(),
+        }
+    }
+
+    /// Parse `"det:0.1"`, `"uniform:0.05,0.2"`, `"sexp:0.1,20"`,
+    /// `"pareto:0.1,2.5"`, `"lognormal:-2,0.5"`.
+    pub fn parse(s: &str) -> Option<Dist> {
+        let (kind, rest) = s.split_once(':')?;
+        let nums: Vec<f64> = rest
+            .split(',')
+            .map(|x| x.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .ok()?;
+        Some(match (kind, nums.as_slice()) {
+            ("det", [b]) => Dist::Deterministic { base: *b },
+            ("uniform", [lo, hi]) => Dist::Uniform { lo: *lo, hi: *hi },
+            ("sexp", [b, r]) => Dist::ShiftedExp { base: *b, rate: *r },
+            ("pareto", [xm, a]) => Dist::Pareto { xm: *xm, alpha: *a },
+            ("lognormal", [mu, s]) => Dist::LogNormal { mu: *mu, sigma: *s },
+            _ => return None,
+        })
+    }
+}
+
+/// The full per-worker straggler model.
+#[derive(Debug, Clone)]
+pub struct StragglerModel {
+    /// Base distribution, common shape for all workers.
+    pub base: Dist,
+    /// Per-worker speed multiplier (data-size heterogeneity). 1.0 = nominal.
+    pub worker_scale: Vec<f64>,
+    /// Persistent stragglers: worker -> extra multiplier (e.g. 4x slower).
+    pub persistent: Vec<f64>,
+    /// Probability that any given worker transiently straggles this iteration.
+    pub transient_prob: f64,
+    /// Multiplier applied to a transient straggler's draw.
+    pub transient_factor: f64,
+    /// Force at least one transient straggler every iteration (Appendix B:
+    /// "we assume that there exists at least one straggler in each
+    /// iteration").
+    pub force_one_straggler: bool,
+    /// Scheduled degradation windows (failure injection).
+    pub outages: Vec<Outage>,
+}
+
+impl StragglerModel {
+    /// Homogeneous model: same distribution everywhere, no injection.
+    pub fn homogeneous(n: usize, base: Dist) -> Self {
+        StragglerModel {
+            base,
+            worker_scale: vec![1.0; n],
+            persistent: vec![1.0; n],
+            transient_prob: 0.0,
+            transient_factor: 1.0,
+            force_one_straggler: false,
+            outages: Vec::new(),
+        }
+    }
+
+    /// The paper-like default: mild heterogeneity + forced transient
+    /// straggler each iteration with `factor`x slowdown.
+    pub fn paper_default(n: usize, rng: &mut Rng) -> Self {
+        let worker_scale: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.8, 1.25)).collect();
+        StragglerModel {
+            base: Dist::ShiftedExp { base: 0.08, rate: 25.0 },
+            worker_scale,
+            persistent: vec![1.0; n],
+            transient_prob: 0.15,
+            transient_factor: 4.0,
+            force_one_straggler: true,
+            outages: Vec::new(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.worker_scale.len()
+    }
+
+    /// Mark worker `w` as persistently `factor`x slower.
+    pub fn with_persistent(mut self, w: usize, factor: f64) -> Self {
+        self.persistent[w] = factor;
+        self
+    }
+
+    /// Draw the compute-time vector t_·(k) for one iteration (no outage
+    /// windows applied — use [`Self::sample_iteration_at`] when the
+    /// iteration index matters).
+    pub fn sample_iteration(&self, rng: &mut Rng) -> Vec<f64> {
+        self.sample_iteration_at(usize::MAX, rng)
+    }
+
+    /// Draw t_·(k) for iteration `k`, applying any scheduled [`Outage`]
+    /// whose window contains `k`.
+    pub fn sample_iteration_at(&self, k: usize, rng: &mut Rng) -> Vec<f64> {
+        let n = self.n();
+        let mut transient = vec![false; n];
+        for t in transient.iter_mut() {
+            *t = rng.uniform() < self.transient_prob;
+        }
+        if self.force_one_straggler && !transient.iter().any(|&t| t) && n > 0 {
+            transient[rng.below(n)] = true;
+        }
+        (0..n)
+            .map(|j| {
+                let mut t = self.base.sample(rng) * self.worker_scale[j] * self.persistent[j];
+                if transient[j] {
+                    t *= self.transient_factor;
+                }
+                for o in &self.outages {
+                    if o.worker == j && (o.from..o.to).contains(&k) {
+                        t *= o.factor;
+                    }
+                }
+                t
+            })
+            .collect()
+    }
+
+    /// Expected nominal (non-straggling) compute time of worker j.
+    pub fn nominal_mean(&self, j: usize) -> f64 {
+        self.base.mean() * self.worker_scale[j] * self.persistent[j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Dist::parse("det:0.5"), Some(Dist::Deterministic { base: 0.5 }));
+        assert_eq!(
+            Dist::parse("sexp:0.1,20"),
+            Some(Dist::ShiftedExp { base: 0.1, rate: 20.0 })
+        );
+        assert_eq!(
+            Dist::parse("pareto:1,2"),
+            Some(Dist::Pareto { xm: 1.0, alpha: 2.0 })
+        );
+        assert_eq!(Dist::parse("bogus:1"), None);
+        assert_eq!(Dist::parse("det:a"), None);
+    }
+
+    #[test]
+    fn shifted_exp_mean() {
+        let d = Dist::ShiftedExp { base: 0.1, rate: 10.0 };
+        let mut rng = Rng::new(0);
+        let n = 100_000;
+        let m: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((m - d.mean()).abs() < 0.005, "m={m} want={}", d.mean());
+    }
+
+    #[test]
+    fn samples_positive() {
+        let mut rng = Rng::new(1);
+        for d in [
+            Dist::Deterministic { base: 0.2 },
+            Dist::Uniform { lo: 0.1, hi: 0.3 },
+            Dist::ShiftedExp { base: 0.05, rate: 5.0 },
+            Dist::Pareto { xm: 0.1, alpha: 2.0 },
+            Dist::LogNormal { mu: -2.0, sigma: 0.5 },
+        ] {
+            for _ in 0..1000 {
+                assert!(d.sample(&mut rng) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn forced_straggler_present_every_iteration() {
+        let mut rng = Rng::new(2);
+        let mut model = StragglerModel::homogeneous(6, Dist::Deterministic { base: 0.1 });
+        model.force_one_straggler = true;
+        model.transient_factor = 5.0;
+        for _ in 0..200 {
+            let ts = model.sample_iteration(&mut rng);
+            let slow = ts.iter().filter(|&&t| t > 0.4).count();
+            assert!(slow >= 1, "no straggler injected: {ts:?}");
+        }
+    }
+
+    #[test]
+    fn persistent_straggler_slower_on_average() {
+        let mut rng = Rng::new(3);
+        let model = StragglerModel::homogeneous(4, Dist::Uniform { lo: 0.1, hi: 0.2 })
+            .with_persistent(2, 6.0);
+        let mut sums = vec![0.0f64; 4];
+        for _ in 0..2000 {
+            for (s, t) in sums.iter_mut().zip(model.sample_iteration(&mut rng)) {
+                *s += t;
+            }
+        }
+        assert!(sums[2] > 4.0 * sums[0]);
+        assert!((model.nominal_mean(2) / model.nominal_mean(0) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heterogeneous_scales_respected() {
+        let mut rng = Rng::new(4);
+        let model = StragglerModel::paper_default(6, &mut rng);
+        assert_eq!(model.n(), 6);
+        for j in 0..6 {
+            assert!(model.worker_scale[j] >= 0.8 && model.worker_scale[j] <= 1.25);
+        }
+    }
+
+    #[test]
+    fn deterministic_no_injection_constant() {
+        let mut rng = Rng::new(5);
+        let model = StragglerModel::homogeneous(3, Dist::Deterministic { base: 0.25 });
+        let ts = model.sample_iteration(&mut rng);
+        assert_eq!(ts, vec![0.25; 3]);
+    }
+
+    #[test]
+    fn outage_window_applies_only_inside() {
+        let mut rng = Rng::new(6);
+        let mut model = StragglerModel::homogeneous(3, Dist::Deterministic { base: 0.1 });
+        model.outages.push(Outage {
+            worker: 1,
+            from: 10,
+            to: 20,
+            factor: 50.0,
+        });
+        let before = model.sample_iteration_at(9, &mut rng);
+        let during = model.sample_iteration_at(15, &mut rng);
+        let after = model.sample_iteration_at(20, &mut rng);
+        assert_eq!(before[1], 0.1);
+        assert_eq!(during[1], 5.0);
+        assert_eq!(after[1], 0.1);
+        assert_eq!(during[0], 0.1); // others untouched
+    }
+}

@@ -1,0 +1,196 @@
+//! Compute-time traces: record, save, replay (production-trace stand-in).
+//!
+//! Real deployments tune straggler policies against recorded cluster
+//! traces; none are available offline, so this module closes the loop
+//! synthetically: record t_j(k) matrices from any [`StragglerModel`]
+//! (or import one written by hand), persist as CSV, and replay it
+//! deterministically — so cb-DyBW and every baseline can be compared on
+//! the *identical* timing realisation (variance-free A/B, the strongest
+//! form of the paper's Fig. 1c comparison).
+
+use std::path::Path;
+
+use super::StragglerModel;
+use crate::util::rng::Rng;
+
+/// A recorded timing trace: `times[k][j]` = t_j(k).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub workers: usize,
+    pub times: Vec<Vec<f64>>,
+}
+
+impl Trace {
+    /// Record `iters` iterations from a model.
+    pub fn record(model: &StragglerModel, iters: usize, rng: &mut Rng) -> Trace {
+        Trace {
+            workers: model.n(),
+            times: (0..iters).map(|_| model.sample_iteration(rng)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    /// CSV: header `k,w0,w1,...`, one row per iteration.
+    pub fn save_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::from("k");
+        for j in 0..self.workers {
+            out.push_str(&format!(",w{j}"));
+        }
+        out.push('\n');
+        for (k, row) in self.times.iter().enumerate() {
+            out.push_str(&k.to_string());
+            for t in row {
+                out.push_str(&format!(",{t:.9}"));
+            }
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn load_csv(path: &Path) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read trace {}: {e}", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty trace"))?;
+        let workers = header.split(',').count() - 1;
+        anyhow::ensure!(workers > 0, "trace has no worker columns");
+        let mut times = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cells: Vec<&str> = line.split(',').collect();
+            anyhow::ensure!(
+                cells.len() == workers + 1,
+                "trace line {}: {} cells, want {}",
+                lineno + 2,
+                cells.len(),
+                workers + 1
+            );
+            let row: Vec<f64> = cells[1..]
+                .iter()
+                .map(|c| c.trim().parse::<f64>())
+                .collect::<Result<_, _>>()
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 2))?;
+            anyhow::ensure!(
+                row.iter().all(|&t| t.is_finite() && t > 0.0),
+                "trace line {}: non-positive time",
+                lineno + 2
+            );
+            times.push(row);
+        }
+        Ok(Trace { workers, times })
+    }
+
+    /// Per-worker mean compute time.
+    pub fn worker_means(&self) -> Vec<f64> {
+        let mut m = vec![0.0f64; self.workers];
+        for row in &self.times {
+            for (acc, t) in m.iter_mut().zip(row) {
+                *acc += t;
+            }
+        }
+        let n = self.len().max(1) as f64;
+        m.iter_mut().for_each(|v| *v /= n);
+        m
+    }
+}
+
+/// Replays a trace as an iteration-time source (wraps around at the end).
+#[derive(Debug, Clone)]
+pub struct TraceReplay {
+    trace: Trace,
+    pos: usize,
+}
+
+impl TraceReplay {
+    pub fn new(trace: Trace) -> anyhow::Result<Self> {
+        anyhow::ensure!(!trace.is_empty(), "cannot replay empty trace");
+        Ok(TraceReplay { trace, pos: 0 })
+    }
+
+    pub fn next_iteration(&mut self) -> Vec<f64> {
+        let row = self.trace.times[self.pos].clone();
+        self.pos = (self.pos + 1) % self.trace.len();
+        row
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::straggler::Dist;
+
+    fn model(n: usize) -> StragglerModel {
+        StragglerModel::homogeneous(n, Dist::ShiftedExp { base: 0.05, rate: 20.0 })
+    }
+
+    #[test]
+    fn record_shapes() {
+        let mut rng = Rng::new(0);
+        let t = Trace::record(&model(5), 40, &mut rng);
+        assert_eq!(t.workers, 5);
+        assert_eq!(t.len(), 40);
+        assert!(t.times.iter().flatten().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Trace::record(&model(3), 10, &mut rng);
+        let dir = std::env::temp_dir().join("dybw_trace_test");
+        let path = dir.join("t.csv");
+        t.save_csv(&path).unwrap();
+        let l = Trace::load_csv(&path).unwrap();
+        assert_eq!(t.workers, l.workers);
+        assert_eq!(t.len(), l.len());
+        for (a, b) in t.times.iter().flatten().zip(l.times.iter().flatten()) {
+            assert!((a - b).abs() < 1e-8);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("dybw_trace_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "k,w0,w1\n0,0.5\n").unwrap(); // short row
+        assert!(Trace::load_csv(&path).is_err());
+        std::fs::write(&path, "k,w0\n0,-1.0\n").unwrap(); // negative time
+        assert!(Trace::load_csv(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_wraps_and_is_deterministic() {
+        let mut rng = Rng::new(2);
+        let t = Trace::record(&model(2), 3, &mut rng);
+        let mut r = TraceReplay::new(t.clone()).unwrap();
+        let seq: Vec<Vec<f64>> = (0..7).map(|_| r.next_iteration()).collect();
+        assert_eq!(seq[0], t.times[0]);
+        assert_eq!(seq[3], t.times[0]); // wrapped
+        assert_eq!(seq[6], t.times[0]);
+    }
+
+    #[test]
+    fn worker_means_sane() {
+        let mut rng = Rng::new(3);
+        let mut m = model(4);
+        m.persistent[1] = 10.0;
+        let t = Trace::record(&m, 400, &mut rng);
+        let means = t.worker_means();
+        assert!(means[1] > 5.0 * means[0], "{means:?}");
+    }
+}

@@ -1,0 +1,260 @@
+//! Tiny declarative CLI argument parser (no `clap` in the vendor set).
+//!
+//! Supports subcommands, `--key value`, `--key=value`, `--flag` booleans,
+//! positional arguments, defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative command: declare options, then `parse` an arg list.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command {
+            name: name.into(),
+            about: about.into(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            out.push_str(&format!(" <{p}>"));
+        }
+        out.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            out.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                out.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let d = match (&o.default, o.is_flag) {
+                    (_, true) => String::new(),
+                    (Some(d), _) => format!(" [default: {d}]"),
+                    (None, _) => " (required)".into(),
+                };
+                out.push_str(&format!("  --{:<24} {}{}\n", o.name, o.help, d));
+            }
+        }
+        out
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                args.flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                if spec.is_flag {
+                    args.flags.insert(key, true);
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // required options present?
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !args.values.contains_key(&o.name) {
+                return Err(CliError(format!("missing required --{}", o.name)));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("option --{key} was not declared"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, CliError> {
+        self.get(key)
+            .parse()
+            .map_err(|_| CliError(format!("--{key} expects an integer, got '{}'", self.get(key))))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, CliError> {
+        self.get(key)
+            .parse()
+            .map_err(|_| CliError(format!("--{key} expects an integer, got '{}'", self.get(key))))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, CliError> {
+        self.get(key)
+            .parse()
+            .map_err(|_| CliError(format!("--{key} expects a number, got '{}'", self.get(key))))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        *self.flags.get(key).unwrap_or(&false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("train", "run training")
+            .opt("workers", "6", "number of workers")
+            .opt("lr", "0.2", "learning rate")
+            .req("model", "model name")
+            .flag("verbose", "chatty output")
+            .positional("config", "config path")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&["--model", "lrm"])).unwrap();
+        assert_eq!(a.get_usize("workers").unwrap(), 6);
+        assert_eq!(a.get_f64("lr").unwrap(), 0.2);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_eq_syntax() {
+        let a = cmd()
+            .parse(&argv(&["--model=mlp2", "--workers", "10", "--verbose", "cfg.json"]))
+            .unwrap();
+        assert_eq!(a.get("model"), "mlp2");
+        assert_eq!(a.get_usize("workers").unwrap(), 10);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["cfg.json"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&argv(&["--model", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = cmd().parse(&argv(&["--model", "x", "--workers", "many"])).unwrap();
+        assert!(a.get_usize("workers").is_err());
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--workers"));
+        assert!(u.contains("required"));
+        assert!(u.contains("<config>"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal leveled logger (env-controlled, thread-safe).
+//!
+//! `DYBW_LOG=debug|info|warn|error` (default `info`). Timestamps are
+//! millis since process start — enough to correlate worker events in live
+//! mode without pulling in a clock formatting dependency.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialised
+
+fn start() -> Instant {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+pub fn init() {
+    let lvl = match std::env::var("DYBW_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    };
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+    start();
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    let cur = if cur == 255 {
+        init();
+        LEVEL.load(Ordering::Relaxed)
+    } else {
+        cur
+    };
+    l as u8 >= cur
+}
+
+pub fn log(l: Level, target: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let t = start().elapsed().as_millis();
+    let tag = match l {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:>8}ms {tag} {target}] {msg}");
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            $crate::util::log::log($crate::util::log::Level::Debug, $target, &format!($($arg)*))
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            $crate::util::log::log($crate::util::log::Level::Info, $target, &format!($($arg)*))
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Warn) {
+            $crate::util::log::log($crate::util::log::Level::Warn, $target, &format!($($arg)*))
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,18 @@
+//! Self-contained utility substrates.
+//!
+//! The offline vendor set ships only `xla` + `anyhow`, so the library
+//! carries its own implementations of what would normally be crates:
+//!
+//! - [`rng`] — xoshiro256++ PRNG + sampling distributions (→ `rand`)
+//! - [`json`] — RFC 8259 subset parser/writer (→ `serde_json`)
+//! - [`cli`] — declarative argument parser (→ `clap`)
+//! - [`log`] — leveled logger (→ `env_logger`)
+//! - [`pool`] — fixed worker thread pool (→ `rayon`/`tokio` tasks)
+//! - [`vecmath`] — flat-f32-vector kernels for the consensus hot path
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod rng;
+pub mod vecmath;

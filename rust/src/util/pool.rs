@@ -1,0 +1,120 @@
+//! Fixed-size worker thread pool (no `tokio`/`rayon` in the vendor set).
+//!
+//! Used by the live-mode coordinator to host one OS thread per training
+//! worker and by the evaluation path to parallelise batch scoring. Jobs
+//! are boxed closures pushed through an mpsc channel guarded by a mutex on
+//! the receiving side (classic shared-queue pool).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("dybw-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped -> shut down
+                        }
+                    })
+                    .expect("spawn pool thread")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), handles }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool thread died");
+    }
+
+    /// Run `f(i)` for i in 0..n across the pool and wait for all results.
+    pub fn scatter_gather<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx) = channel::<(usize, T)>();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let _ = tx.send((i, f(i)));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            out[i] = Some(v);
+        }
+        out.into_iter().map(|v| v.expect("worker panicked")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scatter_gather_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.scatter_gather(20, |i| i * i);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_threads() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        drop(pool); // must not hang or panic
+    }
+}

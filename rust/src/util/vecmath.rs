@@ -1,0 +1,179 @@
+//! Flat-vector math for the consensus hot path.
+//!
+//! Parameter vectors are `Vec<f32>` (the consensus update eq. (6) averages
+//! flat vectors), so these kernels are THE Layer-3 hot path: every worker
+//! runs `weighted_sum_into` once per iteration over P floats. Written as
+//! chunked loops the autovectoriser turns into AVX; no allocation inside
+//! any of them.
+
+/// y += a * x
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// y = a * y
+#[inline]
+pub fn scale(y: &mut [f32], a: f32) {
+    for yi in y.iter_mut() {
+        *yi *= a;
+    }
+}
+
+/// out = sum_i coeffs[i] * xs[i], written in-place into `out`.
+///
+/// This is the consensus mixing kernel (eq. 6): `out` is worker j's next
+/// parameter vector, `xs` are the locally-updated vectors of S_j(k) ∪ {j},
+/// `coeffs` the Metropolis weights. Processes the accumulator in L2-sized
+/// blocks so every source vector streams through cache once.
+pub fn weighted_sum_into(out: &mut [f32], xs: &[&[f32]], coeffs: &[f32]) {
+    assert_eq!(xs.len(), coeffs.len());
+    assert!(!xs.is_empty(), "weighted_sum_into needs >= 1 source");
+    for x in xs {
+        assert_eq!(x.len(), out.len());
+    }
+    const BLOCK: usize = 8192;
+    let n = out.len();
+    let mut start = 0;
+    while start < n {
+        let end = (start + BLOCK).min(n);
+        let ob = &mut out[start..end];
+        // first source initialises the block
+        let x0 = &xs[0][start..end];
+        let c0 = coeffs[0];
+        for (o, x) in ob.iter_mut().zip(x0) {
+            *o = c0 * *x;
+        }
+        for (x, &c) in xs.iter().zip(coeffs.iter()).skip(1) {
+            let xb = &x[start..end];
+            for (o, xv) in ob.iter_mut().zip(xb) {
+                *o += c * *xv;
+            }
+        }
+        start = end;
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+#[inline]
+pub fn norm2(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Euclidean distance ||a - b||.
+pub fn dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Max |a_i - b_i|.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Mean of several equal-length vectors.
+pub fn mean_of(xs: &[&[f32]]) -> Vec<f32> {
+    assert!(!xs.is_empty());
+    let mut out = vec![0.0f32; xs[0].len()];
+    let c = 1.0 / xs.len() as f32;
+    let coeffs = vec![c; xs.len()];
+    weighted_sum_into(&mut out, xs, &coeffs);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0, 30.0]);
+        assert_eq!(y, vec![21.0, 42.0, 63.0]);
+    }
+
+    #[test]
+    fn weighted_sum_matches_naive() {
+        let a: Vec<f32> = (0..10000).map(|i| i as f32 * 0.01).collect();
+        let b: Vec<f32> = (0..10000).map(|i| (i as f32).sin()).collect();
+        let c: Vec<f32> = (0..10000).map(|i| 1.0 / (1.0 + i as f32)).collect();
+        let mut out = vec![0.0; 10000];
+        weighted_sum_into(&mut out, &[&a, &b, &c], &[0.2, 0.3, 0.5]);
+        for i in [0usize, 1, 8191, 8192, 9999] {
+            let want = 0.2 * a[i] + 0.3 * b[i] + 0.5 * c[i];
+            assert!((out[i] - want).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn weighted_sum_single_source_is_scale() {
+        let a = vec![2.0f32; 100];
+        let mut out = vec![9.0; 100];
+        weighted_sum_into(&mut out, &[&a], &[0.5]);
+        assert!(out.iter().all(|&v| (v - 1.0).abs() < 1e-7));
+    }
+
+    #[test]
+    fn convex_combination_preserves_constant() {
+        // Mixing identical constant vectors with weights summing to 1 is a
+        // fixed point — the consensus invariant.
+        let v = vec![3.25f32; 5000];
+        let mut out = vec![0.0; 5000];
+        weighted_sum_into(&mut out, &[&v, &v, &v], &[0.3, 0.45, 0.25]);
+        for &o in &out {
+            assert!((o - 3.25).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dist_symmetric_zero_on_self() {
+        let a = vec![1.0f32, -2.0, 3.0];
+        let b = vec![0.0f32, 1.0, 1.0];
+        assert_eq!(dist(&a, &a), 0.0);
+        assert!((dist(&a, &b) - dist(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let a = vec![1.0f32, 3.0];
+        let b = vec![3.0f32, 5.0];
+        assert_eq!(mean_of(&[&a, &b]), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn weighted_sum_len_mismatch_panics() {
+        let a = vec![1.0f32; 4];
+        let mut out = vec![0.0f32; 5];
+        weighted_sum_into(&mut out, &[&a], &[1.0]);
+    }
+}

@@ -1,0 +1,220 @@
+//! Property-based tests over the coordinator's invariants.
+//!
+//! No proptest crate offline, so properties are checked over seeded
+//! random-case sweeps (200+ cases each) with the failing seed printed —
+//! the shrinking story is "rerun with the printed seed".
+//!
+//! Invariants covered:
+//! 1. Metropolis P(k) is doubly stochastic for EVERY graph × participation
+//!    pattern (Assumption 1).
+//! 2. Mixing preserves the network average exactly (the conservation the
+//!    convergence proof rides on).
+//! 3. DTUR epochs always establish all of P within d iterations
+//!    (Assumption 2 with B = d).
+//! 4. DTUR's θ(k) ≤ max_j t_j(k) — Corollary 4's pathwise dominance.
+//! 5. Partitioners cover every example exactly once.
+//! 6. The connecting path P spans all nodes with exactly N-1 in-graph
+//!    edges, for every connected graph.
+//! 7. Repeated partial-participation mixing still contracts disagreement
+//!    when every epoch's union graph is connected.
+
+use dybw::consensus::mixing::ParamBuffers;
+use dybw::consensus::ConsensusMatrix;
+use dybw::coordinator::dtur::Dtur;
+use dybw::data::partition::{split, Partition};
+use dybw::data::synthetic::{gaussian_mixture, MixtureSpec};
+use dybw::graph::{paths, topology};
+use dybw::straggler::{Dist, StragglerModel};
+use dybw::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng) -> dybw::graph::Graph {
+    let n = 2 + rng.below(14);
+    let p = rng.uniform_in(0.15, 0.8);
+    topology::random_connected(n, p, rng)
+}
+
+#[test]
+fn prop_metropolis_doubly_stochastic() {
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_graph(&mut rng);
+        let active: Vec<bool> = (0..g.n()).map(|_| rng.uniform() < rng.uniform()).collect();
+        let p = ConsensusMatrix::metropolis(&g, &active);
+        p.check_doubly_stochastic(1e-10)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // beta in (0, 1]
+        let beta = p.min_positive();
+        assert!(beta > 0.0 && beta <= 1.0, "seed {seed}: beta={beta}");
+    }
+}
+
+#[test]
+fn prop_mixing_preserves_average() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let g = random_graph(&mut rng);
+        let n = g.n();
+        let dim = 1 + rng.below(300);
+        let init: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut bufs = ParamBuffers::from_initial(init);
+        let avg0 = bufs.average();
+        for _ in 0..15 {
+            let active: Vec<bool> = (0..n).map(|_| rng.uniform() < 0.6).collect();
+            bufs.mix(&ConsensusMatrix::metropolis(&g, &active));
+        }
+        let avg1 = bufs.average();
+        for (a, b) in avg0.iter().zip(&avg1) {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "seed {seed}: average drifted {a} -> {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_dtur_epoch_covers_path() {
+    for seed in 0..150u64 {
+        let mut rng = Rng::new(2000 + seed);
+        let g = random_graph(&mut rng);
+        let mut dtur = Dtur::new(&g);
+        let d = dtur.d();
+        let model = StragglerModel::homogeneous(
+            g.n(),
+            Dist::ShiftedExp {
+                base: rng.uniform_in(0.01, 0.1),
+                rate: rng.uniform_in(5.0, 40.0),
+            },
+        );
+        // run 3 epochs; within each, every link must establish
+        for _epoch in 0..3 {
+            let mut covered = vec![false; d];
+            for _ in 0..d {
+                let t = model.sample_iteration(&mut rng);
+                let dec = dtur.step(&t);
+                for idx in &dec.established_now {
+                    covered[*idx] = true;
+                }
+                if dec.epoch_pos == 0 {
+                    break;
+                }
+            }
+            assert!(
+                covered.iter().all(|&c| c),
+                "seed {seed}: epoch ended with uncovered links {covered:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_dtur_theta_dominated_by_max() {
+    for seed in 0..150u64 {
+        let mut rng = Rng::new(3000 + seed);
+        let g = random_graph(&mut rng);
+        let mut dtur = Dtur::new(&g);
+        for _ in 0..20 {
+            let t: Vec<f64> = (0..g.n()).map(|_| rng.uniform_in(0.01, 2.0)).collect();
+            let tmax = t.iter().copied().fold(0.0, f64::max);
+            let dec = dtur.step(&t);
+            assert!(
+                dec.theta <= tmax + 1e-12,
+                "seed {seed}: theta {} > max {}",
+                dec.theta,
+                tmax
+            );
+            // the triggering link's endpoints are active
+            assert!(dec.active.iter().any(|&a| a), "seed {seed}: nobody active");
+        }
+    }
+}
+
+#[test]
+fn prop_partition_exact_cover() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(4000 + seed);
+        let n = 200 + rng.below(2000);
+        let workers = 2 + rng.below(9);
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(6, n), &mut rng);
+        for how in [
+            Partition::Iid,
+            Partition::LabelShards,
+            Partition::Dirichlet { alpha: 0.5 },
+        ] {
+            let parts = split(&data, workers, how, &mut rng);
+            let total: usize = parts.iter().map(|p| p.n()).sum();
+            assert_eq!(total, n, "seed {seed} {how:?}: lost/duplicated rows");
+            // label-count checksum: each example exactly once
+            let mut want = data.class_counts();
+            for p in &parts {
+                for (w, c) in want.iter_mut().zip(p.class_counts()) {
+                    *w = w.wrapping_sub(c);
+                }
+            }
+            assert!(
+                want.iter().all(|&w| w == 0),
+                "seed {seed} {how:?}: class counts unbalanced"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_connecting_path_valid() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(5000 + seed);
+        let g = random_graph(&mut rng);
+        let p = paths::connecting_path(&g);
+        assert_eq!(p.len(), g.n() - 1, "seed {seed}");
+        assert!(paths::spans_all(g.n(), &p), "seed {seed}");
+        for &(a, b) in &p {
+            assert!(g.has_edge(a, b), "seed {seed}: ({a},{b}) not an edge");
+        }
+    }
+}
+
+#[test]
+fn prop_partial_participation_contracts_disagreement() {
+    // Over enough DTUR-driven epochs the union connectivity must shrink
+    // max_j ||w_j - avg|| (Corollary 1 pathway).
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(6000 + seed);
+        let g = random_graph(&mut rng);
+        let n = g.n();
+        let mut dtur = Dtur::new(&g);
+        let model = StragglerModel::homogeneous(n, Dist::Uniform { lo: 0.05, hi: 0.5 });
+        let init: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..32).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut bufs = ParamBuffers::from_initial(init);
+        let e0 = bufs.consensus_error();
+        let rounds = 20 * dtur.d().max(1);
+        for _ in 0..rounds {
+            let t = model.sample_iteration(&mut rng);
+            let dec = dtur.step(&t);
+            bufs.mix(&ConsensusMatrix::metropolis(&g, &dec.active));
+        }
+        let e1 = bufs.consensus_error();
+        assert!(
+            e1 < e0 * 0.5,
+            "seed {seed}: disagreement {e0} -> {e1} after {rounds} rounds (n={n})"
+        );
+    }
+}
+
+#[test]
+fn prop_straggler_samples_positive_finite() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(7000 + seed);
+        let n = 2 + rng.below(12);
+        let mut model = StragglerModel::paper_default(n, &mut rng);
+        model.transient_factor = rng.uniform_in(1.0, 20.0);
+        for _ in 0..50 {
+            for t in model.sample_iteration(&mut rng) {
+                assert!(t.is_finite() && t > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Integration tests: PJRT artifact path vs the native oracle.
+//!
+//! These are the cross-layer correctness signal: the HLO produced by
+//! JAX+Pallas (Layers 1-2), compiled and executed through the Rust PJRT
+//! runtime (Layer 3), must agree numerically with the hand-written native
+//! engine on identical inputs.
+//!
+//! Requires `make artifacts`; every test skips (with a notice) otherwise.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use dybw::data::batch::BatchSampler;
+use dybw::data::synthetic::{gaussian_mixture, markov_sequences, MixtureSpec};
+use dybw::engine::{AnyBatch, GradEngine, NativeEngine};
+use dybw::model::ModelMeta;
+use dybw::runtime::{shared_client, ArtifactSet, LoadedModel, PjrtEngine};
+use dybw::util::rng::Rng;
+
+fn artifacts() -> Option<ArtifactSet> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactSet::load(&dir) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn load(set: &ArtifactSet, name: &str) -> LoadedModel {
+    let art = set.get(name).unwrap_or_else(|| panic!("no artifact {name}"));
+    LoadedModel::compile(art, shared_client().unwrap()).unwrap()
+}
+
+fn dense_batch(meta: &ModelMeta, seed: u64) -> AnyBatch {
+    let mut data = gaussian_mixture(
+        &MixtureSpec::mnist_like(meta.dim, meta.batch * 4),
+        &mut Rng::new(seed),
+    );
+    data.classes = meta.classes;
+    for y in data.y.iter_mut() {
+        *y %= meta.classes as u32;
+    }
+    AnyBatch::Dense(BatchSampler::new(seed + 1).sample(&data, meta.batch))
+}
+
+#[test]
+fn lrm_pjrt_matches_native() {
+    let Some(set) = artifacts() else { return };
+    let model = load(&set, "lrm_d8_c4_b16");
+    let meta = model.meta.clone();
+    let batch = dense_batch(&meta, 0);
+    let w = meta.init_params(&mut Rng::new(7));
+
+    let mut native = NativeEngine::new(meta.clone()).unwrap();
+    let mut g_native = vec![0.0f32; meta.param_count];
+    let loss_native = native.grad_into(&w, &batch, &mut g_native).unwrap();
+
+    let mut g_pjrt = vec![0.0f32; meta.param_count];
+    let loss_pjrt = model.grad_into(&w, &batch, &mut g_pjrt).unwrap();
+
+    assert!(
+        (loss_native - loss_pjrt).abs() < 1e-4,
+        "loss: native={loss_native} pjrt={loss_pjrt}"
+    );
+    for (i, (a, b)) in g_native.iter().zip(&g_pjrt).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-4 + 1e-3 * a.abs(),
+            "grad[{i}]: native={a} pjrt={b}"
+        );
+    }
+}
+
+#[test]
+fn lrm_pjrt_eval_matches_native() {
+    let Some(set) = artifacts() else { return };
+    let model = load(&set, "lrm_d8_c4_b16");
+    let meta = model.meta.clone();
+    let batch = dense_batch(&meta, 3);
+    let w = meta.init_params(&mut Rng::new(9));
+
+    let mut native = NativeEngine::new(meta.clone()).unwrap();
+    let (l_n, c_n) = native.eval(&w, &batch).unwrap();
+    let (l_p, c_p) = model.eval(&w, &batch).unwrap();
+    assert!((l_n - l_p).abs() < 1e-4, "loss {l_n} vs {l_p}");
+    assert_eq!(c_n, c_p, "correct count");
+}
+
+#[test]
+fn mlp2_pjrt_matches_native() {
+    let Some(set) = artifacts() else { return };
+    let model = load(&set, "mlp2_d64_h256_c10_b256");
+    let meta = model.meta.clone();
+    let batch = dense_batch(&meta, 5);
+    let w = meta.init_params(&mut Rng::new(11));
+
+    let mut native = NativeEngine::new(meta.clone()).unwrap();
+    let mut g_native = vec![0.0f32; meta.param_count];
+    let loss_native = native.grad_into(&w, &batch, &mut g_native).unwrap();
+
+    let mut g_pjrt = vec![0.0f32; meta.param_count];
+    let loss_pjrt = model.grad_into(&w, &batch, &mut g_pjrt).unwrap();
+
+    assert!(
+        (loss_native - loss_pjrt).abs() < 1e-3,
+        "loss: native={loss_native} pjrt={loss_pjrt}"
+    );
+    let mut max_rel = 0.0f32;
+    for (a, b) in g_native.iter().zip(&g_pjrt) {
+        let rel = (a - b).abs() / (1e-4 + a.abs().max(b.abs()));
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 0.02, "max relative grad deviation {max_rel}");
+}
+
+#[test]
+fn pjrt_engine_trains_lrm() {
+    // SGD through the PJRT engine alone must descend — proves the
+    // artifact is a *usable* training step, not just numerically close.
+    let Some(set) = artifacts() else { return };
+    let model = Rc::new(load(&set, "lrm_d8_c4_b16"));
+    let meta = model.meta.clone();
+    let mut eng = PjrtEngine::new(model);
+    assert_eq!(eng.backend(), "pjrt");
+
+    let mut data = gaussian_mixture(&MixtureSpec::mnist_like(8, 400), &mut Rng::new(13));
+    data.classes = 4;
+    for y in data.y.iter_mut() {
+        *y %= 4;
+    }
+    let mut sampler = BatchSampler::new(17);
+    let mut w = meta.init_params(&mut Rng::new(19));
+    let mut g = vec![0.0f32; meta.param_count];
+    let probe = AnyBatch::Dense(sampler.sample(&data, 16));
+    let l0 = eng.grad_into(&w, &probe, &mut g).unwrap();
+    for _ in 0..60 {
+        let b = AnyBatch::Dense(sampler.sample(&data, 16));
+        eng.grad_into(&w, &b, &mut g).unwrap();
+        for (wv, gv) in w.iter_mut().zip(&g) {
+            *wv -= 0.4 * gv;
+        }
+    }
+    let l1 = eng.grad_into(&w, &probe, &mut g).unwrap();
+    assert!(l1 < l0 * 0.8, "PJRT SGD failed to descend: {l0} -> {l1}");
+}
+
+#[test]
+fn transformer_artifact_executes_and_descends() {
+    let Some(set) = artifacts() else { return };
+    let model = load(&set, "tfm_v64_t32_d64_h4_l2_b16");
+    let meta = model.meta.clone();
+    let seqs = markov_sequences(meta.vocab, meta.seq, 200, &mut Rng::new(23));
+    let mut sampler = BatchSampler::new(29);
+    let mut w = meta.init_params(&mut Rng::new(31));
+    let mut g = vec![0.0f32; meta.param_count];
+
+    let probe = AnyBatch::Seq(sampler.sample_seq(&seqs, meta.batch));
+    let l0 = model.grad_into(&w, &probe, &mut g).unwrap();
+    assert!(
+        (l0 - (meta.vocab as f32).ln()).abs() < 1.0,
+        "initial LM loss should be near log(V): {l0}"
+    );
+    for _ in 0..12 {
+        let b = AnyBatch::Seq(sampler.sample_seq(&seqs, meta.batch));
+        model.grad_into(&w, &b, &mut g).unwrap();
+        for (wv, gv) in w.iter_mut().zip(&g) {
+            *wv -= 0.5 * gv;
+        }
+    }
+    let l1 = model.grad_into(&w, &probe, &mut g).unwrap();
+    assert!(l1 < l0, "transformer loss did not descend: {l0} -> {l1}");
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let Some(set) = artifacts() else { return };
+    let model = load(&set, "lrm_d8_c4_b16");
+    // wrong batch size
+    let wrong = dense_batch(&ModelMeta::lrm(8, 4, 32), 1);
+    let w = vec![0.0f32; model.meta.param_count];
+    let mut g = vec![0.0f32; model.meta.param_count];
+    assert!(model.grad_into(&w, &wrong, &mut g).is_err());
+    // wrong param length
+    let batch = dense_batch(&model.meta, 2);
+    let w_bad = vec![0.0f32; 7];
+    assert!(model.grad_into(&w_bad, &batch, &mut g).is_err());
+}
