@@ -227,6 +227,12 @@ fn grad_flops(meta: &ModelMeta) -> f64 {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn bench_pjrt_grad(_filter: &Option<String>) {
+    println!("(skipping grad/pjrt-*: built without --features pjrt)");
+}
+
+#[cfg(feature = "pjrt")]
 fn bench_pjrt_grad(filter: &Option<String>) {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let Ok(set) = dybw::runtime::ArtifactSet::load(&dir) else {

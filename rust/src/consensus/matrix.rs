@@ -164,4 +164,19 @@ mod tests {
         let l = lambda2(&p, 100);
         assert!((l - 1.0).abs() < 1e-9, "{l}");
     }
+
+    #[test]
+    fn spectral_gap_orders_standard_topologies() {
+        // Mixing-rate sanity at fixed N=16: complete mixes in one round
+        // (λ2 ≈ 0), the 4x4 grid/torus sits in between, and the ring is
+        // slowest (λ2 = 1/3 + 2/3·cos(π/8) ≈ 0.95) — the connectivity
+        // sensitivity behind Theorem 1's β^{NB} term.
+        let n = 16;
+        let l_ring = lambda2(&ConsensusMatrix::metropolis_full(&topology::ring(n)), 600);
+        let l_grid = lambda2(&ConsensusMatrix::metropolis_full(&topology::grid(n)), 600);
+        let l_full = lambda2(&ConsensusMatrix::metropolis_full(&topology::complete(n)), 600);
+        assert!(l_full < 0.2, "complete should mix near-instantly: {l_full}");
+        assert!(l_grid < l_ring, "grid {l_grid} should beat ring {l_ring}");
+        assert!((0.8..1.0).contains(&l_ring), "ring λ2 out of range: {l_ring}");
+    }
 }

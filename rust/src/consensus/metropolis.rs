@@ -209,4 +209,43 @@ mod tests {
         let p = ConsensusMatrix::metropolis(&g, &vec![false; 6]);
         assert_eq!(p, ConsensusMatrix::identity(6));
     }
+
+    #[test]
+    fn rows_sum_to_one_on_standard_topologies() {
+        for g in [
+            topology::ring(8),
+            topology::grid(9),
+            topology::complete(7),
+            topology::star(6),
+        ] {
+            let p = ConsensusMatrix::metropolis_full(&g);
+            p.check_doubly_stochastic(1e-12).unwrap();
+            for j in 0..g.n() {
+                let s: f64 = p.row(j).iter().map(|&(_, w)| w).sum();
+                assert!((s - 1.0).abs() < 1e-12, "row {j} sums to {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_on_standard_topologies_under_partial_participation() {
+        let mut rng = Rng::new(31);
+        for g in [topology::ring(10), topology::grid(12), topology::complete(6)] {
+            let n = g.n();
+            for _ in 0..8 {
+                let active: Vec<bool> = (0..n).map(|_| rng.uniform() < 0.7).collect();
+                let p = ConsensusMatrix::metropolis(&g, &active);
+                p.check_doubly_stochastic(1e-12).unwrap();
+                let d = p.to_dense();
+                for a in 0..n {
+                    for b in 0..n {
+                        assert!(
+                            (d[a][b] - d[b][a]).abs() < 1e-12,
+                            "P[{a}][{b}] != P[{b}][{a}]"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }

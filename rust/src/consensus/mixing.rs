@@ -213,6 +213,28 @@ mod tests {
     }
 
     #[test]
+    fn denser_topologies_contract_disagreement_faster() {
+        // Same initial disagreement, same number of rounds: the complete
+        // graph averages exactly in one round, the grid/torus beats the
+        // ring — consistent with the λ2 ordering asserted in matrix.rs.
+        let n = 16;
+        let rounds = 30;
+        let err_after = |g: &crate::graph::Graph| {
+            let p = ConsensusMatrix::metropolis_full(g);
+            let mut b = randomized(n, 64, 77);
+            for _ in 0..rounds {
+                b.mix(&p);
+            }
+            b.consensus_error()
+        };
+        let e_ring = err_after(&topology::ring(n));
+        let e_grid = err_after(&topology::grid(n));
+        let e_full = err_after(&topology::complete(n));
+        assert!(e_full < 1e-4, "complete graph should reach consensus: {e_full}");
+        assert!(e_grid < e_ring, "grid {e_grid} should beat ring {e_ring}");
+    }
+
+    #[test]
     fn compressed_mixing_still_contracts() {
         use crate::consensus::compress::{ErrorFeedback, TopK};
         let g = topology::random_connected(6, 0.5, &mut Rng::new(21));

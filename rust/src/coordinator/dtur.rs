@@ -244,6 +244,84 @@ mod tests {
     }
 
     #[test]
+    fn backup_count_stays_within_node_degree() {
+        // Algorithm 2 invariant: b_j(k) = |inactive neighbours of j| lies
+        // in [0, deg(j)], AND the mask it derives from is exactly the
+        // threshold rule (active ⇔ t_j ≤ θ), with every established
+        // P-link's endpoints active — so the backups can never be "all of
+        // N_j" on an iteration where j's link establishes.
+        let mut rng = Rng::new(77);
+        for seed in 0..20 {
+            let g = topology::random_connected(9, 0.35, &mut Rng::new(seed));
+            let mut dtur = Dtur::new(&g);
+            let model =
+                StragglerModel::homogeneous(9, Dist::ShiftedExp { base: 0.05, rate: 15.0 });
+            for _ in 0..30 {
+                let t = model.sample_iteration(&mut rng);
+                let dec = dtur.step(&t);
+                // the mask IS the threshold decision, never all-backup
+                for (j, &a) in dec.active.iter().enumerate() {
+                    assert_eq!(
+                        a,
+                        t[j] <= dec.theta,
+                        "seed {seed}: worker {j} mask disagrees with theta rule"
+                    );
+                }
+                for &idx in &dec.established_now {
+                    let (a, b) = dtur.path()[idx];
+                    assert!(
+                        dec.active[a] && dec.active[b],
+                        "seed {seed}: established link ({a},{b}) has a backup endpoint"
+                    );
+                }
+                for j in 0..g.n() {
+                    let b_j = g.neighbors(j).filter(|&i| !dec.active[i]).count();
+                    assert!(
+                        b_j <= g.degree(j),
+                        "seed {seed}: worker {j} backup count {b_j} > degree {}",
+                        g.degree(j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_monotone_in_observed_straggler_delay() {
+        // θ(k) = min over unestablished P-links of max(t_a, t_b) is
+        // monotone non-decreasing in every coordinate: inflating one
+        // worker's observed delay (same epoch state) can only raise the
+        // threshold, never lower it.
+        let g = topology::random_connected(8, 0.4, &mut Rng::new(3));
+        let warm = {
+            // advance into mid-epoch so some links are already established
+            let mut d = Dtur::new(&g);
+            let mut rng = Rng::new(4);
+            let model =
+                StragglerModel::homogeneous(8, Dist::Uniform { lo: 0.05, hi: 0.3 });
+            let t = model.sample_iteration(&mut rng);
+            d.step(&t);
+            d
+        };
+        let mut rng = Rng::new(5);
+        let base: Vec<f64> = (0..8).map(|_| rng.uniform_in(0.05, 0.4)).collect();
+        for w in 0..8 {
+            let mut prev_theta = 0.0;
+            for factor in [1.0, 2.0, 5.0, 20.0, 100.0] {
+                let mut t = base.clone();
+                t[w] *= factor;
+                let dec = warm.clone().step(&t);
+                assert!(
+                    dec.theta + 1e-12 >= prev_theta,
+                    "worker {w} x{factor}: theta {} < previous {prev_theta}",
+                    dec.theta
+                );
+                prev_theta = dec.theta;
+            }
+        }
+    }
+
+    #[test]
     fn at_least_one_new_link_per_iteration() {
         let mut rng = Rng::new(5);
         let g = topology::random_connected(10, 0.3, &mut Rng::new(42));

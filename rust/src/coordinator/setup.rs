@@ -6,6 +6,7 @@
 //! config-file format of `dybw train --config`).
 
 use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 use crate::coordinator::{Algorithm, SimTrainer, TrainConfig};
@@ -15,6 +16,7 @@ use crate::data::synthetic::{gaussian_mixture, markov_sequences, MixtureSpec};
 use crate::engine::{AnyBatch, BatchSource, DenseSource, GradEngine, NativeEngine, SeqSource};
 use crate::graph::topology::{self, Topology};
 use crate::model::{ModelKind, ModelMeta};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{shared_client, ArtifactSet, LoadedModel, PjrtEngine};
 use crate::straggler::{Dist, StragglerModel};
 use crate::util::json::Json;
@@ -106,9 +108,14 @@ impl Setup {
     /// reconstructed natively from the model name.
     pub fn resolve_meta(&self) -> anyhow::Result<ModelMeta> {
         match &self.backend {
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt { artifacts_dir } => {
                 let art = ArtifactSet::load_family(artifacts_dir, &self.model)?;
                 Ok(art.meta)
+            }
+            #[cfg(not(feature = "pjrt"))]
+            Backend::Pjrt { .. } => {
+                anyhow::bail!("backend 'pjrt' requires building with `--features pjrt`")
             }
             Backend::Native => parse_model_name(&self.model),
         }
@@ -117,10 +124,15 @@ impl Setup {
     fn build_engine(&self, meta: &ModelMeta) -> anyhow::Result<Box<dyn GradEngine>> {
         match &self.backend {
             Backend::Native => Ok(Box::new(NativeEngine::new(meta.clone())?)),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt { artifacts_dir } => {
                 let art = ArtifactSet::load_family(artifacts_dir, &self.model)?;
                 let model = LoadedModel::compile(&art, shared_client()?)?;
                 Ok(Box::new(PjrtEngine::new(Rc::new(model))))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            Backend::Pjrt { .. } => {
+                anyhow::bail!("backend 'pjrt' requires building with `--features pjrt`")
             }
         }
     }

@@ -12,9 +12,11 @@
 //!   matmul, fused bias+ReLU, fused softmax-xent) inside the Layer-2
 //!   models.
 //!
-//! Python never runs at training time: the [`runtime`] module loads the
-//! artifacts through the PJRT C API (`xla` crate) and the coordinator
-//! drives them from Rust.
+//! Python never runs at training time: the `runtime` module (behind the
+//! optional `pjrt` cargo feature) loads the artifacts through the PJRT C
+//! API (`xla` crate) and the coordinator drives them from Rust. The
+//! default build has no external dependencies and uses the pure-Rust
+//! native engines.
 
 pub mod consensus;
 pub mod coordinator;
@@ -24,6 +26,7 @@ pub mod experiments;
 pub mod graph;
 pub mod metrics;
 pub mod model;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod straggler;
 pub mod util;

@@ -16,7 +16,6 @@ use dybw::experiments;
 use dybw::graph::topology::{self, Topology};
 use dybw::metrics::export;
 use dybw::metrics::summary::Comparison;
-use dybw::runtime::ArtifactSet;
 use dybw::straggler::Dist;
 use dybw::util::cli::{Args, CliError, Command};
 use dybw::util::json::Json;
@@ -142,7 +141,16 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     let s = setup_from_args(&a)?;
     let out_dir = PathBuf::from(a.get("out-dir"));
 
-    println!("# dybw train: {} / {} / {} workers / {} backend", s.algo.name(), s.model, s.workers, match &s.backend { Backend::Native => "native", Backend::Pjrt { .. } => "pjrt" });
+    println!(
+        "# dybw train: {} / {} / {} workers / {} backend",
+        s.algo.name(),
+        s.model,
+        s.workers,
+        match &s.backend {
+            Backend::Native => "native",
+            Backend::Pjrt { .. } => "pjrt",
+        }
+    );
     let mut trainer = s.build_sim()?;
     trainer.on_iter = Some(Box::new(|r| {
         if r.k % 50 == 0 {
@@ -231,13 +239,14 @@ fn cmd_topology(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
     let cmd = Command::new("dybw artifacts", "list + validate AOT artifacts")
         .opt("dir", "artifacts", "artifacts directory")
         .flag("compile", "also compile each artifact on the PJRT client");
     let a = parse_or_exit(&cmd, argv)?;
     let dir = PathBuf::from(a.get("dir"));
-    let set = ArtifactSet::load(&dir)?;
+    let set = dybw::runtime::ArtifactSet::load(&dir)?;
     println!("{} artifact families in {}:", set.artifacts.len(), dir.display());
     for art in &set.artifacts {
         art.meta.validate()?;
@@ -257,6 +266,13 @@ fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
         println!();
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts(_argv: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "`dybw artifacts` needs the PJRT runtime — rebuild with `cargo build --features pjrt`"
+    )
 }
 
 fn cmd_analyze(argv: &[String]) -> anyhow::Result<()> {

@@ -167,7 +167,8 @@ mod tests {
     #[test]
     fn time_to_test_loss_uses_evals() {
         let h = fake_history();
-        assert_eq!(h.time_to_test_loss(0.5), Some(h.evals[0].clock).filter(|_| h.evals[0].test_loss <= 0.5).or(h.time_to_test_loss(0.5)));
+        // the first recorded eval (k=4, test_loss 0.4) already beats 0.5
+        assert_eq!(h.time_to_test_loss(0.5), Some(h.evals[0].clock));
         assert!(h.iters_to_test_loss(0.11).is_some());
         assert!(h.time_to_test_loss(1e-9).is_none());
     }

@@ -235,6 +235,60 @@ fn empty_or_tiny_configs_rejected() {
 }
 
 #[test]
+fn same_seed_is_bit_identical_across_all_algorithms() {
+    // Seeded-RNG determinism guarantee: a TrainConfig seed fully
+    // determines the run. Re-running the identical Setup must reproduce
+    // every duration, loss, and eval record BIT-identically — for
+    // cb-DyBW, cb-Full, static-backup, and both PS baselines. (All
+    // randomness flows through util::rng::Rng; containers are BTree-based;
+    // the GEMM thread partition is fixed per process.)
+    for algo in [
+        Algorithm::CbDybw,
+        Algorithm::CbFull,
+        Algorithm::CbStaticBackup { b: 2 },
+        Algorithm::PsSync,
+        Algorithm::PsBackup { b: 1 },
+    ] {
+        let run = || {
+            let mut s = quick_setup(101);
+            s.algo = algo;
+            s.train.iters = 30;
+            s.build_sim().unwrap().run().unwrap()
+        };
+        let h1 = run();
+        let h2 = run();
+        assert_eq!(h1.iters.len(), h2.iters.len(), "{algo:?}");
+        for (a, b) in h1.iters.iter().zip(&h2.iters) {
+            assert_eq!(
+                a.duration.to_bits(),
+                b.duration.to_bits(),
+                "{algo:?} k={}: duration drifted",
+                a.k
+            );
+            assert_eq!(a.clock.to_bits(), b.clock.to_bits(), "{algo:?} k={}", a.k);
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{algo:?} k={}: loss drifted",
+                a.k
+            );
+            assert_eq!(a.active, b.active, "{algo:?} k={}", a.k);
+            assert_eq!(a.theta.to_bits(), b.theta.to_bits(), "{algo:?} k={}", a.k);
+        }
+        assert_eq!(h1.evals.len(), h2.evals.len(), "{algo:?}");
+        for (a, b) in h1.evals.iter().zip(&h2.evals) {
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{algo:?}");
+            assert_eq!(a.test_error.to_bits(), b.test_error.to_bits(), "{algo:?}");
+            assert_eq!(
+                a.consensus_error.to_bits(),
+                b.consensus_error.to_bits(),
+                "{algo:?}"
+            );
+        }
+    }
+}
+
+#[test]
 fn lr_schedule_matches_paper_form() {
     let cfg = TrainConfig {
         lr0: 0.2,

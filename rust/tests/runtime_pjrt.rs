@@ -6,6 +6,10 @@
 //! engine on identical inputs.
 //!
 //! Requires `make artifacts`; every test skips (with a notice) otherwise.
+//! The whole file is compile-gated on the `pjrt` cargo feature — the
+//! default (offline, dependency-free) build does not touch PJRT.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 use std::rc::Rc;

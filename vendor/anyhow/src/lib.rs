@@ -1,0 +1,154 @@
+//! Offline stand-in for the `anyhow` crate (the subset `dybw` uses).
+//!
+//! The repository builds with zero external dependencies; this vendored
+//! workspace member provides the same surface the real crate would:
+//!
+//! - [`Error`] — an opaque, `Send + Sync` error value with a message
+//! - [`Result`] — `std::result::Result` defaulted to [`Error`]
+//! - [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros
+//! - a blanket `From<E: std::error::Error>` so `?` converts freely
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket `From` impl
+//! coherent. Swap this path dependency for crates.io `anyhow` at any time;
+//! no call site changes.
+
+use std::fmt;
+
+/// Opaque error: a rendered message (context is folded in eagerly).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            msg: msg.to_string(),
+        }
+    }
+
+    /// Prefix the error with higher-level context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// The coherence trick the real anyhow uses: `Error` itself does not
+// implement `std::error::Error`, so this blanket impl cannot overlap the
+// reflexive `From<Error> for Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(
+                "condition failed: `{}`",
+                stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/real/path/zzz")?;
+        Ok(())
+    }
+
+    fn guarded(x: usize) -> Result<usize> {
+        ensure!(x < 10, "x too large: {x}");
+        ensure!(x != 7);
+        if x == 3 {
+            bail!("three is right out");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        let v = 3;
+        assert_eq!(anyhow!("v = {v}").to_string(), "v = 3");
+        assert_eq!(anyhow!("v = {}", v + 1).to_string(), "v = 4");
+        let from_display = anyhow!(String::from("boxed"));
+        assert_eq!(from_display.to_string(), "boxed");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(guarded(2).unwrap(), 2);
+        assert!(guarded(11).unwrap_err().to_string().contains("too large"));
+        assert!(guarded(7).unwrap_err().to_string().contains("x != 7"));
+        assert!(guarded(3).unwrap_err().to_string().contains("three"));
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}

@@ -1,0 +1,125 @@
+//! Offline API stub of the `xla` crate (PJRT bindings).
+//!
+//! The `dybw` crate's `runtime` module is written against the real
+//! `xla` crate (PJRT C API bindings over XLA). That crate needs a
+//! multi-gigabyte native `xla_extension` download, which this offline
+//! environment cannot provide. This stub mirrors the *exact* API surface
+//! `dybw::runtime` consumes so that `cargo build --features pjrt` still
+//! type-checks the whole runtime path; every constructor returns a clear
+//! runtime error instead of touching PJRT.
+//!
+//! To run real artifacts, replace the `vendor/xla` path dependency with
+//! the actual `xla` crate — no `dybw` source changes are needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (implements `std::error::Error`, so
+/// `?` converts into `anyhow::Error` at the call sites).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "PJRT unavailable in this build: {what} (offline `xla` stub; \
+         point the workspace `xla` dependency at a real xla-rs checkout)"
+    ))
+}
+
+/// Element dtypes the runtime uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// PJRT client handle (Rc-backed and thread-local in the real crate).
+#[derive(Debug, Clone)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Host-side literal (dense tensor + shape).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple2"))
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(unavailable("Literal::get_first_element"))
+    }
+
+    pub fn copy_raw_to<T>(&self, _out: &mut [T]) -> Result<()> {
+        Err(unavailable("Literal::copy_raw_to"))
+    }
+}
+
+/// Device buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable pinned to a client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Parsed HLO module (text form; see `dybw::runtime` docs for why text).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper accepted by `PjRtClient::compile`.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
