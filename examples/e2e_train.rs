@@ -3,8 +3,8 @@
 //! This is the system proof: Pallas kernels (L1) inside JAX models (L2),
 //! AOT-lowered to HLO, loaded and executed by the Rust PJRT runtime, and
 //! driven by the *live* coordinator — one OS thread per worker, real
-//! wall-clock stragglers, real termination commands, gradients served by
-//! the compute-server thread. No Python anywhere at runtime.
+//! wall-clock stragglers, real termination commands, gradients served in
+//! parallel by the multi-lane engine pool. No Python anywhere at runtime.
 //!
 //! Default workload: the paper's Table-1 2NN (256-256-10) on synthetic
 //! MNIST-like data, a few hundred steps, loss curve logged (recorded in
@@ -89,15 +89,17 @@ fn main() -> anyhow::Result<()> {
         graph.is_connected()
     );
 
-    // ---- compute server: owns the PJRT client + compiled artifacts ------
+    // ---- compute server: one PJRT engine per lane, compiled on-lane ------
+    let lanes = setup.resolve_threads();
     let art_dir = artifacts_dir.clone();
     let name = model_name.clone();
-    let (_server, client) = ComputeServer::spawn(move || {
+    let factory: dybw::engine::EngineFactory = std::sync::Arc::new(move || {
         let art = ArtifactSet::load_family(&art_dir, &name)?;
         let model = LoadedModel::compile(&art, shared_client()?)?;
         Ok(Box::new(PjrtEngine::new(Rc::new(model))) as _)
-    })?;
-    println!("PJRT artifacts compiled; compute server up");
+    });
+    let (_server, client) = ComputeServer::spawn(factory, lanes)?;
+    println!("PJRT artifacts compiled; compute server up ({lanes} lanes)");
 
     // ---- straggler model: heterogeneous + forced straggler ----------------
     let straggler = StragglerModel {

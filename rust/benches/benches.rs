@@ -10,9 +10,11 @@
 //!   dtur/step      — Algorithm 2 threshold decision
 //!   grad/native-*  — native engine gradient (LRM / 2NN)
 //!   grad/pjrt-*    — PJRT artifact gradient (when artifacts built)
+//!   pool/*         — 16-worker gradient fan-out vs engine-pool size
 //!
 //! end-to-end (figure-scale workloads, small iteration counts):
 //!   iter/cb-dybw, iter/cb-full — one full training iteration
+//!   sim/mlp-16w-t* — sim-driver wall clock, sequential vs pooled
 //!
 //! Filter with `cargo bench -- <substring>`.
 
@@ -25,7 +27,7 @@ use dybw::coordinator::setup::{Backend, Setup};
 use dybw::coordinator::Algorithm;
 use dybw::data::batch::BatchSampler;
 use dybw::data::synthetic::{gaussian_mixture, MixtureSpec};
-use dybw::engine::{AnyBatch, GradEngine, NativeEngine};
+use dybw::engine::{native_factory, AnyBatch, EnginePool, GradEngine, NativeEngine};
 use dybw::graph::topology;
 use dybw::model::ModelMeta;
 use dybw::straggler::{Dist, StragglerModel};
@@ -108,7 +110,50 @@ fn main() {
     bench_dtur(&filter);
     bench_native_grad(&filter);
     bench_pjrt_grad(&filter);
+    bench_pool(&filter);
     bench_end_to_end(&filter);
+}
+
+/// The refactor's headline: one iteration's 16 worker gradients, fanned
+/// over pools of increasing size. t1 is the pre-refactor baseline — one
+/// gradient at a time, with full intra-op GEMM threading (a T-lane pool
+/// caps each lane's kernels at cores/T, so parallelism composes instead
+/// of oversubscribing).
+fn bench_pool(filter: &Option<String>) {
+    let meta = ModelMeta::mlp2(64, 256, 10, 256);
+    let workers = 16usize;
+    let mut rng = Rng::new(6);
+    let mut data = gaussian_mixture(&MixtureSpec::mnist_like(meta.dim, meta.batch * 4), &mut rng);
+    data.classes = meta.classes;
+    for y in data.y.iter_mut() {
+        *y %= meta.classes as u32;
+    }
+    let mut sampler = BatchSampler::new(7);
+    let batches: Vec<AnyBatch> = (0..workers)
+        .map(|_| AnyBatch::Dense(sampler.sample(&data, meta.batch)))
+        .collect();
+    let w = meta.init_params(&mut rng);
+    let mut t1_mean = None;
+    for threads in [1usize, 2, 4] {
+        let name = format!("pool/grad16-mlp-t{threads}");
+        if !wants(filter, &name) {
+            continue;
+        }
+        let pool = EnginePool::new(native_factory(meta.clone()), threads).unwrap();
+        let ws: Vec<&[f32]> = (0..workers).map(|_| w.as_slice()).collect();
+        let mut outs = vec![vec![0.0f32; meta.param_count]; workers];
+        let mut r = bench(&name, 10, || {
+            std::hint::black_box(pool.grad_many(&ws, &batches, &mut outs).unwrap());
+        });
+        if threads == 1 {
+            t1_mean = Some(r.mean_ns);
+        }
+        r.throughput = match t1_mean {
+            Some(base) if threads > 1 => Some(format!("{:.2}x vs t1", base / r.mean_ns)),
+            _ => Some(format!("{:.1} grad/s", workers as f64 * 1e9 / r.mean_ns)),
+        };
+        print_result(&r);
+    }
 }
 
 fn bench_mixing(filter: &Option<String>) {
@@ -269,6 +314,7 @@ fn bench_end_to_end(filter: &Option<String>) {
         let mut s = Setup::default();
         s.algo = algo;
         s.backend = Backend::Native;
+        s.threads = 1; // hot-path baseline: one gradient at a time
         s.train_n = 6_000;
         s.test_n = 1_024;
         s.train.iters = 10;
@@ -285,6 +331,44 @@ fn bench_end_to_end(filter: &Option<String>) {
             name,
             fmt_ns(r.mean_ns),
             fmt_ns(r.mean_ns / 10.0)
+        );
+    }
+
+    // sim-driver wall clock on the acceptance workload: 16 workers on the
+    // 2NN, sequential (t1) vs pooled (t4).
+    let mut base_mean = None;
+    for threads in [1usize, 4] {
+        let name = format!("sim/mlp-16w-t{threads}");
+        if !wants(filter, &name) {
+            continue;
+        }
+        let mut s = Setup::default();
+        s.algo = Algorithm::CbDybw;
+        s.backend = Backend::Native;
+        s.workers = 16;
+        s.threads = threads;
+        s.model = "mlp2_d64_h256_c10_b256".into();
+        s.train_n = 8_192;
+        s.test_n = 512;
+        s.train.iters = 4;
+        s.train.eval_every = 0;
+        let mut trainer = s.build_sim().unwrap();
+        let r = bench(&name, 5, || {
+            let h = trainer.run().unwrap();
+            std::hint::black_box(h.iters.len());
+        });
+        if threads == 1 {
+            base_mean = Some(r.mean_ns);
+        }
+        println!(
+            "{:<34} mean {:>10}{}",
+            name,
+            fmt_ns(r.mean_ns),
+            match base_mean {
+                Some(base) if threads > 1 =>
+                    format!("  [{:.2}x vs sequential]", base / r.mean_ns),
+                _ => String::new(),
+            }
         );
     }
 }

@@ -1,7 +1,9 @@
 //! Live driver: real threads, real clocks, real termination commands.
 //!
-//! One OS thread per worker; gradient compute goes through the shared
-//! [`ComputeServer`](crate::engine::server); straggler slowness is
+//! One OS thread per worker; gradient compute goes through the multi-lane
+//! [`ComputeServer`](crate::engine::server) (a facade over the per-worker
+//! [`EnginePool`](crate::engine::EnginePool), so workers really compute
+//! in parallel and no parameter vector is cloned); straggler slowness is
 //! injected as interruptible sleep on top of the real compute time. The
 //! leader (main thread) plays the paper's distributed protocol verbatim:
 //!
@@ -61,6 +63,7 @@ struct WorkerChans {
 /// parameters w̃_j(k) (post eq. 5), then its post-mix w_j(k).
 type Board = Arc<Vec<Mutex<Vec<f32>>>>;
 
+#[derive(Debug)]
 pub struct LiveOutcome {
     pub history: RunHistory,
     /// Real seconds the whole run took (incl. eval overhead).
@@ -280,13 +283,16 @@ fn worker_loop(
 ) {
     let mut w: Vec<f32> = board[j].lock().unwrap().clone();
     let mut wtilde: Vec<f32> = w.clone();
+    // Leased gradient buffer: written in place by the engine pool every
+    // iteration, never reallocated.
+    let mut grad: Vec<f32> = vec![0.0; compute.param_count()];
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
             Cmd::Stop => break,
             Cmd::Start { k, delay_s } => {
                 let start = Instant::now();
                 let batch = source.next_train(cfg.batch_size);
-                let (loss, grad) = match compute.grad(w.clone(), batch) {
+                let loss = match compute.grad_into(&w, &batch, &mut grad) {
                     Ok(r) => r,
                     Err(e) => {
                         crate::util::log::log(
@@ -369,7 +375,7 @@ fn eval_on_board(
     let mut correct = 0usize;
     let mut total = 0usize;
     for b in eval_batches {
-        let (l, c) = compute.eval(avg.clone(), b.clone())?;
+        let (l, c) = compute.eval(&avg, b)?;
         let r = b.rows();
         loss_sum += l as f64 * r as f64;
         correct += c;
@@ -392,7 +398,7 @@ mod tests {
     use crate::data::partition::{split, Partition};
     use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
     use crate::engine::server::ComputeServer;
-    use crate::engine::{DenseSource, NativeEngine};
+    use crate::engine::{native_factory, DenseSource, EngineFactory, GradEngine, NativeEngine};
     use crate::graph::topology;
     use crate::model::ModelMeta;
     use crate::straggler::Dist;
@@ -417,9 +423,7 @@ mod tests {
         .into_iter()
         .map(AnyBatch::Dense)
         .collect();
-        let m2 = meta.clone();
-        let (_srv, client) =
-            ComputeServer::spawn(move || Ok(Box::new(NativeEngine::new(m2)?) as _)).unwrap();
+        let (_srv, client) = ComputeServer::spawn(native_factory(meta.clone()), 2).unwrap();
         let straggler = StragglerModel {
             base: Dist::Uniform { lo: 0.02, hi: 0.05 },
             worker_scale: vec![1.0; n],
@@ -471,5 +475,98 @@ mod tests {
         // ensure Setup and live driver agree on types (smoke)
         let s = Setup::default();
         let _ = s.to_json();
+    }
+
+    /// Engine that works for the first `fail_after` gradient calls, then
+    /// errors — simulating a device falling over mid-run.
+    struct FlakyEngine {
+        inner: NativeEngine,
+        calls: Arc<AtomicUsize>,
+        fail_after: usize,
+    }
+
+    impl GradEngine for FlakyEngine {
+        fn param_count(&self) -> usize {
+            self.inner.param_count()
+        }
+
+        fn grad_into(
+            &mut self,
+            w: &[f32],
+            batch: &crate::engine::AnyBatch,
+            grad_out: &mut [f32],
+        ) -> anyhow::Result<f32> {
+            let c = self.calls.fetch_add(1, Ordering::SeqCst);
+            anyhow::ensure!(c < self.fail_after, "injected engine failure (call {c})");
+            self.inner.grad_into(w, batch, grad_out)
+        }
+
+        fn eval(
+            &mut self,
+            w: &[f32],
+            batch: &crate::engine::AnyBatch,
+        ) -> anyhow::Result<(f32, usize)> {
+            self.inner.eval(w, batch)
+        }
+
+        fn backend(&self) -> &'static str {
+            "flaky"
+        }
+    }
+
+    #[test]
+    fn engine_failure_mid_iteration_errors_instead_of_hanging() {
+        let n = 4;
+        let mut rng = Rng::new(8);
+        let g = topology::random_connected(n, 0.6, &mut rng);
+        let meta = ModelMeta::lrm(8, 10, 32);
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(8, 1500), &mut rng);
+        let (train, test) = data.split(1280);
+        let shards = split(&train, n, Partition::Iid, &mut rng);
+        let sources: Vec<Box<dyn BatchSource>> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(j, s)| Box::new(DenseSource::new(s, 70 + j as u64)) as Box<dyn BatchSource>)
+            .collect();
+        let eval: Vec<AnyBatch> =
+            BatchSampler::full_batches(&test.subset(&(0..64).collect::<Vec<_>>()), 32)
+                .into_iter()
+                .map(AnyBatch::Dense)
+                .collect();
+        // Shared call counter across lanes: the failure lands partway
+        // through iteration 3 of 6, exercising the `failed` DoneMsg branch.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let meta_f = meta.clone();
+        let factory: EngineFactory = Arc::new(move || {
+            Ok(Box::new(FlakyEngine {
+                inner: NativeEngine::new(meta_f.clone())?,
+                calls: Arc::clone(&calls),
+                fail_after: n * 2 + 1,
+            }) as Box<dyn GradEngine>)
+        });
+        let (_srv, client) = ComputeServer::spawn(factory, 2).unwrap();
+        let straggler = StragglerModel {
+            base: Dist::Uniform { lo: 0.01, hi: 0.02 },
+            worker_scale: vec![1.0; n],
+            persistent: vec![1.0; n],
+            transient_prob: 0.0,
+            transient_factor: 1.0,
+            force_one_straggler: false,
+            outages: Vec::new(),
+        };
+        let cfg = TrainConfig {
+            iters: 6,
+            batch_size: 32,
+            eval_every: 0,
+            seed: 9,
+            ..Default::default()
+        };
+        let init = meta.init_params(&mut rng);
+        let err = run_live(g, Algorithm::CbFull, cfg, straggler, client, sources, eval, init, 1.0)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("compute failed"),
+            "expected a compute-failure error, got: {err}"
+        );
     }
 }

@@ -4,11 +4,13 @@
 //! - [`algorithm`] — cb-DyBW (Algorithm 1), the cb-Full baseline, and the
 //!   static-backup / parameter-server comparison points.
 //! - [`sim`] — the deterministic discrete-event driver: real gradients
-//!   (native or PJRT engines), virtual compute times from the straggler
-//!   model. Regenerates every figure reproducibly from one seed.
+//!   fanned out over the per-worker engine pool (native or PJRT), virtual
+//!   compute times from the straggler model. Regenerates every figure
+//!   reproducibly from one seed, bit-identically at any pool size.
 //! - [`live`] — the wall-clock driver: one OS thread per worker, real
-//!   sleeps for stragglers, gradient execution through a compute-server
-//!   thread. Used by the e2e example to prove the stack composes.
+//!   sleeps for stragglers, gradients computed in parallel through the
+//!   multi-lane compute server. Used by the e2e example to prove the
+//!   stack composes.
 //! - [`setup`] — config -> trainer wiring shared by CLI/experiments.
 
 pub mod algorithm;

@@ -8,12 +8,18 @@
 use std::path::PathBuf;
 #[cfg(feature = "pjrt")]
 use std::rc::Rc;
+#[cfg(feature = "pjrt")]
+use std::sync::Arc;
 
 use crate::coordinator::{Algorithm, SimTrainer, TrainConfig};
 use crate::data::batch::BatchSampler;
 use crate::data::partition::{split, Partition};
 use crate::data::synthetic::{gaussian_mixture, markov_sequences, MixtureSpec};
-use crate::engine::{AnyBatch, BatchSource, DenseSource, GradEngine, NativeEngine, SeqSource};
+use crate::engine::{
+    native_factory, AnyBatch, BatchSource, DenseSource, EngineFactory, EnginePool, SeqSource,
+};
+#[cfg(feature = "pjrt")]
+use crate::engine::GradEngine;
 use crate::graph::topology::{self, Topology};
 use crate::model::{ModelKind, ModelMeta};
 #[cfg(feature = "pjrt")]
@@ -80,6 +86,9 @@ pub struct Setup {
     pub straggler_factor: f64,
     pub force_straggler: bool,
     pub backend: Backend,
+    /// Engine-pool lanes for parallel per-worker compute (0 = auto:
+    /// available hardware parallelism, capped at the worker count).
+    pub threads: usize,
     pub train: TrainConfig,
 }
 
@@ -98,6 +107,7 @@ impl Default for Setup {
             straggler_factor: 4.0,
             force_straggler: true,
             backend: Backend::Native,
+            threads: 0,
             train: TrainConfig::default(),
         }
     }
@@ -121,20 +131,45 @@ impl Setup {
         }
     }
 
-    fn build_engine(&self, meta: &ModelMeta) -> anyhow::Result<Box<dyn GradEngine>> {
+    /// Engine factory for this setup: invoked once per pool lane, ON the
+    /// lane thread (so Rc-backed PJRT engines work — each lane compiles
+    /// its own executable, mirroring a per-device queue).
+    pub fn engine_factory(&self, meta: &ModelMeta) -> anyhow::Result<EngineFactory> {
         match &self.backend {
-            Backend::Native => Ok(Box::new(NativeEngine::new(meta.clone())?)),
+            Backend::Native => Ok(native_factory(meta.clone())),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt { artifacts_dir } => {
-                let art = ArtifactSet::load_family(artifacts_dir, &self.model)?;
-                let model = LoadedModel::compile(&art, shared_client()?)?;
-                Ok(Box::new(PjrtEngine::new(Rc::new(model))))
+                let dir = artifacts_dir.clone();
+                let name = self.model.clone();
+                Ok(Arc::new(move || {
+                    let art = ArtifactSet::load_family(&dir, &name)?;
+                    let model = LoadedModel::compile(&art, shared_client()?)?;
+                    Ok(Box::new(PjrtEngine::new(Rc::new(model))) as Box<dyn GradEngine>)
+                }))
             }
             #[cfg(not(feature = "pjrt"))]
             Backend::Pjrt { .. } => {
                 anyhow::bail!("backend 'pjrt' requires building with `--features pjrt`")
             }
         }
+    }
+
+    /// Effective pool size: the explicit `threads` setting, or (when 0)
+    /// the machine's available parallelism capped at the worker count —
+    /// more lanes than workers can never be used by the sim driver.
+    pub fn resolve_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(self.workers.max(1))
+    }
+
+    /// Build the per-worker engine pool.
+    pub fn build_pool(&self, meta: &ModelMeta) -> anyhow::Result<EnginePool> {
+        EnginePool::new(self.engine_factory(meta)?, self.resolve_threads())
     }
 
     /// Build the simulation trainer.
@@ -161,14 +196,14 @@ impl Setup {
         }
 
         let (sources, eval_batches) = self.build_data(&meta, &mut rng)?;
-        let engine = self.build_engine(&meta)?;
+        let pool = self.build_pool(&meta)?;
         let init = meta.init_params(&mut rng);
         SimTrainer::new(
             graph,
             self.algo,
             train_cfg,
             straggler,
-            engine,
+            pool,
             sources,
             eval_batches,
             init,
@@ -261,6 +296,7 @@ impl Setup {
             )
             .set("train_n", self.train_n.into())
             .set("test_n", self.test_n.into())
+            .set("threads", self.threads.into())
             .set("straggler_factor", self.straggler_factor.into())
             .set("force_straggler", self.force_straggler.into())
             .set("iters", self.train.iters.into())
@@ -309,6 +345,9 @@ impl Setup {
         }
         if let Some(v) = j.get("test_n").and_then(|v| v.as_usize()) {
             self.test_n = v;
+        }
+        if let Some(v) = j.get("threads").and_then(|v| v.as_usize()) {
+            self.threads = v;
         }
         if let Some(v) = j.get("straggler").and_then(|v| v.as_str()) {
             self.straggler_base =
@@ -425,6 +464,19 @@ mod tests {
         assert_eq!(s2.workers, 10);
         assert_eq!(s2.algo, Algorithm::CbFull);
         assert_eq!(s2.partition, Partition::Dirichlet { alpha: 0.5 });
+    }
+
+    #[test]
+    fn threads_roundtrip_and_resolution() {
+        let mut s = Setup::default();
+        assert!(s.resolve_threads() >= 1);
+        assert!(s.resolve_threads() <= s.workers);
+        s.threads = 3;
+        let j = s.to_json();
+        let mut s2 = Setup::default();
+        s2.apply_json(&j).unwrap();
+        assert_eq!(s2.threads, 3);
+        assert_eq!(s2.resolve_threads(), 3);
     }
 
     #[test]

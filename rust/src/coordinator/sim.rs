@@ -7,10 +7,17 @@
 //! Metropolis mixing, DTUR thresholds, evaluation — is executed exactly.
 //! Deterministic given the config seed, so every figure regenerates
 //! bit-identically.
+//!
+//! Gradients fan out over the [`EnginePool`]: one engine per lane thread,
+//! one leased gradient buffer per worker, batches drawn from per-worker
+//! RNG streams split off the config seed. Because every job is a pure
+//! function of `(w_j, batch_j)` and all reductions run in worker order on
+//! the coordinator thread, a pooled run is **bit-identical** to a
+//! single-thread run — parallelism only changes the wall clock.
 
 use crate::consensus::mixing::ParamBuffers;
 use crate::consensus::ConsensusMatrix;
-use crate::engine::{AnyBatch, BatchSource, GradEngine};
+use crate::engine::{AnyBatch, BatchSource, EnginePool};
 use crate::graph::Graph;
 use crate::metrics::{EvalRecord, IterRecord, RunHistory};
 use crate::straggler::StragglerModel;
@@ -61,16 +68,18 @@ pub struct SimTrainer {
     pub algo: Algorithm,
     pub cfg: TrainConfig,
     pub straggler: StragglerModel,
-    /// One engine shared across workers (executed sequentially; engines
-    /// carry scratch only, parameters live in `params`).
-    engine: Box<dyn GradEngine>,
+    /// One engine per pool lane (parameters live in `params`; engines
+    /// carry scratch only, so results don't depend on lane assignment).
+    pool: EnginePool,
     sources: Vec<Box<dyn BatchSource>>,
     eval_batches: Vec<AnyBatch>,
     params: ParamBuffers,
     dtur: Option<Dtur>,
     rng: Rng,
     clock: f64,
-    grad_buf: Vec<f32>,
+    /// One leased gradient buffer per worker, written in place each
+    /// iteration by [`EnginePool::grad_many`].
+    grad_bufs: Vec<Vec<f32>>,
     /// Optional per-iteration observer (e.g. live progress printing).
     pub on_iter: Option<Box<dyn FnMut(&IterRecord)>>,
     /// When set, compute times replay this trace instead of sampling the
@@ -82,6 +91,9 @@ pub struct SimTrainer {
     pub compression: Option<CompressionState>,
     /// Starting iteration (for checkpoint resume).
     start_k: usize,
+    /// Last iteration actually completed by `run` (== `start_k` until the
+    /// first iteration finishes); this is what checkpoints stamp.
+    last_k: usize,
 }
 
 /// Compressed-gossip state: the operator + one error-feedback buffer per
@@ -112,7 +124,7 @@ impl SimTrainer {
         algo: Algorithm,
         cfg: TrainConfig,
         straggler: StragglerModel,
-        engine: Box<dyn GradEngine>,
+        pool: EnginePool,
         sources: Vec<Box<dyn BatchSource>>,
         eval_batches: Vec<AnyBatch>,
         initial: Vec<f32>,
@@ -121,29 +133,30 @@ impl SimTrainer {
         anyhow::ensure!(n >= 2, "need >= 2 workers");
         anyhow::ensure!(sources.len() == n, "one batch source per worker");
         anyhow::ensure!(straggler.n() == n, "straggler model size mismatch");
-        anyhow::ensure!(initial.len() == engine.param_count(), "bad init length");
+        anyhow::ensure!(initial.len() == pool.param_count(), "bad init length");
         anyhow::ensure!(graph.is_connected(), "graph must be connected");
         let params = ParamBuffers::from_initial(vec![initial; n]);
         let dtur = algo.needs_dtur().then(|| Dtur::new(&graph));
         let rng = Rng::new(cfg.seed ^ 0xD1B2_57A1);
-        let p = engine.param_count();
+        let p = pool.param_count();
         Ok(SimTrainer {
             graph,
             algo,
             cfg,
             straggler,
-            engine,
+            pool,
             sources,
             eval_batches,
             params,
             dtur,
             rng,
             clock: 0.0,
-            grad_buf: vec![0.0; p],
+            grad_bufs: vec![vec![0.0; p]; n],
             on_iter: None,
             trace: None,
             compression: None,
             start_k: 0,
+            last_k: 0,
         })
     }
 
@@ -152,14 +165,12 @@ impl SimTrainer {
         self.params.average()
     }
 
-    /// Snapshot the current state as a checkpoint.
+    /// Snapshot the current state as a checkpoint, stamped with the last
+    /// iteration `run` actually completed (NOT `start_k + cfg.iters`,
+    /// which over-counts when a run is invoked for fewer iterations or
+    /// a checkpoint is taken before any run).
     pub fn checkpoint(&self, model: &str) -> super::checkpoint::Checkpoint {
-        super::checkpoint::Checkpoint::from_buffers(
-            self.start_k + self.cfg.iters,
-            self.clock,
-            model,
-            &self.params,
-        )
+        super::checkpoint::Checkpoint::from_buffers(self.last_k, self.clock, model, &self.params)
     }
 
     /// Resume from a checkpoint: restores parameters, clock, and the
@@ -172,11 +183,12 @@ impl SimTrainer {
             self.graph.n()
         );
         anyhow::ensure!(
-            ckpt.params[0].len() == self.engine.param_count(),
+            ckpt.params[0].len() == self.pool.param_count(),
             "checkpoint param dim mismatch"
         );
         self.clock = ckpt.clock;
         self.start_k = ckpt.iteration;
+        self.last_k = ckpt.iteration;
         self.params = ParamBuffers::from_initial(ckpt.params);
         Ok(())
     }
@@ -185,14 +197,21 @@ impl SimTrainer {
         &self.params
     }
 
-    /// Evaluate average params on the held-out set.
+    /// Number of engine-pool lanes serving this trainer.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Evaluate average params on the held-out set (batches scored in
+    /// parallel across the pool; the reduction runs in batch order, so
+    /// the result is independent of the pool size).
     pub fn evaluate(&mut self, k: usize) -> anyhow::Result<EvalRecord> {
         let avg = self.params.average();
+        let scores = self.pool.eval_many(&avg, &self.eval_batches)?;
         let mut loss_sum = 0.0f64;
         let mut correct = 0usize;
         let mut rows = 0usize;
-        for b in &self.eval_batches {
-            let (loss, corr) = self.engine.eval(&avg, b)?;
+        for ((loss, corr), b) in scores.into_iter().zip(&self.eval_batches) {
             let r = b.rows();
             loss_sum += loss as f64 * r as f64;
             correct += corr;
@@ -213,7 +232,7 @@ impl SimTrainer {
         let n = self.graph.n();
         let mut history = RunHistory::new(
             &self.algo.name(),
-            self.engine.backend(),
+            self.pool.backend(),
             "synthetic",
             n,
         );
@@ -233,15 +252,26 @@ impl SimTrainer {
             // --- eq. (5): local SGD step at every worker ----------------
             // (Stragglers compute too — they are just not waited for; the
             //  PS baselines discard non-participant updates below.)
+            //
+            // Fan out over the engine pool: draw every worker's batch from
+            // its own RNG stream (coordinator thread, fixed order), compute
+            // all gradients in parallel into the per-worker leased buffers,
+            // then apply updates and reduce the loss in worker order —
+            // bit-identical to the sequential loop this replaces.
+            let bsz = self.cfg.batch_size;
+            let batches: Vec<AnyBatch> = self
+                .sources
+                .iter_mut()
+                .map(|s| s.next_train(bsz))
+                .collect();
+            let ws: Vec<&[f32]> = (0..n).map(|j| self.params.get(j)).collect();
+            let losses = self.pool.grad_many(&ws, &batches, &mut self.grad_bufs)?;
+            drop(ws);
             let mut loss_sum = 0.0f64;
             for j in 0..n {
-                let batch = self.sources[j].next_train(self.cfg.batch_size);
-                let loss = self
-                    .engine
-                    .grad_into(self.params.get(j), &batch, &mut self.grad_buf)?;
-                loss_sum += loss as f64;
+                loss_sum += losses[j] as f64;
                 if !iter_plan.ps_style || iter_plan.active[j] {
-                    vecmath::axpy(self.params.get_mut(j), -eta, &self.grad_buf);
+                    vecmath::axpy(self.params.get_mut(j), -eta, &self.grad_bufs[j]);
                 }
             }
 
@@ -269,6 +299,7 @@ impl SimTrainer {
 
             // --- bookkeeping --------------------------------------------
             self.clock += iter_plan.duration;
+            self.last_k = k;
             let rec = IterRecord {
                 k,
                 duration: iter_plan.duration,
@@ -297,11 +328,11 @@ mod tests {
     use super::*;
     use crate::data::partition::{split, Partition};
     use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
-    use crate::engine::{DenseSource, NativeEngine};
+    use crate::engine::{native_factory, DenseSource};
     use crate::graph::topology;
     use crate::model::ModelMeta;
 
-    fn build(algo: Algorithm, iters: usize, seed: u64) -> SimTrainer {
+    fn build_with_threads(algo: Algorithm, iters: usize, seed: u64, threads: usize) -> SimTrainer {
         let n = 6;
         let mut rng = Rng::new(seed);
         let g = topology::random_connected(n, 0.5, &mut rng);
@@ -321,7 +352,7 @@ mod tests {
         .into_iter()
         .map(AnyBatch::Dense)
         .collect();
-        let engine = Box::new(NativeEngine::new(meta.clone()).unwrap());
+        let pool = EnginePool::new(native_factory(meta.clone()), threads).unwrap();
         let straggler = StragglerModel::paper_default(n, &mut rng);
         let init = meta.init_params(&mut rng);
         let cfg = TrainConfig {
@@ -331,7 +362,11 @@ mod tests {
             seed,
             ..Default::default()
         };
-        SimTrainer::new(g, algo, cfg, straggler, engine, sources, eval_batches, init).unwrap()
+        SimTrainer::new(g, algo, cfg, straggler, pool, sources, eval_batches, init).unwrap()
+    }
+
+    fn build(algo: Algorithm, iters: usize, seed: u64) -> SimTrainer {
+        build_with_threads(algo, iters, seed, 2)
     }
 
     #[test]
@@ -390,6 +425,48 @@ mod tests {
         let ha = a.run().unwrap();
         let hb = b.run().unwrap();
         assert!(ha.mean_iter_duration() < hb.mean_iter_duration());
+    }
+
+    /// Satellite of the engine-pool refactor: the number of pool lanes
+    /// must not change a single bit of the history — losses, clocks, and
+    /// final parameters — for any of the five algorithms.
+    #[test]
+    fn pooled_run_bit_identical_to_single_thread_all_algorithms() {
+        let algos = [
+            Algorithm::CbDybw,
+            Algorithm::CbFull,
+            Algorithm::CbStaticBackup { b: 2 },
+            Algorithm::PsSync,
+            Algorithm::PsBackup { b: 1 },
+        ];
+        for algo in algos {
+            let mut t1 = build_with_threads(algo, 20, 31, 1);
+            let mut t4 = build_with_threads(algo, 20, 31, 4);
+            assert_eq!(t1.threads(), 1);
+            assert_eq!(t4.threads(), 4);
+            let h1 = t1.run().unwrap();
+            let h4 = t4.run().unwrap();
+            // every f64 in every iter/eval record, compared bit-for-bit
+            assert!(h1.bits_eq(&h4), "{algo:?} history diverged across pool sizes");
+            let (p1, p4) = (t1.average_params(), t4.average_params());
+            assert_eq!(p1.len(), p4.len());
+            for (x, y) in p1.iter().zip(&p4) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{algo:?} final params differ");
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_stamps_actual_last_iteration() {
+        // Before any run a checkpoint must stamp k=0, not cfg.iters.
+        let t = build(Algorithm::CbDybw, 30, 18);
+        assert_eq!(t.checkpoint("x").iteration, 0);
+        // After running fewer iterations than originally configured, the
+        // checkpoint stamps what actually completed.
+        let mut t = build(Algorithm::CbDybw, 30, 18);
+        t.cfg.iters = 12;
+        t.run().unwrap();
+        assert_eq!(t.checkpoint("x").iteration, 12);
     }
 
     #[test]

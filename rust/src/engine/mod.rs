@@ -9,9 +9,16 @@
 //!
 //! Engines are stateful (`&mut self`) so implementations can reuse
 //! scratch/device buffers across iterations without allocating on the hot
-//! path.
+//! path. Parallel execution goes through [`pool::EnginePool`]: one engine
+//! per lane thread, each built on its lane by an [`pool::EngineFactory`]
+//! (so thread-pinned PJRT handles work unchanged).
 
+pub mod pool;
 pub mod server;
+
+pub use pool::{EngineFactory, EnginePool};
+
+use std::sync::Arc;
 
 use crate::data::batch::{Batch, BatchSampler, SeqBatch};
 use crate::data::{Dataset, SeqDataset};
@@ -141,6 +148,11 @@ impl NativeEngine {
     pub fn meta(&self) -> &ModelMeta {
         &self.meta
     }
+}
+
+/// Factory producing independent [`NativeEngine`]s (one per pool lane).
+pub fn native_factory(meta: ModelMeta) -> EngineFactory {
+    Arc::new(move || Ok(Box::new(NativeEngine::new(meta.clone())?) as Box<dyn GradEngine>))
 }
 
 impl GradEngine for NativeEngine {

@@ -1,0 +1,572 @@
+//! Per-worker engine pool: the parallel compute path.
+//!
+//! The sim driver used to push every worker's gradient through ONE shared
+//! engine; the live driver serialised all compute behind one channel and
+//! cloned a full parameter vector per call. This module replaces both with
+//! an executor built from std primitives only:
+//!
+//! - an [`EngineFactory`] closure builds one [`GradEngine`] *per lane
+//!   thread, on that thread* — which is exactly what Rc-backed PJRT
+//!   handles require, and costs nothing for the native engines;
+//! - callers submit *borrowed* jobs (`&[f32]` params in, `&mut [f32]`
+//!   gradient out) and block until every lane has replied, so the hot
+//!   path never clones a parameter vector or allocates a gradient;
+//! - results are returned **in job order**, and each job is a pure
+//!   function of `(w, batch)` (engine scratch is reset per call), so a
+//!   pooled run is bit-identical to a sequential one regardless of the
+//!   number of lanes or how jobs land on them.
+//!
+//! Lanes are persistent OS threads: engines (and their scratch / device
+//! buffers) live for the pool's lifetime, giving per-worker buffer reuse
+//! across iterations.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::{AnyBatch, GradEngine};
+
+/// Builds one engine instance; invoked once on each lane thread. Must be
+/// `Send + Sync` (shared across lanes), but the engine it builds need not
+/// be `Send` — it never leaves its lane.
+pub type EngineFactory = Arc<dyn Fn() -> anyhow::Result<Box<dyn GradEngine>> + Send + Sync>;
+
+// ---------------------------------------------------------------------------
+// job protocol
+// ---------------------------------------------------------------------------
+
+/// Raw view of caller-owned memory. Safe to send because every pool entry
+/// point blocks until all lanes serving the call have dropped their reply
+/// sender (i.e. finished or died), so the pointee strictly outlives every
+/// dereference on the lane side.
+struct RawSlice {
+    ptr: *const f32,
+    len: usize,
+}
+unsafe impl Send for RawSlice {}
+
+impl RawSlice {
+    fn of(s: &[f32]) -> Self {
+        RawSlice { ptr: s.as_ptr(), len: s.len() }
+    }
+    /// SAFETY: caller (the pool) guarantees the borrow is still live.
+    unsafe fn get<'a>(&self) -> &'a [f32] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+struct RawSliceMut {
+    ptr: *mut f32,
+    len: usize,
+}
+unsafe impl Send for RawSliceMut {}
+
+impl RawSliceMut {
+    fn of(s: &mut [f32]) -> Self {
+        RawSliceMut { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+    unsafe fn get<'a>(&self) -> &'a mut [f32] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+}
+
+struct RawBatch {
+    ptr: *const AnyBatch,
+}
+unsafe impl Send for RawBatch {}
+
+impl RawBatch {
+    fn of(b: &AnyBatch) -> Self {
+        RawBatch { ptr: b }
+    }
+    unsafe fn get<'a>(&self) -> &'a AnyBatch {
+        &*self.ptr
+    }
+}
+
+enum JobKind {
+    /// Write the flat gradient into the leased buffer, return the loss.
+    Grad(RawSliceMut),
+    /// Loss + correct count, no gradient.
+    Eval,
+}
+
+struct Job {
+    idx: usize,
+    w: RawSlice,
+    batch: RawBatch,
+    kind: JobKind,
+}
+
+enum JobOut {
+    Grad(f32),
+    Eval(f32, usize),
+}
+
+struct Done {
+    idx: usize,
+    out: anyhow::Result<JobOut>,
+}
+
+struct RunMsg {
+    jobs: Vec<Job>,
+    reply: Sender<Done>,
+}
+
+// ---------------------------------------------------------------------------
+// the pool
+// ---------------------------------------------------------------------------
+
+/// Fixed set of lane threads, one engine per lane.
+pub struct EnginePool {
+    lanes: Vec<Sender<RunMsg>>,
+    handles: Vec<JoinHandle<()>>,
+    param_count: usize,
+    backend: &'static str,
+    /// Round-robin cursor for single-job submissions (live mode).
+    rr: AtomicUsize,
+}
+
+impl EnginePool {
+    /// Spawn `threads` lanes; the factory runs once on each. Fails (and
+    /// joins already-spawned lanes) if any factory invocation fails.
+    pub fn new(factory: EngineFactory, threads: usize) -> anyhow::Result<EnginePool> {
+        anyhow::ensure!(threads > 0, "engine pool needs >= 1 thread");
+        let mut lanes = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        let (init_tx, init_rx) = channel::<anyhow::Result<(usize, &'static str)>>();
+        // Share the machine between lane-level and kernel-level
+        // parallelism: each lane's GEMMs may use at most cores/T scoped
+        // threads (so a 1-lane pool keeps full intra-op parallelism and a
+        // wide pool doesn't oversubscribe to T × 8 kernel threads).
+        let kernel_cap = (std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            / threads)
+            .max(1);
+        for lane in 0..threads {
+            let (tx, rx) = channel::<RunMsg>();
+            let factory = Arc::clone(&factory);
+            let init_tx = init_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dybw-lane-{lane}"))
+                    .spawn(move || lane_loop(factory, init_tx, rx, kernel_cap))?,
+            );
+            lanes.push(tx);
+        }
+        drop(init_tx);
+        let mut param_count = 0usize;
+        let mut backend: &'static str = "?";
+        for _ in 0..threads {
+            let init = init_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("engine pool lane crashed during init"))
+                .and_then(|r| r);
+            match init {
+                Ok((p, b)) => {
+                    param_count = p;
+                    backend = b;
+                }
+                Err(e) => {
+                    // hang up and join the lanes that did come up before
+                    // surfacing the failure — no orphaned threads.
+                    drop(lanes);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(EnginePool {
+            lanes,
+            handles,
+            param_count,
+            backend,
+            rr: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn threads(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Fan one gradient job per worker across the lanes: job `i` reads
+    /// `ws[i]` and `batches[i]` and writes into its leased `grad_outs[i]`.
+    /// Losses come back in job order, so reductions over them are
+    /// deterministic no matter how lanes raced.
+    pub fn grad_many(
+        &self,
+        ws: &[&[f32]],
+        batches: &[AnyBatch],
+        grad_outs: &mut [Vec<f32>],
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            ws.len() == batches.len() && ws.len() == grad_outs.len(),
+            "grad_many: mismatched job arity"
+        );
+        let mut outs = grad_outs.iter_mut();
+        let jobs = ws
+            .iter()
+            .zip(batches)
+            .enumerate()
+            .map(|(idx, (w, batch))| Job {
+                idx,
+                w: RawSlice::of(w),
+                batch: RawBatch::of(batch),
+                kind: JobKind::Grad(RawSliceMut::of(outs.next().unwrap())),
+            })
+            .collect();
+        let results = self.run_jobs(jobs)?;
+        results
+            .into_iter()
+            .map(|out| match out {
+                JobOut::Grad(loss) => Ok(loss),
+                JobOut::Eval(..) => unreachable!("grad job returned eval result"),
+            })
+            .collect()
+    }
+
+    /// Evaluate one parameter vector over many batches in parallel;
+    /// `(loss, correct)` pairs come back in batch order.
+    pub fn eval_many(
+        &self,
+        w: &[f32],
+        batches: &[AnyBatch],
+    ) -> anyhow::Result<Vec<(f32, usize)>> {
+        let jobs = batches
+            .iter()
+            .enumerate()
+            .map(|(idx, batch)| Job {
+                idx,
+                w: RawSlice::of(w),
+                batch: RawBatch::of(batch),
+                kind: JobKind::Eval,
+            })
+            .collect();
+        let results = self.run_jobs(jobs)?;
+        results
+            .into_iter()
+            .map(|out| match out {
+                JobOut::Eval(loss, correct) => Ok((loss, correct)),
+                JobOut::Grad(_) => unreachable!("eval job returned grad result"),
+            })
+            .collect()
+    }
+
+    /// One gradient on the next lane (round-robin); blocks until done.
+    /// This is the live-mode entry point — many worker threads may call
+    /// it concurrently.
+    pub fn grad_one(
+        &self,
+        w: &[f32],
+        batch: &AnyBatch,
+        grad_out: &mut [f32],
+    ) -> anyhow::Result<f32> {
+        let job = Job {
+            idx: 0,
+            w: RawSlice::of(w),
+            batch: RawBatch::of(batch),
+            kind: JobKind::Grad(RawSliceMut::of(grad_out)),
+        };
+        match self.run_on_lane(self.next_lane(), vec![job])?.pop() {
+            Some(JobOut::Grad(loss)) => Ok(loss),
+            _ => anyhow::bail!("engine pool returned no result"),
+        }
+    }
+
+    /// One evaluation on the next lane (round-robin); blocks until done.
+    pub fn eval_one(&self, w: &[f32], batch: &AnyBatch) -> anyhow::Result<(f32, usize)> {
+        let job = Job {
+            idx: 0,
+            w: RawSlice::of(w),
+            batch: RawBatch::of(batch),
+            kind: JobKind::Eval,
+        };
+        match self.run_on_lane(self.next_lane(), vec![job])?.pop() {
+            Some(JobOut::Eval(loss, correct)) => Ok((loss, correct)),
+            _ => anyhow::bail!("engine pool returned no result"),
+        }
+    }
+
+    fn next_lane(&self) -> usize {
+        self.rr.fetch_add(1, Ordering::Relaxed) % self.lanes.len()
+    }
+
+    /// Distribute jobs round-robin (job i -> lane i % T, so worker j gets
+    /// a stable lane across iterations) and block for all replies.
+    ///
+    /// Soundness invariant: this function NEVER returns — not even on the
+    /// error paths — until every lane that was handed jobs has dropped its
+    /// reply sender, i.e. no lane still holds a raw pointer into the
+    /// caller's frame. A send to a dead lane therefore does not return
+    /// early; the jobs meant for it are dropped unused and the error is
+    /// reported only after the surviving lanes have been drained.
+    fn run_jobs(&self, jobs: Vec<Job>) -> anyhow::Result<Vec<JobOut>> {
+        let expected = jobs.len();
+        let threads = self.lanes.len();
+        let mut per_lane: Vec<Vec<Job>> = (0..threads).map(|_| Vec::new()).collect();
+        for job in jobs {
+            per_lane[job.idx % threads].push(job);
+        }
+        let (reply, results_rx) = channel::<Done>();
+        let mut sent = 0usize;
+        let mut dead_lane = None;
+        for (lane, batch) in per_lane.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let count = batch.len();
+            match self.lanes[lane].send(RunMsg { jobs: batch, reply: reply.clone() }) {
+                Ok(()) => sent += count,
+                // the failed send returns (and drops) the jobs unused
+                Err(_) => dead_lane = Some(lane),
+            }
+        }
+        drop(reply);
+        let results = Self::collect(results_rx, expected, sent);
+        if let Some(lane) = dead_lane {
+            anyhow::bail!("engine pool lane {lane} is gone");
+        }
+        results
+    }
+
+    fn run_on_lane(&self, lane: usize, jobs: Vec<Job>) -> anyhow::Result<Vec<JobOut>> {
+        let expected = jobs.len();
+        let (reply, results_rx) = channel::<Done>();
+        // A failed send returns the jobs without any lane having seen
+        // them, so returning immediately is sound here (single lane).
+        self.lanes[lane]
+            .send(RunMsg { jobs, reply })
+            .map_err(|_| anyhow::anyhow!("engine pool lane {lane} is gone"))?;
+        Self::collect(results_rx, expected, expected)
+    }
+
+    /// Drain up to `expected` replies into `slots_len` job slots. The
+    /// recv loop only ends once every lane serving this call has dropped
+    /// its reply sender, which is what makes handing raw borrows to the
+    /// lanes sound: when this returns, no lane still holds a pointer into
+    /// the caller's frame.
+    fn collect(
+        results_rx: Receiver<Done>,
+        slots_len: usize,
+        expected: usize,
+    ) -> anyhow::Result<Vec<JobOut>> {
+        let mut slots: Vec<Option<anyhow::Result<JobOut>>> =
+            (0..slots_len).map(|_| None).collect();
+        let mut received = 0usize;
+        while received < expected {
+            match results_rx.recv() {
+                Ok(done) => {
+                    slots[done.idx] = Some(done.out);
+                    received += 1;
+                }
+                Err(_) => break, // a lane died mid-call; all senders gone
+            }
+        }
+        anyhow::ensure!(
+            received == expected && expected == slots_len,
+            "engine pool lane died mid-call ({received}/{slots_len} jobs completed)"
+        );
+        // surface the lowest-index error (deterministic) or unwrap all
+        let mut out = Vec::with_capacity(slots_len);
+        for slot in slots {
+            out.push(slot.expect("collect counted a missing slot")?);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        self.lanes.clear(); // hang up -> lanes exit their recv loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn lane_loop(
+    factory: EngineFactory,
+    init_tx: Sender<anyhow::Result<(usize, &'static str)>>,
+    rx: Receiver<RunMsg>,
+    kernel_cap: usize,
+) {
+    // Bit-identical at any cap — this is purely a scheduling choice.
+    crate::model::linalg::set_intra_op_cap(kernel_cap);
+    let mut engine = match factory() {
+        Ok(e) => {
+            let _ = init_tx.send(Ok((e.param_count(), e.backend())));
+            e
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+    drop(init_tx);
+    for RunMsg { jobs, reply } in rx {
+        for job in jobs {
+            // SAFETY: the submitting pool call blocks until this lane's
+            // `reply` clone is dropped, so `w`, `batch`, and the grad
+            // buffer are live for the duration of this dereference.
+            let out = unsafe {
+                let w = job.w.get();
+                let batch = job.batch.get();
+                match job.kind {
+                    JobKind::Grad(g) => engine.grad_into(w, batch, g.get()).map(JobOut::Grad),
+                    JobKind::Eval => engine.eval(w, batch).map(|(l, c)| JobOut::Eval(l, c)),
+                }
+            };
+            let _ = reply.send(Done { idx: job.idx, out });
+        }
+        // `reply` drops here: the caller sees this lane as done.
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batch::BatchSampler;
+    use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
+    use crate::engine::{native_factory, NativeEngine};
+    use crate::model::ModelMeta;
+    use crate::util::rng::Rng;
+
+    fn fixture(n_jobs: usize) -> (ModelMeta, Vec<f32>, Vec<AnyBatch>) {
+        let meta = ModelMeta::lrm(8, 10, 16);
+        let mut rng = Rng::new(0);
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(8, 400), &mut rng);
+        let mut sampler = BatchSampler::new(1);
+        let batches = (0..n_jobs)
+            .map(|_| AnyBatch::Dense(sampler.sample(&data, 16)))
+            .collect();
+        let w = meta.init_params(&mut rng);
+        (meta, w, batches)
+    }
+
+    #[test]
+    fn pooled_grads_match_direct_engine() {
+        let (meta, w, batches) = fixture(8);
+        let pool = EnginePool::new(native_factory(meta.clone()), 3).unwrap();
+        assert_eq!(pool.threads(), 3);
+        assert_eq!(pool.param_count(), meta.param_count);
+        assert_eq!(pool.backend(), "native");
+
+        let ws: Vec<&[f32]> = (0..8).map(|_| w.as_slice()).collect();
+        let mut outs = vec![vec![0.0f32; meta.param_count]; 8];
+        let losses = pool.grad_many(&ws, &batches, &mut outs).unwrap();
+
+        let mut eng = NativeEngine::new(meta.clone()).unwrap();
+        let mut g = vec![0.0f32; meta.param_count];
+        for (i, b) in batches.iter().enumerate() {
+            let loss = eng.grad_into(&w, b, &mut g).unwrap();
+            assert_eq!(loss.to_bits(), losses[i].to_bits(), "loss {i} differs");
+            assert_eq!(g, outs[i], "gradient {i} differs");
+        }
+    }
+
+    #[test]
+    fn pool_size_does_not_change_results() {
+        let (meta, w, batches) = fixture(7);
+        let ws: Vec<&[f32]> = (0..7).map(|_| w.as_slice()).collect();
+        let run = |threads: usize| {
+            let pool = EnginePool::new(native_factory(meta.clone()), threads).unwrap();
+            let mut outs = vec![vec![0.0f32; meta.param_count]; 7];
+            let losses = pool.grad_many(&ws, &batches, &mut outs).unwrap();
+            (losses, outs)
+        };
+        let (l1, g1) = run(1);
+        let (l4, g4) = run(4);
+        assert_eq!(
+            l1.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            l4.iter().map(|l| l.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(g1, g4);
+    }
+
+    #[test]
+    fn eval_many_matches_direct_engine() {
+        let (meta, w, batches) = fixture(5);
+        let pool = EnginePool::new(native_factory(meta.clone()), 2).unwrap();
+        let got = pool.eval_many(&w, &batches).unwrap();
+        let mut eng = NativeEngine::new(meta).unwrap();
+        for (i, b) in batches.iter().enumerate() {
+            let (l, c) = eng.eval(&w, b).unwrap();
+            assert_eq!(l.to_bits(), got[i].0.to_bits());
+            assert_eq!(c, got[i].1);
+        }
+    }
+
+    #[test]
+    fn single_job_entry_points_work_concurrently() {
+        let (meta, w, batches) = fixture(4);
+        let pool = Arc::new(EnginePool::new(native_factory(meta.clone()), 2).unwrap());
+        let handles: Vec<_> = batches
+            .into_iter()
+            .map(|b| {
+                let pool = Arc::clone(&pool);
+                let w = w.clone();
+                let p = meta.param_count;
+                std::thread::spawn(move || {
+                    let mut g = vec![0.0f32; p];
+                    let loss = pool.grad_one(&w, &b, &mut g).unwrap();
+                    let (le, _) = pool.eval_one(&w, &b).unwrap();
+                    (loss, le, g)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (loss, le, g) = h.join().unwrap();
+            assert!(loss.is_finite() && (le - loss).abs() < 1e-6);
+            assert!(g.iter().any(|&v| v != 0.0));
+        }
+    }
+
+    #[test]
+    fn factory_failure_surfaces_at_construction() {
+        let factory: EngineFactory = Arc::new(|| anyhow::bail!("no engine for you"));
+        let err = EnginePool::new(factory, 2).unwrap_err();
+        assert!(err.to_string().contains("no engine"), "{err}");
+    }
+
+    #[test]
+    fn engine_error_mid_run_is_an_err_not_a_hang() {
+        // An engine that computes fine but errors on transformer batches:
+        // feed it a Seq batch to trigger the dense() type check.
+        let (meta, w, mut batches) = fixture(3);
+        batches[1] = AnyBatch::Seq(crate::data::batch::SeqBatch {
+            bsz: 1,
+            seq: 4,
+            vocab: 2,
+            tokens: vec![0; 4],
+            y1h: vec![0.0; 8],
+        });
+        let pool = EnginePool::new(native_factory(meta.clone()), 2).unwrap();
+        let ws: Vec<&[f32]> = (0..3).map(|_| w.as_slice()).collect();
+        let mut outs = vec![vec![0.0f32; meta.param_count]; 3];
+        let err = pool.grad_many(&ws, &batches, &mut outs).unwrap_err();
+        assert!(err.to_string().contains("dense"), "{err}");
+        // the pool survives a job error: subsequent calls still work
+        batches[1] = batches[0].clone();
+        assert!(pool.grad_many(&ws, &batches, &mut outs).is_ok());
+    }
+
+    #[test]
+    fn zero_threads_rejected() {
+        let (meta, ..) = fixture(0);
+        assert!(EnginePool::new(native_factory(meta), 0).is_err());
+    }
+}

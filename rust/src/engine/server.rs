@@ -1,132 +1,80 @@
 //! Compute server: cross-thread access to thread-pinned engines.
 //!
 //! The `xla` crate's PJRT handles are Rc-backed (thread-local), but the
-//! live-mode coordinator runs one OS thread per worker. The standard fix
-//! is an executor-service pattern: one dedicated compute thread owns the
-//! engine (client + compiled executables) and serves `(w, batch) ->
-//! (loss, grad)` requests over channels. XLA's CPU backend parallelises
-//! each execution internally, so serialising the *dispatch* costs little;
-//! it also mirrors a real deployment where workers share an accelerator.
+//! live-mode coordinator runs one OS thread per worker. Historically this
+//! was a single dedicated compute thread serving `(w, batch)` requests
+//! over channels — which serialised every worker's gradient and cloned a
+//! full parameter vector per call. It is now a thin facade over the
+//! multi-lane [`EnginePool`](super::pool::EnginePool): each lane owns one
+//! engine (built on the lane by the factory, so PJRT still works), calls
+//! borrow the caller's parameter slice and write the gradient into the
+//! caller's leased buffer, and independent workers really compute in
+//! parallel — matching a deployment where workers share a pool of
+//! accelerator queues instead of one.
+//!
+//! The server/client split is deliberately kept as a stable facade even
+//! though both now delegate to the same `Arc<EnginePool>`: callers (live
+//! driver, e2e example) depend on the spawn/clone surface, and the
+//! facade is where live-mode policy (lane affinity, backpressure,
+//! request priorities) will land without touching the pool.
 
-use std::sync::mpsc::{channel, Sender};
-use std::thread::JoinHandle;
+use std::sync::Arc;
 
-use super::{AnyBatch, GradEngine};
+use super::pool::{EngineFactory, EnginePool};
+use super::AnyBatch;
 
-enum Request {
-    Grad {
-        w: Vec<f32>,
-        batch: AnyBatch,
-        reply: Sender<anyhow::Result<(f32, Vec<f32>)>>,
-    },
-    Eval {
-        w: Vec<f32>,
-        batch: AnyBatch,
-        reply: Sender<anyhow::Result<(f32, usize)>>,
-    },
-}
-
-/// Handle workers use to submit compute. Clone freely across threads.
+/// Handle workers use to submit compute. Clone freely across threads;
+/// calls block until their job completes on some lane.
 #[derive(Clone)]
 pub struct ComputeClient {
-    tx: Sender<Request>,
-    param_count: usize,
+    pool: Arc<EnginePool>,
 }
 
 impl ComputeClient {
     pub fn param_count(&self) -> usize {
-        self.param_count
+        self.pool.param_count()
     }
 
-    pub fn grad(&self, w: Vec<f32>, batch: AnyBatch) -> anyhow::Result<(f32, Vec<f32>)> {
-        let (reply, rx) = channel();
-        self.tx
-            .send(Request::Grad { w, batch, reply })
-            .map_err(|_| anyhow::anyhow!("compute server gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("compute server died"))?
+    /// Compute mean loss and write the flat gradient into `grad_out`
+    /// (zero-copy: no parameter clone, no per-call allocation).
+    pub fn grad_into(
+        &self,
+        w: &[f32],
+        batch: &AnyBatch,
+        grad_out: &mut [f32],
+    ) -> anyhow::Result<f32> {
+        self.pool.grad_one(w, batch, grad_out)
     }
 
-    pub fn eval(&self, w: Vec<f32>, batch: AnyBatch) -> anyhow::Result<(f32, usize)> {
-        let (reply, rx) = channel();
-        self.tx
-            .send(Request::Eval { w, batch, reply })
-            .map_err(|_| anyhow::anyhow!("compute server gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("compute server died"))?
+    /// Mean loss + correct predictions over one batch.
+    pub fn eval(&self, w: &[f32], batch: &AnyBatch) -> anyhow::Result<(f32, usize)> {
+        self.pool.eval_one(w, batch)
     }
 }
 
-/// The server; dropping it (after all clients) stops the thread.
+/// The server; dropping it (after all clients) joins the lane threads.
 pub struct ComputeServer {
-    handle: Option<JoinHandle<()>>,
-    tx: Option<Sender<Request>>,
-    param_count: usize,
+    pool: Arc<EnginePool>,
 }
 
 impl ComputeServer {
-    /// `factory` runs ON the compute thread (so it may build Rc-backed
-    /// PJRT engines); it must be Send itself.
-    pub fn spawn<F>(factory: F) -> anyhow::Result<(ComputeServer, ComputeClient)>
-    where
-        F: FnOnce() -> anyhow::Result<Box<dyn GradEngine>> + Send + 'static,
-    {
-        let (tx, rx) = channel::<Request>();
-        let (init_tx, init_rx) = channel::<anyhow::Result<usize>>();
-        let handle = std::thread::Builder::new()
-            .name("dybw-compute".into())
-            .spawn(move || {
-                let mut engine = match factory() {
-                    Ok(e) => {
-                        let _ = init_tx.send(Ok(e.param_count()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = init_tx.send(Err(e));
-                        return;
-                    }
-                };
-                let mut grad_buf = vec![0.0f32; engine.param_count()];
-                for req in rx {
-                    match req {
-                        Request::Grad { w, batch, reply } => {
-                            let res = engine
-                                .grad_into(&w, &batch, &mut grad_buf)
-                                .map(|loss| (loss, grad_buf.clone()));
-                            let _ = reply.send(res);
-                        }
-                        Request::Eval { w, batch, reply } => {
-                            let _ = reply.send(engine.eval(&w, &batch));
-                        }
-                    }
-                }
-            })?;
-        let param_count = init_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("compute thread crashed during init"))??;
-        let client = ComputeClient {
-            tx: tx.clone(),
-            param_count,
-        };
-        Ok((
-            ComputeServer {
-                handle: Some(handle),
-                tx: Some(tx),
-                param_count,
-            },
-            client,
-        ))
+    /// Spawn `lanes` compute lanes; `factory` runs ON each lane thread
+    /// (so it may build Rc-backed PJRT engines).
+    pub fn spawn(
+        factory: EngineFactory,
+        lanes: usize,
+    ) -> anyhow::Result<(ComputeServer, ComputeClient)> {
+        let pool = Arc::new(EnginePool::new(factory, lanes)?);
+        let client = ComputeClient { pool: Arc::clone(&pool) };
+        Ok((ComputeServer { pool }, client))
     }
 
     pub fn param_count(&self) -> usize {
-        self.param_count
+        self.pool.param_count()
     }
-}
 
-impl Drop for ComputeServer {
-    fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+    pub fn lanes(&self) -> usize {
+        self.pool.threads()
     }
 }
 
@@ -135,7 +83,7 @@ mod tests {
     use super::*;
     use crate::data::batch::BatchSampler;
     use crate::data::synthetic::{gaussian_mixture, MixtureSpec};
-    use crate::engine::NativeEngine;
+    use crate::engine::native_factory;
     use crate::model::ModelMeta;
     use crate::util::rng::Rng;
 
@@ -147,41 +95,44 @@ mod tests {
     #[test]
     fn serves_grad_requests_from_many_threads() {
         let meta = ModelMeta::lrm(8, 10, 16);
-        let m2 = meta.clone();
-        let (_server, client) =
-            ComputeServer::spawn(move || Ok(Box::new(NativeEngine::new(m2)?) as _)).unwrap();
+        let (server, client) = ComputeServer::spawn(native_factory(meta.clone()), 2).unwrap();
         assert_eq!(client.param_count(), meta.param_count);
+        assert_eq!(server.lanes(), 2);
         let w = meta.init_params(&mut Rng::new(2));
         let handles: Vec<_> = (0..4)
             .map(|_| {
                 let c = client.clone();
                 let w = w.clone();
                 let b = batch();
-                std::thread::spawn(move || c.grad(w, b).unwrap())
+                std::thread::spawn(move || {
+                    let mut g = vec![0.0f32; c.param_count()];
+                    let loss = c.grad_into(&w, &b, &mut g).unwrap();
+                    (loss, g)
+                })
             })
             .collect();
         for h in handles {
             let (loss, g) = h.join().unwrap();
             assert!(loss.is_finite() && loss > 0.0);
             assert_eq!(g.len(), meta.param_count);
+            assert!(g.iter().any(|&v| v != 0.0));
         }
     }
 
     #[test]
     fn eval_works() {
         let meta = ModelMeta::lrm(8, 10, 16);
-        let m2 = meta.clone();
-        let (_server, client) =
-            ComputeServer::spawn(move || Ok(Box::new(NativeEngine::new(m2)?) as _)).unwrap();
+        let (_srv, client) = ComputeServer::spawn(native_factory(meta.clone()), 1).unwrap();
         let w = vec![0.0f32; meta.param_count];
-        let (loss, correct) = client.eval(w, batch()).unwrap();
+        let (loss, correct) = client.eval(&w, &batch()).unwrap();
         assert!((loss - (10f32).ln()).abs() < 1e-4);
         assert!(correct <= 16);
     }
 
     #[test]
     fn factory_failure_propagates() {
-        let res = ComputeServer::spawn(|| anyhow::bail!("nope"));
-        assert!(res.is_err());
+        let factory: crate::engine::EngineFactory =
+            std::sync::Arc::new(|| anyhow::bail!("nope"));
+        assert!(ComputeServer::spawn(factory, 2).is_err());
     }
 }

@@ -1,4 +1,4 @@
-//! Linear-speedup validation (Corollaries 2-3).
+//! Linear-speedup validation (Corollaries 2-3) + engine-pool wall clock.
 //!
 //! Theory: with η = √(N/K) the convergence rate is O(1/√(NK) + 1/K), so
 //! the number of iterations to reach ε-accuracy scales like 1/N — "linear
@@ -6,12 +6,20 @@
 //! (including the TOTAL dataset size, so more workers = more parallel
 //! data), and report iterations-to-target and the N·K̃ product, which the
 //! theory predicts approximately constant once K is large enough.
+//!
+//! The second section measures the *system* speedup delivered by the
+//! [`EnginePool`](crate::engine::EnginePool) refactor: identical 16-worker
+//! 2NN training (bit-identical histories), sequential (1 lane) vs pooled
+//! (4 lanes), reported as wall-clock seconds and written to
+//! `BENCH_speedup.json` so CI can track the perf trajectory.
 
 use std::path::Path;
+use std::time::Instant;
 
 use crate::coordinator::setup::Setup;
 use crate::coordinator::Algorithm;
 use crate::metrics::export;
+use crate::util::json::Json;
 
 pub fn run(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
     let ns: &[usize] = if quick { &[2, 4] } else { &[2, 4, 6, 8, 12, 16] };
@@ -58,6 +66,75 @@ pub fn run(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> 
         prev_k = k_target.or(prev_k);
     }
     out.push_str("(theory: K_eps ~ 1/(eps^2 N); N x K approximately constant)\n");
+    out.push('\n');
+    out.push_str(&pool_wall_clock(base, out_dir, quick)?);
+    Ok(out)
+}
+
+/// Sequential-vs-pooled sim-driver wall clock on the 16-worker 2NN
+/// workload. Same seed -> bit-identical histories; only the clock moves.
+pub fn pool_wall_clock(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    const POOL_THREADS: usize = 4;
+    let mut s = base.clone();
+    s.workers = 16;
+    s.algo = Algorithm::CbDybw;
+    s.model = "mlp2_d64_h256_c10_b256".into();
+    s.train_n = if quick { 4_096 } else { 16_384 };
+    s.test_n = 512;
+    s.train.iters = if quick { 3 } else { 20 };
+    s.train.eval_every = 0;
+
+    let timed = |threads: usize| -> anyhow::Result<(f64, crate::metrics::RunHistory)> {
+        let mut s2 = s.clone();
+        s2.threads = threads;
+        let mut trainer = s2.build_sim()?;
+        let t0 = Instant::now();
+        let h = trainer.run()?;
+        Ok((t0.elapsed().as_secs_f64(), h))
+    };
+    let (seq_s, seq_h) = timed(1)?;
+    let (pool_s, pool_h) = timed(POOL_THREADS)?;
+    let speedup = seq_s / pool_s.max(1e-12);
+    let identical = seq_h.bits_eq(&pool_h);
+    let seq_loss = seq_h.iters.last().map(|r| r.train_loss).unwrap_or(f64::NAN);
+    let pool_loss = pool_h.iters.last().map(|r| r.train_loss).unwrap_or(f64::NAN);
+
+    let mut out = String::from(
+        "=== Engine-pool wall clock: sequential vs pooled sim driver ===\n",
+    );
+    out.push_str(&format!(
+        "workload: {} / 16 workers / {} iters\n",
+        s.model, s.train.iters
+    ));
+    out.push_str(&format!("  threads=1 (baseline)  : {seq_s:.3}s wall\n"));
+    out.push_str(&format!("  threads={POOL_THREADS} (pooled)    : {pool_s:.3}s wall\n"));
+    out.push_str(&format!(
+        "  speedup               : {speedup:.2}x  (hardware parallelism: {})\n",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    ));
+    out.push_str(&format!(
+        "  bit-identical history : {identical}  (final train loss {seq_loss:.6} vs {pool_loss:.6})\n"
+    ));
+
+    let mut j = Json::obj();
+    j.set("bench", "pool_speedup".into())
+        .set("model", s.model.as_str().into())
+        .set("workers", s.workers.into())
+        .set("iters", s.train.iters.into())
+        .set("quick", quick.into())
+        .set("threads_pool", POOL_THREADS.into())
+        .set(
+            "hardware_parallelism",
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).into(),
+        )
+        .set("seq_seconds", seq_s.into())
+        .set("pool_seconds", pool_s.into())
+        .set("speedup", speedup.into())
+        .set("bit_identical", identical.into());
+    std::fs::create_dir_all(out_dir)?;
+    let path = out_dir.join("BENCH_speedup.json");
+    std::fs::write(&path, j.to_string())?;
+    out.push_str(&format!("(bench JSON -> {})\n", path.display()));
     Ok(out)
 }
 
@@ -73,6 +150,13 @@ mod tests {
         let dir = std::env::temp_dir().join("dybw_speedup_test");
         let out = run(&s, &dir, true).unwrap();
         assert!(out.contains("N x K"));
+        assert!(out.contains("Engine-pool wall clock"));
+        // the perf-trajectory artifact exists and is valid JSON
+        let bench = std::fs::read_to_string(dir.join("BENCH_speedup.json")).unwrap();
+        let j = crate::util::json::Json::parse(&bench).unwrap();
+        assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("pool_speedup"));
+        assert_eq!(j.get("bit_identical").and_then(|v| v.as_bool()), Some(true));
+        assert!(j.get("speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -90,6 +90,7 @@ fn setup_opts(cmd: Command) -> Command {
         .opt("eval-every", "10", "evaluate every k iterations")
         .opt("seed", "2021", "master RNG seed")
         .opt("backend", "native", "native|pjrt[:dir]")
+        .opt("threads", "0", "engine-pool lanes (0 = auto: all available cores, capped at N)")
         .opt("config", "", "JSON config file (flags override)")
 }
 
@@ -122,6 +123,7 @@ fn setup_from_args(a: &Args) -> anyhow::Result<Setup> {
     s.train.lr_decay = a.get_f64("lr-decay")?;
     s.train.eval_every = a.get_usize("eval-every")?;
     s.train.seed = a.get_u64("seed")?;
+    s.threads = a.get_usize("threads")?;
     s.backend = match a.get("backend") {
         "native" => Backend::Native,
         b if b.starts_with("pjrt") => Backend::Pjrt {
@@ -142,14 +144,15 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     let out_dir = PathBuf::from(a.get("out-dir"));
 
     println!(
-        "# dybw train: {} / {} / {} workers / {} backend",
+        "# dybw train: {} / {} / {} workers / {} backend / {} pool lanes",
         s.algo.name(),
         s.model,
         s.workers,
         match &s.backend {
             Backend::Native => "native",
             Backend::Pjrt { .. } => "pjrt",
-        }
+        },
+        s.resolve_threads()
     );
     let mut trainer = s.build_sim()?;
     trainer.on_iter = Some(Box::new(|r| {

@@ -114,6 +114,34 @@ impl RunHistory {
     pub fn final_eval(&self) -> Option<&EvalRecord> {
         self.evals.last()
     }
+
+    /// Bit-exact equality of the recorded series: every `f64` in every
+    /// [`IterRecord`] and [`EvalRecord`] compared via `to_bits` (so NaN
+    /// thetas compare equal when produced identically), plus the integer
+    /// fields. This is the determinism oracle used by the engine-pool
+    /// tests and the speedup bench: two runs of the same seed must
+    /// satisfy `bits_eq` regardless of pool size.
+    pub fn bits_eq(&self, other: &RunHistory) -> bool {
+        self.workers == other.workers
+            && self.iters.len() == other.iters.len()
+            && self.evals.len() == other.evals.len()
+            && self.iters.iter().zip(&other.iters).all(|(x, y)| {
+                x.k == y.k
+                    && x.duration.to_bits() == y.duration.to_bits()
+                    && x.clock.to_bits() == y.clock.to_bits()
+                    && x.train_loss.to_bits() == y.train_loss.to_bits()
+                    && x.active == y.active
+                    && x.backup_avg.to_bits() == y.backup_avg.to_bits()
+                    && x.theta.to_bits() == y.theta.to_bits()
+            })
+            && self.evals.iter().zip(&other.evals).all(|(x, y)| {
+                x.k == y.k
+                    && x.clock.to_bits() == y.clock.to_bits()
+                    && x.test_loss.to_bits() == y.test_loss.to_bits()
+                    && x.test_error.to_bits() == y.test_error.to_bits()
+                    && x.consensus_error.to_bits() == y.consensus_error.to_bits()
+            })
+    }
 }
 
 #[cfg(test)]

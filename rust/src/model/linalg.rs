@@ -12,14 +12,36 @@
 /// spawn cost is < 5% of the kernel).
 const PAR_FLOPS: usize = 1 << 21;
 
+thread_local! {
+    /// Max scoped threads a GEMM issued from THIS thread may use
+    /// (0 = uncapped). Engine-pool lanes set `cores / lanes` so
+    /// lane-level and kernel-level parallelism compose to roughly the
+    /// machine width instead of oversubscribing (T lanes × 8 kernel
+    /// threads), while a 1-lane pool keeps the full pre-pool kernel
+    /// parallelism.
+    static INTRA_OP_CAP: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Cap intra-kernel (scoped-thread) GEMM parallelism for the calling
+/// thread; `0` removes the cap, `1` forces single-threaded kernels. Has
+/// no effect on results — row shards are independent outputs, so the
+/// kernels are bit-identical at any thread count.
+pub fn set_intra_op_cap(cap: usize) {
+    INTRA_OP_CAP.with(|f| f.set(cap));
+}
+
 fn threads_for(flops: usize) -> usize {
     if flops < PAR_FLOPS {
         return 1;
     }
-    std::thread::available_parallelism()
+    let t = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1)
-        .min(8)
+        .min(8);
+    match INTRA_OP_CAP.with(|f| f.get()) {
+        0 => t,
+        cap => t.min(cap),
+    }
 }
 
 /// Split `c` into `parts` row-chunks of `row_len` and run `f(chunk_index_range, chunk)`.
@@ -304,6 +326,22 @@ mod tests {
         for (x, y) in c.iter().zip(&want) {
             assert!((x - y).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn intra_op_toggle_is_bit_identical() {
+        // Large enough to clear PAR_FLOPS so the parallel path engages.
+        let (m, k, n) = (64, 64, 512);
+        let mut rng = Rng::new(41);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let mut c_par = vec![0.0f32; m * n];
+        gemm_nn(m, k, n, &a, &b, &mut c_par);
+        set_intra_op_cap(1);
+        let mut c_seq = vec![0.0f32; m * n];
+        gemm_nn(m, k, n, &a, &b, &mut c_seq);
+        set_intra_op_cap(0);
+        assert_eq!(c_par, c_seq);
     }
 
     #[test]
