@@ -9,6 +9,9 @@
 //! cargo run --release --example straggler_sweep
 //! ```
 
+// Config structs are mutated field-by-field after `Default::default()`.
+#![allow(clippy::field_reassign_with_default)]
+
 use dybw::coordinator::setup::Setup;
 use dybw::coordinator::Algorithm;
 use dybw::straggler::Dist;

@@ -6,6 +6,7 @@
 //!
 //! hot paths (the Layer-3 per-iteration costs):
 //!   mix/*          — eq. (6) Metropolis averaging over flat params
+//!                    (sequential loop, and pooled row fan-out vs lanes)
 //!   metropolis/*   — consensus-matrix construction
 //!   dtur/step      — Algorithm 2 threshold decision
 //!   grad/native-*  — native engine gradient (LRM / 2NN)
@@ -17,6 +18,9 @@
 //!   sim/mlp-16w-t* — sim-driver wall clock, sequential vs pooled
 //!
 //! Filter with `cargo bench -- <substring>`.
+
+// Same rationale as the crate-level allows in lib.rs.
+#![allow(clippy::field_reassign_with_default)]
 
 use std::time::Instant;
 
@@ -106,6 +110,7 @@ fn main() {
     println!("# dybw benchmarks (filter: {:?})\n", filter);
 
     bench_mixing(&filter);
+    bench_mix_pooled(&filter);
     bench_metropolis(&filter);
     bench_dtur(&filter);
     bench_native_grad(&filter);
@@ -177,6 +182,39 @@ fn bench_mixing(filter: &Option<String>) {
             "{:.1} GB/s",
             bytes as f64 / r.mean_ns
         ));
+        print_result(&r);
+    }
+}
+
+/// The mixing-parallelism tentpole: the same eq. (6) round fanned over
+/// pool lanes as borrowed-closure tasks, vs the sequential loop (t1 —
+/// `mix_pooled` at 1 lane IS the sequential loop). Bit-identical at any
+/// lane count; only the wall clock moves.
+fn bench_mix_pooled(filter: &Option<String>) {
+    let n = 16usize;
+    let p_dim = 262_144usize;
+    let mut rng = Rng::new(9);
+    let g = topology::random_connected(n, 0.4, &mut rng);
+    let pm = ConsensusMatrix::metropolis_full(&g);
+    let init: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..p_dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let mut t1_mean = None;
+    for threads in [1usize, 2, 4] {
+        let name = format!("mix/pooled-n16_p256k-t{threads}");
+        if !wants(filter, &name) {
+            continue;
+        }
+        let pool = EnginePool::tasks_only(threads).unwrap();
+        let mut bufs = ParamBuffers::from_initial(init.clone());
+        let mut r = bench(&name, 20, || bufs.mix_pooled(&pm, &pool).unwrap());
+        if threads == 1 {
+            t1_mean = Some(r.mean_ns);
+        }
+        r.throughput = match t1_mean {
+            Some(base) if threads > 1 => Some(format!("{:.2}x vs t1", base / r.mean_ns)),
+            _ => None,
+        };
         print_result(&r);
     }
 }

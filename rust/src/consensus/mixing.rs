@@ -10,9 +10,36 @@
 //! for every j. This is the Layer-3 hot path; it uses the blocked
 //! `weighted_sum_into` kernel and a double-buffer scheme so no parameter
 //! vector is ever reallocated.
+//!
+//! Each row j writes only the disjoint `back[j]`, so the update is
+//! embarrassingly parallel across workers: the `*_pooled` variants fan
+//! the per-worker weighted row-sums over an
+//! [`EnginePool`](crate::engine::EnginePool)'s lanes and are
+//! **bit-identical** to the sequential loops they shadow (same kernel,
+//! same per-row operand order; only the scheduling changes).
 
 use super::ConsensusMatrix;
+use crate::engine::EnginePool;
 use crate::util::vecmath;
+
+/// One eq. (6) row-sum: gather row j's Metropolis coefficients and source
+/// slices (via `src_of`) and run the shared `weighted_sum_into` kernel
+/// into `out`. EVERY mixing variant — sequential and pooled, exact and
+/// compressed — goes through this single function, which is what makes
+/// the documented bit-identity across variants a structural property
+/// rather than four copies that must be kept in sync by hand.
+fn row_sum_into<'a, F>(row: &[(usize, f64)], src_of: F, out: &mut [f32])
+where
+    F: Fn(usize) -> &'a [f32],
+{
+    let mut coeffs: Vec<f32> = Vec::with_capacity(row.len());
+    let mut srcs: Vec<&[f32]> = Vec::with_capacity(row.len());
+    for &(i, w) in row {
+        coeffs.push(w as f32);
+        srcs.push(src_of(i));
+    }
+    vecmath::weighted_sum_into(out, &srcs, &coeffs);
+}
 
 /// Double-buffered parameter store for N workers × P params.
 ///
@@ -68,12 +95,10 @@ impl ParamBuffers {
     /// eq. 6), using the back buffer as scratch. O(Σ_j |S_j| · P) flops.
     pub fn mix(&mut self, p: &ConsensusMatrix) {
         assert_eq!(p.n, self.n);
-        for j in 0..self.n {
-            let row = p.row(j);
+        let front = &self.front;
+        for (j, back_j) in self.back.iter_mut().enumerate() {
             // Gather sources from `front`, write into `back[j]`.
-            let coeffs: Vec<f32> = row.iter().map(|&(_, w)| w as f32).collect();
-            let srcs: Vec<&[f32]> = row.iter().map(|&(i, _)| self.front[i].as_slice()).collect();
-            vecmath::weighted_sum_into(&mut self.back[j], &srcs, &coeffs);
+            row_sum_into(p.row(j), |i| front[i].as_slice(), back_j);
         }
         std::mem::swap(&mut self.front, &mut self.back);
     }
@@ -94,26 +119,133 @@ impl ParamBuffers {
         let recon: Vec<Vec<f32>> = (0..self.n)
             .map(|i| efs[i].step(&self.front[i], comp).decompress())
             .collect();
-        let mut wire = 0usize;
-        for j in 0..self.n {
-            let row = p.row(j);
-            let coeffs: Vec<f32> = row.iter().map(|&(_, w)| w as f32).collect();
+        let wire = self.wire_cost(p, comp);
+        let front = &self.front;
+        for (j, back_j) in self.back.iter_mut().enumerate() {
             // worker j uses its OWN exact params, neighbours' reconstructions
-            let srcs: Vec<&[f32]> = row
-                .iter()
-                .map(|&(i, _)| {
-                    if i == j {
-                        self.front[i].as_slice()
-                    } else {
-                        wire += comp.wire_bytes(self.dim);
-                        recon[i].as_slice()
-                    }
-                })
-                .collect();
-            vecmath::weighted_sum_into(&mut self.back[j], &srcs, &coeffs);
+            let src_of = |i: usize| {
+                if i == j {
+                    front[i].as_slice()
+                } else {
+                    recon[i].as_slice()
+                }
+            };
+            row_sum_into(p.row(j), src_of, back_j);
         }
         std::mem::swap(&mut self.front, &mut self.back);
         wire
+    }
+
+    /// Wire bytes one compressed round costs: every neighbour payload
+    /// worker j pulls (row support minus itself) is one compressed
+    /// broadcast. Pure arithmetic over the row structure, shared by the
+    /// sequential and pooled compressed paths.
+    fn wire_cost(&self, p: &ConsensusMatrix, comp: &dyn super::compress::Compressor) -> usize {
+        let mut wire = 0usize;
+        for j in 0..self.n {
+            let pulls = p.row(j).iter().filter(|&&(i, _)| i != j).count();
+            wire += pulls * comp.wire_bytes(self.dim);
+        }
+        wire
+    }
+
+    /// Parallel eq. (6): identical arithmetic to [`mix`](Self::mix), with
+    /// the per-worker weighted row-sums fanned over the pool's lanes as
+    /// borrowed-closure tasks. Row j reads `front` (shared) and writes
+    /// only the disjoint `back[j]`, so the fan-out is race-free and the
+    /// result is bit-identical to the sequential path regardless of lane
+    /// count or which lane runs which row.
+    pub fn mix_pooled(&mut self, p: &ConsensusMatrix, pool: &EnginePool) -> anyhow::Result<()> {
+        assert_eq!(p.n, self.n);
+        if pool.threads() <= 1 {
+            self.mix(p);
+            return Ok(());
+        }
+        let front = &self.front;
+        let mut tasks: Vec<_> = self
+            .back
+            .iter_mut()
+            .enumerate()
+            .map(|(j, back_j)| {
+                let row = p.row(j);
+                move || -> anyhow::Result<()> {
+                    row_sum_into(row, |i| front[i].as_slice(), back_j);
+                    Ok(())
+                }
+            })
+            .collect();
+        pool.run_tasks(&mut tasks)?;
+        drop(tasks);
+        std::mem::swap(&mut self.front, &mut self.back);
+        Ok(())
+    }
+
+    /// Parallel compressed consensus round: bit-identical to
+    /// [`mix_compressed`](Self::mix_compressed), in two pooled phases.
+    /// Phase 1 runs every worker's compress→error-feedback→reconstruct
+    /// step (worker-local state, so per-worker independent); phase 2 runs
+    /// the weighted row-sums exactly as [`mix_pooled`](Self::mix_pooled).
+    /// Wire accounting is pure arithmetic over the row structure and is
+    /// summed on the caller thread, so the parallel rows never share a
+    /// counter.
+    pub fn mix_compressed_pooled(
+        &mut self,
+        p: &ConsensusMatrix,
+        comp: &(dyn super::compress::Compressor + Sync),
+        efs: &mut [super::compress::ErrorFeedback],
+        pool: &EnginePool,
+    ) -> anyhow::Result<usize> {
+        assert_eq!(p.n, self.n);
+        assert_eq!(efs.len(), self.n);
+        if pool.threads() <= 1 {
+            return Ok(self.mix_compressed(p, comp, efs));
+        }
+        // Phase 1: every worker publishes one compressed broadcast and
+        // the network reconstructs it (per-worker: touches only efs[i]).
+        let mut recon: Vec<Vec<f32>> = (0..self.n).map(|_| Vec::new()).collect();
+        {
+            let mut tasks: Vec<_> = recon
+                .iter_mut()
+                .zip(efs.iter_mut())
+                .zip(self.front.iter())
+                .map(|((slot, ef), w)| {
+                    move || -> anyhow::Result<()> {
+                        *slot = ef.step(w, comp).decompress();
+                        Ok(())
+                    }
+                })
+                .collect();
+            pool.run_tasks(&mut tasks)?;
+        }
+        let wire = self.wire_cost(p, comp);
+        // Phase 2: the row sums — worker j uses its OWN exact params,
+        // neighbours' reconstructions.
+        {
+            let front = &self.front;
+            let recon = &recon;
+            let mut tasks: Vec<_> = self
+                .back
+                .iter_mut()
+                .enumerate()
+                .map(|(j, back_j)| {
+                    let row = p.row(j);
+                    move || -> anyhow::Result<()> {
+                        let src_of = |i: usize| {
+                            if i == j {
+                                front[i].as_slice()
+                            } else {
+                                recon[i].as_slice()
+                            }
+                        };
+                        row_sum_into(row, src_of, back_j);
+                        Ok(())
+                    }
+                })
+                .collect();
+            pool.run_tasks(&mut tasks)?;
+        }
+        std::mem::swap(&mut self.front, &mut self.back);
+        Ok(wire)
     }
 
     /// Network average ȳ(k) = (1/N) Σ_j w_j(k).
@@ -234,6 +366,78 @@ mod tests {
         assert!(e_grid < e_ring, "grid {e_grid} should beat ring {e_ring}");
     }
 
+    fn tiny_pool(threads: usize) -> EnginePool {
+        EnginePool::tasks_only(threads).unwrap()
+    }
+
+    fn assert_rows_bits_eq(a: &ParamBuffers, b: &ParamBuffers, ctx: &str) {
+        assert_eq!(a.n(), b.n());
+        for j in 0..a.n() {
+            for (k, (x, y)) in a.get(j).iter().zip(b.get(j)).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: row {j} coord {k}");
+            }
+        }
+    }
+
+    /// Tentpole invariant: the pooled mixing fan-out is bit-identical to
+    /// the sequential loop, across full and partial participation and
+    /// across pool sizes (including the 1-lane fallback).
+    #[test]
+    fn pooled_mix_bit_identical_to_sequential() {
+        let n = 8;
+        let dim = 2048;
+        let g = topology::random_connected(n, 0.4, &mut Rng::new(33));
+        for threads in [1usize, 3] {
+            let pool = tiny_pool(threads);
+            let mut seq = randomized(n, dim, 44);
+            let mut par = randomized(n, dim, 44);
+            let mut rng = Rng::new(55);
+            for round in 0..12 {
+                let active: Vec<bool> = (0..n).map(|_| rng.uniform() < 0.7).collect();
+                let p = ConsensusMatrix::metropolis(&g, &active);
+                seq.mix(&p);
+                par.mix_pooled(&p, &pool).unwrap();
+                assert_rows_bits_eq(&seq, &par, &format!("t{threads} round {round}"));
+            }
+        }
+    }
+
+    /// Same invariant on the compressed path: reconstruction, row sums,
+    /// and the wire-byte count must all match the sequential loop.
+    #[test]
+    fn pooled_compressed_mix_bit_identical_to_sequential() {
+        use crate::consensus::compress::{ErrorFeedback, TopK};
+        let n = 6;
+        let dim = 1024;
+        let g = topology::random_connected(n, 0.5, &mut Rng::new(66));
+        let comp = TopK { k: dim / 4 };
+        for threads in [1usize, 4] {
+            let pool = tiny_pool(threads);
+            let mut seq = randomized(n, dim, 77);
+            let mut par = randomized(n, dim, 77);
+            let mut efs_seq = vec![ErrorFeedback::new(dim); n];
+            let mut efs_par = vec![ErrorFeedback::new(dim); n];
+            let mut rng = Rng::new(88);
+            for round in 0..8 {
+                let active: Vec<bool> = (0..n).map(|_| rng.uniform() < 0.8).collect();
+                let p = ConsensusMatrix::metropolis(&g, &active);
+                let w_seq = seq.mix_compressed(&p, &comp, &mut efs_seq);
+                let w_par = par
+                    .mix_compressed_pooled(&p, &comp, &mut efs_par, &pool)
+                    .unwrap();
+                assert_eq!(w_seq, w_par, "t{threads} round {round}: wire bytes differ");
+                assert_rows_bits_eq(&seq, &par, &format!("t{threads} round {round}"));
+                // error-feedback residuals are part of the recurrence —
+                // they must track bit-for-bit too
+                for (j, (a, b)) in efs_seq.iter().zip(&efs_par).enumerate() {
+                    for (x, y) in a.residual().iter().zip(b.residual()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "residual {j} diverged");
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn compressed_mixing_still_contracts() {
         use crate::consensus::compress::{ErrorFeedback, TopK};
@@ -242,8 +446,7 @@ mod tests {
         let dim = 256;
         let mut b = randomized(6, dim, 22);
         let comp = TopK { k: dim / 4 };
-        let mut efs: Vec<ErrorFeedback> =
-            (0..6).map(|_| ErrorFeedback::new(dim)).collect();
+        let mut efs: Vec<ErrorFeedback> = vec![ErrorFeedback::new(dim); 6];
         let e0 = b.consensus_error();
         let mut wire = 0;
         for _ in 0..120 {

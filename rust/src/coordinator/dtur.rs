@@ -254,8 +254,8 @@ mod tests {
         for seed in 0..20 {
             let g = topology::random_connected(9, 0.35, &mut Rng::new(seed));
             let mut dtur = Dtur::new(&g);
-            let model =
-                StragglerModel::homogeneous(9, Dist::ShiftedExp { base: 0.05, rate: 15.0 });
+            let dist = Dist::ShiftedExp { base: 0.05, rate: 15.0 };
+            let model = StragglerModel::homogeneous(9, dist);
             for _ in 0..30 {
                 let t = model.sample_iteration(&mut rng);
                 let dec = dtur.step(&t);
@@ -297,8 +297,7 @@ mod tests {
             // advance into mid-epoch so some links are already established
             let mut d = Dtur::new(&g);
             let mut rng = Rng::new(4);
-            let model =
-                StragglerModel::homogeneous(8, Dist::Uniform { lo: 0.05, hi: 0.3 });
+            let model = StragglerModel::homogeneous(8, Dist::Uniform { lo: 0.05, hi: 0.3 });
             let t = model.sample_iteration(&mut rng);
             d.step(&t);
             d

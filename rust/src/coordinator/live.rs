@@ -39,8 +39,16 @@ use super::sim::TrainConfig;
 
 /// Leader -> worker messages.
 enum Cmd {
-    Start { k: usize, delay_s: f64 },
-    Mix { active: Vec<bool> },
+    Start {
+        k: usize,
+        delay_s: f64,
+    },
+    /// Mix with this worker's Metropolis row (the leader builds P(k)
+    /// once; workers only ever consume their own row).
+    Mix {
+        active: bool,
+        row: Vec<(usize, f64)>,
+    },
     Stop,
 }
 
@@ -107,7 +115,6 @@ pub fn run_live(
         let (ack_tx, ack_rx) = channel::<usize>();
         let board = Arc::clone(&board);
         let terminate = Arc::clone(&terminate);
-        let graph = graph.clone();
         let compute = compute.clone();
         let cfg_l = cfg.clone();
         handles.push(
@@ -115,8 +122,7 @@ pub fn run_live(
                 .name(format!("dybw-worker-{j}"))
                 .spawn(move || {
                     worker_loop(
-                        j, graph, cfg_l, compute, source, board, terminate, cmd_rx, done_tx,
-                        ack_tx,
+                        j, cfg_l, compute, source, board, terminate, cmd_rx, done_tx, ack_tx,
                     )
                 })?,
         );
@@ -217,10 +223,14 @@ pub fn run_live(
             vec![true; n]
         };
 
-        for ch in &chans {
+        // Build P(k) once on the leader and hand each worker its row —
+        // same matrix every worker previously rebuilt for itself.
+        let p = ConsensusMatrix::metropolis(&graph, &active);
+        for (j, ch) in chans.iter().enumerate() {
             ch.cmd_tx
                 .send(Cmd::Mix {
-                    active: active.clone(),
+                    active: active[j],
+                    row: p.row(j).to_vec(),
                 })
                 .map_err(|_| anyhow::anyhow!("worker died"))?;
         }
@@ -271,7 +281,6 @@ pub fn run_live(
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     j: usize,
-    graph: Graph,
     cfg: TrainConfig,
     compute: ComputeClient,
     mut source: Box<dyn BatchSource>,
@@ -283,9 +292,11 @@ fn worker_loop(
 ) {
     let mut w: Vec<f32> = board[j].lock().unwrap().clone();
     let mut wtilde: Vec<f32> = w.clone();
-    // Leased gradient buffer: written in place by the engine pool every
-    // iteration, never reallocated.
+    // Leased buffers: the gradient is written in place by the engine pool
+    // every iteration, the mix accumulator swaps with `w` every round —
+    // neither is ever reallocated.
     let mut grad: Vec<f32> = vec![0.0; compute.param_count()];
+    let mut mix_buf: Vec<f32> = vec![0.0; w.len()];
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
             Cmd::Stop => break,
@@ -329,17 +340,16 @@ fn worker_loop(
                     failed: false,
                 });
             }
-            Cmd::Mix { active } => {
-                if active[j] {
-                    // eq. (6) over the active neighbourhood.
-                    let p = ConsensusMatrix::metropolis(&graph, &active);
-                    let row = p.row(j);
-                    let mut next = vec![0.0f32; w.len()];
-                    for &(i, wt) in row {
+            Cmd::Mix { active, row } => {
+                if active {
+                    // eq. (6) over the active neighbourhood, accumulated
+                    // in row order (deterministic) into the leased buffer.
+                    mix_buf.fill(0.0);
+                    for &(i, wt) in &row {
                         let src = board[i].lock().unwrap();
-                        crate::util::vecmath::axpy(&mut next, wt as f32, &src);
+                        crate::util::vecmath::axpy(&mut mix_buf, wt as f32, &src);
                     }
-                    w = next;
+                    std::mem::swap(&mut w, &mut mix_buf);
                 } else {
                     w.copy_from_slice(&wtilde);
                 }
@@ -374,8 +384,10 @@ fn eval_on_board(
     let mut loss_sum = 0.0f64;
     let mut correct = 0usize;
     let mut total = 0usize;
-    for b in eval_batches {
-        let (l, c) = compute.eval(&avg, b)?;
+    // Batches fan across the pool's lanes; the reduction runs in batch
+    // order, so the result is independent of the lane count.
+    let scores = compute.eval_many(&avg, eval_batches)?;
+    for ((l, c), b) in scores.into_iter().zip(eval_batches) {
         let r = b.rows();
         loss_sum += l as f64 * r as f64;
         correct += c;
@@ -512,6 +524,118 @@ mod tests {
         fn backend(&self) -> &'static str {
             "flaky"
         }
+    }
+
+    /// One full live run at `lanes` compute lanes on the CI-sized scale
+    /// workload: 32 real worker threads, a 2NN model heavy enough that
+    /// compute (not straggler sleep) dominates the iteration — but with
+    /// every GEMM below linalg's `PAR_FLOPS` threshold, so the 1-lane
+    /// baseline is genuinely serial (no intra-kernel threads) and the
+    /// pooled-vs-sequential comparison isn't noise-bound on small CI
+    /// runners.
+    fn scale_run(lanes: usize) -> anyhow::Result<LiveOutcome> {
+        let n = 32;
+        let mut rng = Rng::new(42);
+        let g = topology::random_connected(n, 0.25, &mut rng);
+        let meta = ModelMeta::mlp2(64, 64, 10, 256);
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(64, 16_896), &mut rng);
+        let (train, test) = data.split(16_384);
+        let shards = split(&train, n, Partition::Iid, &mut rng);
+        let sources: Vec<Box<dyn BatchSource>> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(j, s)| Box::new(DenseSource::new(s, 90 + j as u64)) as Box<dyn BatchSource>)
+            .collect();
+        let eval: Vec<AnyBatch> =
+            BatchSampler::full_batches(&test.subset(&(0..256).collect::<Vec<_>>()), 256)
+                .into_iter()
+                .map(AnyBatch::Dense)
+                .collect();
+        let (_srv, client) = ComputeServer::spawn(native_factory(meta.clone()), lanes)?;
+        let straggler = StragglerModel {
+            base: Dist::Uniform { lo: 0.005, hi: 0.01 },
+            worker_scale: vec![1.0; n],
+            persistent: vec![1.0; n],
+            transient_prob: 0.0,
+            transient_factor: 1.0,
+            force_one_straggler: false,
+            outages: Vec::new(),
+        };
+        let cfg = TrainConfig {
+            iters: 6,
+            batch_size: 256,
+            eval_every: 0,
+            seed: 77,
+            ..Default::default()
+        };
+        let init = meta.init_params(&mut rng);
+        run_live(g, Algorithm::CbDybw, cfg, straggler, client, sources, eval, init, 1.0)
+    }
+
+    /// Run `scale_run` under a watchdog so a scheduling deadlock becomes
+    /// a test failure instead of a hung CI job. A panic inside the run is
+    /// propagated as itself (not misreported as a deadlock).
+    fn scale_run_watchdogged(lanes: usize) -> LiveOutcome {
+        use std::sync::mpsc::RecvTimeoutError;
+        let (tx, rx) = channel();
+        let h = std::thread::spawn(move || {
+            let _ = tx.send(scale_run(lanes));
+        });
+        match rx.recv_timeout(std::time::Duration::from_secs(180)) {
+            Ok(out) => {
+                h.join().unwrap();
+                out.unwrap()
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                panic!("live scale run ({lanes} lanes) deadlocked: no result within 180s")
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // The run thread died without sending — surface its panic.
+                match h.join() {
+                    Ok(()) => unreachable!("runner dropped the sender without a result"),
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        }
+    }
+
+    /// Min-of-2 wall clock per configuration, so one noisy-neighbor
+    /// stall on a shared CI runner can't fail the comparison alone.
+    fn best_scale_run(lanes: usize) -> LiveOutcome {
+        let a = scale_run_watchdogged(lanes);
+        let b = scale_run_watchdogged(lanes);
+        if b.wall_seconds < a.wall_seconds {
+            b
+        } else {
+            a
+        }
+    }
+
+    /// ROADMAP's live-driver scale test, CI-sized: 32 workers on 8 pool
+    /// lanes must (a) complete — no deadlock between the shared job
+    /// queue, the termination command, and the mix barrier — and (b) not
+    /// be slower than the identical run serialised on 1 lane (with slack
+    /// for CI runner noise). `cargo test --release -- --ignored live_scale`.
+    #[test]
+    #[ignore = "CI stress run (~1 min of real compute); cargo test -- --ignored live_scale"]
+    fn live_scale_32_workers_8_lanes() {
+        let pooled = best_scale_run(8);
+        assert_eq!(pooled.history.iters.len(), 6);
+        for rec in &pooled.history.iters {
+            assert!(rec.train_loss.is_finite(), "bad loss at k={}", rec.k);
+        }
+        let sequential = best_scale_run(1);
+        assert_eq!(sequential.history.iters.len(), 6);
+        println!(
+            "live scale 32w: pooled(8 lanes) {:.2}s vs sequential(1 lane) {:.2}s",
+            pooled.wall_seconds, sequential.wall_seconds
+        );
+        assert!(
+            pooled.wall_seconds <= sequential.wall_seconds * 1.15,
+            "pooled live run slower than sequential: {:.2}s vs {:.2}s",
+            pooled.wall_seconds,
+            sequential.wall_seconds
+        );
     }
 
     #[test]

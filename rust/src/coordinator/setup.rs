@@ -86,8 +86,10 @@ pub struct Setup {
     pub straggler_factor: f64,
     pub force_straggler: bool,
     pub backend: Backend,
-    /// Engine-pool lanes for parallel per-worker compute (0 = auto:
-    /// available hardware parallelism, capped at the worker count).
+    /// Engine-pool lanes for parallel per-worker work — the gradient
+    /// fan-out, eval batches, AND the eq. (6) mixing rows all ride the
+    /// same pool (0 = auto: available hardware parallelism, capped at
+    /// the worker count).
     pub threads: usize,
     pub train: TrainConfig,
 }
@@ -156,7 +158,8 @@ impl Setup {
 
     /// Effective pool size: the explicit `threads` setting, or (when 0)
     /// the machine's available parallelism capped at the worker count —
-    /// more lanes than workers can never be used by the sim driver.
+    /// neither the gradient fan-out nor the mixing phase can ever use
+    /// more lanes than there are workers in the sim driver.
     pub fn resolve_threads(&self) -> usize {
         if self.threads > 0 {
             return self.threads;

@@ -10,9 +10,11 @@
 //!
 //! Gradients fan out over the [`EnginePool`]: one engine per lane thread,
 //! one leased gradient buffer per worker, batches drawn from per-worker
-//! RNG streams split off the config seed. Because every job is a pure
-//! function of `(w_j, batch_j)` and all reductions run in worker order on
-//! the coordinator thread, a pooled run is **bit-identical** to a
+//! RNG streams split off the config seed. The eq. (6) mixing phase fans
+//! out over the same lanes (each worker's weighted row-sum is an
+//! independent borrowed-closure task). Because every job is a pure
+//! function of its inputs and all reductions run in worker order on the
+//! coordinator thread, a pooled run is **bit-identical** to a
 //! single-thread run — parallelism only changes the wall clock.
 
 use crate::consensus::mixing::ParamBuffers;
@@ -97,15 +99,20 @@ pub struct SimTrainer {
 }
 
 /// Compressed-gossip state: the operator + one error-feedback buffer per
-/// worker + the running wire-byte counter.
+/// worker + the running wire-byte counter. The operator is `Send + Sync`
+/// so the compress/reconstruct phase can fan over the engine pool.
 pub struct CompressionState {
-    pub comp: Box<dyn crate::consensus::compress::Compressor>,
+    pub comp: Box<dyn crate::consensus::compress::Compressor + Send + Sync>,
     pub efs: Vec<crate::consensus::compress::ErrorFeedback>,
     pub wire_bytes: usize,
 }
 
 impl CompressionState {
-    pub fn new(comp: Box<dyn crate::consensus::compress::Compressor>, n: usize, dim: usize) -> Self {
+    pub fn new(
+        comp: Box<dyn crate::consensus::compress::Compressor + Send + Sync>,
+        n: usize,
+        dim: usize,
+    ) -> Self {
         CompressionState {
             comp,
             efs: (0..n)
@@ -289,11 +296,19 @@ impl SimTrainer {
             } else {
                 let p = ConsensusMatrix::metropolis(&self.graph, &iter_plan.active);
                 debug_assert!(p.check_doubly_stochastic(1e-9).is_ok());
+                // Pooled variants fan the per-worker row-sums over the
+                // engine pool's lanes; with 1 lane they fall back to the
+                // sequential loops. Either way the result is bit-identical.
                 match self.compression.as_mut() {
                     Some(cs) => {
-                        cs.wire_bytes += self.params.mix_compressed(&p, &*cs.comp, &mut cs.efs);
+                        cs.wire_bytes += self.params.mix_compressed_pooled(
+                            &p,
+                            &*cs.comp,
+                            &mut cs.efs,
+                            &self.pool,
+                        )?;
                     }
-                    None => self.params.mix(&p),
+                    None => self.params.mix_pooled(&p, &self.pool)?,
                 }
             }
 
@@ -427,32 +442,78 @@ mod tests {
         assert!(ha.mean_iter_duration() < hb.mean_iter_duration());
     }
 
+    const ALL_ALGOS: [Algorithm; 5] = [
+        Algorithm::CbDybw,
+        Algorithm::CbFull,
+        Algorithm::CbStaticBackup { b: 2 },
+        Algorithm::PsSync,
+        Algorithm::PsBackup { b: 1 },
+    ];
+
+    /// Run `algo` at 1 lane and at 4 lanes (optionally with compressed
+    /// gossip) and assert the histories and final parameters are
+    /// bit-for-bit identical — at 4 lanes BOTH the gradient fan-out and
+    /// the eq. (6) mixing rows run pooled, so this covers the parallel
+    /// mixing path end to end.
+    fn assert_pool_size_invariant(algo: Algorithm, compressed: bool) {
+        use crate::consensus::compress::TopK;
+        let build = |threads: usize| {
+            let mut t = build_with_threads(algo, 20, 31, threads);
+            if compressed {
+                let dim = t.params().dim();
+                let n = t.params().n();
+                let comp = Box::new(TopK { k: dim / 4 });
+                t.compression = Some(CompressionState::new(comp, n, dim));
+            }
+            t
+        };
+        let mut t1 = build(1);
+        let mut t4 = build(4);
+        assert_eq!(t1.threads(), 1);
+        assert_eq!(t4.threads(), 4);
+        let h1 = t1.run().unwrap();
+        let h4 = t4.run().unwrap();
+        // every f64 in every iter/eval record, compared bit-for-bit
+        assert!(
+            h1.bits_eq(&h4),
+            "{algo:?} (compressed={compressed}) history diverged across pool sizes"
+        );
+        let (p1, p4) = (t1.average_params(), t4.average_params());
+        assert_eq!(p1.len(), p4.len());
+        for (x, y) in p1.iter().zip(&p4) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{algo:?} (compressed={compressed}) final params differ"
+            );
+        }
+        if compressed {
+            // wire accounting must not depend on the pool size either
+            let (w1, w4) = (
+                t1.compression.as_ref().unwrap().wire_bytes,
+                t4.compression.as_ref().unwrap().wire_bytes,
+            );
+            assert_eq!(w1, w4, "{algo:?} wire bytes diverged across pool sizes");
+        }
+    }
+
     /// Satellite of the engine-pool refactor: the number of pool lanes
     /// must not change a single bit of the history — losses, clocks, and
     /// final parameters — for any of the five algorithms.
     #[test]
     fn pooled_run_bit_identical_to_single_thread_all_algorithms() {
-        let algos = [
-            Algorithm::CbDybw,
-            Algorithm::CbFull,
-            Algorithm::CbStaticBackup { b: 2 },
-            Algorithm::PsSync,
-            Algorithm::PsBackup { b: 1 },
-        ];
-        for algo in algos {
-            let mut t1 = build_with_threads(algo, 20, 31, 1);
-            let mut t4 = build_with_threads(algo, 20, 31, 4);
-            assert_eq!(t1.threads(), 1);
-            assert_eq!(t4.threads(), 4);
-            let h1 = t1.run().unwrap();
-            let h4 = t4.run().unwrap();
-            // every f64 in every iter/eval record, compared bit-for-bit
-            assert!(h1.bits_eq(&h4), "{algo:?} history diverged across pool sizes");
-            let (p1, p4) = (t1.average_params(), t4.average_params());
-            assert_eq!(p1.len(), p4.len());
-            for (x, y) in p1.iter().zip(&p4) {
-                assert_eq!(x.to_bits(), y.to_bits(), "{algo:?} final params differ");
-            }
+        for algo in ALL_ALGOS {
+            assert_pool_size_invariant(algo, false);
+        }
+    }
+
+    /// Same invariant on the compressed eq. (6) branch: the pooled
+    /// compress→reconstruct→row-sum phases must match the sequential
+    /// loop bit for bit (and byte for byte on the wire counter).
+    #[test]
+    fn pooled_compressed_run_bit_identical_all_algorithms() {
+        for algo in ALL_ALGOS {
+            assert_pool_size_invariant(algo, true);
         }
     }
 

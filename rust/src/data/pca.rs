@@ -206,8 +206,7 @@ mod tests {
         assert_eq!(t.n(), 200);
         // projected data is (approximately) mean-centered
         for c in 0..3 {
-            let mean: f64 =
-                (0..t.n()).map(|i| t.row(i)[c] as f64).sum::<f64>() / t.n() as f64;
+            let mean: f64 = (0..t.n()).map(|i| t.row(i)[c] as f64).sum::<f64>() / t.n() as f64;
             assert!(mean.abs() < 0.2, "component {c} mean {mean}");
         }
     }

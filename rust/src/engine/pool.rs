@@ -9,20 +9,30 @@
 //!   thread, on that thread* — which is exactly what Rc-backed PJRT
 //!   handles require, and costs nothing for the native engines;
 //! - callers submit *borrowed* jobs (`&[f32]` params in, `&mut [f32]`
-//!   gradient out) and block until every lane has replied, so the hot
-//!   path never clones a parameter vector or allocates a gradient;
+//!   gradient out) and block until every job has been answered, so the
+//!   hot path never clones a parameter vector or allocates a gradient;
+//! - jobs go through a **shared queue** (`Mutex<Receiver>` the lanes pull
+//!   from), so uneven job sizes — the tail eval batch, a slow PJRT queue,
+//!   a heavyweight mixing row — load-balance across lanes instead of
+//!   idling behind a static `idx % threads` pin;
 //! - results are returned **in job order**, and each job is a pure
-//!   function of `(w, batch)` (engine scratch is reset per call), so a
+//!   function of its inputs (engine scratch is reset per call), so a
 //!   pooled run is bit-identical to a sequential one regardless of the
 //!   number of lanes or how jobs land on them.
+//!
+//! Besides engine work the pool runs *borrowed closures* ([`run_tasks`]):
+//! type-erased `FnMut` tasks that may point into the caller's frame. This
+//! is what the parallel eq. (6) mixing phase rides on — each task computes
+//! one worker's weighted row-sum into a disjoint output row.
 //!
 //! Lanes are persistent OS threads: engines (and their scratch / device
 //! buffers) live for the pool's lifetime, giving per-worker buffer reuse
 //! across iterations.
+//!
+//! [`run_tasks`]: EnginePool::run_tasks
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use super::{AnyBatch, GradEngine};
@@ -37,9 +47,9 @@ pub type EngineFactory = Arc<dyn Fn() -> anyhow::Result<Box<dyn GradEngine>> + S
 // ---------------------------------------------------------------------------
 
 /// Raw view of caller-owned memory. Safe to send because every pool entry
-/// point blocks until all lanes serving the call have dropped their reply
-/// sender (i.e. finished or died), so the pointee strictly outlives every
-/// dereference on the lane side.
+/// point blocks until every job's reply sender has been dropped (i.e. the
+/// job finished, or it was destroyed unprocessed), so the pointee strictly
+/// outlives every dereference on the lane side.
 struct RawSlice {
     ptr: *const f32,
     len: usize,
@@ -85,23 +95,65 @@ impl RawBatch {
     }
 }
 
-enum JobKind {
-    /// Write the flat gradient into the leased buffer, return the loss.
-    Grad(RawSliceMut),
-    /// Loss + correct count, no gradient.
-    Eval,
+/// Type-erased borrowed closure: a thin data pointer plus a monomorphised
+/// trampoline, so non-`'static` tasks cross the channel without boxing.
+/// The lifetime argument is the same as [`RawSlice`]'s: the submitting
+/// call blocks until the job is answered or provably destroyed.
+struct RawTask {
+    data: *mut u8,
+    call: unsafe fn(*mut u8) -> anyhow::Result<()>,
+}
+unsafe impl Send for RawTask {}
+
+impl RawTask {
+    fn of<F>(f: &mut F) -> Self
+    where
+        F: FnMut() -> anyhow::Result<()> + Send,
+    {
+        unsafe fn trampoline<F>(p: *mut u8) -> anyhow::Result<()>
+        where
+            F: FnMut() -> anyhow::Result<()>,
+        {
+            (*(p as *mut F))()
+        }
+        RawTask { data: f as *mut F as *mut u8, call: trampoline::<F> }
+    }
+
+    /// SAFETY: caller (the pool) guarantees the closure is still live and
+    /// that no other lane holds this same task.
+    unsafe fn invoke(&self) -> anyhow::Result<()> {
+        (self.call)(self.data)
+    }
 }
 
-struct Job {
-    idx: usize,
-    w: RawSlice,
-    batch: RawBatch,
-    kind: JobKind,
+enum JobKind {
+    /// Write the flat gradient into the leased buffer, return the loss.
+    Grad {
+        w: RawSlice,
+        batch: RawBatch,
+        out: RawSliceMut,
+    },
+    /// Loss + correct count, no gradient.
+    Eval { w: RawSlice, batch: RawBatch },
+    /// Generic non-engine work (e.g. one eq. (6) mixing row).
+    Task(RawTask),
 }
 
 enum JobOut {
     Grad(f32),
     Eval(f32, usize),
+    Unit,
+}
+
+/// One queued unit of work. Each job carries its own clone of the
+/// submitting call's reply sender; the clone is dropped when the job has
+/// been answered — or when the job is destroyed unprocessed (failed send,
+/// queue torn down) — which is what lets the submitter prove no lane
+/// still holds a pointer into its frame.
+struct Job {
+    idx: usize,
+    kind: JobKind,
+    reply: Sender<Done>,
 }
 
 struct Done {
@@ -109,23 +161,19 @@ struct Done {
     out: anyhow::Result<JobOut>,
 }
 
-struct RunMsg {
-    jobs: Vec<Job>,
-    reply: Sender<Done>,
-}
-
 // ---------------------------------------------------------------------------
 // the pool
 // ---------------------------------------------------------------------------
 
-/// Fixed set of lane threads, one engine per lane.
+/// Fixed set of lane threads pulling from one shared job queue; one
+/// engine per lane.
 pub struct EnginePool {
-    lanes: Vec<Sender<RunMsg>>,
+    /// Submission side of the shared queue (`None` only during drop).
+    queue: Option<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
+    threads: usize,
     param_count: usize,
     backend: &'static str,
-    /// Round-robin cursor for single-job submissions (live mode).
-    rr: AtomicUsize,
 }
 
 impl EnginePool {
@@ -133,8 +181,8 @@ impl EnginePool {
     /// joins already-spawned lanes) if any factory invocation fails.
     pub fn new(factory: EngineFactory, threads: usize) -> anyhow::Result<EnginePool> {
         anyhow::ensure!(threads > 0, "engine pool needs >= 1 thread");
-        let mut lanes = Vec::with_capacity(threads);
-        let mut handles = Vec::with_capacity(threads);
+        let (queue_tx, queue_rx) = channel::<Job>();
+        let shared_rx = Arc::new(Mutex::new(queue_rx));
         let (init_tx, init_rx) = channel::<anyhow::Result<(usize, &'static str)>>();
         // Share the machine between lane-level and kernel-level
         // parallelism: each lane's GEMMs may use at most cores/T scoped
@@ -145,18 +193,30 @@ impl EnginePool {
             .unwrap_or(1)
             / threads)
             .max(1);
+        let mut handles = Vec::with_capacity(threads);
         for lane in 0..threads {
-            let (tx, rx) = channel::<RunMsg>();
             let factory = Arc::clone(&factory);
             let init_tx = init_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("dybw-lane-{lane}"))
-                    .spawn(move || lane_loop(factory, init_tx, rx, kernel_cap))?,
-            );
-            lanes.push(tx);
+            let shared_rx = Arc::clone(&shared_rx);
+            let spawned = std::thread::Builder::new()
+                .name(format!("dybw-lane-{lane}"))
+                .spawn(move || lane_loop(factory, init_tx, shared_rx, kernel_cap));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Same no-orphaned-threads guarantee as the
+                    // init-failure path below: hang up the queue and join
+                    // the lanes that did spawn before surfacing the error.
+                    drop(queue_tx);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    anyhow::bail!("failed to spawn engine pool lane {lane}: {e}");
+                }
+            }
         }
         drop(init_tx);
+        drop(shared_rx); // only the lanes hold the queue receiver now
         let mut param_count = 0usize;
         let mut backend: &'static str = "?";
         for _ in 0..threads {
@@ -172,7 +232,7 @@ impl EnginePool {
                 Err(e) => {
                     // hang up and join the lanes that did come up before
                     // surfacing the failure — no orphaned threads.
-                    drop(lanes);
+                    drop(queue_tx);
                     for h in handles {
                         let _ = h.join();
                     }
@@ -181,16 +241,46 @@ impl EnginePool {
             }
         }
         Ok(EnginePool {
-            lanes,
+            queue: Some(queue_tx),
             handles,
+            threads,
             param_count,
             backend,
-            rr: AtomicUsize::new(0),
         })
     }
 
+    /// Lanes-only pool for borrowed-closure work ([`run_tasks`]): no real
+    /// engine is built, and grad/eval jobs error. For harnesses and
+    /// benches that need the shared-queue scheduler, not the engines.
+    ///
+    /// [`run_tasks`]: Self::run_tasks
+    pub fn tasks_only(threads: usize) -> anyhow::Result<EnginePool> {
+        struct NullEngine;
+        impl GradEngine for NullEngine {
+            fn param_count(&self) -> usize {
+                0
+            }
+            fn grad_into(
+                &mut self,
+                _w: &[f32],
+                _batch: &AnyBatch,
+                _grad_out: &mut [f32],
+            ) -> anyhow::Result<f32> {
+                anyhow::bail!("tasks-only pool has no engine")
+            }
+            fn eval(&mut self, _w: &[f32], _batch: &AnyBatch) -> anyhow::Result<(f32, usize)> {
+                anyhow::bail!("tasks-only pool has no engine")
+            }
+            fn backend(&self) -> &'static str {
+                "tasks-only"
+            }
+        }
+        let factory: EngineFactory = Arc::new(|| Ok(Box::new(NullEngine) as Box<dyn GradEngine>));
+        EnginePool::new(factory, threads)
+    }
+
     pub fn threads(&self) -> usize {
-        self.lanes.len()
+        self.threads
     }
 
     pub fn param_count(&self) -> usize {
@@ -216,154 +306,142 @@ impl EnginePool {
             "grad_many: mismatched job arity"
         );
         let mut outs = grad_outs.iter_mut();
-        let jobs = ws
+        let kinds = ws
             .iter()
             .zip(batches)
-            .enumerate()
-            .map(|(idx, (w, batch))| Job {
-                idx,
+            .map(|(w, batch)| JobKind::Grad {
                 w: RawSlice::of(w),
                 batch: RawBatch::of(batch),
-                kind: JobKind::Grad(RawSliceMut::of(outs.next().unwrap())),
+                out: RawSliceMut::of(outs.next().unwrap()),
             })
             .collect();
-        let results = self.run_jobs(jobs)?;
+        let results = self.run_jobs(kinds)?;
         results
             .into_iter()
             .map(|out| match out {
                 JobOut::Grad(loss) => Ok(loss),
-                JobOut::Eval(..) => unreachable!("grad job returned eval result"),
+                _ => unreachable!("grad job returned non-grad result"),
             })
             .collect()
     }
 
     /// Evaluate one parameter vector over many batches in parallel;
     /// `(loss, correct)` pairs come back in batch order.
-    pub fn eval_many(
-        &self,
-        w: &[f32],
-        batches: &[AnyBatch],
-    ) -> anyhow::Result<Vec<(f32, usize)>> {
-        let jobs = batches
+    pub fn eval_many(&self, w: &[f32], batches: &[AnyBatch]) -> anyhow::Result<Vec<(f32, usize)>> {
+        let kinds = batches
             .iter()
-            .enumerate()
-            .map(|(idx, batch)| Job {
-                idx,
+            .map(|batch| JobKind::Eval {
                 w: RawSlice::of(w),
                 batch: RawBatch::of(batch),
-                kind: JobKind::Eval,
             })
             .collect();
-        let results = self.run_jobs(jobs)?;
+        let results = self.run_jobs(kinds)?;
         results
             .into_iter()
             .map(|out| match out {
                 JobOut::Eval(loss, correct) => Ok((loss, correct)),
-                JobOut::Grad(_) => unreachable!("eval job returned grad result"),
+                _ => unreachable!("eval job returned non-eval result"),
             })
             .collect()
     }
 
-    /// One gradient on the next lane (round-robin); blocks until done.
+    /// Run independent borrowed closures across the lanes (non-engine
+    /// work — e.g. the parallel eq. (6) mixing rows), blocking until all
+    /// of them have finished. Task `i` runs exactly once, on whichever
+    /// lane pulls it; errors surface lowest-index-first. Tasks may borrow
+    /// caller state: the blocking-drain invariant of [`run_jobs`] is what
+    /// makes handing their raw pointers to the lanes sound.
+    ///
+    /// [`run_jobs`]: Self::run_jobs
+    pub fn run_tasks<F>(&self, tasks: &mut [F]) -> anyhow::Result<()>
+    where
+        F: FnMut() -> anyhow::Result<()> + Send,
+    {
+        let kinds = tasks
+            .iter_mut()
+            .map(|f| JobKind::Task(RawTask::of(f)))
+            .collect();
+        self.run_jobs(kinds).map(|_| ())
+    }
+
+    /// One gradient on whichever lane is free first; blocks until done.
     /// This is the live-mode entry point — many worker threads may call
-    /// it concurrently.
+    /// it concurrently, and the shared queue hands each request to the
+    /// next idle lane (no static worker→lane affinity).
     pub fn grad_one(
         &self,
         w: &[f32],
         batch: &AnyBatch,
         grad_out: &mut [f32],
     ) -> anyhow::Result<f32> {
-        let job = Job {
-            idx: 0,
+        let kind = JobKind::Grad {
             w: RawSlice::of(w),
             batch: RawBatch::of(batch),
-            kind: JobKind::Grad(RawSliceMut::of(grad_out)),
+            out: RawSliceMut::of(grad_out),
         };
-        match self.run_on_lane(self.next_lane(), vec![job])?.pop() {
+        match self.run_jobs(vec![kind])?.pop() {
             Some(JobOut::Grad(loss)) => Ok(loss),
             _ => anyhow::bail!("engine pool returned no result"),
         }
     }
 
-    /// One evaluation on the next lane (round-robin); blocks until done.
+    /// One evaluation on whichever lane is free first; blocks until done.
     pub fn eval_one(&self, w: &[f32], batch: &AnyBatch) -> anyhow::Result<(f32, usize)> {
-        let job = Job {
-            idx: 0,
+        let kind = JobKind::Eval {
             w: RawSlice::of(w),
             batch: RawBatch::of(batch),
-            kind: JobKind::Eval,
         };
-        match self.run_on_lane(self.next_lane(), vec![job])?.pop() {
+        match self.run_jobs(vec![kind])?.pop() {
             Some(JobOut::Eval(loss, correct)) => Ok((loss, correct)),
             _ => anyhow::bail!("engine pool returned no result"),
         }
     }
 
-    fn next_lane(&self) -> usize {
-        self.rr.fetch_add(1, Ordering::Relaxed) % self.lanes.len()
-    }
-
-    /// Distribute jobs round-robin (job i -> lane i % T, so worker j gets
-    /// a stable lane across iterations) and block for all replies.
+    /// Push jobs onto the shared queue (any lane may pull any job) and
+    /// block for all replies, returned in job order.
     ///
     /// Soundness invariant: this function NEVER returns — not even on the
-    /// error paths — until every lane that was handed jobs has dropped its
-    /// reply sender, i.e. no lane still holds a raw pointer into the
-    /// caller's frame. A send to a dead lane therefore does not return
-    /// early; the jobs meant for it are dropped unused and the error is
-    /// reported only after the surviving lanes have been drained.
-    fn run_jobs(&self, jobs: Vec<Job>) -> anyhow::Result<Vec<JobOut>> {
-        let expected = jobs.len();
-        let threads = self.lanes.len();
-        let mut per_lane: Vec<Vec<Job>> = (0..threads).map(|_| Vec::new()).collect();
-        for job in jobs {
-            per_lane[job.idx % threads].push(job);
+    /// error paths — until every job's reply sender is gone, i.e. every
+    /// job either finished on some lane or was destroyed unprocessed. A
+    /// failed send returns (and drops) its job without any lane having
+    /// seen it; jobs stranded in the queue when the lanes die are dropped
+    /// by the queue receiver's destructor. Either way [`collect`] observes
+    /// the hang-up and no lane still holds a pointer into the caller's
+    /// frame when this returns.
+    ///
+    /// [`collect`]: Self::collect
+    fn run_jobs(&self, kinds: Vec<JobKind>) -> anyhow::Result<Vec<JobOut>> {
+        let expected = kinds.len();
+        if expected == 0 {
+            return Ok(Vec::new());
         }
+        let queue = self.queue.as_ref().expect("engine pool queue alive");
         let (reply, results_rx) = channel::<Done>();
-        let mut sent = 0usize;
-        let mut dead_lane = None;
-        for (lane, batch) in per_lane.into_iter().enumerate() {
-            if batch.is_empty() {
-                continue;
-            }
-            let count = batch.len();
-            match self.lanes[lane].send(RunMsg { jobs: batch, reply: reply.clone() }) {
-                Ok(()) => sent += count,
-                // the failed send returns (and drops) the jobs unused
-                Err(_) => dead_lane = Some(lane),
+        let mut all_sent = true;
+        for (idx, kind) in kinds.into_iter().enumerate() {
+            let job = Job { idx, kind, reply: reply.clone() };
+            if queue.send(job).is_err() {
+                // every lane is gone; the failed send returned (and
+                // dropped) this job, and the remaining kinds are dropped
+                // with the iterator — none of them reached a lane.
+                all_sent = false;
+                break;
             }
         }
         drop(reply);
-        let results = Self::collect(results_rx, expected, sent);
-        if let Some(lane) = dead_lane {
-            anyhow::bail!("engine pool lane {lane} is gone");
-        }
+        let results = Self::collect(results_rx, expected);
+        anyhow::ensure!(all_sent, "engine pool lanes are gone");
         results
     }
 
-    fn run_on_lane(&self, lane: usize, jobs: Vec<Job>) -> anyhow::Result<Vec<JobOut>> {
-        let expected = jobs.len();
-        let (reply, results_rx) = channel::<Done>();
-        // A failed send returns the jobs without any lane having seen
-        // them, so returning immediately is sound here (single lane).
-        self.lanes[lane]
-            .send(RunMsg { jobs, reply })
-            .map_err(|_| anyhow::anyhow!("engine pool lane {lane} is gone"))?;
-        Self::collect(results_rx, expected, expected)
-    }
-
-    /// Drain up to `expected` replies into `slots_len` job slots. The
-    /// recv loop only ends once every lane serving this call has dropped
-    /// its reply sender, which is what makes handing raw borrows to the
-    /// lanes sound: when this returns, no lane still holds a pointer into
-    /// the caller's frame.
-    fn collect(
-        results_rx: Receiver<Done>,
-        slots_len: usize,
-        expected: usize,
-    ) -> anyhow::Result<Vec<JobOut>> {
-        let mut slots: Vec<Option<anyhow::Result<JobOut>>> =
-            (0..slots_len).map(|_| None).collect();
+    /// Drain replies until every job is answered or every reply sender is
+    /// gone. The recv loop only ends once no lane (and no queue slot) can
+    /// still reach this call's jobs, which is what makes handing raw
+    /// borrows to the lanes sound: when this returns, no pointer into the
+    /// caller's frame survives outside it.
+    fn collect(results_rx: Receiver<Done>, expected: usize) -> anyhow::Result<Vec<JobOut>> {
+        let mut slots: Vec<Option<anyhow::Result<JobOut>>> = Vec::new();
+        slots.resize_with(expected, || None);
         let mut received = 0usize;
         while received < expected {
             match results_rx.recv() {
@@ -375,11 +453,11 @@ impl EnginePool {
             }
         }
         anyhow::ensure!(
-            received == expected && expected == slots_len,
-            "engine pool lane died mid-call ({received}/{slots_len} jobs completed)"
+            received == expected,
+            "engine pool lane died mid-call ({received}/{expected} jobs completed)"
         );
         // surface the lowest-index error (deterministic) or unwrap all
-        let mut out = Vec::with_capacity(slots_len);
+        let mut out = Vec::with_capacity(expected);
         for slot in slots {
             out.push(slot.expect("collect counted a missing slot")?);
         }
@@ -389,7 +467,7 @@ impl EnginePool {
 
 impl Drop for EnginePool {
     fn drop(&mut self) {
-        self.lanes.clear(); // hang up -> lanes exit their recv loop
+        self.queue = None; // hang up -> lanes exit their recv loop
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -399,7 +477,7 @@ impl Drop for EnginePool {
 fn lane_loop(
     factory: EngineFactory,
     init_tx: Sender<anyhow::Result<(usize, &'static str)>>,
-    rx: Receiver<RunMsg>,
+    queue: Arc<Mutex<Receiver<Job>>>,
     kernel_cap: usize,
 ) {
     // Bit-identical at any cap — this is purely a scheduling choice.
@@ -415,22 +493,37 @@ fn lane_loop(
         }
     };
     drop(init_tx);
-    for RunMsg { jobs, reply } in rx {
-        for job in jobs {
-            // SAFETY: the submitting pool call blocks until this lane's
-            // `reply` clone is dropped, so `w`, `batch`, and the grad
-            // buffer are live for the duration of this dereference.
-            let out = unsafe {
-                let w = job.w.get();
-                let batch = job.batch.get();
-                match job.kind {
-                    JobKind::Grad(g) => engine.grad_into(w, batch, g.get()).map(JobOut::Grad),
-                    JobKind::Eval => engine.eval(w, batch).map(|(l, c)| JobOut::Eval(l, c)),
-                }
+    loop {
+        // Pull the next job from the shared queue. Holding the lock
+        // across the blocking recv is deliberate: an idle lane parks
+        // inside recv with the lock held, peers park on the mutex, and
+        // each arriving job wakes exactly one lane. A poisoned lock (a
+        // peer panicked mid-pull) still yields a usable receiver.
+        let job = {
+            let rx = match queue.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
             };
-            let _ = reply.send(Done { idx: job.idx, out });
-        }
-        // `reply` drops here: the caller sees this lane as done.
+            rx.recv()
+        };
+        let Ok(Job { idx, kind, reply }) = job else {
+            break; // pool hung up
+        };
+        // SAFETY: the submitting pool call blocks until this job's
+        // `reply` clone is dropped, so every raw pointer in `kind` is
+        // live for the duration of this dereference.
+        let out = unsafe {
+            match kind {
+                JobKind::Grad { w, batch, out } => {
+                    engine.grad_into(w.get(), batch.get(), out.get()).map(JobOut::Grad)
+                }
+                JobKind::Eval { w, batch } => {
+                    engine.eval(w.get(), batch.get()).map(|(l, c)| JobOut::Eval(l, c))
+                }
+                JobKind::Task(task) => task.invoke().map(|_| JobOut::Unit),
+            }
+        };
+        let _ = reply.send(Done { idx, out });
     }
 }
 
@@ -536,6 +629,82 @@ mod tests {
     }
 
     #[test]
+    fn run_tasks_executes_every_closure_exactly_once() {
+        let (meta, ..) = fixture(0);
+        let pool = EnginePool::new(native_factory(meta), 3).unwrap();
+        // Borrowed output slots: each task writes its own, none may race.
+        let mut slots = vec![0u64; 17];
+        {
+            let mut tasks: Vec<_> = slots
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| {
+                    move || -> anyhow::Result<()> {
+                        *slot += (i as u64 + 1) * 3;
+                        Ok(())
+                    }
+                })
+                .collect();
+            pool.run_tasks(&mut tasks).unwrap();
+        }
+        for (i, &v) in slots.iter().enumerate() {
+            assert_eq!(v, (i as u64 + 1) * 3, "task {i} ran {v} times the increment");
+        }
+    }
+
+    #[test]
+    fn run_tasks_surfaces_lowest_index_error() {
+        let (meta, w, batches) = fixture(2);
+        let pool = EnginePool::new(native_factory(meta.clone()), 2).unwrap();
+        let mut tasks: Vec<_> = (0..6)
+            .map(|i| {
+                move || -> anyhow::Result<()> {
+                    anyhow::ensure!(i % 2 == 0, "task {i} failed");
+                    Ok(())
+                }
+            })
+            .collect();
+        let err = pool.run_tasks(&mut tasks).unwrap_err();
+        assert!(err.to_string().contains("task 1 failed"), "{err}");
+        // the SAME pool survives task errors: its lanes still serve both
+        // further tasks and engine work
+        let mut again: Vec<_> = (0..3).map(|_| || -> anyhow::Result<()> { Ok(()) }).collect();
+        assert!(pool.run_tasks(&mut again).is_ok());
+        let ws: Vec<&[f32]> = (0..2).map(|_| w.as_slice()).collect();
+        let mut outs = vec![vec![0.0f32; meta.param_count]; 2];
+        assert!(pool.grad_many(&ws, &batches, &mut outs).is_ok());
+    }
+
+    #[test]
+    fn uneven_tasks_load_balance_across_lanes() {
+        // One deliberately slow task plus many fast ones: with a shared
+        // queue the fast tasks drain on the other lane while the slow one
+        // occupies its lane; with static pinning half of them would queue
+        // behind the sleeper. Assert correctness (everything ran) — the
+        // scheduling itself is what the wall-clock benches measure.
+        let (meta, ..) = fixture(0);
+        let pool = EnginePool::new(native_factory(meta), 2).unwrap();
+        let mut hits = vec![0u32; 9];
+        {
+            let mut tasks: Vec<_> = hits
+                .iter_mut()
+                .enumerate()
+                .map(|(i, h)| {
+                    move || -> anyhow::Result<()> {
+                        if i == 0 {
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                        }
+                        *h += 1;
+                        Ok(())
+                    }
+                })
+                .collect();
+            pool.run_tasks(&mut tasks).unwrap();
+        }
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
     fn factory_failure_surfaces_at_construction() {
         let factory: EngineFactory = Arc::new(|| anyhow::bail!("no engine for you"));
         let err = EnginePool::new(factory, 2).unwrap_err();
@@ -568,5 +737,29 @@ mod tests {
     fn zero_threads_rejected() {
         let (meta, ..) = fixture(0);
         assert!(EnginePool::new(native_factory(meta), 0).is_err());
+        assert!(EnginePool::tasks_only(0).is_err());
+    }
+
+    #[test]
+    fn tasks_only_pool_runs_closures_but_rejects_engine_work() {
+        let pool = EnginePool::tasks_only(2).unwrap();
+        assert_eq!(pool.backend(), "tasks-only");
+        let mut total = vec![0u32; 5];
+        let mut tasks: Vec<_> = total
+            .iter_mut()
+            .map(|t| {
+                move || -> anyhow::Result<()> {
+                    *t += 1;
+                    Ok(())
+                }
+            })
+            .collect();
+        pool.run_tasks(&mut tasks).unwrap();
+        drop(tasks);
+        assert!(total.iter().all(|&t| t == 1));
+        let (_, w, batches) = fixture(1);
+        let mut g = vec![0.0f32; 1];
+        let err = pool.grad_one(&w, &batches[0], &mut g).unwrap_err();
+        assert!(err.to_string().contains("no engine"), "{err}");
     }
 }

@@ -50,6 +50,13 @@ impl ComputeClient {
     pub fn eval(&self, w: &[f32], batch: &AnyBatch) -> anyhow::Result<(f32, usize)> {
         self.pool.eval_one(w, batch)
     }
+
+    /// Evaluate one parameter vector over many batches, fanned across the
+    /// pool's lanes; `(loss, correct)` pairs come back in batch order, so
+    /// reductions over them are deterministic regardless of lane count.
+    pub fn eval_many(&self, w: &[f32], batches: &[AnyBatch]) -> anyhow::Result<Vec<(f32, usize)>> {
+        self.pool.eval_many(w, batches)
+    }
 }
 
 /// The server; dropping it (after all clients) joins the lane threads.
@@ -131,8 +138,7 @@ mod tests {
 
     #[test]
     fn factory_failure_propagates() {
-        let factory: crate::engine::EngineFactory =
-            std::sync::Arc::new(|| anyhow::bail!("nope"));
+        let factory: crate::engine::EngineFactory = std::sync::Arc::new(|| anyhow::bail!("nope"));
         assert!(ComputeServer::spawn(factory, 2).is_err());
     }
 }

@@ -67,7 +67,7 @@ pub fn compression(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<
         (iters * exact_bytes_per_round) as f64 / 1e6,
         "-"
     ));
-    let schemes: Vec<(String, Box<dyn Compressor>)> = vec![
+    let schemes: Vec<(String, Box<dyn Compressor + Send + Sync>)> = vec![
         ("top-10%".into(), Box::new(TopK { k: dim / 10 })),
         ("top-25%".into(), Box::new(TopK { k: dim / 4 })),
         ("8-bit".into(), Box::new(QuantizeBits { bits: 8 })),
@@ -108,7 +108,8 @@ pub fn baselines(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<St
         Algorithm::PsBackup { b: 2 },
     ];
     let target = 0.55;
-    let mut out = String::from("=== Baselines: algorithms at fixed workload (LRM, 6 workers) ===\n");
+    let mut out =
+        String::from("=== Baselines: algorithms at fixed workload (LRM, 6 workers) ===\n");
     out.push_str(&format!(
         "{:>16} | {:>10} {:>12} {:>12} {:>14} {:>12}\n",
         "algorithm", "final err%", "final loss", "mean T(k)", "time to loss", "total time"
@@ -165,7 +166,9 @@ pub fn topology(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<Str
             e.consensus_error
         ));
     }
-    out.push_str("(denser graphs mix faster — smaller consensus error — but wait on more links)\n");
+    out.push_str(
+        "(denser graphs mix faster — smaller consensus error — but wait on more links)\n",
+    );
     Ok(out)
 }
 

@@ -219,8 +219,24 @@ pub fn fig7(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String>
         (DatasetProfile::MnistLike, 0.5),
         (DatasetProfile::CifarLike, 2.2),
     ] {
-        let dybw = run_cell(&b10, Algorithm::CbDybw, dataset, "lrm_d64_c10_b256", iters, out_dir, "fig7")?;
-        let full = run_cell(&b10, Algorithm::CbFull, dataset, "lrm_d64_c10_b256", iters, out_dir, "fig7")?;
+        let dybw = run_cell(
+            &b10,
+            Algorithm::CbDybw,
+            dataset,
+            "lrm_d64_c10_b256",
+            iters,
+            out_dir,
+            "fig7",
+        )?;
+        let full = run_cell(
+            &b10,
+            Algorithm::CbFull,
+            dataset,
+            "lrm_d64_c10_b256",
+            iters,
+            out_dir,
+            "fig7",
+        )?;
         out.push_str(&format!("\n--- {} ---\n", dataset.name()));
         out.push_str(&render_time_table(&dybw, &full, &[target]));
     }

@@ -10,22 +10,30 @@
 //! The second section measures the *system* speedup delivered by the
 //! [`EnginePool`](crate::engine::EnginePool) refactor: identical 16-worker
 //! 2NN training (bit-identical histories), sequential (1 lane) vs pooled
-//! (4 lanes), reported as wall-clock seconds and written to
-//! `BENCH_speedup.json` so CI can track the perf trajectory.
+//! (4 lanes), plus the eq. (6) mixing phase in isolation (sequential loop
+//! vs pooled row fan-out at figure-scale dimension), all reported as
+//! wall-clock seconds and written to `BENCH_speedup.json` so CI can track
+//! the perf trajectory. [`gate`] turns that JSON into a regression gate
+//! against a committed baseline.
 
 use std::path::Path;
 use std::time::Instant;
 
+use crate::consensus::mixing::ParamBuffers;
+use crate::consensus::ConsensusMatrix;
 use crate::coordinator::setup::Setup;
 use crate::coordinator::Algorithm;
+use crate::engine::EnginePool;
 use crate::metrics::export;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 pub fn run(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
     let ns: &[usize] = if quick { &[2, 4] } else { &[2, 4, 6, 8, 12, 16] };
     let iters = if quick { 60 } else { 400 };
     let target = 0.55; // test loss target for the easy LRM task
-    let mut out = String::from("=== Linear speedup (Corollary 2/3): iterations to target vs N ===\n");
+    let mut out =
+        String::from("=== Linear speedup (Corollary 2/3): iterations to target vs N ===\n");
     out.push_str(&format!(
         "{:>4} | {:>12} {:>10} {:>12} {:>14}\n",
         "N", "iters to", "N x K", "final loss", "mean T(k) (s)"
@@ -92,8 +100,23 @@ pub fn pool_wall_clock(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Res
         let h = trainer.run()?;
         Ok((t0.elapsed().as_secs_f64(), h))
     };
-    let (seq_s, seq_h) = timed(1)?;
-    let (pool_s, pool_h) = timed(POOL_THREADS)?;
+    // Best-of-3 wall clock in release (where CI gates on the ratio):
+    // repetitions are bit-identical (fresh trainer, same seed — enforced),
+    // only the clock varies, and min rejects shared-runner noise. Debug
+    // builds (the plain `cargo test` path) take one sample — the numbers
+    // are not gated there and the naive-loop repetitions would be slow.
+    let reps = if cfg!(debug_assertions) { 1 } else { 3 };
+    let best = |threads: usize| -> anyhow::Result<(f64, crate::metrics::RunHistory)> {
+        let (mut best_s, h) = timed(threads)?;
+        for _ in 1..reps {
+            let (s2, h2) = timed(threads)?;
+            anyhow::ensure!(h.bits_eq(&h2), "repeated speedup runs diverged (nondeterminism)");
+            best_s = best_s.min(s2);
+        }
+        Ok((best_s, h))
+    };
+    let (seq_s, seq_h) = best(1)?;
+    let (pool_s, pool_h) = best(POOL_THREADS)?;
     let speedup = seq_s / pool_s.max(1e-12);
     let identical = seq_h.bits_eq(&pool_h);
     let seq_loss = seq_h.iters.last().map(|r| r.train_loss).unwrap_or(f64::NAN);
@@ -116,6 +139,9 @@ pub fn pool_wall_clock(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Res
         "  bit-identical history : {identical}  (final train loss {seq_loss:.6} vs {pool_loss:.6})\n"
     ));
 
+    let mix = mix_phase(quick)?;
+    out.push_str(&mix.report());
+
     let mut j = Json::obj();
     j.set("bench", "pool_speedup".into())
         .set("model", s.model.as_str().into())
@@ -130,11 +156,201 @@ pub fn pool_wall_clock(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Res
         .set("seq_seconds", seq_s.into())
         .set("pool_seconds", pool_s.into())
         .set("speedup", speedup.into())
-        .set("bit_identical", identical.into());
+        .set("bit_identical", identical.into())
+        .set("mix_workers", mix.n.into())
+        .set("mix_dim", mix.dim.into())
+        .set("mix_rounds", mix.rounds.into())
+        .set("mix_threads", mix.threads.into())
+        .set("mix_seq_seconds", mix.seq_s.into())
+        .set("mix_pool_seconds", mix.pool_s.into())
+        .set("mix_speedup", mix.speedup.into())
+        .set("mix_bit_identical", mix.identical.into());
     std::fs::create_dir_all(out_dir)?;
     let path = out_dir.join("BENCH_speedup.json");
     std::fs::write(&path, j.to_string())?;
     out.push_str(&format!("(bench JSON -> {})\n", path.display()));
+    Ok(out)
+}
+
+/// Result of the mix-phase sequential-vs-pooled measurement.
+struct MixPhase {
+    n: usize,
+    dim: usize,
+    rounds: usize,
+    threads: usize,
+    seq_s: f64,
+    pool_s: f64,
+    speedup: f64,
+    identical: bool,
+}
+
+impl MixPhase {
+    fn report(&self) -> String {
+        let mut out =
+            String::from("=== Mixing-phase wall clock: sequential vs pooled eq. (6) ===\n");
+        out.push_str(&format!(
+            "workload: {} workers x {} params x {} rounds (Metropolis, full participation)\n",
+            self.n, self.dim, self.rounds
+        ));
+        out.push_str(&format!("  sequential loop       : {:.3}s wall\n", self.seq_s));
+        out.push_str(&format!(
+            "  pooled ({} lanes)      : {:.3}s wall\n",
+            self.threads, self.pool_s
+        ));
+        out.push_str(&format!("  speedup               : {:.2}x\n", self.speedup));
+        out.push_str(&format!("  bit-identical params  : {}\n", self.identical));
+        out
+    }
+}
+
+/// Time `rounds` eq. (6) mixing rounds at figure-scale dimension, once
+/// through the sequential loop and once fanned over a 4-lane pool, and
+/// verify the two parameter states match bit for bit.
+fn mix_phase(quick: bool) -> anyhow::Result<MixPhase> {
+    const POOL_THREADS: usize = 4;
+    let n = 16usize;
+    let dim = if quick { 262_144 } else { 1_048_576 };
+    let rounds = if quick { 12 } else { 40 };
+    let mut rng = Rng::new(17);
+    let g = crate::graph::topology::random_connected(n, 0.4, &mut rng);
+    let pm = ConsensusMatrix::metropolis_full(&g);
+    let init: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+
+    // Best-of-3 wall clock, same rationale as `pool_wall_clock`: every
+    // repetition is bit-identical (same init, same P), only the clock
+    // varies, and min rejects shared-runner noise.
+    let run_rounds = |pool: Option<&EnginePool>| -> anyhow::Result<(f64, ParamBuffers)> {
+        let mut bufs = ParamBuffers::from_initial(init.clone());
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            match pool {
+                Some(pool) => bufs.mix_pooled(&pm, pool)?,
+                None => bufs.mix(&pm),
+            }
+        }
+        Ok((t0.elapsed().as_secs_f64(), bufs))
+    };
+    let reps = if cfg!(debug_assertions) { 1 } else { 3 };
+    let best = |pool: Option<&EnginePool>| -> anyhow::Result<(f64, ParamBuffers)> {
+        let (mut best_s, bufs) = run_rounds(pool)?;
+        for _ in 1..reps {
+            let (s2, b2) = run_rounds(pool)?;
+            for j in 0..bufs.n() {
+                anyhow::ensure!(
+                    bufs.get(j).iter().zip(b2.get(j)).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "repeated mix runs diverged (nondeterminism)"
+                );
+            }
+            best_s = best_s.min(s2);
+        }
+        Ok((best_s, bufs))
+    };
+    let (seq_s, seq) = best(None)?;
+    let pool = EnginePool::tasks_only(POOL_THREADS)?;
+    let (pool_s, par) = best(Some(&pool))?;
+
+    let identical = (0..n).all(|j| {
+        seq.get(j)
+            .iter()
+            .zip(par.get(j))
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+    });
+    Ok(MixPhase {
+        n,
+        dim,
+        rounds,
+        threads: POOL_THREADS,
+        seq_s,
+        pool_s,
+        speedup: seq_s / pool_s.max(1e-12),
+        identical,
+    })
+}
+
+/// CI perf-trajectory gate: compare a freshly measured `BENCH_speedup.json`
+/// against the committed baseline. Fails when pooled execution stopped
+/// being bit-identical (correctness regression — never tolerated) or when
+/// either measured speedup (end-to-end pooled training, or the mixing
+/// phase in isolation) dropped below `tolerance` x the baseline value
+/// (perf regression beyond noise). Returns the comparison report on pass.
+pub fn gate(current: &Path, baseline: &Path, tolerance: f64) -> anyhow::Result<String> {
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&tolerance),
+        "tolerance must be in [0, 1] (got {tolerance})"
+    );
+    let load = |path: &Path| -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("bad JSON in {}: {e}", path.display()))
+    };
+    let cur = load(current)?;
+    let base = load(baseline)?;
+
+    let mut out = String::from("=== bench gate: current vs committed baseline ===\n");
+    let mut failures: Vec<String> = Vec::new();
+
+    // Speedups are only comparable on the same workload: when both files
+    // carry a config key, it must match (a baseline written before a
+    // workload retune must be refreshed, not silently compared against).
+    for key in [
+        "quick",
+        "threads_pool",
+        "workers",
+        "iters",
+        "mix_workers",
+        "mix_dim",
+        "mix_rounds",
+        "mix_threads",
+    ] {
+        if let (Some(c), Some(b)) = (cur.get(key), base.get(key)) {
+            let (cs, bs) = (c.to_string(), b.to_string());
+            anyhow::ensure!(
+                cs == bs,
+                "workload mismatch on '{key}' ({cs} vs baseline {bs}) — the committed \
+                 baseline is stale; refresh it (bench gate --refresh)"
+            );
+        }
+    }
+
+    for key in ["bit_identical", "mix_bit_identical"] {
+        // A missing key is a malformed/stale input, not a determinism
+        // regression — report it as such.
+        let ok = cur
+            .get(key)
+            .and_then(|v| v.as_bool())
+            .ok_or_else(|| anyhow::anyhow!("{} missing '{key}'", current.display()))?;
+        out.push_str(&format!("  {key:<18}: {ok}\n"));
+        if !ok {
+            failures.push(format!("{key} is false — pooled execution diverged"));
+        }
+    }
+    for key in ["speedup", "mix_speedup"] {
+        let c = cur
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("{} missing '{key}'", current.display()))?;
+        let b = base
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("{} missing '{key}'", baseline.display()))?;
+        let floor = b * tolerance;
+        let ok = c >= floor;
+        out.push_str(&format!(
+            "  {key:<18}: {c:.3}x vs baseline {b:.3}x (floor {floor:.3}x) {}\n",
+            if ok { "ok" } else { "REGRESSION" }
+        ));
+        if !ok {
+            failures.push(format!(
+                "{key} {c:.3}x fell below {floor:.3}x ({tolerance} x baseline {b:.3}x)"
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        anyhow::bail!("{out}\nperf gate FAILED:\n  - {}", failures.join("\n  - "));
+    }
+    out.push_str("perf gate passed.\n");
     Ok(out)
 }
 
@@ -151,12 +367,48 @@ mod tests {
         let out = run(&s, &dir, true).unwrap();
         assert!(out.contains("N x K"));
         assert!(out.contains("Engine-pool wall clock"));
+        assert!(out.contains("Mixing-phase wall clock"));
         // the perf-trajectory artifact exists and is valid JSON
         let bench = std::fs::read_to_string(dir.join("BENCH_speedup.json")).unwrap();
         let j = crate::util::json::Json::parse(&bench).unwrap();
         assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("pool_speedup"));
         assert_eq!(j.get("bit_identical").and_then(|v| v.as_bool()), Some(true));
         assert!(j.get("speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // the mix-phase section is present, bit-identical, and measured
+        assert_eq!(j.get("mix_bit_identical").and_then(|v| v.as_bool()), Some(true));
+        assert!(j.get("mix_speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(j.get("mix_dim").and_then(|v| v.as_usize()).unwrap() >= 262_144);
+        // and a self-gate against the fresh numbers passes trivially
+        let path = dir.join("BENCH_speedup.json");
+        assert!(gate(&path, &path, 0.75).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gate_detects_regressions() {
+        let dir = std::env::temp_dir().join("dybw_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |name: &str, speedup: f64, mix: f64, ident: bool| {
+            let mut j = Json::obj();
+            j.set("speedup", speedup.into())
+                .set("mix_speedup", mix.into())
+                .set("bit_identical", ident.into())
+                .set("mix_bit_identical", true.into());
+            let p = dir.join(name);
+            std::fs::write(&p, j.to_string()).unwrap();
+            p
+        };
+        let base = write("base.json", 2.0, 2.0, true);
+        let good = write("good.json", 1.8, 1.9, true);
+        let slow = write("slow.json", 1.0, 1.9, true);
+        let slow_mix = write("slow_mix.json", 1.9, 1.2, true);
+        let broken = write("broken.json", 2.2, 2.2, false);
+        assert!(gate(&good, &base, 0.75).is_ok());
+        assert!(gate(&slow, &base, 0.75).is_err(), "grad speedup regression must fail");
+        assert!(gate(&slow_mix, &base, 0.75).is_err(), "mix speedup regression must fail");
+        assert!(gate(&broken, &base, 0.75).is_err(), "bit-identity loss must fail");
+        assert!(gate(&good, &base, 1.5).is_err(), "tolerance > 1 is rejected");
+        assert!(gate(&dir.join("missing.json"), &base, 0.75).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

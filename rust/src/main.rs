@@ -6,6 +6,11 @@
 //! - `topology` — inspect a consensus graph + its DTUR path
 //! - `artifacts`— list and validate the AOT artifact set
 //! - `analyze`  — consensus-theory numbers (λ₂, β, mixing forecast)
+//! - `bench`    — perf-trajectory tooling (regression gate vs baseline)
+
+// Same rationale as the crate-level allows in lib.rs (config structs are
+// mutated field-by-field after `Default::default()`).
+#![allow(clippy::field_reassign_with_default)]
 
 use std::path::PathBuf;
 
@@ -47,6 +52,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "artifacts" => cmd_artifacts(rest),
         "analyze" => cmd_analyze(rest),
         "trace" => cmd_trace(rest),
+        "bench" => cmd_bench(rest),
         "help" | "--help" | "-h" => {
             print_global_help();
             Ok(())
@@ -68,6 +74,7 @@ fn print_global_help() {
          \x20 artifacts  list + validate AOT artifacts (built by `make artifacts`)\n\
          \x20 analyze    consensus-theory report (lambda2, beta, mixing forecast)\n\
          \x20 trace      record a straggler timing trace / A-B algorithms on one\n\
+         \x20 bench      perf-trajectory gate: compare BENCH_speedup.json vs baseline\n\
          \n\
          Run `dybw <subcommand> --help` for options."
     );
@@ -82,7 +89,11 @@ fn setup_opts(cmd: Command) -> Command {
         .opt("partition", "iid", "iid|shards|dirichlet:<alpha>")
         .opt("train-n", "12000", "training examples (total)")
         .opt("test-n", "2048", "test examples")
-        .opt("straggler", "sexp:0.08,25", "base compute-time dist (det|uniform|sexp|pareto|lognormal)")
+        .opt(
+            "straggler",
+            "sexp:0.08,25",
+            "base compute-time dist (det|uniform|sexp|pareto|lognormal)",
+        )
         .opt("straggler-factor", "4", "transient straggler slowdown factor")
         .opt("iters", "200", "training iterations K")
         .opt("lr0", "0.2", "initial learning rate")
@@ -205,10 +216,9 @@ fn cmd_figure(argv: &[String]) -> anyhow::Result<()> {
     .opt("out-dir", "results", "CSV/JSON output dir")
     .flag("quick", "shrunk workloads (CI)");
     let a = parse_or_exit(&cmd, argv)?;
-    let id = a
-        .positionals
-        .first()
-        .ok_or_else(|| anyhow::anyhow!("which figure? (e.g. `dybw figure fig1`)\n\n{}", cmd.usage()))?;
+    let id = a.positionals.first().ok_or_else(|| {
+        anyhow::anyhow!("which figure? (e.g. `dybw figure fig1`)\n\n{}", cmd.usage())
+    })?;
     let base = setup_from_args(&a)?;
     let out_dir = PathBuf::from(a.get("out-dir"));
     let report = experiments::run(id, &base, &out_dir, a.flag("quick"))?;
@@ -381,6 +391,48 @@ fn cmd_trace(argv: &[String]) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown trace action '{other}' (record | ab)"),
     }
     Ok(())
+}
+
+fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dybw bench", "perf-trajectory tooling")
+        .positional("action", "gate")
+        .opt(
+            "current",
+            "results/BENCH_speedup.json",
+            "fresh bench JSON (written by `dybw figure speedup`)",
+        )
+        .opt("baseline", "BENCH_speedup.baseline.json", "committed baseline JSON")
+        .opt("tolerance", "0.75", "fail if a speedup drops below tolerance x baseline")
+        .flag("refresh", "overwrite the baseline with current, even if the gate fails");
+    let a = parse_or_exit(&cmd, argv)?;
+    match a.positionals.first().map(String::as_str) {
+        Some("gate") => {
+            let current = PathBuf::from(a.get("current"));
+            let baseline = PathBuf::from(a.get("baseline"));
+            let tol = a.get_f64("tolerance")?;
+            let gate_result = experiments::speedup::gate(&current, &baseline, tol);
+            if a.flag("refresh") {
+                // Re-baselining is needed precisely when the honest new
+                // measurement fails the OLD floor, so refresh past that —
+                // but never install a malformed or non-bit-identical
+                // current file (the self-gate catches both).
+                experiments::speedup::gate(&current, &current, tol).map_err(|e| {
+                    anyhow::anyhow!("refusing to install current as baseline: {e}")
+                })?;
+                std::fs::copy(&current, &baseline)?;
+                match gate_result {
+                    Ok(report) => println!("{report}"),
+                    Err(e) => println!("{e}\n(gate failed against the OLD baseline)"),
+                }
+                println!("(baseline refreshed -> {})", baseline.display());
+                Ok(())
+            } else {
+                println!("{}", gate_result?);
+                Ok(())
+            }
+        }
+        _ => anyhow::bail!("bench action: gate\n\n{}", cmd.usage()),
+    }
 }
 
 fn parse_or_exit(cmd: &Command, argv: &[String]) -> anyhow::Result<Args> {

@@ -40,7 +40,8 @@ impl Comparison {
             label_b: b.algo.clone(),
             mean_iter_a: a.mean_iter_duration(),
             mean_iter_b: b.mean_iter_duration(),
-            iter_duration_reduction: 1.0 - a.mean_iter_duration() / b.mean_iter_duration().max(1e-12),
+            iter_duration_reduction: 1.0
+                - a.mean_iter_duration() / b.mean_iter_duration().max(1e-12),
             time_to_loss_a: t_a,
             time_to_loss_b: t_b,
             convergence_time_reduction: conv_red,

@@ -61,7 +61,12 @@ pub fn grad(
 }
 
 /// Mean loss + correct-prediction count (no gradient).
-pub fn eval(meta: &ModelMeta, w_flat: &[f32], batch: &Batch, scratch: &mut LrmScratch) -> (f32, usize) {
+pub fn eval(
+    meta: &ModelMeta,
+    w_flat: &[f32],
+    batch: &Batch,
+    scratch: &mut LrmScratch,
+) -> (f32, usize) {
     let (b, d, c) = (batch.bsz, meta.dim, meta.classes);
     let w = meta.slice(w_flat, "w");
     let bias = meta.slice(w_flat, "b");

@@ -138,7 +138,9 @@ impl Command {
                     .opts
                     .iter()
                     .find(|o| o.name == key)
-                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                    .ok_or_else(|| {
+                        CliError(format!("unknown option --{key}\n\n{}", self.usage()))
+                    })?;
                 if spec.is_flag {
                     args.flags.insert(key, true);
                 } else {

@@ -1,6 +1,9 @@
 //! Cross-module integration tests: full training runs through the public
 //! API, theory-facing behaviours, and failure injection.
 
+// Same rationale as the crate-level allows in lib.rs.
+#![allow(clippy::field_reassign_with_default)]
+
 use dybw::coordinator::setup::{DatasetProfile, Setup};
 use dybw::coordinator::{Algorithm, TrainConfig};
 use dybw::data::partition::Partition;
