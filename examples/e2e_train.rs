@@ -78,7 +78,11 @@ fn main() -> anyhow::Result<()> {
     }
     let mut rng = Rng::new(seed);
     let graph = topology::build(setup.topology, workers, &mut rng);
-    let (sources, eval_batches) = setup.build_data(&meta, &mut rng)?;
+    // tasks-only pool: the synthesis fan-out needs lanes, not engines
+    // (the PJRT compute server below owns the real engine lanes)
+    let data_pool = dybw::engine::EnginePool::tasks_only(setup.resolve_threads())?;
+    let (sources, eval_batches) = setup.build_data(&meta, &mut rng, &data_pool)?;
+    drop(data_pool);
     let init = meta.init_params(&mut rng);
     println!(
         "model: kind={} P={} batch={}  | graph: {} edges, connected={}",

@@ -7,11 +7,14 @@
 //! hot paths (the Layer-3 per-iteration costs):
 //!   mix/*          — eq. (6) Metropolis averaging over flat params
 //!                    (sequential loop, and pooled row fan-out vs lanes)
+//!   vecmath/*      — dot/axpy kernels (4-lane chunked accumulation)
 //!   metropolis/*   — consensus-matrix construction
 //!   dtur/step      — Algorithm 2 threshold decision
 //!   grad/native-*  — native engine gradient (LRM / 2NN)
 //!   grad/pjrt-*    — PJRT artifact gradient (when artifacts built)
 //!   pool/*         — 16-worker gradient fan-out vs engine-pool size
+//!   synth/*        — gaussian-mixture synthesis vs pool size (the
+//!                    bit-identical counter-based substream fan-out)
 //!
 //! end-to-end (figure-scale workloads, small iteration counts):
 //!   iter/cb-dybw, iter/cb-full — one full training iteration
@@ -111,12 +114,72 @@ fn main() {
 
     bench_mixing(&filter);
     bench_mix_pooled(&filter);
+    bench_vecmath(&filter);
     bench_metropolis(&filter);
     bench_dtur(&filter);
     bench_native_grad(&filter);
     bench_pjrt_grad(&filter);
     bench_pool(&filter);
+    bench_synth(&filter);
     bench_end_to_end(&filter);
+}
+
+/// The vecmath micro-kernels: `dot` (4 independent f64 accumulation
+/// lanes — the reduction that bounds `norm2`/`dist`-style metrics) and
+/// `axpy` (the eq. (5) parameter update).
+fn bench_vecmath(filter: &Option<String>) {
+    use dybw::util::vecmath;
+    let n = 1_000_000usize;
+    let a: Vec<f32> = (0..n).map(|i| ((i % 1013) as f32) * 0.001 - 0.5).collect();
+    let b: Vec<f32> = (0..n).map(|i| ((i % 997) as f32) * 0.001 - 0.4).collect();
+    if wants(filter, "vecmath/dot-1m") {
+        let mut acc = 0.0f64;
+        let mut r = bench("vecmath/dot-1m", 50, || {
+            acc += std::hint::black_box(vecmath::dot(&a, &b));
+        });
+        r.throughput = Some(format!("{:.2} GB/s", (n * 8) as f64 / r.mean_ns));
+        print_result(&r);
+        std::hint::black_box(acc);
+    }
+    if wants(filter, "vecmath/axpy-1m") {
+        let mut y = vec![0.0f32; n];
+        let mut r = bench("vecmath/axpy-1m", 50, || {
+            vecmath::axpy(&mut y, 0.5, &a);
+        });
+        r.throughput = Some(format!("{:.2} GB/s", (n * 12) as f64 / r.mean_ns));
+        print_result(&r);
+        std::hint::black_box(y[0]);
+    }
+}
+
+/// Pooled data synthesis: the gaussian-mixture generator fanned over the
+/// pool's lanes via counter-based RNG substreams. t1 falls back to the
+/// sequential generator, so the ratio is the cold-start win every figure
+/// sweep sees; results are bit-identical at any lane count.
+fn bench_synth(filter: &Option<String>) {
+    use dybw::data::synthetic::gaussian_mixture_pooled;
+    let spec = MixtureSpec::mnist_like(64, 60_000);
+    let mut t1_mean = None;
+    for threads in [1usize, 2, 4] {
+        let name = format!("synth/mixture-60k-t{threads}");
+        if !wants(filter, &name) {
+            continue;
+        }
+        let pool = EnginePool::tasks_only(threads).unwrap();
+        let mut r = bench(&name, 5, || {
+            let mut rng = Rng::new(3);
+            let d = gaussian_mixture_pooled(&spec, &mut rng, &pool).unwrap();
+            std::hint::black_box(d.n());
+        });
+        if threads == 1 {
+            t1_mean = Some(r.mean_ns);
+        }
+        r.throughput = match t1_mean {
+            Some(base) if threads > 1 => Some(format!("{:.2}x vs t1", base / r.mean_ns)),
+            _ => None,
+        };
+        print_result(&r);
+    }
 }
 
 /// The refactor's headline: one iteration's 16 worker gradients, fanned

@@ -13,8 +13,8 @@ use std::sync::Arc;
 
 use crate::coordinator::{Algorithm, SimTrainer, TrainConfig};
 use crate::data::batch::BatchSampler;
-use crate::data::partition::{split, Partition};
-use crate::data::synthetic::{gaussian_mixture, markov_sequences, MixtureSpec};
+use crate::data::partition::{split_pooled, Partition};
+use crate::data::synthetic::{gaussian_mixture_pooled, markov_sequences_pooled, MixtureSpec};
 use crate::engine::{
     native_factory, AnyBatch, BatchSource, DenseSource, EngineFactory, EnginePool, SeqSource,
 };
@@ -198,8 +198,11 @@ impl Setup {
             straggler.transient_prob = 0.0;
         }
 
-        let (sources, eval_batches) = self.build_data(&meta, &mut rng)?;
+        // The pool comes up first so data synthesis can fan over its
+        // lanes (pool construction consumes no RNG, so the stream
+        // reaching build_data — and everything after it — is unchanged).
         let pool = self.build_pool(&meta)?;
+        let (sources, eval_batches) = self.build_data(&meta, &mut rng, &pool)?;
         let init = meta.init_params(&mut rng);
         SimTrainer::new(
             graph,
@@ -214,15 +217,24 @@ impl Setup {
     }
 
     /// Synthesize + partition data, build per-worker sources + eval set.
+    ///
+    /// Synthesis and sharding fan over `pool`'s lanes (the `*_pooled`
+    /// generators are bit-identical to their sequential forms at any lane
+    /// count, so the produced data never depends on `threads`); eval
+    /// batch materialisation is a small sequential tail. Any pool works —
+    /// harnesses that only need data can pass
+    /// [`EnginePool::tasks_only`](crate::engine::EnginePool::tasks_only).
     pub fn build_data(
         &self,
         meta: &ModelMeta,
         rng: &mut Rng,
+        pool: &EnginePool,
     ) -> anyhow::Result<(Vec<Box<dyn BatchSource>>, Vec<AnyBatch>)> {
         match meta.kind {
             ModelKind::Transformer => {
-                let train = markov_sequences(meta.vocab, meta.seq, self.train_n, rng);
-                let test = markov_sequences(meta.vocab, meta.seq, self.test_n.min(512), rng);
+                let train = markov_sequences_pooled(meta.vocab, meta.seq, self.train_n, rng, pool)?;
+                let test =
+                    markov_sequences_pooled(meta.vocab, meta.seq, self.test_n.min(512), rng, pool)?;
                 // contiguous even split of sequences
                 let per = train.n() / self.workers;
                 anyhow::ensure!(per > 0, "too few sequences per worker");
@@ -249,7 +261,8 @@ impl Setup {
             }
             _ => {
                 let total = self.train_n + self.test_n;
-                let data = gaussian_mixture(&self.dataset.mixture(meta.dim, total), rng);
+                let data =
+                    gaussian_mixture_pooled(&self.dataset.mixture(meta.dim, total), rng, pool)?;
                 let (train, test) = data.split(self.train_n);
                 anyhow::ensure!(
                     meta.classes == test.classes,
@@ -257,7 +270,7 @@ impl Setup {
                     meta.classes,
                     test.classes
                 );
-                let shards = split(&train, self.workers, self.partition, rng);
+                let shards = split_pooled(&train, self.workers, self.partition, rng, pool)?;
                 let sources: Vec<Box<dyn BatchSource>> = shards
                     .into_iter()
                     .enumerate()
@@ -306,6 +319,7 @@ impl Setup {
             .set("lr0", self.train.lr0.into())
             .set("lr_decay", self.train.lr_decay.into())
             .set("eval_every", self.train.eval_every.into())
+            .set("prefetch", self.train.prefetch.into())
             .set("seed", (self.train.seed as i64).into())
             .set(
                 "backend",
@@ -373,6 +387,9 @@ impl Setup {
         }
         if let Some(v) = j.get("eval_every").and_then(|v| v.as_usize()) {
             self.train.eval_every = v;
+        }
+        if let Some(v) = j.get("prefetch").and_then(|v| v.as_bool()) {
+            self.train.prefetch = v;
         }
         if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
             self.train.seed = v as u64;
@@ -498,15 +515,54 @@ mod tests {
             ..Default::default()
         };
         // native backend can't build the transformer engine, but the data
-        // path is exercised via a hand-made meta
+        // path is exercised via a hand-made meta and a tasks-only pool
         let mut meta = ModelMeta::lrm(4, 2, 16);
         meta.kind = ModelKind::Transformer;
         meta.vocab = 64;
         meta.seq = 32;
         meta.batch = 16;
+        let pool = crate::engine::EnginePool::tasks_only(2).unwrap();
         let mut rng = Rng::new(0);
-        let (sources, evals) = s.build_data(&meta, &mut rng).unwrap();
+        let (sources, evals) = s.build_data(&meta, &mut rng, &pool).unwrap();
         assert_eq!(sources.len(), 6);
         assert!(!evals.is_empty());
+    }
+
+    /// End-to-end pool-size invariance THROUGH `build_sim`: pooled data
+    /// synthesis, pooled sharding, batch prefetch, and pooled mixing all
+    /// ride the lane count — a 4-lane build must replay the 1-lane build
+    /// bit for bit.
+    #[test]
+    fn setup_build_is_bit_identical_across_pool_sizes() {
+        let run = |threads: usize| {
+            let mut s = Setup::default();
+            s.model = "lrm_d16_c10_b64".into();
+            s.train_n = 2000;
+            s.test_n = 512;
+            s.threads = threads;
+            s.train.iters = 10;
+            s.train.eval_every = 5;
+            let mut t = s.build_sim().unwrap();
+            let h = t.run().unwrap();
+            (h, t.average_params())
+        };
+        let (h1, p1) = run(1);
+        let (h4, p4) = run(4);
+        assert!(h1.bits_eq(&h4), "history diverged across pool sizes");
+        assert_eq!(p1.len(), p4.len());
+        for (a, b) in p1.iter().zip(&p4) {
+            assert_eq!(a.to_bits(), b.to_bits(), "final params diverged");
+        }
+    }
+
+    #[test]
+    fn prefetch_json_roundtrip() {
+        let mut s = Setup::default();
+        assert!(s.train.prefetch, "prefetch defaults on");
+        s.train.prefetch = false;
+        let j = s.to_json();
+        let mut s2 = Setup::default();
+        s2.apply_json(&j).unwrap();
+        assert!(!s2.train.prefetch);
     }
 }

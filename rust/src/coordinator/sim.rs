@@ -12,10 +12,14 @@
 //! one leased gradient buffer per worker, batches drawn from per-worker
 //! RNG streams split off the config seed. The eq. (6) mixing phase fans
 //! out over the same lanes (each worker's weighted row-sum is an
-//! independent borrowed-closure task). Because every job is a pure
-//! function of its inputs and all reductions run in worker order on the
-//! coordinator thread, a pooled run is **bit-identical** to a
-//! single-thread run — parallelism only changes the wall clock.
+//! independent borrowed-closure task), and with
+//! [`TrainConfig::prefetch`] the NEXT iteration's batches are drawn on
+//! spare lanes while the current gradients run (each worker's sampler
+//! lives in its own [`BatchSource`] slot, so streams never interleave —
+//! one draw per worker per iteration, prefetched or not). Because every
+//! job is a pure function of its inputs and all reductions run in worker
+//! order on the coordinator thread, a pooled run is **bit-identical** to
+//! a single-thread run — parallelism only changes the wall clock.
 
 use crate::consensus::mixing::ParamBuffers;
 use crate::consensus::ConsensusMatrix;
@@ -40,6 +44,11 @@ pub struct TrainConfig {
     pub lr_decay: f64,
     pub lr_decay_every: usize,
     pub eval_every: usize,
+    /// Overlap the data path with compute: draw iteration k+1's batches
+    /// on spare pool lanes while iteration k's gradients run.
+    /// Bit-identical on or off — per-worker sampler streams advance once
+    /// per iteration either way (asserted by tests).
+    pub prefetch: bool,
     pub seed: u64,
 }
 
@@ -52,6 +61,7 @@ impl Default for TrainConfig {
             lr_decay: 0.95,
             lr_decay_every: 10,
             eval_every: 10,
+            prefetch: true,
             seed: 2021,
         }
     }
@@ -82,6 +92,9 @@ pub struct SimTrainer {
     /// One leased gradient buffer per worker, written in place each
     /// iteration by [`EnginePool::grad_many`].
     grad_bufs: Vec<Vec<f32>>,
+    /// Batches drawn ahead of time by the prefetch tasks (iteration k+1's
+    /// batches, filled while iteration k's gradients ran).
+    prefetched: Option<Vec<AnyBatch>>,
     /// Optional per-iteration observer (e.g. live progress printing).
     pub on_iter: Option<Box<dyn FnMut(&IterRecord)>>,
     /// When set, compute times replay this trace instead of sampling the
@@ -159,6 +172,7 @@ impl SimTrainer {
             rng,
             clock: 0.0,
             grad_bufs: vec![vec![0.0; p]; n],
+            prefetched: None,
             on_iter: None,
             trace: None,
             compression: None,
@@ -197,6 +211,7 @@ impl SimTrainer {
         self.start_k = ckpt.iteration;
         self.last_k = ckpt.iteration;
         self.params = ParamBuffers::from_initial(ckpt.params);
+        self.prefetched = None;
         Ok(())
     }
 
@@ -260,19 +275,50 @@ impl SimTrainer {
             // (Stragglers compute too — they are just not waited for; the
             //  PS baselines discard non-participant updates below.)
             //
-            // Fan out over the engine pool: draw every worker's batch from
-            // its own RNG stream (coordinator thread, fixed order), compute
-            // all gradients in parallel into the per-worker leased buffers,
-            // then apply updates and reduce the loss in worker order —
-            // bit-identical to the sequential loop this replaces.
+            // Fan out over the engine pool: every worker's batch comes
+            // from its own sampler slot (drawn last iteration by the
+            // prefetch tasks, or right now on the coordinator thread),
+            // all gradients run in parallel into the per-worker leased
+            // buffers, then updates and the loss reduction run in worker
+            // order — bit-identical to the sequential loop this replaces.
+            // With prefetch on, iteration k+1's batch draws ride the SAME
+            // queue submission as k's gradient jobs and drain on spare
+            // lanes; per-worker draw order is unchanged, so prefetch
+            // on/off is bit-identical too.
             let bsz = self.cfg.batch_size;
-            let batches: Vec<AnyBatch> = self
-                .sources
-                .iter_mut()
-                .map(|s| s.next_train(bsz))
-                .collect();
+            let batches: Vec<AnyBatch> = match self.prefetched.take() {
+                Some(b) => b,
+                None => self.sources.iter_mut().map(|s| s.next_train(bsz)).collect(),
+            };
+            let prefetch_now = self.cfg.prefetch && k < self.start_k + self.cfg.iters;
             let ws: Vec<&[f32]> = (0..n).map(|j| self.params.get(j)).collect();
-            let losses = self.pool.grad_many(&ws, &batches, &mut self.grad_bufs)?;
+            let losses = if prefetch_now {
+                let mut slots: Vec<Option<AnyBatch>> = (0..n).map(|_| None).collect();
+                let losses = {
+                    let mut tasks: Vec<_> = self
+                        .sources
+                        .iter_mut()
+                        .zip(slots.iter_mut())
+                        .map(|(src, slot)| {
+                            move || -> anyhow::Result<()> {
+                                *slot = Some(src.next_train(bsz));
+                                Ok(())
+                            }
+                        })
+                        .collect();
+                    let pool = &self.pool;
+                    let bufs = &mut self.grad_bufs;
+                    pool.grad_many_overlapped(&ws, &batches, bufs, &mut tasks)?
+                };
+                let drawn: Vec<AnyBatch> = slots
+                    .into_iter()
+                    .map(|s| s.expect("prefetch task filled its slot"))
+                    .collect();
+                self.prefetched = Some(drawn);
+                losses
+            } else {
+                self.pool.grad_many(&ws, &batches, &mut self.grad_bufs)?
+            };
             drop(ws);
             let mut loss_sum = 0.0f64;
             for j in 0..n {
@@ -284,12 +330,15 @@ impl SimTrainer {
 
             // --- eq. (6): mixing ----------------------------------------
             if iter_plan.ps_style {
-                // Exact averaging of participants, broadcast to everyone.
+                // Exact averaging of participants, broadcast to everyone —
+                // the dimension chunked across the pool's lanes
+                // (bit-identical to the sequential reduction; see
+                // `vecmath::mean_of_pooled`).
                 let active_rows: Vec<&[f32]> = (0..n)
                     .filter(|&j| iter_plan.active[j])
                     .map(|j| self.params.get(j))
                     .collect();
-                let avg = vecmath::mean_of(&active_rows);
+                let avg = vecmath::mean_of_pooled(&active_rows, &self.pool)?;
                 for j in 0..n {
                     self.params.get_mut(j).copy_from_slice(&avg);
                 }
@@ -514,6 +563,29 @@ mod tests {
     fn pooled_compressed_run_bit_identical_all_algorithms() {
         for algo in ALL_ALGOS {
             assert_pool_size_invariant(algo, true);
+        }
+    }
+
+    /// Data-pipeline tentpole: drawing iteration k+1's batches on spare
+    /// lanes while k's gradients run must not change a single bit of the
+    /// 5-algorithm same-seed rerun — per-worker sampler streams advance
+    /// once per iteration either way.
+    #[test]
+    fn prefetch_bit_identical_all_algorithms() {
+        for algo in ALL_ALGOS {
+            let run = |prefetch: bool| {
+                let mut t = build_with_threads(algo, 20, 47, 4);
+                t.cfg.prefetch = prefetch;
+                let h = t.run().unwrap();
+                (h, t.average_params())
+            };
+            let (h_on, p_on) = run(true);
+            let (h_off, p_off) = run(false);
+            assert!(h_on.bits_eq(&h_off), "{algo:?}: prefetch changed the history");
+            assert_eq!(p_on.len(), p_off.len());
+            for (x, y) in p_on.iter().zip(&p_off) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{algo:?}: prefetch changed final params");
+            }
         }
     }
 

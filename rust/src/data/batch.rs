@@ -37,6 +37,13 @@ pub struct SeqBatch {
 }
 
 /// Sampler over a worker's local shard.
+///
+/// Each worker owns exactly one sampler (inside its `BatchSource` slot),
+/// seeded from its own stream off the config seed. That ownership is a
+/// correctness invariant for the batch prefetcher: a worker's draws form
+/// one sequential RNG stream that advances once per iteration, whether
+/// the draw happens on the coordinator thread or on a spare pool lane —
+/// which is why prefetch on/off is bit-identical.
 #[derive(Debug, Clone)]
 pub struct BatchSampler {
     rng: Rng,

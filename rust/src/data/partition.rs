@@ -7,6 +7,7 @@
 //! McMahan et al.) and a Dirichlet split with tunable concentration.
 
 use super::Dataset;
+use crate::engine::EnginePool;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -35,15 +36,57 @@ impl Partition {
     }
 }
 
-/// Split `data` into `workers` local datasets.
-pub fn split(data: &Dataset, workers: usize, how: Partition, rng: &mut Rng) -> Vec<Dataset> {
-    assert!(workers >= 1);
-    let idx_sets: Vec<Vec<usize>> = match how {
+/// The RNG-consuming half of a split: the per-worker index sets.
+fn split_indices(data: &Dataset, workers: usize, how: Partition, rng: &mut Rng) -> Vec<Vec<usize>> {
+    match how {
         Partition::Iid => iid_indices(data.n(), workers, rng),
         Partition::LabelShards => shard_indices(data, workers, rng),
         Partition::Dirichlet { alpha } => dirichlet_indices(data, workers, alpha, rng),
-    };
+    }
+}
+
+/// Split `data` into `workers` local datasets.
+pub fn split(data: &Dataset, workers: usize, how: Partition, rng: &mut Rng) -> Vec<Dataset> {
+    assert!(workers >= 1);
+    let idx_sets = split_indices(data, workers, how, rng);
     idx_sets.iter().map(|idx| data.subset(idx)).collect()
+}
+
+/// [`split`] with the per-worker shard materialisation fanned over the
+/// pool's lanes. The RNG-driven index computation stays on the caller
+/// thread (identical stream consumption); only the row copying — pure
+/// gathers into disjoint outputs — runs pooled, so the result is
+/// bit-identical to the sequential split.
+pub fn split_pooled(
+    data: &Dataset,
+    workers: usize,
+    how: Partition,
+    rng: &mut Rng,
+    pool: &EnginePool,
+) -> anyhow::Result<Vec<Dataset>> {
+    assert!(workers >= 1);
+    let idx_sets = split_indices(data, workers, how, rng);
+    if pool.threads() <= 1 {
+        return Ok(idx_sets.iter().map(|idx| data.subset(idx)).collect());
+    }
+    let mut slots: Vec<Option<Dataset>> = (0..workers).map(|_| None).collect();
+    {
+        let mut tasks: Vec<_> = slots
+            .iter_mut()
+            .zip(idx_sets.iter())
+            .map(|(slot, idx)| {
+                move || -> anyhow::Result<()> {
+                    *slot = Some(data.subset(idx));
+                    Ok(())
+                }
+            })
+            .collect();
+        pool.run_tasks(&mut tasks)?;
+    }
+    Ok(slots
+        .into_iter()
+        .map(|s| s.expect("split task filled its slot"))
+        .collect())
 }
 
 fn iid_indices(n: usize, workers: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
@@ -253,6 +296,31 @@ mod tests {
             Some(Partition::Dirichlet { alpha: 0.5 })
         );
         assert_eq!(Partition::parse("nope"), None);
+    }
+
+    #[test]
+    fn pooled_split_bit_identical_to_sequential() {
+        let d = data(1100, 13);
+        let pool = crate::engine::EnginePool::tasks_only(3).unwrap();
+        for how in [
+            Partition::Iid,
+            Partition::LabelShards,
+            Partition::Dirichlet { alpha: 0.3 },
+        ] {
+            let mut r_seq = Rng::new(21);
+            let mut r_pool = Rng::new(21);
+            let a = split(&d, 5, how, &mut r_seq);
+            let b = split_pooled(&d, 5, how, &mut r_pool, &pool).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (p, q) in a.iter().zip(&b) {
+                assert_eq!(p.y, q.y, "{how:?}");
+                assert_eq!(p.x, q.x, "{how:?}");
+            }
+            // the caller-visible stream continues identically
+            for _ in 0..4 {
+                assert_eq!(r_seq.next_u64(), r_pool.next_u64(), "{how:?}");
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! never materialised — that keeps CIFAR-scale d=3072 tractable.
 
 use super::Dataset;
+use crate::engine::EnginePool;
 use crate::util::rng::Rng;
 
 /// A fitted PCA transform.
@@ -87,28 +88,71 @@ impl Pca {
         }
     }
 
-    /// Project a dataset into the fitted subspace.
-    pub fn transform(&self, data: &Dataset) -> Dataset {
-        assert_eq!(data.dim, self.in_dim);
-        let n = data.n();
-        let mut x = vec![0.0f32; n * self.out_dim];
-        for i in 0..n {
-            let row = data.row(i);
+    /// The per-row-range projection kernel shared by the sequential and
+    /// pooled transforms: fill `x_out.len() / out_dim` projected rows
+    /// starting at dataset row `start`.
+    fn transform_rows(&self, data: &Dataset, start: usize, x_out: &mut [f32]) {
+        let rows = x_out.len() / self.out_dim;
+        for r in 0..rows {
+            let row = data.row(start + r);
             for c in 0..self.out_dim {
                 let comp = &self.components[c * self.in_dim..(c + 1) * self.in_dim];
                 let mut acc = 0.0f32;
                 for j in 0..self.in_dim {
                     acc += (row[j] - self.mean[j]) * comp[j];
                 }
-                x[i * self.out_dim + c] = acc;
+                x_out[r * self.out_dim + c] = acc;
             }
         }
+    }
+
+    /// Project a dataset into the fitted subspace.
+    pub fn transform(&self, data: &Dataset) -> Dataset {
+        assert_eq!(data.dim, self.in_dim);
+        let mut x = vec![0.0f32; data.n() * self.out_dim];
+        self.transform_rows(data, 0, &mut x);
         Dataset {
             dim: self.out_dim,
             classes: data.classes,
             x,
             y: data.y.clone(),
         }
+    }
+
+    /// [`transform`](Self::transform) with row ranges fanned over the
+    /// pool's lanes. Rows are independent (each projected row is a set of
+    /// dot products against the fitted components, in unchanged per-row
+    /// FP order) and ranges write disjoint output chunks, so the result
+    /// is bit-identical to the sequential transform. (`fit` itself stays
+    /// sequential: power iteration is a data dependence chain, and its
+    /// accumulations are order-sensitive.)
+    pub fn transform_pooled(&self, data: &Dataset, pool: &EnginePool) -> anyhow::Result<Dataset> {
+        if pool.threads() <= 1 || self.out_dim == 0 || data.n() == 0 {
+            return Ok(self.transform(data));
+        }
+        assert_eq!(data.dim, self.in_dim);
+        let n = data.n();
+        let mut x = vec![0.0f32; n * self.out_dim];
+        let rows_per = n.div_ceil(pool.threads() * 4).max(1);
+        {
+            let mut tasks: Vec<_> = x
+                .chunks_mut(rows_per * self.out_dim)
+                .enumerate()
+                .map(|(c, xc)| {
+                    move || -> anyhow::Result<()> {
+                        self.transform_rows(data, c * rows_per, xc);
+                        Ok(())
+                    }
+                })
+                .collect();
+            pool.run_tasks(&mut tasks)?;
+        }
+        Ok(Dataset {
+            dim: self.out_dim,
+            classes: data.classes,
+            x,
+            y: data.y.clone(),
+        })
     }
 }
 
@@ -208,6 +252,20 @@ mod tests {
         for c in 0..3 {
             let mean: f64 = (0..t.n()).map(|i| t.row(i)[c] as f64).sum::<f64>() / t.n() as f64;
             assert!(mean.abs() < 0.2, "component {c} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn pooled_transform_bit_identical_to_sequential() {
+        let data = gaussian_mixture(&MixtureSpec::mnist_like(24, 1019), &mut Rng::new(12));
+        let pca = Pca::fit(&data, 7, 20, &mut Rng::new(13));
+        let pool = crate::engine::EnginePool::tasks_only(3).unwrap();
+        let a = pca.transform(&data);
+        let b = pca.transform_pooled(&data, &pool).unwrap();
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x.len(), b.x.len());
+        for (p, q) in a.x.iter().zip(&b.x) {
+            assert_eq!(p.to_bits(), q.to_bits());
         }
     }
 

@@ -8,8 +8,18 @@
 //! floor is markedly higher than the MNIST-like preset's. Sizes default to
 //! the paper's: 60k/10k (MNIST-like), 50k/10k (CIFAR-like), scaled down by
 //! callers that need speed.
+//!
+//! Both generators consume a FIXED number of RNG draws per example, so
+//! each is split into a per-example-range kernel whose substream is
+//! derived from a counter via [`Rng::at_offset`]: the `*_pooled`
+//! variants fan those kernels over an
+//! [`EnginePool`](crate::engine::EnginePool)'s lanes and are
+//! **bit-identical** to the sequential generators (same draws, same
+//! order, disjoint output ranges) — asserted by tests, and the reason
+//! `Setup::build_data` can always take the pooled path.
 
 use super::{Dataset, SeqDataset};
+use crate::engine::EnginePool;
 use crate::util::rng::Rng;
 
 /// Gaussian-mixture generator parameters.
@@ -50,48 +60,120 @@ impl MixtureSpec {
     }
 }
 
+/// RNG draws (`next_u64` calls) one mixture example consumes: one class
+/// pick plus `dim` Box–Muller normals (two draws each). Fixed per
+/// example, which is what lets a range [a, b) derive its exact substream
+/// via [`Rng::at_offset`].
+fn mixture_draws_per_example(dim: usize) -> u64 {
+    1 + 2 * dim as u64
+}
+
+/// Draw the class means (the sequential prefix both paths share).
+fn mixture_means(spec: &MixtureSpec, rng: &mut Rng) -> Vec<f32> {
+    let mut means = vec![0.0f32; spec.classes * spec.dim];
+    for c in 0..spec.classes {
+        for d in 0..spec.dim {
+            means[c * spec.dim + d] =
+                (rng.normal() * spec.separation / (spec.dim as f64).sqrt()) as f32;
+        }
+    }
+    means
+}
+
+/// The per-example-range kernel: fill `y.len()` examples, consuming
+/// `rng` sequentially (exactly `y.len() * mixture_draws_per_example`
+/// draws). `x` must hold `y.len() * dim` floats.
+fn fill_mixture_rows(
+    spec: &MixtureSpec,
+    means: &[f32],
+    rng: &mut Rng,
+    x: &mut [f32],
+    y: &mut [u32],
+) {
+    let dim = spec.dim;
+    debug_assert_eq!(x.len(), y.len() * dim);
+    for (yi, row) in y.iter_mut().zip(x.chunks_exact_mut(dim)) {
+        let c = rng.below(spec.classes);
+        *yi = c as u32;
+        let mu = &means[c * dim..(c + 1) * dim];
+        for (r, m) in row.iter_mut().zip(mu) {
+            *r = *m + (rng.normal() * spec.noise) as f32;
+        }
+    }
+}
+
 /// Generate a mixture dataset. Class means are unit-ish random Gaussian
 /// directions scaled by `separation`; features add N(0, noise²) noise.
 pub fn gaussian_mixture(spec: &MixtureSpec, rng: &mut Rng) -> Dataset {
-    let MixtureSpec {
-        dim,
-        classes,
-        n,
-        separation,
-        noise,
-    } = *spec;
-    // class means
-    let mut means = vec![0.0f32; classes * dim];
-    for c in 0..classes {
-        for d in 0..dim {
-            means[c * dim + d] = (rng.normal() * separation / (dim as f64).sqrt()) as f32;
-        }
-    }
-    let mut x = vec![0.0f32; n * dim];
-    let mut y = vec![0u32; n];
-    for i in 0..n {
-        let c = rng.below(classes);
-        y[i] = c as u32;
-        let mu = &means[c * dim..(c + 1) * dim];
-        let row = &mut x[i * dim..(i + 1) * dim];
-        for (r, m) in row.iter_mut().zip(mu) {
-            *r = *m + (rng.normal() * noise) as f32;
-        }
-    }
+    let means = mixture_means(spec, rng);
+    let mut x = vec![0.0f32; spec.n * spec.dim];
+    let mut y = vec![0u32; spec.n];
+    fill_mixture_rows(spec, &means, rng, &mut x, &mut y);
     Dataset {
-        dim,
-        classes,
+        dim: spec.dim,
+        classes: spec.classes,
         x,
         y,
     }
 }
 
-/// Markov-chain token sequences for the transformer workload: a random
-/// banded transition matrix gives the LM a learnable structure (loss can
-/// fall well below log(vocab)).
-pub fn markov_sequences(vocab: usize, seq: usize, n: usize, rng: &mut Rng) -> SeqDataset {
-    assert!(vocab >= 2);
-    // Row-stochastic transition matrix concentrated on a band of 4 tokens.
+/// [`gaussian_mixture`] with the per-example-range kernels fanned over
+/// the pool's lanes. Bit-identical to the sequential generator: every
+/// range starts from the exact substream the sequential pass would have
+/// reached ([`Rng::at_offset`]), writes a disjoint slice of `x`/`y`, and
+/// `rng` is left at the same post-generation state.
+pub fn gaussian_mixture_pooled(
+    spec: &MixtureSpec,
+    rng: &mut Rng,
+    pool: &EnginePool,
+) -> anyhow::Result<Dataset> {
+    if pool.threads() <= 1 || spec.dim == 0 || spec.n == 0 {
+        return Ok(gaussian_mixture(spec, rng));
+    }
+    let means = mixture_means(spec, rng);
+    let base = rng.clone();
+    let per = mixture_draws_per_example(spec.dim);
+    let dim = spec.dim;
+    let mut x = vec![0.0f32; spec.n * dim];
+    let mut y = vec![0u32; spec.n];
+    let rows_per = spec.n.div_ceil(pool.threads() * 4).max(1);
+    {
+        let means = &means[..];
+        let base = &base;
+        let mut tasks: Vec<_> = x
+            .chunks_mut(rows_per * dim)
+            .zip(y.chunks_mut(rows_per))
+            .enumerate()
+            .map(|(i, (xc, yc))| {
+                move || -> anyhow::Result<()> {
+                    let start = i * rows_per;
+                    let mut r = base.at_offset(start as u64 * per);
+                    fill_mixture_rows(spec, means, &mut r, xc, yc);
+                    Ok(())
+                }
+            })
+            .collect();
+        pool.run_tasks(&mut tasks)?;
+    }
+    *rng = base.at_offset(spec.n as u64 * per);
+    Ok(Dataset {
+        dim: spec.dim,
+        classes: spec.classes,
+        x,
+        y,
+    })
+}
+
+/// RNG draws one Markov sequence consumes: one start-token pick plus one
+/// uniform per step. Fixed per sequence (the transition-row scan spends
+/// no randomness), so sequence ranges jump via [`Rng::at_offset`] too.
+fn markov_draws_per_sequence(seq: usize) -> u64 {
+    1 + seq as u64
+}
+
+/// Row-stochastic transition matrix concentrated on a band of 4 tokens
+/// (the sequential prefix both paths share).
+fn markov_transitions(vocab: usize, rng: &mut Rng) -> Vec<f64> {
     let band = 4usize.min(vocab);
     let mut trans = vec![0.0f64; vocab * vocab];
     for a in 0..vocab {
@@ -108,16 +190,23 @@ pub fn markov_sequences(vocab: usize, seq: usize, n: usize, rng: &mut Rng) -> Se
             trans[a * vocab + b] = (*w + 0.02) / (total + 0.02 * vocab as f64);
         }
     }
-    let mut tokens = Vec::with_capacity(n * seq);
-    for _ in 0..n {
+    trans
+}
+
+/// The per-sequence-range kernel: fill `tokens.len() / seq` sequences,
+/// consuming `rng` sequentially.
+fn fill_markov_rows(trans: &[f64], vocab: usize, seq: usize, rng: &mut Rng, tokens: &mut [i32]) {
+    assert!(seq > 0, "sequence length must be positive");
+    debug_assert_eq!(tokens.len() % seq, 0);
+    for row in tokens.chunks_exact_mut(seq) {
         let mut cur = rng.below(vocab);
-        for _ in 0..seq {
-            tokens.push(cur as i32);
+        for slot in row.iter_mut() {
+            *slot = cur as i32;
             // sample next from transition row
             let mut u = rng.uniform();
-            let row = &trans[cur * vocab..(cur + 1) * vocab];
+            let trow = &trans[cur * vocab..(cur + 1) * vocab];
             let mut next = vocab - 1;
-            for (b, &p) in row.iter().enumerate() {
+            for (b, &p) in trow.iter().enumerate() {
                 if u < p {
                     next = b;
                     break;
@@ -127,7 +216,57 @@ pub fn markov_sequences(vocab: usize, seq: usize, n: usize, rng: &mut Rng) -> Se
             cur = next;
         }
     }
+}
+
+/// Markov-chain token sequences for the transformer workload: a random
+/// banded transition matrix gives the LM a learnable structure (loss can
+/// fall well below log(vocab)).
+pub fn markov_sequences(vocab: usize, seq: usize, n: usize, rng: &mut Rng) -> SeqDataset {
+    assert!(vocab >= 2);
+    let trans = markov_transitions(vocab, rng);
+    let mut tokens = vec![0i32; n * seq];
+    fill_markov_rows(&trans, vocab, seq, rng, &mut tokens);
     SeqDataset { vocab, seq, tokens }
+}
+
+/// [`markov_sequences`] with the sequence ranges fanned over the pool's
+/// lanes — bit-identical to the sequential generator (same substream
+/// derivation as [`gaussian_mixture_pooled`]).
+pub fn markov_sequences_pooled(
+    vocab: usize,
+    seq: usize,
+    n: usize,
+    rng: &mut Rng,
+    pool: &EnginePool,
+) -> anyhow::Result<SeqDataset> {
+    assert!(vocab >= 2);
+    if pool.threads() <= 1 || seq == 0 || n == 0 {
+        return Ok(markov_sequences(vocab, seq, n, rng));
+    }
+    let trans = markov_transitions(vocab, rng);
+    let base = rng.clone();
+    let per = markov_draws_per_sequence(seq);
+    let mut tokens = vec![0i32; n * seq];
+    let rows_per = n.div_ceil(pool.threads() * 4).max(1);
+    {
+        let trans = &trans[..];
+        let base = &base;
+        let mut tasks: Vec<_> = tokens
+            .chunks_mut(rows_per * seq)
+            .enumerate()
+            .map(|(i, tc)| {
+                move || -> anyhow::Result<()> {
+                    let start = i * rows_per;
+                    let mut r = base.at_offset(start as u64 * per);
+                    fill_markov_rows(trans, vocab, seq, &mut r, tc);
+                    Ok(())
+                }
+            })
+            .collect();
+        pool.run_tasks(&mut tasks)?;
+    }
+    *rng = base.at_offset(n as u64 * per);
+    Ok(SeqDataset { vocab, seq, tokens })
 }
 
 #[cfg(test)]
@@ -203,6 +342,51 @@ mod tests {
             }
         }
         correct as f64 / (d.n() - half) as f64
+    }
+
+    #[test]
+    fn pooled_mixture_bit_identical_to_sequential() {
+        // Deliberately ragged n (not a multiple of the range size) and a
+        // multi-lane pool: every range must land on the exact substream
+        // the sequential pass would have reached.
+        let spec = MixtureSpec::cifar_like(9, 1037);
+        let pool = crate::engine::EnginePool::tasks_only(3).unwrap();
+        let mut r_seq = Rng::new(77);
+        let mut r_pool = Rng::new(77);
+        let a = gaussian_mixture(&spec, &mut r_seq);
+        let b = gaussian_mixture_pooled(&spec, &mut r_pool, &pool).unwrap();
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x.len(), b.x.len());
+        for (p, q) in a.x.iter().zip(&b.x) {
+            assert_eq!(p.to_bits(), q.to_bits());
+        }
+        // the caller-visible stream continues identically after either path
+        for _ in 0..8 {
+            assert_eq!(r_seq.next_u64(), r_pool.next_u64());
+        }
+    }
+
+    #[test]
+    fn pooled_markov_bit_identical_to_sequential() {
+        let pool = crate::engine::EnginePool::tasks_only(4).unwrap();
+        let mut r_seq = Rng::new(31);
+        let mut r_pool = Rng::new(31);
+        let a = markov_sequences(32, 16, 201, &mut r_seq);
+        let b = markov_sequences_pooled(32, 16, 201, &mut r_pool, &pool).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        for _ in 0..8 {
+            assert_eq!(r_seq.next_u64(), r_pool.next_u64());
+        }
+    }
+
+    #[test]
+    fn pooled_generators_fall_back_on_single_lane() {
+        let pool = crate::engine::EnginePool::tasks_only(1).unwrap();
+        let spec = MixtureSpec::mnist_like(8, 100);
+        let a = gaussian_mixture(&spec, &mut Rng::new(5));
+        let b = gaussian_mixture_pooled(&spec, &mut Rng::new(5), &pool).unwrap();
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
     }
 
     #[test]

@@ -345,6 +345,53 @@ impl EnginePool {
             .collect()
     }
 
+    /// Fan per-worker gradient jobs AND generic borrowed-closure tasks in
+    /// ONE queue submission: the gradients are enqueued first, the tasks
+    /// drain on whatever lane capacity is spare. This is the
+    /// batch-prefetch overlap — draw iteration k+1's batches while k's
+    /// gradients run — without a second synchronisation barrier. Losses
+    /// come back in grad-job order; every task runs exactly once; the
+    /// call blocks until ALL jobs (grads and tasks) are answered, so the
+    /// usual borrowed-pointer soundness invariant of [`run_jobs`] holds.
+    ///
+    /// [`run_jobs`]: Self::run_jobs
+    pub fn grad_many_overlapped<F>(
+        &self,
+        ws: &[&[f32]],
+        batches: &[AnyBatch],
+        grad_outs: &mut [Vec<f32>],
+        tasks: &mut [F],
+    ) -> anyhow::Result<Vec<f32>>
+    where
+        F: FnMut() -> anyhow::Result<()> + Send,
+    {
+        anyhow::ensure!(
+            ws.len() == batches.len() && ws.len() == grad_outs.len(),
+            "grad_many_overlapped: mismatched job arity"
+        );
+        let n_grads = ws.len();
+        let mut outs = grad_outs.iter_mut();
+        let mut kinds: Vec<JobKind> = ws
+            .iter()
+            .zip(batches)
+            .map(|(w, batch)| JobKind::Grad {
+                w: RawSlice::of(w),
+                batch: RawBatch::of(batch),
+                out: RawSliceMut::of(outs.next().unwrap()),
+            })
+            .collect();
+        kinds.extend(tasks.iter_mut().map(|f| JobKind::Task(RawTask::of(f))));
+        let results = self.run_jobs(kinds)?;
+        results
+            .into_iter()
+            .take(n_grads)
+            .map(|out| match out {
+                JobOut::Grad(loss) => Ok(loss),
+                _ => unreachable!("grad job returned non-grad result"),
+            })
+            .collect()
+    }
+
     /// Run independent borrowed closures across the lanes (non-engine
     /// work — e.g. the parallel eq. (6) mixing rows), blocking until all
     /// of them have finished. Task `i` runs exactly once, on whichever
@@ -650,6 +697,53 @@ mod tests {
         for (i, &v) in slots.iter().enumerate() {
             assert_eq!(v, (i as u64 + 1) * 3, "task {i} ran {v} times the increment");
         }
+    }
+
+    #[test]
+    fn grad_many_overlapped_runs_grads_and_tasks() {
+        let (meta, w, batches) = fixture(6);
+        let pool = EnginePool::new(native_factory(meta.clone()), 3).unwrap();
+        let ws: Vec<&[f32]> = (0..6).map(|_| w.as_slice()).collect();
+        let mut plain = vec![vec![0.0f32; meta.param_count]; 6];
+        let expected = pool.grad_many(&ws, &batches, &mut plain).unwrap();
+
+        let mut outs = vec![vec![0.0f32; meta.param_count]; 6];
+        let mut hits = vec![0u32; 5];
+        let losses = {
+            let mut tasks: Vec<_> = hits
+                .iter_mut()
+                .map(|h| {
+                    move || -> anyhow::Result<()> {
+                        *h += 1;
+                        Ok(())
+                    }
+                })
+                .collect();
+            let r = pool.grad_many_overlapped(&ws, &batches, &mut outs, &mut tasks);
+            r.unwrap()
+        };
+        // gradients and losses are exactly those of the plain fan-out...
+        assert_eq!(
+            losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            expected.iter().map(|l| l.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(outs, plain);
+        // ...and every overlapped task ran exactly once.
+        assert!(hits.iter().all(|&h| h == 1), "{hits:?}");
+    }
+
+    #[test]
+    fn grad_many_overlapped_with_no_tasks_matches_grad_many() {
+        let (meta, w, batches) = fixture(3);
+        let pool = EnginePool::new(native_factory(meta.clone()), 2).unwrap();
+        let ws: Vec<&[f32]> = (0..3).map(|_| w.as_slice()).collect();
+        let mut a = vec![vec![0.0f32; meta.param_count]; 3];
+        let mut b = vec![vec![0.0f32; meta.param_count]; 3];
+        let la = pool.grad_many(&ws, &batches, &mut a).unwrap();
+        let mut none: Vec<fn() -> anyhow::Result<()>> = Vec::new();
+        let lb = pool.grad_many_overlapped(&ws, &batches, &mut b, &mut none);
+        assert_eq!(la, lb.unwrap());
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -20,6 +20,11 @@ use crate::model::ModelMeta;
 use super::{render_duration_table, render_eval_table, render_time_table};
 
 /// Run one (algo, dataset, model) cell and export its CSVs.
+///
+/// Cells are independent (own Setup, own data, own pool, distinct export
+/// prefixes) and bit-deterministic given the seed, which is what lets
+/// the figure harnesses fan them over [`super::run_cells`]' bounded
+/// scheduler: concurrent output is byte-identical to sequential.
 pub(crate) fn run_cell(
     base: &Setup,
     algo: Algorithm,
@@ -45,6 +50,9 @@ pub(crate) fn run_cell(
     Ok(h)
 }
 
+/// The dataset × {cb-DyBW, cb-Full} grid behind figs 1/4/6: all four
+/// cells run concurrently (bounded by the cell scheduler), the report is
+/// assembled in grid order afterwards.
 fn err_loss_duration_figure(
     base: &Setup,
     model: &str,
@@ -53,10 +61,23 @@ fn err_loss_duration_figure(
     tag: &str,
     title: &str,
 ) -> anyhow::Result<String> {
+    let datasets = [DatasetProfile::MnistLike, DatasetProfile::CifarLike];
+    let cells: Vec<(DatasetProfile, Algorithm)> = datasets
+        .iter()
+        .flat_map(|&d| [(d, Algorithm::CbDybw), (d, Algorithm::CbFull)])
+        .collect();
+    let jobs: Vec<_> = cells
+        .iter()
+        .map(|&(dataset, algo)| {
+            let s = super::cell_setup(base);
+            move || run_cell(&s, algo, dataset, model, iters, out_dir, tag)
+        })
+        .collect();
+    let mut hists = super::run_cells(jobs)?;
     let mut out = format!("=== {title} ===\n");
-    for dataset in [DatasetProfile::MnistLike, DatasetProfile::CifarLike] {
-        let dybw = run_cell(base, Algorithm::CbDybw, dataset, model, iters, out_dir, tag)?;
-        let full = run_cell(base, Algorithm::CbFull, dataset, model, iters, out_dir, tag)?;
+    for dataset in datasets {
+        let dybw = hists.remove(0);
+        let full = hists.remove(0);
         out.push_str(&format!(
             "\n--- {} / {} / {} workers ---\n",
             dataset.name(),
@@ -119,23 +140,33 @@ pub fn fig3(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String>
             "{:>8} | {:>10} {:>12} {:>14} {:>16}\n",
             "batch", "final err%", "final loss", "mean T(k) (s)", "loss @ t*0.5"
         ));
-        for &bsz in batches {
-            let mut s = base.clone();
-            s.algo = Algorithm::CbDybw;
-            s.dataset = dataset;
-            s.model = format!("lrm_d64_c10_b{bsz}");
-            s.train.iters = iters;
-            s.train.eval_every = (iters / 20).max(1);
-            // compute time grows with batch size: scale the straggler base
-            let scale = bsz as f64 / 256.0;
-            s.straggler_base = crate::straggler::Dist::ShiftedExp {
-                base: 0.08 * scale,
-                rate: 25.0 / scale,
-            };
-            let mut trainer = s.build_sim()?;
-            let h = trainer.run()?;
-            let prefix = format!("fig3.{}.b{bsz}", dataset.name());
-            export::write_csv(&h, out_dir, &prefix)?;
+        // one concurrent cell per batch size; rows rendered in sweep order
+        let jobs: Vec<_> = batches
+            .iter()
+            .map(|&bsz| {
+                let mut s = super::cell_setup(base);
+                s.algo = Algorithm::CbDybw;
+                s.dataset = dataset;
+                s.model = format!("lrm_d64_c10_b{bsz}");
+                s.train.iters = iters;
+                s.train.eval_every = (iters / 20).max(1);
+                // compute time grows with batch size: scale the straggler base
+                let scale = bsz as f64 / 256.0;
+                s.straggler_base = crate::straggler::Dist::ShiftedExp {
+                    base: 0.08 * scale,
+                    rate: 25.0 / scale,
+                };
+                move || -> anyhow::Result<RunHistory> {
+                    let mut trainer = s.build_sim()?;
+                    let h = trainer.run()?;
+                    let prefix = format!("fig3.{}.b{bsz}", s.dataset.name());
+                    export::write_csv(&h, out_dir, &prefix)?;
+                    Ok(h)
+                }
+            })
+            .collect();
+        let hists = super::run_cells(jobs)?;
+        for (&bsz, h) in batches.iter().zip(&hists) {
             let final_eval = h.final_eval().unwrap();
             let half_t = h.total_time() * 0.5;
             let mid = h
@@ -182,16 +213,40 @@ pub fn fig5(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String>
     let mut out = String::from("=== Figure 5: loss vs time, 2NN ===\n");
     // Targets sit just above each run's loss floor (the paper's 0.1/0.75
     // are for real MNIST/CIFAR; our mixtures bottom out higher).
-    for (dataset, target) in [
+    let cells = [
         (DatasetProfile::MnistLike, 0.45),
         (DatasetProfile::CifarLike, 2.2),
-    ] {
-        let dybw = run_cell(base, Algorithm::CbDybw, dataset, model, iters, out_dir, "fig5")?;
-        let full = run_cell(base, Algorithm::CbFull, dataset, model, iters, out_dir, "fig5")?;
+    ];
+    let mut hists = loss_vs_time_cells(base, &cells, model, iters, out_dir, "fig5")?;
+    for (dataset, target) in cells {
+        let dybw = hists.remove(0);
+        let full = hists.remove(0);
         out.push_str(&format!("\n--- {} ---\n", dataset.name()));
         out.push_str(&render_time_table(&dybw, &full, &[target]));
     }
     Ok(out)
+}
+
+/// The {dataset} × {cb-DyBW, cb-Full} cells behind figs 5/7, run
+/// concurrently; returns histories in (dataset-major, dybw-then-full)
+/// order.
+fn loss_vs_time_cells(
+    base: &Setup,
+    cells: &[(DatasetProfile, f64)],
+    model: &str,
+    iters: usize,
+    out_dir: &Path,
+    tag: &str,
+) -> anyhow::Result<Vec<RunHistory>> {
+    let jobs: Vec<_> = cells
+        .iter()
+        .flat_map(|&(d, _)| [(d, Algorithm::CbDybw), (d, Algorithm::CbFull)])
+        .map(|(dataset, algo)| {
+            let s = super::cell_setup(base);
+            move || run_cell(&s, algo, dataset, model, iters, out_dir, tag)
+        })
+        .collect();
+    super::run_cells(jobs)
 }
 
 /// Figure 6: LRM on the 10-worker network (Appendix B).
@@ -215,28 +270,14 @@ pub fn fig7(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String>
     let mut b10 = base.clone();
     b10.workers = 10;
     let mut out = String::from("=== Figure 7: loss vs time, LRM (10 workers) ===\n");
-    for (dataset, target) in [
+    let cells = [
         (DatasetProfile::MnistLike, 0.5),
         (DatasetProfile::CifarLike, 2.2),
-    ] {
-        let dybw = run_cell(
-            &b10,
-            Algorithm::CbDybw,
-            dataset,
-            "lrm_d64_c10_b256",
-            iters,
-            out_dir,
-            "fig7",
-        )?;
-        let full = run_cell(
-            &b10,
-            Algorithm::CbFull,
-            dataset,
-            "lrm_d64_c10_b256",
-            iters,
-            out_dir,
-            "fig7",
-        )?;
+    ];
+    let mut hists = loss_vs_time_cells(&b10, &cells, "lrm_d64_c10_b256", iters, out_dir, "fig7")?;
+    for (dataset, target) in cells {
+        let dybw = hists.remove(0);
+        let full = hists.remove(0);
         out.push_str(&format!("\n--- {} ---\n", dataset.name()));
         out.push_str(&render_time_table(&dybw, &full, &[target]));
     }

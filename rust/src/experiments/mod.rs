@@ -23,9 +23,95 @@ pub mod figures;
 pub mod speedup;
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::coordinator::setup::Setup;
 use crate::metrics::RunHistory;
+
+// ---------------------------------------------------------------------------
+// concurrent cell scheduler
+// ---------------------------------------------------------------------------
+
+/// Configured cap on concurrently-running harness cells (0 = auto).
+static CELL_CAP: AtomicUsize = AtomicUsize::new(0);
+
+/// Cap the number of harness cells (independent `Setup` builds + runs)
+/// executing concurrently inside `run_cells`. 0 = auto: half the cores,
+/// clamped to [1, 4], which bounds peak memory (each cell owns one
+/// dataset + one engine pool). Outputs are always assembled in
+/// submission order and every cell is bit-deterministic given its seed,
+/// so this knob never changes results — only wall clock and memory.
+pub fn set_cell_concurrency(cap: usize) {
+    CELL_CAP.store(cap, Ordering::Relaxed);
+}
+
+pub(crate) fn cell_concurrency() -> usize {
+    match CELL_CAP.load(Ordering::Relaxed) {
+        0 => (std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1) / 2).clamp(1, 4),
+        cap => cap,
+    }
+}
+
+/// Clone `base` for one concurrently-running cell: auto-sized pools
+/// shrink so `cell_concurrency()` simultaneous cells share the machine
+/// instead of oversubscribing it (an explicit `--threads` is respected).
+/// The lane count never changes results (the bit-identity invariant), so
+/// this is purely a scheduling choice.
+pub(crate) fn cell_setup(base: &Setup) -> Setup {
+    let mut s = base.clone();
+    if s.threads == 0 {
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        s.threads = (cores / cell_concurrency()).max(1);
+    }
+    s
+}
+
+/// Run independent harness cells with bounded concurrency on a small
+/// scoped-thread scheduler. Results come back in submission order and
+/// errors surface lowest-index-first, so output assembly is
+/// deterministic no matter how cells raced; with a cap of 1 the jobs run
+/// inline on the caller thread (the sequential reference path).
+pub(crate) fn run_cells<T, F>(jobs: Vec<F>) -> anyhow::Result<Vec<T>>
+where
+    T: Send,
+    F: FnOnce() -> anyhow::Result<T> + Send,
+{
+    let lanes = cell_concurrency().min(jobs.len().max(1));
+    if lanes <= 1 {
+        return jobs.into_iter().map(|f| f()).collect();
+    }
+    let n = jobs.len();
+    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|f| Mutex::new(Some(f))).collect();
+    let slots: Vec<Mutex<Option<anyhow::Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..lanes {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap_or_else(|p| p.into_inner()).take();
+                if let Some(job) = job {
+                    let result = job();
+                    *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(result);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            let inner = slot.into_inner().unwrap_or_else(|p| p.into_inner());
+            match inner {
+                Some(result) => result,
+                None => Err(anyhow::anyhow!("harness cell {i} produced no result")),
+            }
+        })
+        .collect()
+}
 
 /// All experiment ids, in presentation order.
 pub const ALL: &[&str] = &[
@@ -187,5 +273,47 @@ mod tests {
     fn unknown_experiment_errors() {
         let s = Setup::default();
         assert!(run("fig99", &s, Path::new("/tmp"), true).is_err());
+    }
+
+    #[test]
+    fn run_cells_preserves_submission_order() {
+        set_cell_concurrency(3);
+        // later cells finish first; results must still come back in order
+        let jobs: Vec<_> = (0..7usize)
+            .map(|i| {
+                move || -> anyhow::Result<usize> {
+                    std::thread::sleep(std::time::Duration::from_millis((7 - i) as u64 * 3));
+                    Ok(i)
+                }
+            })
+            .collect();
+        let got = run_cells(jobs).unwrap();
+        set_cell_concurrency(0);
+        assert_eq!(got, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_cells_surfaces_lowest_index_error() {
+        set_cell_concurrency(2);
+        let jobs: Vec<_> = (0..5usize)
+            .map(|i| {
+                move || -> anyhow::Result<usize> {
+                    anyhow::ensure!(i % 2 == 0, "cell {i} failed");
+                    Ok(i)
+                }
+            })
+            .collect();
+        let err = run_cells(jobs).unwrap_err();
+        set_cell_concurrency(0);
+        assert!(err.to_string().contains("cell 1 failed"), "{err}");
+    }
+
+    #[test]
+    fn cell_setup_reduces_auto_lanes_only() {
+        let mut base = Setup::default();
+        base.threads = 0;
+        assert!(cell_setup(&base).threads >= 1);
+        base.threads = 7;
+        assert_eq!(cell_setup(&base).threads, 7);
     }
 }

@@ -23,8 +23,10 @@ use crate::consensus::mixing::ParamBuffers;
 use crate::consensus::ConsensusMatrix;
 use crate::coordinator::setup::Setup;
 use crate::coordinator::Algorithm;
+use crate::data::synthetic::{gaussian_mixture, gaussian_mixture_pooled, MixtureSpec};
 use crate::engine::EnginePool;
 use crate::metrics::export;
+use crate::metrics::RunHistory;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -38,20 +40,31 @@ pub fn run(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> 
         "{:>4} | {:>12} {:>10} {:>12} {:>14}\n",
         "N", "iters to", "N x K", "final loss", "mean T(k) (s)"
     ));
+    // One concurrent cell per N (the sweep cells are independent runs);
+    // rows and the monotonicity check render in sweep order afterwards.
+    let jobs: Vec<_> = ns
+        .iter()
+        .map(|&n| {
+            let mut s = super::cell_setup(base);
+            s.workers = n;
+            s.algo = Algorithm::CbDybw;
+            s.model = "lrm_d64_c10_b256".into();
+            s.train.iters = iters;
+            s.train.eval_every = 5;
+            // Corollary 2's schedule: η = √(N/K) (clamped for stability).
+            s.train.lr0 = (n as f64 / iters as f64).sqrt().min(0.5);
+            s.train.lr_decay = 1.0;
+            move || -> anyhow::Result<RunHistory> {
+                let mut trainer = s.build_sim()?;
+                let h = trainer.run()?;
+                export::write_csv(&h, out_dir, &format!("speedup.n{n}"))?;
+                Ok(h)
+            }
+        })
+        .collect();
+    let hists = super::run_cells(jobs)?;
     let mut prev_k: Option<usize> = None;
-    for &n in ns {
-        let mut s = base.clone();
-        s.workers = n;
-        s.algo = Algorithm::CbDybw;
-        s.model = "lrm_d64_c10_b256".into();
-        s.train.iters = iters;
-        s.train.eval_every = 5;
-        // Corollary 2's schedule: η = √(N/K) (clamped for stability).
-        s.train.lr0 = (n as f64 / iters as f64).sqrt().min(0.5);
-        s.train.lr_decay = 1.0;
-        let mut trainer = s.build_sim()?;
-        let h = trainer.run()?;
-        export::write_csv(&h, out_dir, &format!("speedup.n{n}"))?;
+    for (&n, h) in ns.iter().zip(&hists) {
         let k_target = h.iters_to_test_loss(target);
         let final_loss = h.final_eval().map(|e| e.test_loss).unwrap_or(f64::NAN);
         out.push_str(&format!(
@@ -142,6 +155,9 @@ pub fn pool_wall_clock(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Res
     let mix = mix_phase(quick)?;
     out.push_str(&mix.report());
 
+    let dp = data_phase(base, quick)?;
+    out.push_str(&dp.report());
+
     let mut j = Json::obj();
     j.set("bench", "pool_speedup".into())
         .set("model", s.model.as_str().into())
@@ -164,7 +180,20 @@ pub fn pool_wall_clock(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Res
         .set("mix_seq_seconds", mix.seq_s.into())
         .set("mix_pool_seconds", mix.pool_s.into())
         .set("mix_speedup", mix.speedup.into())
-        .set("mix_bit_identical", mix.identical.into());
+        .set("mix_bit_identical", mix.identical.into())
+        .set("data_synth_n", dp.synth_n.into())
+        .set("data_synth_dim", dp.synth_dim.into())
+        .set("data_synth_threads", dp.threads.into())
+        .set("data_synth_seq_seconds", dp.synth_seq_s.into())
+        .set("data_synth_pool_seconds", dp.synth_pool_s.into())
+        .set("data_synth_speedup", dp.synth_speedup().into())
+        .set("data_synth_bit_identical", dp.synth_identical.into())
+        .set("data_prefetch_workers", dp.pf_workers.into())
+        .set("data_prefetch_iters", dp.pf_iters.into())
+        .set("data_prefetch_off_seconds", dp.pf_off_s.into())
+        .set("data_prefetch_on_seconds", dp.pf_on_s.into())
+        .set("data_prefetch_speedup", dp.pf_speedup().into())
+        .set("data_prefetch_bit_identical", dp.pf_identical.into());
     std::fs::create_dir_all(out_dir)?;
     let path = out_dir.join("BENCH_speedup.json");
     std::fs::write(&path, j.to_string())?;
@@ -269,6 +298,153 @@ fn mix_phase(quick: bool) -> anyhow::Result<MixPhase> {
     })
 }
 
+/// Result of the data-phase measurements: pooled-vs-sequential dataset
+/// synthesis, and the sim driver with batch prefetch off vs on.
+struct DataPhase {
+    synth_n: usize,
+    synth_dim: usize,
+    threads: usize,
+    synth_seq_s: f64,
+    synth_pool_s: f64,
+    synth_identical: bool,
+    pf_workers: usize,
+    pf_iters: usize,
+    pf_off_s: f64,
+    pf_on_s: f64,
+    pf_identical: bool,
+}
+
+impl DataPhase {
+    fn synth_speedup(&self) -> f64 {
+        self.synth_seq_s / self.synth_pool_s.max(1e-12)
+    }
+
+    fn pf_speedup(&self) -> f64 {
+        self.pf_off_s / self.pf_on_s.max(1e-12)
+    }
+
+    fn report(&self) -> String {
+        let mut out =
+            String::from("=== Data-phase wall clock: pooled synthesis + batch prefetch ===\n");
+        out.push_str(&format!(
+            "synthesis: gaussian mixture {} x {} (seq vs {} lanes)\n",
+            self.synth_n, self.synth_dim, self.threads
+        ));
+        out.push_str(&format!("  sequential generator  : {:.3}s wall\n", self.synth_seq_s));
+        out.push_str(&format!("  pooled generator      : {:.3}s wall\n", self.synth_pool_s));
+        out.push_str(&format!("  speedup               : {:.2}x\n", self.synth_speedup()));
+        out.push_str(&format!("  bit-identical data    : {}\n", self.synth_identical));
+        out.push_str(&format!(
+            "prefetch: {} workers x {} iters (batches drawn between vs during fan-outs)\n",
+            self.pf_workers, self.pf_iters
+        ));
+        out.push_str(&format!("  prefetch off          : {:.3}s wall\n", self.pf_off_s));
+        out.push_str(&format!("  prefetch on           : {:.3}s wall\n", self.pf_on_s));
+        out.push_str(&format!("  speedup               : {:.2}x\n", self.pf_speedup()));
+        out.push_str(&format!("  bit-identical history : {}\n", self.pf_identical));
+        out
+    }
+}
+
+/// Measure the data path: (a) the gaussian-mixture generator, sequential
+/// vs fanned over a 4-lane pool, asserting the datasets AND the
+/// post-generation RNG states match bit for bit; (b) the 16-worker sim
+/// driver with batch prefetch off vs on, asserting bit-identical
+/// histories. Best-of-3 in release, single-sample in debug (same
+/// rationale as `pool_wall_clock`).
+fn data_phase(base: &Setup, quick: bool) -> anyhow::Result<DataPhase> {
+    const POOL_THREADS: usize = 4;
+    let synth_dim = 64usize;
+    let synth_n = if cfg!(debug_assertions) {
+        40_000
+    } else if quick {
+        120_000
+    } else {
+        480_000
+    };
+    let spec = MixtureSpec::mnist_like(synth_dim, synth_n);
+    let pool = EnginePool::tasks_only(POOL_THREADS)?;
+    let reps = if cfg!(debug_assertions) { 1 } else { 3 };
+
+    let seq_run = || -> (f64, crate::data::Dataset, Rng) {
+        let mut rng = Rng::new(23);
+        let t0 = Instant::now();
+        let d = gaussian_mixture(&spec, &mut rng);
+        (t0.elapsed().as_secs_f64(), d, rng)
+    };
+    let pool_run = |pool: &EnginePool| -> anyhow::Result<(f64, crate::data::Dataset, Rng)> {
+        let mut rng = Rng::new(23);
+        let t0 = Instant::now();
+        let d = gaussian_mixture_pooled(&spec, &mut rng, pool)?;
+        Ok((t0.elapsed().as_secs_f64(), d, rng))
+    };
+    let (mut synth_seq_s, seq_d, mut seq_rng) = seq_run();
+    for _ in 1..reps {
+        let (s2, ..) = seq_run();
+        synth_seq_s = synth_seq_s.min(s2);
+    }
+    let (mut synth_pool_s, pool_d, mut pool_rng) = pool_run(&pool)?;
+    for _ in 1..reps {
+        let (s2, ..) = pool_run(&pool)?;
+        synth_pool_s = synth_pool_s.min(s2);
+    }
+    let synth_identical = seq_d.y == pool_d.y
+        && seq_d.x.len() == pool_d.x.len()
+        && seq_d.x.iter().zip(&pool_d.x).all(|(a, b)| a.to_bits() == b.to_bits())
+        && (0..4).all(|_| seq_rng.next_u64() == pool_rng.next_u64());
+    drop((seq_d, pool_d));
+
+    let mut s = base.clone();
+    s.workers = 16;
+    s.algo = Algorithm::CbDybw;
+    s.model = "mlp2_d64_h256_c10_b256".into();
+    s.train_n = if quick { 4_096 } else { 16_384 };
+    s.test_n = 512;
+    s.train.iters = if cfg!(debug_assertions) {
+        2
+    } else if quick {
+        4
+    } else {
+        20
+    };
+    s.train.eval_every = 0;
+    s.threads = POOL_THREADS;
+    let timed = |prefetch: bool| -> anyhow::Result<(f64, RunHistory)> {
+        let mut s2 = s.clone();
+        s2.train.prefetch = prefetch;
+        let mut trainer = s2.build_sim()?;
+        let t0 = Instant::now();
+        let h = trainer.run()?;
+        Ok((t0.elapsed().as_secs_f64(), h))
+    };
+    let best = |prefetch: bool| -> anyhow::Result<(f64, RunHistory)> {
+        let (mut best_s, h) = timed(prefetch)?;
+        for _ in 1..reps {
+            let (s2, h2) = timed(prefetch)?;
+            anyhow::ensure!(h.bits_eq(&h2), "repeated prefetch runs diverged (nondeterminism)");
+            best_s = best_s.min(s2);
+        }
+        Ok((best_s, h))
+    };
+    let (pf_off_s, off_h) = best(false)?;
+    let (pf_on_s, on_h) = best(true)?;
+    let pf_identical = off_h.bits_eq(&on_h);
+
+    Ok(DataPhase {
+        synth_n,
+        synth_dim,
+        threads: POOL_THREADS,
+        synth_seq_s,
+        synth_pool_s,
+        synth_identical,
+        pf_workers: s.workers,
+        pf_iters: s.train.iters,
+        pf_off_s,
+        pf_on_s,
+        pf_identical,
+    })
+}
+
 /// CI perf-trajectory gate: compare a freshly measured `BENCH_speedup.json`
 /// against the committed baseline. Fails when pooled execution stopped
 /// being bit-identical (correctness regression — never tolerated) or when
@@ -303,6 +479,11 @@ pub fn gate(current: &Path, baseline: &Path, tolerance: f64) -> anyhow::Result<S
         "mix_dim",
         "mix_rounds",
         "mix_threads",
+        "data_synth_n",
+        "data_synth_dim",
+        "data_synth_threads",
+        "data_prefetch_workers",
+        "data_prefetch_iters",
     ] {
         if let (Some(c), Some(b)) = (cur.get(key), base.get(key)) {
             let (cs, bs) = (c.to_string(), b.to_string());
@@ -314,6 +495,9 @@ pub fn gate(current: &Path, baseline: &Path, tolerance: f64) -> anyhow::Result<S
         }
     }
 
+    // Core bit-identity flags are required; the data_phase flags (newer
+    // schema) are gated whenever the CURRENT file carries them — current
+    // is always freshly measured, so only core absence is malformed.
     for key in ["bit_identical", "mix_bit_identical"] {
         // A missing key is a malformed/stale input, not a determinism
         // regression — report it as such.
@@ -321,11 +505,26 @@ pub fn gate(current: &Path, baseline: &Path, tolerance: f64) -> anyhow::Result<S
             .get(key)
             .and_then(|v| v.as_bool())
             .ok_or_else(|| anyhow::anyhow!("{} missing '{key}'", current.display()))?;
-        out.push_str(&format!("  {key:<18}: {ok}\n"));
+        out.push_str(&format!("  {key:<26}: {ok}\n"));
         if !ok {
             failures.push(format!("{key} is false — pooled execution diverged"));
         }
     }
+    for key in ["data_synth_bit_identical", "data_prefetch_bit_identical"] {
+        match cur.get(key).and_then(|v| v.as_bool()) {
+            Some(ok) => {
+                out.push_str(&format!("  {key:<26}: {ok}\n"));
+                if !ok {
+                    failures.push(format!("{key} is false — pooled execution diverged"));
+                }
+            }
+            None => out.push_str(&format!("  {key:<26}: (not measured)\n")),
+        }
+    }
+    // Core speedups are required on both sides; the data_phase speedups
+    // gate only when the baseline carries a floor for them (schema
+    // evolution: baselines committed before this section exist, and must
+    // keep gating the pool/mix sections instead of erroring).
     for key in ["speedup", "mix_speedup"] {
         let c = cur
             .get(key)
@@ -338,7 +537,7 @@ pub fn gate(current: &Path, baseline: &Path, tolerance: f64) -> anyhow::Result<S
         let floor = b * tolerance;
         let ok = c >= floor;
         out.push_str(&format!(
-            "  {key:<18}: {c:.3}x vs baseline {b:.3}x (floor {floor:.3}x) {}\n",
+            "  {key:<26}: {c:.3}x vs baseline {b:.3}x (floor {floor:.3}x) {}\n",
             if ok { "ok" } else { "REGRESSION" }
         ));
         if !ok {
@@ -347,10 +546,59 @@ pub fn gate(current: &Path, baseline: &Path, tolerance: f64) -> anyhow::Result<S
             ));
         }
     }
+    for key in ["data_synth_speedup", "data_prefetch_speedup"] {
+        let c = cur.get(key).and_then(|v| v.as_f64());
+        let b = base.get(key).and_then(|v| v.as_f64());
+        match (c, b) {
+            (Some(c), Some(b)) => {
+                let floor = b * tolerance;
+                let ok = c >= floor;
+                out.push_str(&format!(
+                    "  {key:<26}: {c:.3}x vs baseline {b:.3}x (floor {floor:.3}x) {}\n",
+                    if ok { "ok" } else { "REGRESSION" }
+                ));
+                if !ok {
+                    failures.push(format!(
+                        "{key} {c:.3}x fell below {floor:.3}x ({tolerance} x baseline {b:.3}x)"
+                    ));
+                }
+            }
+            (Some(c), None) => {
+                out.push_str(&format!("  {key:<26}: {c:.3}x (no baseline floor; not gated)\n"));
+            }
+            (None, Some(_)) => {
+                failures.push(format!(
+                    "{key} missing from current — stale bench artifact predates the \
+                     data_phase section"
+                ));
+            }
+            (None, None) => {}
+        }
+    }
     if !failures.is_empty() {
         anyhow::bail!("{out}\nperf gate FAILED:\n  - {}", failures.join("\n  - "));
     }
     out.push_str("perf gate passed.\n");
+    Ok(out)
+}
+
+/// Install `current` as the committed baseline (re-baselining after an
+/// intentional workload retune, or from a CI artifact's numbers — see
+/// the hardware-relative note in ROADMAP.md). The gate against the OLD
+/// baseline is reported but does not block — that gate failing is
+/// precisely when a refresh is needed — while a malformed or
+/// non-bit-identical `current` is rejected via a self-gate, so a broken
+/// artifact can never become the floor.
+pub fn refresh(current: &Path, baseline: &Path, tolerance: f64) -> anyhow::Result<String> {
+    let old_gate = gate(current, baseline, tolerance);
+    gate(current, current, tolerance)
+        .map_err(|e| anyhow::anyhow!("refusing to install current as baseline: {e}"))?;
+    std::fs::copy(current, baseline)?;
+    let mut out = match old_gate {
+        Ok(report) => report,
+        Err(e) => format!("{e}\n(gate failed against the OLD baseline)\n"),
+    };
+    out.push_str(&format!("(baseline refreshed -> {})\n", baseline.display()));
     Ok(out)
 }
 
@@ -368,6 +616,7 @@ mod tests {
         assert!(out.contains("N x K"));
         assert!(out.contains("Engine-pool wall clock"));
         assert!(out.contains("Mixing-phase wall clock"));
+        assert!(out.contains("Data-phase wall clock"));
         // the perf-trajectory artifact exists and is valid JSON
         let bench = std::fs::read_to_string(dir.join("BENCH_speedup.json")).unwrap();
         let j = crate::util::json::Json::parse(&bench).unwrap();
@@ -378,6 +627,12 @@ mod tests {
         assert_eq!(j.get("mix_bit_identical").and_then(|v| v.as_bool()), Some(true));
         assert!(j.get("mix_speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
         assert!(j.get("mix_dim").and_then(|v| v.as_usize()).unwrap() >= 262_144);
+        // the data-phase section too: pooled synthesis and prefetch both
+        // measured and bit-identical
+        assert_eq!(j.get("data_synth_bit_identical").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(j.get("data_prefetch_bit_identical").and_then(|v| v.as_bool()), Some(true));
+        assert!(j.get("data_synth_speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(j.get("data_prefetch_speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
         // and a self-gate against the fresh numbers passes trivially
         let path = dir.join("BENCH_speedup.json");
         assert!(gate(&path, &path, 0.75).is_ok());
@@ -409,6 +664,108 @@ mod tests {
         assert!(gate(&broken, &base, 0.75).is_err(), "bit-identity loss must fail");
         assert!(gate(&good, &base, 1.5).is_err(), "tolerance > 1 is rejected");
         assert!(gate(&dir.join("missing.json"), &base, 0.75).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Write a bench JSON in the NEW schema (core + data_phase sections).
+    fn write_full(
+        dir: &Path,
+        name: &str,
+        speedup: f64,
+        data_synth: f64,
+        data_prefetch: f64,
+        bit: bool,
+        data_bit: bool,
+    ) -> std::path::PathBuf {
+        let mut j = Json::obj();
+        j.set("speedup", speedup.into())
+            .set("mix_speedup", speedup.into())
+            .set("bit_identical", bit.into())
+            .set("mix_bit_identical", true.into())
+            .set("data_synth_speedup", data_synth.into())
+            .set("data_prefetch_speedup", data_prefetch.into())
+            .set("data_synth_bit_identical", data_bit.into())
+            .set("data_prefetch_bit_identical", true.into());
+        let p = dir.join(name);
+        std::fs::write(&p, j.to_string()).unwrap();
+        p
+    }
+
+    /// Schema evolution: a baseline committed BEFORE the data_phase
+    /// section must keep gating the pool/mix sections (not error), while
+    /// the data sections stay ungated until the baseline is refreshed.
+    #[test]
+    fn gate_old_baseline_without_data_phase_still_gates_core() {
+        let dir = std::env::temp_dir().join("dybw_gate_schema_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // old-schema baseline: core keys only
+        let mut j = Json::obj();
+        j.set("speedup", 2.0.into())
+            .set("mix_speedup", 2.0.into())
+            .set("bit_identical", true.into())
+            .set("mix_bit_identical", true.into());
+        let base = dir.join("base_old.json");
+        std::fs::write(&base, j.to_string()).unwrap();
+
+        let good = write_full(&dir, "cur_good.json", 1.9, 3.0, 1.0, true, true);
+        let report = gate(&good, &base, 0.75).unwrap();
+        assert!(report.contains("not gated"), "{report}");
+
+        // ...but a core regression (or a data bit-identity loss in the
+        // fresh measurement) still fails against the old baseline.
+        let slow = write_full(&dir, "cur_slow.json", 1.0, 3.0, 1.0, true, true);
+        assert!(gate(&slow, &base, 0.75).is_err(), "core regression must still fail");
+        let data_broken = write_full(&dir, "cur_databroken.json", 1.9, 3.0, 1.0, true, false);
+        assert!(
+            gate(&data_broken, &base, 0.75).is_err(),
+            "data bit-identity loss must fail even against an old baseline"
+        );
+
+        // reversed evolution: a NEW baseline with data floors rejects an
+        // old current that lacks the section (stale artifact).
+        let new_base = write_full(&dir, "base_new.json", 2.0, 2.0, 1.0, true, true);
+        let mut j = Json::obj();
+        j.set("speedup", 2.0.into())
+            .set("mix_speedup", 2.0.into())
+            .set("bit_identical", true.into())
+            .set("mix_bit_identical", true.into());
+        let stale = dir.join("cur_stale.json");
+        std::fs::write(&stale, j.to_string()).unwrap();
+        let err = gate(&stale, &new_base, 0.75).unwrap_err();
+        assert!(err.to_string().contains("stale bench artifact"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn refresh_round_trips_current_into_baseline() {
+        let dir = std::env::temp_dir().join("dybw_refresh_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // current regressed vs the old floor — exactly the re-baseline case
+        let current = write_full(&dir, "current.json", 1.2, 1.5, 1.0, true, true);
+        let baseline = write_full(&dir, "baseline.json", 3.0, 3.0, 1.0, true, true);
+        assert!(gate(&current, &baseline, 0.75).is_err());
+        let report = refresh(&current, &baseline, 0.75).unwrap();
+        assert!(report.contains("baseline refreshed"), "{report}");
+        // byte-for-byte round trip, and the gate now passes
+        assert_eq!(std::fs::read(&current).unwrap(), std::fs::read(&baseline).unwrap());
+        assert!(gate(&current, &baseline, 0.75).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn refresh_rejects_non_bit_identical_current() {
+        let dir = std::env::temp_dir().join("dybw_refresh_reject_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let baseline = write_full(&dir, "baseline.json", 2.0, 2.0, 1.0, true, true);
+        let before = std::fs::read(&baseline).unwrap();
+        let cases = [("cur_a.json", false, true), ("cur_b.json", true, false)];
+        for (name, bit, data_bit) in cases {
+            let current = write_full(&dir, name, 5.0, 5.0, 5.0, bit, data_bit);
+            let err = refresh(&current, &baseline, 0.75).unwrap_err();
+            assert!(err.to_string().contains("refusing to install"), "{err}");
+            // the baseline file was not touched
+            assert_eq!(std::fs::read(&baseline).unwrap(), before);
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

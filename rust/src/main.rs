@@ -102,6 +102,7 @@ fn setup_opts(cmd: Command) -> Command {
         .opt("seed", "2021", "master RNG seed")
         .opt("backend", "native", "native|pjrt[:dir]")
         .opt("threads", "0", "engine-pool lanes (0 = auto: all available cores, capped at N)")
+        .flag("no-prefetch", "disable batch prefetch (bit-identical either way; debugging aid)")
         .opt("config", "", "JSON config file (flags override)")
 }
 
@@ -135,6 +136,9 @@ fn setup_from_args(a: &Args) -> anyhow::Result<Setup> {
     s.train.eval_every = a.get_usize("eval-every")?;
     s.train.seed = a.get_u64("seed")?;
     s.threads = a.get_usize("threads")?;
+    if a.flag("no-prefetch") {
+        s.train.prefetch = false;
+    }
     s.backend = match a.get("backend") {
         "native" => Backend::Native,
         b if b.starts_with("pjrt") => Backend::Pjrt {
@@ -214,12 +218,14 @@ fn cmd_figure(argv: &[String]) -> anyhow::Result<()> {
     ))
     .positional("id", "table1|fig1..fig7|speedup|baselines|topology|severity|all")
     .opt("out-dir", "results", "CSV/JSON output dir")
+    .opt("cells", "0", "concurrent harness cells (0 = auto; 1 = sequential reference)")
     .flag("quick", "shrunk workloads (CI)");
     let a = parse_or_exit(&cmd, argv)?;
     let id = a.positionals.first().ok_or_else(|| {
         anyhow::anyhow!("which figure? (e.g. `dybw figure fig1`)\n\n{}", cmd.usage())
     })?;
     let base = setup_from_args(&a)?;
+    experiments::set_cell_concurrency(a.get_usize("cells")?);
     let out_dir = PathBuf::from(a.get("out-dir"));
     let report = experiments::run(id, &base, &out_dir, a.flag("quick"))?;
     println!("{report}");
@@ -410,26 +416,16 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
             let current = PathBuf::from(a.get("current"));
             let baseline = PathBuf::from(a.get("baseline"));
             let tol = a.get_f64("tolerance")?;
-            let gate_result = experiments::speedup::gate(&current, &baseline, tol);
             if a.flag("refresh") {
                 // Re-baselining is needed precisely when the honest new
-                // measurement fails the OLD floor, so refresh past that —
-                // but never install a malformed or non-bit-identical
-                // current file (the self-gate catches both).
-                experiments::speedup::gate(&current, &current, tol).map_err(|e| {
-                    anyhow::anyhow!("refusing to install current as baseline: {e}")
-                })?;
-                std::fs::copy(&current, &baseline)?;
-                match gate_result {
-                    Ok(report) => println!("{report}"),
-                    Err(e) => println!("{e}\n(gate failed against the OLD baseline)"),
-                }
-                println!("(baseline refreshed -> {})", baseline.display());
-                Ok(())
+                // measurement fails the OLD floor; `refresh` reports that
+                // gate but installs anyway — unless the current file is
+                // malformed or non-bit-identical (its self-gate).
+                println!("{}", experiments::speedup::refresh(&current, &baseline, tol)?);
             } else {
-                println!("{}", gate_result?);
-                Ok(())
+                println!("{}", experiments::speedup::gate(&current, &baseline, tol)?);
             }
+            Ok(())
         }
         _ => anyhow::bail!("bench action: gate\n\n{}", cmd.usage()),
     }

@@ -7,10 +7,81 @@
 //! draws from this type, so a run is fully reproducible from one `u64`
 //! seed.
 
+use std::sync::OnceLock;
+
 /// xoshiro256++ PRNG.
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
+}
+
+// ---------------------------------------------------------------------------
+// O(log n) stream offsets (counter-based substreams)
+// ---------------------------------------------------------------------------
+//
+// The xoshiro256++ *state transition* is linear over GF(2): every bit of
+// the next state is an XOR of bits of the current state (the add/rotate
+// in the output function never feeds back into the state). "The state
+// after n draws" is therefore the matrix power T^n applied to the
+// 256-bit state vector, computable in O(log n) matrix-vector products.
+// That is what turns one sequential stream into counter-based
+// substreams: a range of work items [a, b) that consumes a FIXED number
+// of draws per item can derive its exact stream state from the base
+// state and the counter `a`, independently of every other range — the
+// foundation of the pooled (bit-identical) data-synthesis path.
+
+/// One state transition (the state-update half of `next_u64`).
+fn step_state(s: &mut [u64; 4]) {
+    let t = s[1] << 17;
+    s[2] ^= s[0];
+    s[3] ^= s[1];
+    s[1] ^= s[2];
+    s[0] ^= s[3];
+    s[2] ^= t;
+    s[3] = s[3].rotate_left(45);
+}
+
+/// GF(2) matrix as 256 columns, each a 256-bit vector (4 × u64 words).
+type StateMatrix = Vec<[u64; 4]>;
+
+/// m · v over GF(2): XOR the columns selected by v's set bits.
+fn mat_vec(m: &[[u64; 4]], v: &[u64; 4]) -> [u64; 4] {
+    let mut out = [0u64; 4];
+    for (i, col) in m.iter().enumerate() {
+        if (v[i / 64] >> (i % 64)) & 1 == 1 {
+            out[0] ^= col[0];
+            out[1] ^= col[1];
+            out[2] ^= col[2];
+            out[3] ^= col[3];
+        }
+    }
+    out
+}
+
+/// T^(2^k) for k in 0..64, built once and cached: after that, any jump
+/// costs one `mat_vec` per set bit of the offset (microseconds).
+static JUMP_POWERS: OnceLock<Vec<StateMatrix>> = OnceLock::new();
+
+fn jump_powers() -> &'static [StateMatrix] {
+    JUMP_POWERS.get_or_init(|| {
+        // T itself: column i is the transition applied to basis vector e_i.
+        let mut t: StateMatrix = (0..256)
+            .map(|i| {
+                let mut s = [0u64; 4];
+                s[i / 64] = 1u64 << (i % 64);
+                step_state(&mut s);
+                s
+            })
+            .collect();
+        let mut powers = Vec::with_capacity(64);
+        for _ in 0..64 {
+            powers.push(t.clone());
+            // square: column i of T² is T applied to T's column i
+            let sq: StateMatrix = t.iter().map(|col| mat_vec(&t, col)).collect();
+            t = sq;
+        }
+        powers
+    })
 }
 
 impl Rng {
@@ -32,6 +103,28 @@ impl Rng {
     /// Derive an independent stream (e.g. one per worker) from this one.
     pub fn fork(&mut self, stream: u64) -> Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    /// The stream exactly `draws` calls of [`next_u64`](Self::next_u64)
+    /// ahead of `self`, computed in O(log draws) via the GF(2)-linear
+    /// state transition (see the module-level substream note). `self` is
+    /// left untouched; `at_offset(0)` is a plain clone. This is the
+    /// counter-based substream primitive behind the pooled data
+    /// synthesis: range [a, b) of a generator that consumes `c` draws
+    /// per item starts its kernel at `base.at_offset(a * c)`.
+    pub fn at_offset(&self, draws: u64) -> Rng {
+        let powers = jump_powers();
+        let mut s = self.s;
+        let mut n = draws;
+        let mut k = 0usize;
+        while n > 0 {
+            if n & 1 == 1 {
+                s = mat_vec(&powers[k], &s);
+            }
+            n >>= 1;
+            k += 1;
+        }
+        Rng { s }
     }
 
     #[inline]
@@ -212,6 +305,33 @@ mod tests {
         s.sort_unstable();
         s.dedup();
         assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn at_offset_matches_sequential_stepping() {
+        let base = Rng::new(123);
+        for &k in &[0u64, 1, 2, 3, 17, 64, 255, 1000, 4097] {
+            let mut stepped = base.clone();
+            for _ in 0..k {
+                stepped.next_u64();
+            }
+            let mut jumped = base.at_offset(k);
+            for i in 0..8 {
+                assert_eq!(stepped.next_u64(), jumped.next_u64(), "offset {k}, draw {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn at_offset_composes_additively() {
+        let base = Rng::new(9);
+        let a = base.at_offset(12_345).at_offset(678);
+        let b = base.at_offset(13_023);
+        assert_eq!(a.s, b.s);
+        // and a large jump still agrees with two half-jumps
+        let c = base.at_offset(1u64 << 40).at_offset(1u64 << 40);
+        let d = base.at_offset(1u64 << 41);
+        assert_eq!(c.s, d.s);
     }
 
     #[test]

@@ -6,11 +6,27 @@
 //! chunked loops the autovectoriser turns into AVX; no allocation inside
 //! any of them.
 
+use crate::engine::EnginePool;
+
 /// y += a * x
+///
+/// Explicit 4-lane unroll so the autovectoriser reliably emits packed
+/// FMAs even in non-LTO builds. Per element the operation is unchanged
+/// (`y[i] += a * x[i]`), so the result is bit-identical to the naive
+/// loop — asserted by tests.
 #[inline]
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+    let quads = y.len() / 4 * 4;
+    let (yh, yt) = y.split_at_mut(quads);
+    let (xh, xt) = x.split_at(quads);
+    for (cy, cx) in yh.chunks_exact_mut(4).zip(xh.chunks_exact(4)) {
+        cy[0] += a * cx[0];
+        cy[1] += a * cx[1];
+        cy[2] += a * cx[2];
+        cy[3] += a * cx[3];
+    }
+    for (yi, xi) in yt.iter_mut().zip(xt) {
         *yi += a * *xi;
     }
 }
@@ -57,12 +73,35 @@ pub fn weighted_sum_into(out: &mut [f32], xs: &[&[f32]], coeffs: &[f32]) {
     }
 }
 
+/// Σ aᵢ·bᵢ in f64, accumulated across 4 independent lanes (a serial sum
+/// is a dependence chain the CPU cannot pipeline; 4 lanes quadruple the
+/// FLOP rate). NOTE: the 4-lane reduction legitimately changes the f64
+/// accumulation ORDER versus a naive left-to-right sum, so values differ
+/// from the pre-unroll kernel in the last ulps — nothing bit-asserts raw
+/// `dot`/`norm2` output across that boundary, every caller is a metric
+/// or a tolerance-tested quantity, and the function stays deterministic
+/// for fixed input (asserted by tests).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+    let quads = a.len() / 4 * 4;
+    let (ah, at) = a.split_at(quads);
+    let (bh, bt) = b.split_at(quads);
+    let mut acc = [0.0f64; 4];
+    for (ca, cb) in ah.chunks_exact(4).zip(bh.chunks_exact(4)) {
+        acc[0] += ca[0] as f64 * cb[0] as f64;
+        acc[1] += ca[1] as f64 * cb[1] as f64;
+        acc[2] += ca[2] as f64 * cb[2] as f64;
+        acc[3] += ca[3] as f64 * cb[3] as f64;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in at.iter().zip(bt) {
+        s += *x as f64 * *y as f64;
+    }
+    s
 }
 
+/// ||a||₂, via the 4-lane [`dot`] (same accumulation-order note applies).
 #[inline]
 pub fn norm2(a: &[f32]) -> f64 {
     dot(a, a).sqrt()
@@ -97,6 +136,43 @@ pub fn mean_of(xs: &[&[f32]]) -> Vec<f32> {
     let coeffs = vec![c; xs.len()];
     weighted_sum_into(&mut out, xs, &coeffs);
     out
+}
+
+/// Pooled [`mean_of`]: the output dimension is chunked across the pool's
+/// lanes, each chunk running the same blocked kernel over subslices of
+/// every source. Per element the accumulation order over sources is
+/// unchanged, so the result is bit-identical to [`mean_of`] at any lane
+/// count (asserted by tests). This is the parallel PS-style exact
+/// averaging path — the last coordinator-thread hot loop in
+/// `SimTrainer::run`.
+pub fn mean_of_pooled(xs: &[&[f32]], pool: &EnginePool) -> anyhow::Result<Vec<f32>> {
+    assert!(!xs.is_empty());
+    let dim = xs[0].len();
+    if pool.threads() <= 1 || dim < 8192 {
+        return Ok(mean_of(xs));
+    }
+    let mut out = vec![0.0f32; dim];
+    let c = 1.0 / xs.len() as f32;
+    let coeffs = vec![c; xs.len()];
+    let chunk = dim.div_ceil(pool.threads() * 2).max(1);
+    {
+        let coeffs = &coeffs[..];
+        let mut tasks: Vec<_> = out
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(idx, ob)| {
+                move || -> anyhow::Result<()> {
+                    let start = idx * chunk;
+                    let len = ob.len();
+                    let sub: Vec<&[f32]> = xs.iter().map(|x| &x[start..start + len]).collect();
+                    weighted_sum_into(ob, &sub, coeffs);
+                    Ok(())
+                }
+            })
+            .collect();
+        pool.run_tasks(&mut tasks)?;
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -167,6 +243,60 @@ mod tests {
     #[test]
     fn max_abs_diff_basic() {
         assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+    }
+
+    /// Deterministic pseudo-random fill without an Rng dependency.
+    fn wobble(n: usize, salt: u64) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let h = (i as u64 + salt).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                ((h >> 40) as f32) / (1u64 << 24) as f32 - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn axpy_unrolled_matches_naive_bitwise() {
+        // Ragged length exercises both the quad body and the tail.
+        let x = wobble(1003, 1);
+        let mut y = wobble(1003, 2);
+        let mut naive = y.clone();
+        for (yi, xi) in naive.iter_mut().zip(&x) {
+            *yi += 0.37 * *xi;
+        }
+        axpy(&mut y, 0.37, &x);
+        for (a, b) in y.iter().zip(&naive) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn dot_four_lane_deterministic_and_close_to_naive() {
+        let a = wobble(1003, 3);
+        let b = wobble(1003, 4);
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+        let got = dot(&a, &b);
+        // 4-lane accumulation reorders the f64 sum: equal to a tight
+        // tolerance, and exactly reproducible call-to-call.
+        assert!((got - naive).abs() <= 1e-9 * (1.0 + naive.abs()), "{got} vs {naive}");
+        assert_eq!(got.to_bits(), dot(&a, &b).to_bits());
+        assert_eq!(norm2(&a).to_bits(), norm2(&a).to_bits());
+    }
+
+    #[test]
+    fn mean_of_pooled_bit_identical_to_sequential() {
+        use crate::engine::EnginePool;
+        let pool = EnginePool::tasks_only(3).unwrap();
+        for dim in [100usize, 8192, 20_001] {
+            let rows: Vec<Vec<f32>> = (0..5).map(|r| wobble(dim, 10 + r)).collect();
+            let xs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+            let seq = mean_of(&xs);
+            let par = mean_of_pooled(&xs, &pool).unwrap();
+            assert_eq!(seq.len(), par.len());
+            for (a, b) in seq.iter().zip(&par) {
+                assert_eq!(a.to_bits(), b.to_bits(), "dim {dim}");
+            }
+        }
     }
 
     #[test]
