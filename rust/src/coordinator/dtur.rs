@@ -130,6 +130,74 @@ impl Dtur {
     }
 }
 
+/// Per-worker DTUR state for the asynchronous (event-driven) setting.
+///
+/// The global [`Dtur`] needs the whole network's t_·(k) at once — exactly
+/// what an asynchronous worker never has. `LocalDtur` is the paper's rule
+/// restricted to what worker i *can* observe: its own star of links
+/// {(i, j) : j ∈ N_i}. The iteration's threshold moment is the arrival of
+/// the first estimate from a neighbour whose link is not yet established
+/// this epoch (DTUR's "earliest not-yet-established link of P
+/// completes", with P replaced by the local star); every estimate that
+/// has arrived by then is counted, the rest become this round's backup
+/// workers b_i(k). Epochs last d_i = deg(i) iterations, and because each
+/// iteration establishes at least one new link, every neighbour is
+/// counted at least once per epoch — the per-node analogue of Assumption
+/// 2's B-bounded connectivity with B = d_i.
+#[derive(Debug, Clone)]
+pub struct LocalDtur {
+    /// established[j] ⇔ neighbour j's link was counted this epoch.
+    established: Vec<bool>,
+    /// Iterations completed in the current epoch (0..deg).
+    epoch_pos: usize,
+}
+
+impl LocalDtur {
+    pub fn new(degree: usize) -> Self {
+        LocalDtur {
+            established: vec![false; degree],
+            epoch_pos: 0,
+        }
+    }
+
+    /// Epoch length d_i (= the node degree).
+    pub fn d(&self) -> usize {
+        self.established.len()
+    }
+
+    pub fn is_established(&self, nbr: usize) -> bool {
+        self.established[nbr]
+    }
+
+    /// May the worker stop waiting, given which neighbour estimates have
+    /// arrived? True iff some not-yet-established link just completed.
+    pub fn ready(&self, arrived: &[bool]) -> bool {
+        debug_assert_eq!(arrived.len(), self.established.len());
+        arrived
+            .iter()
+            .zip(&self.established)
+            .any(|(&a, &e)| a && !e)
+    }
+
+    /// Commit the iteration with the arrived set as the counted set.
+    /// Returns b_i(k) (= neighbours NOT counted). Panics (debug) if
+    /// called when [`Self::ready`] is false — the caller must keep
+    /// waiting until a new link establishes, exactly the paper's
+    /// "iteration k continues until one such link is established".
+    pub fn commit(&mut self, arrived: &[bool]) -> usize {
+        debug_assert!(self.ready(arrived));
+        for (e, &a) in self.established.iter_mut().zip(arrived) {
+            *e |= a;
+        }
+        self.epoch_pos += 1;
+        if self.epoch_pos >= self.d() || self.established.iter().all(|&e| e) {
+            self.established.iter_mut().for_each(|e| *e = false);
+            self.epoch_pos = 0;
+        }
+        arrived.iter().filter(|&&a| !a).count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -318,6 +386,53 @@ mod tests {
                 prev_theta = dec.theta;
             }
         }
+    }
+
+    #[test]
+    fn local_dtur_covers_every_neighbour_each_epoch() {
+        // Each commit must establish >= 1 new link, so after d_i
+        // iterations every neighbour has been counted at least once —
+        // the local Assumption-2 guarantee the DES relies on.
+        let mut rng = Rng::new(11);
+        for deg in [1usize, 2, 3, 5, 8] {
+            let mut d = LocalDtur::new(deg);
+            let mut covered_in_epoch = vec![false; deg];
+            for iter in 0..6 * deg {
+                // random arrival pattern that always includes at least
+                // one unestablished neighbour (the wait rule guarantees
+                // this in the simulator)
+                let mut arrived: Vec<bool> = (0..deg).map(|_| rng.uniform() < 0.5).collect();
+                if !d.ready(&arrived) {
+                    let fresh = (0..deg).find(|&j| !d.is_established(j)).unwrap();
+                    arrived[fresh] = true;
+                }
+                assert!(d.ready(&arrived), "iter {iter}: commit without new link");
+                for (c, &a) in covered_in_epoch.iter_mut().zip(&arrived) {
+                    *c |= a;
+                }
+                let b = d.commit(&arrived);
+                assert!(b <= deg);
+                if d.epoch_pos == 0 {
+                    assert!(
+                        covered_in_epoch.iter().all(|&c| c),
+                        "deg {deg}: epoch ended without covering all neighbours"
+                    );
+                    covered_in_epoch.iter_mut().for_each(|c| *c = false);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_dtur_not_ready_without_fresh_link() {
+        let mut d = LocalDtur::new(3);
+        assert!(!d.ready(&[false, false, false]));
+        assert!(d.ready(&[false, true, false]));
+        d.commit(&[false, true, false]); // neighbour 1 established
+        assert!(!d.ready(&[false, true, false]), "stale link must not satisfy the wait");
+        assert!(d.ready(&[true, true, false]));
+        let b = d.commit(&[true, true, false]);
+        assert_eq!(b, 1); // neighbour 2 was the backup
     }
 
     #[test]

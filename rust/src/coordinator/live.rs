@@ -76,6 +76,23 @@ pub struct LiveOutcome {
     pub history: RunHistory,
     /// Real seconds the whole run took (incl. eval overhead).
     pub wall_seconds: f64,
+    /// Per-worker termination-command ack latency: real seconds from the
+    /// leader firing the terminate command to each terminated worker's
+    /// `Done{terminated}` answer (one entry per terminated worker per
+    /// iteration; empty for algorithms that never terminate).
+    pub term_ack_latencies: Vec<f64>,
+}
+
+impl LiveOutcome {
+    /// (min, median, max) of the termination-ack latencies.
+    pub fn term_ack_summary(&self) -> Option<(f64, f64, f64)> {
+        if self.term_ack_latencies.is_empty() {
+            return None;
+        }
+        let mut v = self.term_ack_latencies.clone();
+        v.sort_by(f64::total_cmp);
+        Some((v[0], v[v.len() / 2], v[v.len() - 1]))
+    }
 }
 
 /// Run training with real threads. `time_scale` converts the straggler
@@ -138,6 +155,7 @@ pub fn run_live(
     let mut dtur = algo.needs_dtur().then(|| Dtur::new(&graph));
     let mut rng = Rng::new(cfg.seed ^ 0x11FE);
     let mut clock = 0.0f64;
+    let mut term_ack_latencies: Vec<f64> = Vec::new();
 
     // initial eval
     history
@@ -162,6 +180,7 @@ pub fn run_live(
         let mut losses = vec![0.0f32; n];
         let mut terminated_flag = vec![false; n];
         let mut fired = !algo.needs_dtur(); // cb-Full never terminates
+        let mut fired_at: Option<Instant> = None;
         let mut pending = n;
         let mut theta_real = f64::NAN;
         while pending > 0 {
@@ -177,6 +196,12 @@ pub fn run_live(
                     done[j] = true;
                     losses[j] = msg.loss;
                     terminated_flag[j] = msg.terminated;
+                    if msg.terminated {
+                        // shutdown-ack latency: command fired -> this ack
+                        if let Some(t0) = fired_at {
+                            term_ack_latencies.push(t0.elapsed().as_secs_f64());
+                        }
+                    }
                     pending -= 1;
                     if !fired {
                         let finished: Vec<bool> = (0..n)
@@ -194,6 +219,7 @@ pub fn run_live(
                                 fired = true;
                                 theta_real = iter_start.elapsed().as_secs_f64();
                                 terminate.store(k, Ordering::SeqCst);
+                                fired_at = Some(Instant::now());
                             }
                         }
                     }
@@ -275,6 +301,7 @@ pub fn run_live(
     Ok(LiveOutcome {
         history,
         wall_seconds: run_start.elapsed().as_secs_f64(),
+        term_ack_latencies,
     })
 }
 
@@ -467,6 +494,23 @@ mod tests {
         let last = out.history.evals.last().unwrap();
         assert!(last.test_loss < first.test_loss, "{first:?} -> {last:?}");
         assert!(out.wall_seconds > 0.1); // really slept
+        // with a forced 6x transient straggler every round, termination
+        // fires and the aborted workers' acks get timed
+        assert!(
+            !out.term_ack_latencies.is_empty(),
+            "no termination acks recorded"
+        );
+        assert!(out.term_ack_latencies.iter().all(|&l| l >= 0.0 && l < 10.0));
+        let (min, med, max) = out.term_ack_summary().unwrap();
+        assert!(min <= med && med <= max);
+    }
+
+    #[test]
+    fn term_ack_summary_empty_without_termination() {
+        // cb-Full never fires the command; the stats stay empty.
+        let out = run(Algorithm::CbFull, 4);
+        assert!(out.term_ack_latencies.is_empty());
+        assert!(out.term_ack_summary().is_none());
     }
 
     #[test]
@@ -630,6 +674,23 @@ mod tests {
             "live scale 32w: pooled(8 lanes) {:.2}s vs sequential(1 lane) {:.2}s",
             pooled.wall_seconds, sequential.wall_seconds
         );
+        // termination-command latency: fired -> per-worker shutdown ack
+        match pooled.term_ack_summary() {
+            Some((min, med, max)) => {
+                println!(
+                    "term-ack latency over {} acks: min {:.1}ms / median {:.1}ms / max {:.1}ms",
+                    pooled.term_ack_latencies.len(),
+                    min * 1e3,
+                    med * 1e3,
+                    max * 1e3
+                );
+                assert!(min >= 0.0 && min <= med && med <= max);
+                // acks ride a 300us poll loop + channel; anything near a
+                // second means the command path regressed
+                assert!(max < 5.0, "termination ack took {max:.2}s");
+            }
+            None => println!("term-ack latency: no terminations fired"),
+        }
         assert!(
             pooled.wall_seconds <= sequential.wall_seconds * 1.15,
             "pooled live run slower than sequential: {:.2}s vs {:.2}s",

@@ -1,6 +1,9 @@
 //! Layer-3 coordinator: the paper's training algorithms.
 //!
-//! - [`dtur`] — Algorithm 2, the threshold rule choosing backup workers.
+//! - [`dtur`] — Algorithm 2, the threshold rule choosing backup workers
+//!   (global form for the lockstep drivers, plus the per-worker
+//!   [`dtur::LocalDtur`] the asynchronous [`des`](crate::des) layer runs
+//!   on locally observed arrival times).
 //! - [`algorithm`] — cb-DyBW (Algorithm 1), the cb-Full baseline, and the
 //!   static-backup / parameter-server comparison points.
 //! - [`sim`] — the deterministic discrete-event driver: real gradients

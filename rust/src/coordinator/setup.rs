@@ -175,12 +175,18 @@ impl Setup {
         EnginePool::new(self.engine_factory(meta)?, self.resolve_threads())
     }
 
-    /// Build the simulation trainer.
-    pub fn build_sim(&self) -> anyhow::Result<SimTrainer> {
+    /// The shared build prefix of [`Self::build_sim`] and
+    /// [`Self::build_des`]: graph, straggler model, pool, data sources,
+    /// eval set, and initial parameters, all drawn from ONE seed-derived
+    /// RNG in a fixed order. The order IS the reproducibility contract —
+    /// both trainers replay the exact same data/model for a seed, which
+    /// is what makes lockstep-vs-async (and policy-vs-policy) runs
+    /// variance-free A/Bs.
+    fn build_parts(&self) -> anyhow::Result<SimParts> {
         let meta = self.resolve_meta()?;
-        let mut train_cfg = self.train.clone();
+        let mut cfg = self.train.clone();
         // artifact batch shape is fixed; keep config consistent
-        train_cfg.batch_size = meta.batch;
+        cfg.batch_size = meta.batch;
 
         let mut rng = Rng::new(self.train.seed);
         let graph = topology::build(self.topology, self.workers, &mut rng);
@@ -204,15 +210,84 @@ impl Setup {
         let pool = self.build_pool(&meta)?;
         let (sources, eval_batches) = self.build_data(&meta, &mut rng, &pool)?;
         let init = meta.init_params(&mut rng);
-        SimTrainer::new(
+        Ok(SimParts {
+            cfg,
             graph,
-            self.algo,
-            train_cfg,
             straggler,
             pool,
             sources,
             eval_batches,
             init,
+            rng,
+        })
+    }
+
+    /// Build the simulation trainer.
+    pub fn build_sim(&self) -> anyhow::Result<SimTrainer> {
+        let p = self.build_parts()?;
+        SimTrainer::new(
+            p.graph,
+            self.algo,
+            p.cfg,
+            p.straggler,
+            p.pool,
+            p.sources,
+            p.eval_batches,
+            p.init,
+        )
+    }
+
+    /// Build the asynchronous event-driven trainer (full-fidelity DES).
+    ///
+    /// Same model/data/pool wiring as [`Self::build_sim`] (one shared
+    /// [`Self::build_parts`], so the RNG stream order is identical by
+    /// construction), but compute times become a trace recorded up front
+    /// from the straggler model and replayed per worker. Because the
+    /// whole build is a pure function of the seed, every policy run at
+    /// the same seed sees the *identical* timing realisation:
+    /// `build_des(dybw, ..)` vs `build_des(full, ..)` is a
+    /// variance-free A/B.
+    pub fn build_des(
+        &self,
+        policy: crate::des::WaitPolicy,
+        link: crate::straggler::link::LinkModel,
+    ) -> anyhow::Result<crate::des::DesTrainer> {
+        self.build_des_with_times(policy, link, None)
+    }
+
+    /// [`Self::build_des`] with an externally supplied compute-time
+    /// source (e.g. a scenario's shared realisation or a CSV trace) —
+    /// skips recording the internal trace entirely instead of building
+    /// one just to throw it away.
+    pub fn build_des_with_times(
+        &self,
+        policy: crate::des::WaitPolicy,
+        link: crate::straggler::link::LinkModel,
+        times: Option<crate::des::ComputeTimes>,
+    ) -> anyhow::Result<crate::des::DesTrainer> {
+        let mut p = self.build_parts()?;
+        let times = match times {
+            Some(t) => t,
+            None => {
+                let trace = crate::straggler::trace::Trace::record(
+                    &p.straggler,
+                    p.cfg.iters.max(1),
+                    &mut p.rng,
+                );
+                crate::des::ComputeTimes::Replay(std::sync::Arc::new(trace))
+            }
+        };
+        crate::des::DesTrainer::new(
+            p.graph,
+            policy,
+            p.cfg,
+            times,
+            link,
+            p.pool,
+            p.sources,
+            p.eval_batches,
+            p.init,
+            &self.model,
         )
     }
 
@@ -408,6 +483,21 @@ impl Setup {
         }
         Ok(())
     }
+}
+
+/// Everything [`Setup::build_parts`] assembles before a trainer exists:
+/// the common substrate both the lockstep and the event-driven trainers
+/// are built on. `rng` is the stream state after initial-parameter
+/// draws — `build_des` records its timing trace from it.
+struct SimParts {
+    cfg: TrainConfig,
+    graph: crate::graph::Graph,
+    straggler: StragglerModel,
+    pool: EnginePool,
+    sources: Vec<Box<dyn BatchSource>>,
+    eval_batches: Vec<AnyBatch>,
+    init: Vec<f32>,
+    rng: Rng,
 }
 
 /// Reconstruct a ModelMeta from an artifact-style name, e.g.

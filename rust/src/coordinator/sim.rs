@@ -229,22 +229,12 @@ impl SimTrainer {
     /// the result is independent of the pool size).
     pub fn evaluate(&mut self, k: usize) -> anyhow::Result<EvalRecord> {
         let avg = self.params.average();
-        let scores = self.pool.eval_many(&avg, &self.eval_batches)?;
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0usize;
-        let mut rows = 0usize;
-        for ((loss, corr), b) in scores.into_iter().zip(&self.eval_batches) {
-            let r = b.rows();
-            loss_sum += loss as f64 * r as f64;
-            correct += corr;
-            rows += r;
-        }
-        anyhow::ensure!(rows > 0, "empty eval set");
+        let (test_loss, test_error) = self.pool.score(&avg, &self.eval_batches)?;
         Ok(EvalRecord {
             k,
             clock: self.clock,
-            test_loss: loss_sum / rows as f64,
-            test_error: 1.0 - correct as f64 / rows as f64,
+            test_loss,
+            test_error,
             consensus_error: self.params.consensus_error(),
         })
     }

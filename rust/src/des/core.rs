@@ -1,0 +1,195 @@
+//! The discrete-event core: virtual clock + stable binary-heap queue.
+//!
+//! Everything above this file is simulation *policy*; this file is the
+//! simulation *physics*: events carry a virtual timestamp, the queue pops
+//! them in time order, and ties break by insertion sequence number — a
+//! total, deterministic order, so two runs that schedule the same events
+//! process them identically (the byte-for-byte event-log reproducibility
+//! the CI `des-smoke` job asserts).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in seconds.
+pub type Time = f64;
+
+/// The simulator's event alphabet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// Worker finished the eq. (5) local update of its iteration `k`.
+    ComputeDone { worker: usize, k: usize },
+    /// Worker `dst` receives `src`'s iteration-`k` parameter estimate.
+    MsgArrive { dst: usize, src: usize, k: usize },
+}
+
+impl Event {
+    /// One deterministic log line (no padding, shortest-roundtrip floats:
+    /// identical runs serialise identically byte for byte).
+    pub fn log_line(&self, seq: u64, time: Time) -> String {
+        match *self {
+            Event::ComputeDone { worker, k } => {
+                format!("{seq} {time} compute_done w={worker} k={k}")
+            }
+            Event::MsgArrive { dst, src, k } => {
+                format!("{seq} {time} msg_arrive src={src} dst={dst} k={k}")
+            }
+        }
+    }
+}
+
+/// A scheduled event. Ordering: earliest `time` first (f64 total order —
+/// times are never NaN, asserted at insert), then lowest `seq`: ties
+/// resolve in scheduling order, never by heap internals.
+struct Scheduled {
+    time: Time,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    // Reversed so the std max-heap pops the EARLIEST event.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue + virtual clock.
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    next_seq: u64,
+    clock: Time,
+    processed: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            clock: 0.0,
+            processed: 0,
+        }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> Time {
+        self.clock
+    }
+
+    /// Events popped so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `event` at absolute virtual time `time` (>= now; the
+    /// simulated future only).
+    pub fn schedule(&mut self, time: Time, event: Event) {
+        debug_assert!(time.is_finite(), "event time must be finite: {time}");
+        debug_assert!(
+            time >= self.clock,
+            "cannot schedule into the past: {time} < {}",
+            self.clock
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { time, seq, event });
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    /// Returns `(seq, time, event)`.
+    pub fn pop(&mut self) -> Option<(u64, Time, Event)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.time >= self.clock);
+        self.clock = s.time;
+        self.processed += 1;
+        Some((s.seq, s.time, s.event))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, Event::ComputeDone { worker: 0, k: 1 });
+        q.schedule(1.0, Event::ComputeDone { worker: 1, k: 1 });
+        q.schedule(2.0, Event::ComputeDone { worker: 2, k: 1 });
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|(_, _, e)| match e {
+                Event::ComputeDone { worker, .. } => worker,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 0]);
+        assert_eq!(q.now(), 3.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for w in 0..16 {
+            q.schedule(1.0, Event::ComputeDone { worker: w, k: 1 });
+        }
+        // an earlier event interleaved after the ties were queued
+        q.schedule(0.5, Event::ComputeDone { worker: 99, k: 1 });
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|(_, _, e)| match e {
+                Event::ComputeDone { worker, .. } => worker,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order[0], 99);
+        assert_eq!(&order[1..], &(0..16).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn clock_is_monotone_under_equal_times() {
+        let mut q = EventQueue::new();
+        q.schedule(0.0, Event::MsgArrive { dst: 0, src: 1, k: 1 });
+        q.schedule(0.0, Event::MsgArrive { dst: 1, src: 0, k: 1 });
+        let mut last = f64::NEG_INFINITY;
+        while let Some((_, t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn log_lines_are_stable() {
+        let e = Event::MsgArrive { dst: 3, src: 7, k: 2 };
+        assert_eq!(e.log_line(12, 0.25), "12 0.25 msg_arrive src=7 dst=3 k=2");
+        let c = Event::ComputeDone { worker: 5, k: 9 };
+        assert_eq!(c.log_line(0, 1.5), "0 1.5 compute_done w=5 k=9");
+    }
+}

@@ -1,0 +1,37 @@
+//! `des` — the event-driven cluster simulator (asynchronous per-worker
+//! time).
+//!
+//! The lockstep drivers ([`coordinator::sim`](crate::coordinator::sim),
+//! [`coordinator::live`](crate::coordinator::live)) advance every worker
+//! through the same iteration k with one global cut per round. The
+//! paper's mechanism is not like that: worker i waits only for its
+//! n_i − b_i(k) fastest *neighbours* and proceeds, so at any wall-clock
+//! instant different workers sit at different iterations. This layer
+//! simulates exactly that regime on a deterministic discrete-event core:
+//!
+//! - [`core`] — virtual clock + binary-heap event queue with stable
+//!   tie-breaking (the determinism substrate).
+//! - [`policy`] — per-worker wait rules: `full`, `static:b`, and `dybw`
+//!   (the per-worker [`LocalDtur`](crate::coordinator::dtur::LocalDtur)
+//!   driven by locally observed arrival times).
+//! - [`cluster`] — the timing-only simulator: per-worker state machines
+//!   over the straggler substrate plus a per-link latency model
+//!   ([`straggler::link`](crate::straggler::link)); scales a scenario
+//!   sweep to thousands of workers in milliseconds.
+//! - [`full`] — full fidelity: the same schedule drives real
+//!   [`EnginePool`](crate::engine::EnginePool) gradient jobs,
+//!   bit-reproducible under a fixed seed.
+//! - [`scenario`] — declarative JSON scenarios swept over policies on
+//!   one identical timing realisation (`dybw des run --scenario …`).
+
+pub mod cluster;
+pub mod core;
+pub mod full;
+pub mod policy;
+pub mod scenario;
+
+pub use self::core::{Event, EventQueue, Time};
+pub use cluster::{ClusterSim, ClusterStats, ComputeTimes, DesHooks, MixInfo, NoHooks};
+pub use full::{DesOutcome, DesTrainer};
+pub use policy::{WaitPolicy, WorkerWait};
+pub use scenario::{Fidelity, Scenario};

@@ -1,0 +1,216 @@
+//! Per-worker wait policies: when may an asynchronous worker stop
+//! collecting neighbour estimates and mix?
+//!
+//! The lockstep drivers answer this with one global rule per iteration;
+//! here every worker answers it locally from the estimates that have
+//! actually arrived:
+//!
+//! | policy     | waits for                                   | paper role |
+//! |------------|---------------------------------------------|------------|
+//! | `full`     | all deg(i) neighbour estimates              | cb-Full    |
+//! | `static:b` | the first deg(i) − b estimates (fixed b)    | static-b   |
+//! | `dybw`     | the first not-yet-established link (DTUR)   | Alg. 1+2   |
+//!
+//! Every policy also runs a *coverage audit*: a violation is a
+//! neighbour that went uncounted for 2·deg(i) consecutive iterations.
+//! `full` counts everyone every round, and `dybw`'s DTUR epochs count
+//! every neighbour at least once per ≤ deg(i) iterations, so the gap
+//! between counts is at most 2·deg(i) − 1 — both policies are
+//! violation-free *by construction* (the Assumption-2 connectivity the
+//! convergence proof needs). For `static:b` the audit measures exactly
+//! what the paper argues makes fixed backup workers unsafe: a
+//! persistently slow neighbour is silently never heard from.
+
+use crate::coordinator::dtur::LocalDtur;
+
+/// The asynchronous wait rule, parsed from scenario/CLI specs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitPolicy {
+    /// Wait for every neighbour (asynchronous cb-Full).
+    Full,
+    /// Fixed b backup workers: wait for the fastest deg(i) − b estimates.
+    Static { b: usize },
+    /// Dynamic backup workers via the per-worker DTUR (asynchronous
+    /// cb-DyBW).
+    Dybw,
+}
+
+impl WaitPolicy {
+    pub fn name(&self) -> String {
+        match self {
+            WaitPolicy::Full => "full".into(),
+            WaitPolicy::Static { b } => format!("static:{b}"),
+            WaitPolicy::Dybw => "dybw".into(),
+        }
+    }
+
+    /// Parse `"full"`, `"static:<b>"`, `"dybw"`.
+    pub fn parse(s: &str) -> Option<WaitPolicy> {
+        match s {
+            "full" => Some(WaitPolicy::Full),
+            "dybw" | "cb-dybw" => Some(WaitPolicy::Dybw),
+            _ => s
+                .strip_prefix("static:")
+                .and_then(|b| b.parse().ok())
+                .map(|b| WaitPolicy::Static { b }),
+        }
+    }
+}
+
+/// One worker's wait state. Owns the policy-specific bookkeeping (DTUR
+/// epoch state) plus the policy-independent epoch-coverage audit.
+#[derive(Debug, Clone)]
+pub struct WorkerWait {
+    policy: WaitPolicy,
+    deg: usize,
+    dtur: Option<LocalDtur>,
+    /// Coverage audit: the mix index at which each neighbour was last
+    /// counted (0 = never).
+    last_counted: Vec<u64>,
+    /// Commits so far.
+    mixes: u64,
+    /// Times a neighbour went uncounted for 2·deg consecutive mixes
+    /// (each starved neighbour re-arms after a violation, so sustained
+    /// starvation counts once per 2·deg window, not once per mix).
+    pub coverage_violations: u64,
+}
+
+impl WorkerWait {
+    pub fn new(policy: WaitPolicy, deg: usize) -> Self {
+        WorkerWait {
+            policy,
+            deg,
+            dtur: matches!(policy, WaitPolicy::Dybw).then(|| LocalDtur::new(deg)),
+            last_counted: vec![0; deg],
+            mixes: 0,
+            coverage_violations: 0,
+        }
+    }
+
+    /// May the worker mix now, given which neighbour estimates arrived?
+    pub fn ready(&self, arrived: &[bool]) -> bool {
+        debug_assert_eq!(arrived.len(), self.deg);
+        match &self.policy {
+            WaitPolicy::Full => arrived.iter().all(|&a| a),
+            WaitPolicy::Static { b } => {
+                // b is clamped to deg − 1 (the paper requires b < n_i):
+                // a worker always waits for at least ONE estimate, so an
+                // oversized b can never silently degenerate the run to
+                // zero-communication local SGD.
+                let needed = self.deg.saturating_sub(*b).max(1);
+                arrived.iter().filter(|&&a| a).count() >= needed
+            }
+            WaitPolicy::Dybw => self.dtur.as_ref().unwrap().ready(arrived),
+        }
+    }
+
+    /// Commit the iteration with `arrived` as the counted set; returns
+    /// this round's backup count b_i(k) and advances epoch/audit state.
+    pub fn commit(&mut self, arrived: &[bool]) -> usize {
+        debug_assert!(self.ready(arrived));
+        let b = match &mut self.dtur {
+            Some(d) => d.commit(arrived),
+            None => arrived.iter().filter(|&&a| !a).count(),
+        };
+        self.mixes += 1;
+        for (last, &a) in self.last_counted.iter_mut().zip(arrived) {
+            if a {
+                *last = self.mixes;
+            } else if self.mixes - *last >= 2 * self.deg as u64 {
+                self.coverage_violations += 1;
+                *last = self.mixes;
+            }
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [WaitPolicy::Full, WaitPolicy::Static { b: 2 }, WaitPolicy::Dybw] {
+            assert_eq!(WaitPolicy::parse(&p.name()), Some(p));
+        }
+        assert_eq!(WaitPolicy::parse("cb-dybw"), Some(WaitPolicy::Dybw));
+        assert_eq!(WaitPolicy::parse("static:x"), None);
+        assert_eq!(WaitPolicy::parse("wat"), None);
+    }
+
+    #[test]
+    fn full_waits_for_everyone() {
+        let mut w = WorkerWait::new(WaitPolicy::Full, 3);
+        assert!(!w.ready(&[true, true, false]));
+        assert!(w.ready(&[true, true, true]));
+        assert_eq!(w.commit(&[true, true, true]), 0);
+        assert_eq!(w.coverage_violations, 0);
+    }
+
+    #[test]
+    fn static_waits_for_order_statistic() {
+        let mut w = WorkerWait::new(WaitPolicy::Static { b: 1 }, 3);
+        assert!(!w.ready(&[true, false, false]));
+        assert!(w.ready(&[true, true, false]));
+        assert_eq!(w.commit(&[true, true, false]), 1);
+    }
+
+    #[test]
+    fn static_oversized_b_still_waits_for_one_estimate() {
+        // b >= deg must not degenerate to zero-communication SGD
+        let w = WorkerWait::new(WaitPolicy::Static { b: 9 }, 3);
+        assert!(!w.ready(&[false, false, false]));
+        assert!(w.ready(&[false, true, false]));
+    }
+
+    #[test]
+    fn static_records_coverage_violations() {
+        // deg 2, b = 1: always count neighbour 0, never neighbour 1 —
+        // neighbour 1 starves past the 2·deg = 4 gap at mixes 4 and 8.
+        let mut w = WorkerWait::new(WaitPolicy::Static { b: 1 }, 2);
+        for _ in 0..8 {
+            assert!(w.ready(&[true, false]));
+            w.commit(&[true, false]);
+        }
+        assert_eq!(w.coverage_violations, 2);
+    }
+
+    #[test]
+    fn dybw_never_violates_coverage() {
+        // Arbitrary arrival patterns: the wait rule forces a fresh link
+        // each commit, so every epoch (≤ deg iterations) counts every
+        // neighbour — the gap between counts stays < 2·deg always.
+        let mut rng = crate::util::rng::Rng::new(3);
+        for deg in [2usize, 3, 5] {
+            let mut w = WorkerWait::new(WaitPolicy::Dybw, deg);
+            for _ in 0..8 * deg {
+                let mut arrived = vec![false; deg];
+                // grow the arrival set one estimate at a time until ready
+                let mut order: Vec<usize> = (0..deg).collect();
+                rng.shuffle(&mut order);
+                for &j in &order {
+                    arrived[j] = true;
+                    if w.ready(&arrived) {
+                        break;
+                    }
+                }
+                assert!(w.ready(&arrived));
+                w.commit(&arrived);
+            }
+            assert_eq!(w.coverage_violations, 0, "deg {deg}");
+        }
+    }
+
+    #[test]
+    fn dybw_backup_count_dynamic() {
+        let mut w = WorkerWait::new(WaitPolicy::Dybw, 3);
+        // first arrival of the epoch satisfies the wait: 2 backups
+        assert!(w.ready(&[false, true, false]));
+        assert_eq!(w.commit(&[false, true, false]), 2);
+        // neighbour 1 established: its arrival alone no longer suffices
+        assert!(!w.ready(&[false, true, false]));
+        assert!(w.ready(&[true, true, false]));
+        assert_eq!(w.commit(&[true, true, false]), 1);
+    }
+}

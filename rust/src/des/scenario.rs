@@ -1,0 +1,759 @@
+//! Scenario harness: declarative JSON → a policy sweep on one identical
+//! timing realisation.
+//!
+//! A scenario names a cluster (size, topology, compute-time model,
+//! per-link latency, injected heterogeneity) and a list of wait
+//! policies. The harness records ONE timing trace (or loads a CSV) and
+//! replays it under every policy, so the sweep is a variance-free A/B on
+//! the exact same realisation — the strongest form of the paper's
+//! comparisons, now on the asynchronous timeline. Timing-only scenarios
+//! scale to thousands of workers in milliseconds; full-fidelity
+//! scenarios run real gradients through [`Setup`]'s model/data wiring.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::coordinator::setup::Setup;
+use crate::graph::topology::{self, Topology};
+use crate::metrics::export;
+use crate::straggler::link::LinkModel;
+use crate::straggler::trace::Trace;
+use crate::straggler::{Dist, StragglerModel};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::cluster::{ClusterSim, ClusterStats, ComputeTimes, NoHooks};
+use super::policy::WaitPolicy;
+
+/// Simulation fidelity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// No gradients: pure schedule. Scales to thousands of workers.
+    Timing,
+    /// Real gradients through the engine pool (bit-reproducible).
+    Full,
+}
+
+impl Fidelity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fidelity::Timing => "timing",
+            Fidelity::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Fidelity> {
+        match s {
+            "timing" => Some(Fidelity::Timing),
+            "full" => Some(Fidelity::Full),
+            _ => None,
+        }
+    }
+}
+
+/// One declarative DES experiment.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub workers: usize,
+    pub topology: Topology,
+    pub iters: usize,
+    pub seed: u64,
+    pub fidelity: Fidelity,
+    pub policies: Vec<WaitPolicy>,
+    /// Base compute-time distribution (ignored when `trace_file` set).
+    pub compute: Dist,
+    /// Worker-scale spread: scales drawn uniform in [1−h, 1+h].
+    pub hetero: f64,
+    pub transient_prob: f64,
+    pub transient_factor: f64,
+    /// Persistent stragglers: (worker, factor).
+    pub persistent: Vec<(usize, f64)>,
+    pub link_base: f64,
+    pub link_jitter: Option<Dist>,
+    /// Heterogeneous links: (a, b, factor) on both directions.
+    pub slow_links: Vec<(usize, usize, f64)>,
+    /// Replay this CSV instead of recording from the model.
+    pub trace_file: Option<PathBuf>,
+    // full-fidelity knobs (ignored in timing mode)
+    pub model: String,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub eval_every: usize,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: "ring-1k".into(),
+            workers: 1000,
+            topology: Topology::Ring,
+            iters: 30,
+            seed: 2021,
+            fidelity: Fidelity::Timing,
+            policies: vec![
+                WaitPolicy::Full,
+                WaitPolicy::Static { b: 1 },
+                WaitPolicy::Dybw,
+            ],
+            compute: Dist::ShiftedExp { base: 0.08, rate: 25.0 },
+            hetero: 0.2,
+            transient_prob: 0.15,
+            transient_factor: 4.0,
+            persistent: Vec::new(),
+            link_base: 0.002,
+            link_jitter: Some(Dist::ShiftedExp { base: 0.0, rate: 800.0 }),
+            slow_links: Vec::new(),
+            trace_file: None,
+            model: "lrm_d64_c10_b256".into(),
+            train_n: 12_000,
+            test_n: 2_048,
+            eval_every: 10,
+        }
+    }
+}
+
+impl Scenario {
+    pub fn load(path: &Path) -> anyhow::Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read scenario {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad scenario JSON: {e}"))?;
+        Scenario::from_json(&j)
+    }
+
+    /// Defaults overridden by whatever fields the JSON provides.
+    /// Strict: unknown keys and present-but-mistyped values are errors —
+    /// a scenario file must never silently run something other than
+    /// what it describes.
+    pub fn from_json(j: &Json) -> anyhow::Result<Scenario> {
+        const KNOWN: &[&str] = &[
+            "name", "workers", "topology", "iters", "seed", "fidelity", "policies", "compute",
+            "hetero", "transient_prob", "transient_factor", "persistent", "link_base",
+            "link_jitter", "slow_links", "trace_file", "model", "train_n", "test_n", "eval_every",
+        ];
+        let Json::Obj(map) = j else {
+            anyhow::bail!("scenario must be a JSON object");
+        };
+        for key in map.keys() {
+            anyhow::ensure!(
+                KNOWN.contains(&key.as_str()),
+                "unknown scenario field '{key}' (known: {KNOWN:?})"
+            );
+        }
+        // `field(j, key, Json::as_x, "an x")?` = Some(parsed) | None if
+        // absent | typed error if present with the wrong type.
+        fn field<'j, T>(
+            j: &'j Json,
+            key: &str,
+            get: impl Fn(&'j Json) -> Option<T>,
+            want: &str,
+        ) -> anyhow::Result<Option<T>> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => get(v)
+                    .map(Some)
+                    .ok_or_else(|| anyhow::anyhow!("scenario field '{key}' must be {want}")),
+            }
+        }
+        let mut s = Scenario::default();
+        if let Some(v) = field(j, "name", Json::as_str, "a string")? {
+            s.name = v.to_string();
+        }
+        if let Some(v) = field(j, "workers", Json::as_usize, "an integer")? {
+            s.workers = v;
+        }
+        if let Some(v) = field(j, "topology", Json::as_str, "a topology name")? {
+            s.topology = Topology::parse(v).ok_or_else(|| anyhow::anyhow!("bad topology '{v}'"))?;
+        }
+        if let Some(v) = field(j, "iters", Json::as_usize, "an integer")? {
+            s.iters = v;
+        }
+        if let Some(v) = j.get("seed") {
+            // exact for ALL u64 seeds: numbers are f64-backed, so large
+            // seeds must travel as strings (to_json writes them so)
+            s.seed = match (v.as_str(), v.as_f64()) {
+                (Some(txt), _) => txt
+                    .parse::<u64>()
+                    .map_err(|e| anyhow::anyhow!("bad seed '{txt}': {e}"))?,
+                (None, Some(num)) => {
+                    anyhow::ensure!(
+                        num >= 0.0 && num.fract() == 0.0 && num <= (1u64 << 53) as f64,
+                        "numeric seed {num} is not an exact non-negative integer — \
+                         write seeds above 2^53 as strings"
+                    );
+                    num as u64
+                }
+                (None, None) => anyhow::bail!("seed must be an integer or a decimal string"),
+            };
+        }
+        if let Some(v) = field(j, "fidelity", Json::as_str, "\"timing\" or \"full\"")? {
+            s.fidelity = Fidelity::parse(v).ok_or_else(|| anyhow::anyhow!("bad fidelity '{v}'"))?;
+        }
+        if let Some(arr) = field(j, "policies", Json::as_arr, "an array of policy names")? {
+            s.policies = arr
+                .iter()
+                .map(|p| {
+                    p.as_str()
+                        .and_then(WaitPolicy::parse)
+                        .ok_or_else(|| anyhow::anyhow!("bad policy {p:?}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(v) = field(j, "compute", Json::as_str, "a dist spec")? {
+            s.compute = Dist::parse(v).ok_or_else(|| anyhow::anyhow!("bad compute '{v}'"))?;
+        }
+        if let Some(v) = field(j, "hetero", Json::as_f64, "a number")? {
+            s.hetero = v;
+        }
+        if let Some(v) = field(j, "transient_prob", Json::as_f64, "a number")? {
+            s.transient_prob = v;
+        }
+        if let Some(v) = field(j, "transient_factor", Json::as_f64, "a number")? {
+            s.transient_factor = v;
+        }
+        if let Some(arr) = field(j, "persistent", Json::as_arr, "an array of pairs")? {
+            s.persistent = parse_pairs(arr, "persistent")?
+                .into_iter()
+                .map(|(a, f)| {
+                    anyhow::ensure!(
+                        a >= 0.0 && a.fract() == 0.0,
+                        "persistent worker index must be a non-negative integer (got {a})"
+                    );
+                    Ok((a as usize, f))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(v) = field(j, "link_base", Json::as_f64, "a number")? {
+            s.link_base = v;
+        }
+        if let Some(v) = j.get("link_jitter") {
+            // strict like every other field: only "none" or a dist spec
+            let spec = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("link_jitter must be \"none\" or a dist spec"))?;
+            s.link_jitter = match spec {
+                "none" => None,
+                spec => Some(
+                    Dist::parse(spec).ok_or_else(|| anyhow::anyhow!("bad link_jitter '{spec}'"))?,
+                ),
+            };
+        }
+        if let Some(arr) = field(j, "slow_links", Json::as_arr, "an array of triples")? {
+            s.slow_links = arr
+                .iter()
+                .map(|t| {
+                    let t = t.as_arr().filter(|t| t.len() == 3).ok_or_else(|| {
+                        anyhow::anyhow!("slow_links entries are [a, b, factor] triples")
+                    })?;
+                    let get = |i: usize| {
+                        t[i].as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("non-numeric slow_links entry"))
+                    };
+                    let (a, b) = (get(0)?, get(1)?);
+                    anyhow::ensure!(
+                        a >= 0.0 && a.fract() == 0.0 && b >= 0.0 && b.fract() == 0.0,
+                        "slow_links endpoints must be non-negative integers"
+                    );
+                    Ok((a as usize, b as usize, get(2)?))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(v) = field(j, "trace_file", Json::as_str, "a path string")? {
+            s.trace_file = Some(PathBuf::from(v));
+        }
+        if let Some(v) = field(j, "model", Json::as_str, "a model name")? {
+            s.model = v.to_string();
+        }
+        if let Some(v) = field(j, "train_n", Json::as_usize, "an integer")? {
+            s.train_n = v;
+        }
+        if let Some(v) = field(j, "test_n", Json::as_usize, "an integer")? {
+            s.test_n = v;
+        }
+        if let Some(v) = field(j, "eval_every", Json::as_usize, "an integer")? {
+            s.eval_every = v;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Reject scenarios that would corrupt the virtual-time schedule
+    /// (negative latencies/durations schedule events into the past) or
+    /// silently differ from what the file describes. Checked after
+    /// loading AND again at run time, because the CLI can override
+    /// fields (e.g. shrink `workers` under an injection target).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.workers >= 2, "need >= 2 workers");
+        anyhow::ensure!(self.iters >= 1, "need >= 1 iteration");
+        anyhow::ensure!(!self.policies.is_empty(), "need >= 1 policy");
+        anyhow::ensure!((0.0..1.0).contains(&self.hetero), "hetero must be in [0, 1)");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.transient_prob),
+            "transient_prob must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.transient_factor.is_finite() && self.transient_factor > 0.0,
+            "transient_factor must be positive"
+        );
+        anyhow::ensure!(
+            self.link_base.is_finite() && self.link_base >= 0.0,
+            "link_base must be >= 0"
+        );
+        anyhow::ensure!(
+            self.compute.nonnegative(),
+            "compute dist can sample negative times: {}",
+            self.compute.spec()
+        );
+        if let Some(d) = &self.link_jitter {
+            anyhow::ensure!(
+                d.nonnegative(),
+                "link_jitter dist can sample negative latency: {}",
+                d.spec()
+            );
+        }
+        for &(w, f) in &self.persistent {
+            anyhow::ensure!(
+                w < self.workers,
+                "persistent straggler index {w} >= workers {}",
+                self.workers
+            );
+            anyhow::ensure!(f.is_finite() && f > 0.0, "persistent factor must be positive");
+        }
+        for &(a, b, f) in &self.slow_links {
+            anyhow::ensure!(
+                a < self.workers && b < self.workers,
+                "slow_links edge ({a},{b}) outside 0..{}",
+                self.workers
+            );
+            anyhow::ensure!(f.is_finite() && f >= 0.0, "slow link factor must be >= 0");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str().into())
+            .set("workers", self.workers.into())
+            .set("topology", self.topology.name().into())
+            .set("iters", self.iters.into())
+            // string, not number: JSON numbers are f64-backed, which
+            // would corrupt seeds above 2^53 on a round trip
+            .set("seed", self.seed.to_string().into())
+            .set("fidelity", self.fidelity.name().into())
+            .set(
+                "policies",
+                self.policies.iter().map(|p| p.name()).collect::<Vec<_>>().into(),
+            )
+            .set("compute", self.compute.spec().into())
+            .set("hetero", self.hetero.into())
+            .set("transient_prob", self.transient_prob.into())
+            .set("transient_factor", self.transient_factor.into())
+            .set(
+                "persistent",
+                Json::Arr(
+                    self.persistent
+                        .iter()
+                        .map(|&(w, f)| Json::Arr(vec![(w).into(), f.into()]))
+                        .collect(),
+                ),
+            )
+            .set("link_base", self.link_base.into())
+            .set(
+                "link_jitter",
+                match &self.link_jitter {
+                    Some(d) => d.spec().into(),
+                    None => "none".into(),
+                },
+            )
+            .set(
+                "slow_links",
+                Json::Arr(
+                    self.slow_links
+                        .iter()
+                        .map(|&(a, b, f)| Json::Arr(vec![a.into(), b.into(), f.into()]))
+                        .collect(),
+                ),
+            )
+            .set("model", self.model.as_str().into())
+            .set("train_n", self.train_n.into())
+            .set("test_n", self.test_n.into())
+            .set("eval_every", self.eval_every.into());
+        if let Some(p) = &self.trace_file {
+            o.set("trace_file", p.display().to_string().into());
+        }
+        o
+    }
+
+    /// The straggler model the scenario describes (used to record the
+    /// shared trace when no CSV is given; the async figure harness
+    /// reuses it so its N-sweep matches the sweep's model exactly).
+    pub(crate) fn straggler_model(&self, rng: &mut Rng) -> StragglerModel {
+        let mut m = StragglerModel {
+            base: self.compute,
+            worker_scale: (0..self.workers)
+                .map(|_| rng.uniform_in(1.0 - self.hetero, 1.0 + self.hetero))
+                .collect(),
+            persistent: vec![1.0; self.workers],
+            transient_prob: self.transient_prob,
+            transient_factor: self.transient_factor,
+            force_one_straggler: self.transient_prob > 0.0,
+            outages: Vec::new(),
+        };
+        for &(w, f) in &self.persistent {
+            m.persistent[w] = f;
+        }
+        m
+    }
+
+    pub(crate) fn link_model(&self) -> LinkModel {
+        let mut l = LinkModel::new(self.link_base, self.link_jitter, self.seed);
+        for &(a, b, f) in &self.slow_links {
+            l = l.with_slow_link(a, b, f);
+        }
+        l
+    }
+
+    /// The shared timing realisation every policy replays.
+    fn build_trace(&self, rng: &mut Rng) -> anyhow::Result<Arc<Trace>> {
+        let trace = match &self.trace_file {
+            Some(p) => {
+                let t = Trace::load_csv(p)?;
+                anyhow::ensure!(
+                    t.workers == self.workers,
+                    "trace has {} workers, scenario {}",
+                    t.workers,
+                    self.workers
+                );
+                t
+            }
+            None => Trace::record(&self.straggler_model(rng), self.iters, rng),
+        };
+        Ok(Arc::new(trace))
+    }
+
+    /// Run the sweep. Writes per-policy summaries under `out_dir`; when
+    /// `export_events` is set, appends every policy's deterministic
+    /// event log to that file (the CI reproducibility artifact).
+    pub fn run(&self, out_dir: &Path, export_events: Option<&Path>) -> anyhow::Result<String> {
+        self.validate()?;
+        match self.fidelity {
+            Fidelity::Timing => self.run_timing(out_dir, export_events),
+            Fidelity::Full => self.run_full(out_dir, export_events),
+        }
+    }
+
+    fn run_timing(&self, out_dir: &Path, export_events: Option<&Path>) -> anyhow::Result<String> {
+        let mut rng = Rng::new(self.seed);
+        let graph = topology::build(self.topology, self.workers, &mut rng);
+        let trace = self.build_trace(&mut rng)?;
+        let link = self.link_model();
+        let mut out = format!(
+            "=== DES scenario '{}' (timing-only, {} workers, {}, {} iters/worker) ===\n",
+            self.name,
+            self.workers,
+            self.topology.name(),
+            self.iters
+        );
+        out.push_str(&format!(
+            "{:>10} | {:>11} {:>11} {:>10} {:>8} {:>10} {:>9} {:>8} {:>8}\n",
+            "policy",
+            "makespan",
+            "mean T(k)",
+            "mean wait",
+            "mean b",
+            "cover-miss",
+            "messages",
+            "max-lag",
+            "p50 fin"
+        ));
+        let mut log_out = String::new();
+        let mut summary = Json::obj();
+        for &policy in &self.policies {
+            let mut sim = ClusterSim::new(
+                graph.clone(),
+                policy,
+                self.iters,
+                ComputeTimes::Replay(trace.clone()),
+                link.clone(),
+            )?;
+            if export_events.is_some() {
+                sim.enable_log();
+            }
+            let stats = sim.run(&mut NoHooks)?;
+            out.push_str(&render_stats_row(&stats));
+            if export_events.is_some() {
+                log_out.push_str(&format!("# scenario={} policy={}\n", self.name, policy.name()));
+                for line in sim.take_log() {
+                    log_out.push_str(&line);
+                    log_out.push('\n');
+                }
+            }
+            summary.set(&policy.name(), stats_json(&stats));
+        }
+        out.push_str(
+            "(cover-miss > 0 ⇒ the policy left a neighbour unheard for 2·deg straight\n \
+             iterations — the Assumption-2 connectivity cb-DyBW keeps for free)\n",
+        );
+        std::fs::create_dir_all(out_dir)?;
+        std::fs::write(
+            out_dir.join(format!("des.{}.summary.json", self.name)),
+            summary.to_string_pretty(),
+        )?;
+        if let Some(p) = export_events {
+            if let Some(dir) = p.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            std::fs::write(p, log_out)?;
+        }
+        Ok(out)
+    }
+
+    fn run_full(&self, out_dir: &Path, export_events: Option<&Path>) -> anyhow::Result<String> {
+        let mut setup = Setup::default();
+        setup.workers = self.workers;
+        setup.topology = self.topology;
+        setup.model = self.model.clone();
+        setup.train_n = self.train_n;
+        setup.test_n = self.test_n;
+        setup.straggler_base = self.compute;
+        setup.straggler_factor = self.transient_factor;
+        setup.force_straggler = self.transient_prob > 0.0;
+        setup.train.iters = self.iters;
+        setup.train.eval_every = self.eval_every;
+        setup.train.seed = self.seed;
+        // the scenario's own trace (heterogeneity, persistent stragglers,
+        // CSV replay) is handed straight to build_des_with_times — the
+        // Setup never records one of its own
+        let mut rng = Rng::new(self.seed);
+        let _ = topology::build(self.topology, self.workers, &mut rng);
+        let trace = self.build_trace(&mut rng)?;
+        let link = self.link_model();
+
+        let mut out = format!(
+            "=== DES scenario '{}' (full fidelity, {} workers, {}, {} iters/worker) ===\n",
+            self.name,
+            self.workers,
+            self.topology.name(),
+            self.iters
+        );
+        out.push_str(&format!(
+            "{:>10} | {:>11} {:>10} {:>8} {:>12} {:>12} {:>12}\n",
+            "policy", "makespan", "mean wait", "mean b", "final loss", "final err%", "consensus"
+        ));
+        let mut log_out = String::new();
+        for &policy in &self.policies {
+            let mut trainer = setup.build_des_with_times(
+                policy,
+                link.clone(),
+                Some(ComputeTimes::Replay(trace.clone())),
+            )?;
+            if export_events.is_some() {
+                trainer.log_events();
+            }
+            let o = trainer.run()?;
+            let e = o
+                .history
+                .final_eval()
+                .ok_or_else(|| anyhow::anyhow!("no eval recorded"))?;
+            out.push_str(&format!(
+                "{:>10} | {:>10.2}s {:>9.3}s {:>8.2} {:>12.4} {:>12.1} {:>12.4}\n",
+                o.stats.policy,
+                o.stats.makespan,
+                o.stats.mean_wait,
+                o.stats.mean_backup,
+                e.test_loss,
+                e.test_error * 100.0,
+                e.consensus_error
+            ));
+            export::write_csv(
+                &o.history,
+                out_dir,
+                &format!("des.{}.{}", self.name, policy.name().replace(':', "_")),
+            )?;
+            if export_events.is_some() {
+                log_out.push_str(&format!("# scenario={} policy={}\n", self.name, policy.name()));
+                for line in &o.event_log {
+                    log_out.push_str(line);
+                    log_out.push('\n');
+                }
+            }
+        }
+        if let Some(p) = export_events {
+            if let Some(dir) = p.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            std::fs::write(p, log_out)?;
+        }
+        Ok(out)
+    }
+}
+
+fn parse_pairs(arr: &[Json], what: &str) -> anyhow::Result<Vec<(f64, f64)>> {
+    arr.iter()
+        .map(|p| {
+            let p = p
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| anyhow::anyhow!("{what} entries are [worker, factor] pairs"))?;
+            let a = p[0]
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("non-numeric {what} entry"))?;
+            let b = p[1]
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("non-numeric {what} entry"))?;
+            Ok((a, b))
+        })
+        .collect()
+}
+
+fn render_stats_row(s: &ClusterStats) -> String {
+    format!(
+        "{:>10} | {:>10.2}s {:>10.4}s {:>9.4}s {:>8.2} {:>10} {:>9} {:>8} {:>7.2}s\n",
+        s.policy,
+        s.makespan,
+        s.mean_iter_duration,
+        s.mean_wait,
+        s.mean_backup,
+        s.coverage_violations,
+        s.messages_sent,
+        s.max_lag,
+        s.finish_percentile(50.0)
+    )
+}
+
+fn stats_json(s: &ClusterStats) -> Json {
+    let mut o = Json::obj();
+    o.set("makespan", s.makespan.into())
+        .set("mean_iter_duration", s.mean_iter_duration.into())
+        .set("mean_wait", s.mean_wait.into())
+        .set("mean_backup", s.mean_backup.into())
+        .set("messages_sent", (s.messages_sent as i64).into())
+        .set("stale_messages", (s.stale_messages as i64).into())
+        .set("events", (s.events as i64).into())
+        .set("coverage_violations", (s.coverage_violations as i64).into())
+        .set("max_lag", s.max_lag.into())
+        .set("p50_finish", s.finish_percentile(50.0).into())
+        .set("p99_finish", s.finish_percentile(99.0).into());
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut s = Scenario::default();
+        s.name = "rt".into();
+        s.workers = 64;
+        s.policies = vec![WaitPolicy::Dybw, WaitPolicy::Static { b: 2 }];
+        s.persistent = vec![(3, 5.0)];
+        s.slow_links = vec![(0, 1, 4.0)];
+        s.link_jitter = None;
+        // above 2^53: must survive exactly (seeds travel as strings)
+        s.seed = (1u64 << 60) + 3;
+        let j = s.to_json();
+        let s2 = Scenario::from_json(&j).unwrap();
+        assert_eq!(s2.name, "rt");
+        assert_eq!(s2.workers, 64);
+        assert_eq!(s2.policies, s.policies);
+        assert_eq!(s2.persistent, s.persistent);
+        assert_eq!(s2.slow_links, s.slow_links);
+        assert_eq!(s2.link_jitter, None);
+        assert_eq!(s2.compute, s.compute);
+        assert_eq!(s2.seed, (1u64 << 60) + 3);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        for bad in [
+            r#"{"workers": 1}"#,
+            r#"{"iters": 0}"#,
+            r#"{"policies": []}"#,
+            r#"{"policies": ["wat"]}"#,
+            r#"{"topology": "dodecahedron"}"#,
+            r#"{"fidelity": "imaginary"}"#,
+            r#"{"compute": "nope:1"}"#,
+            r#"{"hetero": 1.5}"#,
+            r#"{"persistent": [[1]]}"#,
+            r#"{"persistent": [[-1, 5.0]]}"#,
+            r#"{"persistent": [[1.5, 2.0]]}"#,
+            r#"{"persistent": [[1, -2.0]]}"#,
+            r#"{"slow_links": [[1, 2]]}"#,
+            r#"{"link_jitter": 5}"#,
+            r#"{"link_jitter": "uniform:-0.01,0.01"}"#,
+            r#"{"link_base": -0.002}"#,
+            r#"{"compute": "det:-0.1"}"#,
+            r#"{"compute": "uniform:-0.05,0.2"}"#,
+            r#"{"transient_prob": 1.5}"#,
+            r#"{"transient_factor": 0}"#,
+            r#"{"workers": "250"}"#,
+            r#"{"wrokers": 6}"#,
+            r#"{"seed": 1.5}"#,
+            r#"{"seed": "abc"}"#,
+            r#"[]"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Scenario::from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn run_rejects_out_of_range_injection_targets() {
+        // worker counts can shrink after load (CLI override): injection
+        // targets outside the cluster must error, not silently vanish.
+        let dir = std::env::temp_dir().join("dybw_des_scn_range");
+        let mut s = Scenario::default();
+        s.workers = 10;
+        s.iters = 2;
+        s.persistent = vec![(17, 5.0)];
+        assert!(s.run(&dir, None).unwrap_err().to_string().contains("persistent"));
+        s.persistent.clear();
+        s.slow_links = vec![(0, 99, 4.0)];
+        assert!(s.run(&dir, None).unwrap_err().to_string().contains("slow_links"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn timing_sweep_runs_and_exports() {
+        let dir = std::env::temp_dir().join("dybw_des_scn_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Scenario::default();
+        s.name = "smoke".into();
+        s.workers = 120;
+        s.iters = 8;
+        let events = dir.join("events.log");
+        let out = s.run(&dir, Some(&events)).unwrap();
+        assert!(out.contains("dybw"), "{out}");
+        assert!(out.contains("full"));
+        assert!(dir.join("des.smoke.summary.json").exists());
+        let log = std::fs::read_to_string(&events).unwrap();
+        assert!(log.contains("# scenario=smoke policy=dybw"));
+        assert!(log.contains("compute_done"));
+        // re-running produces a byte-identical event log
+        let out2 = s.run(&dir, Some(&events)).unwrap();
+        assert_eq!(out, out2);
+        assert_eq!(std::fs::read_to_string(&events).unwrap(), log);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn full_fidelity_scenario_runs() {
+        let dir = std::env::temp_dir().join("dybw_des_scn_full_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Scenario::default();
+        s.name = "fullsmoke".into();
+        s.fidelity = Fidelity::Full;
+        s.workers = 4;
+        s.iters = 6;
+        s.eval_every = 3;
+        s.policies = vec![WaitPolicy::Dybw];
+        s.model = "lrm_d16_c10_b64".into();
+        s.train_n = 2000;
+        s.test_n = 512;
+        let out = s.run(&dir, None).unwrap();
+        assert!(out.contains("final loss"), "{out}");
+        assert!(dir.join("des.fullsmoke.dybw.evals.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -345,6 +345,27 @@ impl EnginePool {
             .collect()
     }
 
+    /// Score one parameter vector on a full eval set: batches fan across
+    /// the lanes via [`Self::eval_many`], the row-weighted reduction
+    /// runs in batch order (so the result is independent of the pool
+    /// size). Returns `(mean test loss, error fraction)` — the one
+    /// definition of the eval metric shared by the lockstep and the
+    /// event-driven trainers.
+    pub fn score(&self, w: &[f32], eval_batches: &[AnyBatch]) -> anyhow::Result<(f64, f64)> {
+        let scores = self.eval_many(w, eval_batches)?;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let mut rows = 0usize;
+        for ((loss, corr), b) in scores.into_iter().zip(eval_batches) {
+            let r = b.rows();
+            loss_sum += loss as f64 * r as f64;
+            correct += corr;
+            rows += r;
+        }
+        anyhow::ensure!(rows > 0, "empty eval set");
+        Ok((loss_sum / rows as f64, 1.0 - correct as f64 / rows as f64))
+    }
+
     /// Fan per-worker gradient jobs AND generic borrowed-closure tasks in
     /// ONE queue submission: the gradients are enqueued first, the tasks
     /// drain on whatever lane capacity is spare. This is the

@@ -8,6 +8,12 @@
 //! - [`severity`]: straggler-severity sweep; locates where cb-DyBW's
 //!   advantage over cb-Full grows/shrinks (the "which effect prevails?"
 //!   question of §1).
+//!
+//! Every harness fans its independent cells over
+//! [`run_cells`](super::run_cells)' bounded scoped-thread scheduler
+//! (same pattern as the figure grids): results come back in submission
+//! order and each cell is bit-deterministic given its seed, so
+//! concurrent output is byte-identical to sequential.
 
 use std::path::Path;
 
@@ -52,41 +58,59 @@ pub fn compression(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<
         "{:>12} | {:>10} {:>12} {:>14} {:>12}\n",
         "scheme", "final err%", "final loss", "wire MB total", "vs exact"
     ));
-    let exact = {
-        let mut tr = s.build_sim()?;
-        tr.run()?
-    };
-    let exact_bytes_per_round = 2 * (n - 1) * dim * 4; // upper bound: dense both ways
-    export::write_csv(&exact, out_dir, "compression.exact")?;
-    let e = exact.final_eval().unwrap();
-    out.push_str(&format!(
-        "{:>12} | {:>10.1} {:>12.4} {:>14.1} {:>12}\n",
-        "exact-f32",
-        e.test_error * 100.0,
-        e.test_loss,
-        (iters * exact_bytes_per_round) as f64 / 1e6,
-        "-"
-    ));
-    let schemes: Vec<(String, Box<dyn Compressor + Send + Sync>)> = vec![
-        ("top-10%".into(), Box::new(TopK { k: dim / 10 })),
-        ("top-25%".into(), Box::new(TopK { k: dim / 4 })),
-        ("8-bit".into(), Box::new(QuantizeBits { bits: 8 })),
-        ("4-bit".into(), Box::new(QuantizeBits { bits: 4 })),
+    // One cell per scheme (exact first); schemes carry their compressor
+    // into the cell, results assemble in submission order.
+    let schemes: Vec<(String, Option<Box<dyn Compressor + Send + Sync>>)> = vec![
+        ("exact-f32".into(), None),
+        ("top-10%".into(), Some(Box::new(TopK { k: dim / 10 }))),
+        ("top-25%".into(), Some(Box::new(TopK { k: dim / 4 }))),
+        ("8-bit".into(), Some(Box::new(QuantizeBits { bits: 8 }))),
+        ("4-bit".into(), Some(Box::new(QuantizeBits { bits: 4 }))),
     ];
-    for (name, comp) in schemes {
-        let mut tr = s.build_sim()?;
-        tr.compression = Some(CompressionState::new(comp, n, dim));
-        let h = tr.run()?;
-        let wire = tr.compression.as_ref().unwrap().wire_bytes;
-        export::write_csv(&h, out_dir, &format!("compression.{name}"))?;
+    let names: Vec<String> = schemes.iter().map(|(n, _)| n.clone()).collect();
+    let jobs: Vec<_> = schemes
+        .into_iter()
+        .map(|(_, comp)| {
+            let s = super::cell_setup(&s);
+            move || -> anyhow::Result<(crate::metrics::RunHistory, Option<usize>)> {
+                let mut tr = s.build_sim()?;
+                let compressed = comp.is_some();
+                if let Some(comp) = comp {
+                    tr.compression = Some(CompressionState::new(comp, n, dim));
+                }
+                let h = tr.run()?;
+                let wire = compressed.then(|| tr.compression.as_ref().unwrap().wire_bytes);
+                Ok((h, wire))
+            }
+        })
+        .collect();
+    let results = super::run_cells(jobs)?;
+    let exact_bytes_per_round = 2 * (n - 1) * dim * 4; // upper bound: dense both ways
+    let exact_loss = results[0].0.final_eval().unwrap().test_loss;
+    for (name, (h, wire)) in names.iter().zip(&results) {
+        let prefix = if name == "exact-f32" {
+            "compression.exact".to_string()
+        } else {
+            format!("compression.{name}")
+        };
+        export::write_csv(h, out_dir, &prefix)?;
         let e2 = h.final_eval().unwrap();
+        let (mb, vs) = match wire {
+            Some(w) => (
+                *w as f64 / 1e6,
+                format!("{:>11.3}x", e2.test_loss / exact_loss),
+            ),
+            None => (
+                (iters * exact_bytes_per_round) as f64 / 1e6,
+                format!("{:>12}", "-"),
+            ),
+        };
         out.push_str(&format!(
-            "{:>12} | {:>10.1} {:>12.4} {:>14.1} {:>11.3}x\n",
+            "{:>12} | {:>10.1} {:>12.4} {:>14.1} {vs}\n",
             name,
             e2.test_error * 100.0,
             e2.test_loss,
-            wire as f64 / 1e6,
-            e2.test_loss / e.test_loss
+            mb
         ));
     }
     out.push_str(
@@ -114,12 +138,19 @@ pub fn baselines(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<St
         "{:>16} | {:>10} {:>12} {:>12} {:>14} {:>12}\n",
         "algorithm", "final err%", "final loss", "mean T(k)", "time to loss", "total time"
     ));
-    for algo in algos {
-        let h = one(base, algo, iters)?;
+    let jobs: Vec<_> = algos
+        .iter()
+        .map(|&algo| {
+            let s = super::cell_setup(base);
+            move || one(&s, algo, iters)
+        })
+        .collect();
+    let hists = super::run_cells(jobs)?;
+    for h in hists {
         export::write_csv(
             &h,
             out_dir,
-            &format!("baselines.{}", algo.name().to_lowercase().replace(['(', ')', '='], "_")),
+            &format!("baselines.{}", h.algo.to_lowercase().replace(['(', ')', '='], "_")),
         )?;
         let e = h.final_eval().unwrap();
         out.push_str(&format!(
@@ -146,16 +177,23 @@ pub fn topology(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<Str
         "{:>10} | {:>10} {:>12} {:>12} {:>14}\n",
         "topology", "final err%", "final loss", "mean T(k)", "consensus err"
     ));
-    for topo in [
+    let topos = [
         Topology::Ring,
         Topology::Grid,
         Topology::RandomConnected,
         Topology::Complete,
-    ] {
-        let mut s = base.clone();
-        s.topology = topo;
-        let h = one(&s, Algorithm::CbDybw, iters)?;
-        export::write_csv(&h, out_dir, &format!("topology.{}", topo.name()))?;
+    ];
+    let jobs: Vec<_> = topos
+        .iter()
+        .map(|&topo| {
+            let mut s = super::cell_setup(base);
+            s.topology = topo;
+            move || one(&s, Algorithm::CbDybw, iters)
+        })
+        .collect();
+    let hists = super::run_cells(jobs)?;
+    for (&topo, h) in topos.iter().zip(&hists) {
+        export::write_csv(h, out_dir, &format!("topology.{}", topo.name()))?;
         let e = h.final_eval().unwrap();
         out.push_str(&format!(
             "{:>10} | {:>10.1} {:>12.4} {:>11.3}s {:>14.5}\n",
@@ -181,13 +219,21 @@ pub fn severity(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<Str
         "{:>8} | {:>12} {:>12} {:>12}\n",
         "slowdown", "dybw total", "full total", "speedup x"
     ));
+    let jobs: Vec<_> = factors
+        .iter()
+        .flat_map(|&f| [(f, Algorithm::CbDybw), (f, Algorithm::CbFull)])
+        .map(|(f, algo)| {
+            let mut s = super::cell_setup(base);
+            s.straggler_factor = f;
+            s.force_straggler = f > 1.0;
+            s.straggler_base = Dist::ShiftedExp { base: 0.08, rate: 25.0 };
+            move || one(&s, algo, iters)
+        })
+        .collect();
+    let mut hists = super::run_cells(jobs)?;
     for &f in factors {
-        let mut s = base.clone();
-        s.straggler_factor = f;
-        s.force_straggler = f > 1.0;
-        s.straggler_base = Dist::ShiftedExp { base: 0.08, rate: 25.0 };
-        let ha = one(&s, Algorithm::CbDybw, iters)?;
-        let hb = one(&s, Algorithm::CbFull, iters)?;
+        let ha = hists.remove(0);
+        let hb = hists.remove(0);
         export::write_csv(&ha, out_dir, &format!("severity.f{f}.dybw"))?;
         export::write_csv(&hb, out_dir, &format!("severity.f{f}.full"))?;
         out.push_str(&format!(

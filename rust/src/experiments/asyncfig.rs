@@ -1,0 +1,145 @@
+//! `figure async` — the asynchronous-timeline results.
+//!
+//! Two panels:
+//!
+//! 1. **Scale (timing-only DES)**: a 1000+-worker ring swept over wait
+//!    policies on one identical trace, plus an N-sweep showing cb-DyBW's
+//!    per-worker pace stays flat as the cluster grows while the full
+//!    barrier's pace degrades — the asynchronous face of §5's linear
+//!    speedup, at sizes the lockstep driver cannot touch.
+//! 2. **Time-vs-loss (full-fidelity DES)**: real gradients on the
+//!    asynchronous schedule, cb-DyBW vs the full barrier on the same
+//!    recorded realisation — Fig. 5/7's story with per-worker clocks.
+
+use std::path::Path;
+
+use crate::coordinator::setup::Setup;
+use crate::des::{ClusterSim, ComputeTimes, NoHooks, Scenario, WaitPolicy};
+use crate::graph::topology;
+use crate::metrics::export;
+use crate::metrics::RunHistory;
+use crate::straggler::link::LinkModel;
+use crate::straggler::trace::Trace;
+use crate::straggler::Dist;
+use crate::util::rng::Rng;
+
+use super::render_time_table;
+
+pub fn run(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    let mut out = String::from("=== Async: event-driven simulation (per-worker clocks) ===\n\n");
+    out.push_str(&scale_panel(base, out_dir, quick)?);
+    out.push('\n');
+    out.push_str(&loss_panel(base, out_dir, quick)?);
+    Ok(out)
+}
+
+/// Panel 1: the scenario sweep + N-sweep (timing-only).
+fn scale_panel(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    let mut scenario = Scenario {
+        name: "async-ring".into(),
+        workers: if quick { 1000 } else { 4000 },
+        iters: if quick { 25 } else { 60 },
+        seed: base.train.seed,
+        policies: vec![
+            WaitPolicy::Full,
+            WaitPolicy::Static { b: 1 },
+            WaitPolicy::Dybw,
+        ],
+        ..Scenario::default()
+    };
+    scenario.compute = base.straggler_base;
+    scenario.transient_factor = base.straggler_factor;
+    let mut out = scenario.run(out_dir, None)?;
+
+    // N-sweep: per-worker pace (makespan / iters) versus cluster size.
+    let sizes: &[usize] = if quick { &[100, 400, 1000] } else { &[100, 1000, 4000] };
+    out.push_str("\n--- per-worker pace vs cluster size (ring, identical model) ---\n");
+    out.push_str(&format!(
+        "{:>8} | {:>14} {:>14} {:>10}\n",
+        "N", "full s/iter", "dybw s/iter", "ratio"
+    ));
+    for &n in sizes {
+        // the scenario's OWN model at each size, so the N-sweep rows are
+        // consistent with the policy table printed above them
+        let mut scn = scenario.clone();
+        scn.workers = n;
+        let iters = scn.iters;
+        let mut rng = Rng::new(scn.seed);
+        let model = scn.straggler_model(&mut rng);
+        let trace = std::sync::Arc::new(Trace::record(&model, iters, &mut rng));
+        let link = scn.link_model();
+        let pace = |policy: WaitPolicy| -> anyhow::Result<f64> {
+            let mut sim = ClusterSim::new(
+                topology::ring(n),
+                policy,
+                iters,
+                ComputeTimes::Replay(trace.clone()),
+                link.clone(),
+            )?;
+            let stats = sim.run(&mut NoHooks)?;
+            Ok(stats.makespan / iters as f64)
+        };
+        let (full, dybw) = (pace(WaitPolicy::Full)?, pace(WaitPolicy::Dybw)?);
+        out.push_str(&format!(
+            "{:>8} | {:>13.4}s {:>13.4}s {:>10.2}\n",
+            n,
+            full,
+            dybw,
+            full / dybw
+        ));
+    }
+    out.push_str(
+        "(per-worker pace stays ~flat as N grows while total work grows ~N: aggregate\n \
+         throughput scales linearly — Cor. 2/3's speedup on the async timeline — and\n \
+         dybw holds a constant-factor pace lead over the full barrier at every size)\n",
+    );
+    Ok(out)
+}
+
+/// Panel 2: full-fidelity time-vs-loss, cb-DyBW vs full barrier.
+fn loss_panel(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
+    let iters = if quick { 40 } else { 200 };
+    let jobs: Vec<_> = [WaitPolicy::Dybw, WaitPolicy::Full]
+        .into_iter()
+        .map(|policy| {
+            let mut s = super::cell_setup(base);
+            s.model = "lrm_d64_c10_b256".into();
+            s.train.iters = iters;
+            s.train.eval_every = (iters / 20).max(1);
+            move || -> anyhow::Result<RunHistory> {
+                let link = LinkModel::new(
+                    0.002,
+                    Some(Dist::ShiftedExp { base: 0.0, rate: 800.0 }),
+                    s.train.seed,
+                );
+                let mut trainer = s.build_des(policy, link)?;
+                let o = trainer.run()?;
+                export::write_csv(&o.history, out_dir, &format!("async.{}", policy.name()))?;
+                Ok(o.history)
+            }
+        })
+        .collect();
+    let hists = super::run_cells(jobs)?;
+    let mut out = String::from("--- time vs loss, full-fidelity DES (6 workers, LRM) ---\n");
+    out.push_str(&render_time_table(&hists[0], &hists[1], &[0.55]));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn async_figure_quick() {
+        let dir = std::env::temp_dir().join("dybw_asyncfig_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Setup::default();
+        s.train_n = 2400;
+        s.test_n = 1024;
+        let out = run(&s, &dir, true).unwrap();
+        assert!(out.contains("dybw"), "{out}");
+        assert!(out.contains("per-worker pace"));
+        assert!(dir.join("async.dybw.evals.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

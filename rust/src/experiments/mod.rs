@@ -14,11 +14,13 @@
 //! | baselines| §1/§related: static-b + PS comparisons    | [`ablation::baselines`] |
 //! | topology | β^{NB} sensitivity: ring/grid/complete    | [`ablation::topology`] |
 //! | severity | straggler-severity sweep (crossover)      | [`ablation::severity`] |
+//! | async    | DES: per-worker clocks, scale + time-loss | [`asyncfig::run`] |
 //!
 //! Each harness prints the same series the paper plots (downsampled for
 //! stdout) and writes full-resolution CSV/JSON under `--out-dir`.
 
 pub mod ablation;
+pub mod asyncfig;
 pub mod figures;
 pub mod speedup;
 
@@ -116,7 +118,7 @@ where
 /// All experiment ids, in presentation order.
 pub const ALL: &[&str] = &[
     "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "speedup", "baselines",
-    "topology", "severity", "compression",
+    "topology", "severity", "compression", "async",
 ];
 
 /// Dispatch by id. `quick` shrinks workloads (used by tests/CI).
@@ -135,6 +137,7 @@ pub fn run(id: &str, base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Resul
         "topology" => ablation::topology(base, out_dir, quick),
         "severity" => ablation::severity(base, out_dir, quick),
         "compression" => ablation::compression(base, out_dir, quick),
+        "async" => asyncfig::run(base, out_dir, quick),
         "all" => {
             let mut out = String::new();
             for id in ALL {

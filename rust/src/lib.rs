@@ -17,6 +17,11 @@
 //! API (`xla` crate) and the coordinator drives them from Rust. The
 //! default build has no external dependencies and uses the pure-Rust
 //! native engines.
+//!
+//! Between the straggler substrate and the trainers sits [`des`], the
+//! event-driven cluster simulator: asynchronous per-worker time on a
+//! deterministic discrete-event core (timing-only at thousands of
+//! workers, or full fidelity with real gradients).
 
 // Style lints that fight this codebase's numerical idiom (parallel
 // arrays indexed together, config structs mutated field-by-field after
@@ -36,6 +41,7 @@
 pub mod consensus;
 pub mod coordinator;
 pub mod data;
+pub mod des;
 pub mod engine;
 pub mod experiments;
 pub mod graph;

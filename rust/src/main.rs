@@ -6,6 +6,7 @@
 //! - `topology` — inspect a consensus graph + its DTUR path
 //! - `artifacts`— list and validate the AOT artifact set
 //! - `analyze`  — consensus-theory numbers (λ₂, β, mixing forecast)
+//! - `des`      — event-driven cluster simulator (async per-worker time)
 //! - `bench`    — perf-trajectory tooling (regression gate vs baseline)
 
 // Same rationale as the crate-level allows in lib.rs (config structs are
@@ -52,6 +53,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "artifacts" => cmd_artifacts(rest),
         "analyze" => cmd_analyze(rest),
         "trace" => cmd_trace(rest),
+        "des" => cmd_des(rest),
         "bench" => cmd_bench(rest),
         "help" | "--help" | "-h" => {
             print_global_help();
@@ -69,11 +71,12 @@ fn print_global_help() {
          \n\
          SUBCOMMANDS:\n\
          \x20 train      run one training job (cb-DyBW or a baseline)\n\
-         \x20 figure     regenerate a paper figure: table1 fig1..fig7 speedup baselines topology severity | all\n\
+         \x20 figure     regenerate a paper figure: table1 fig1..fig7 speedup baselines topology severity compression async | all\n\
          \x20 topology   inspect a consensus graph and its DTUR connecting path\n\
          \x20 artifacts  list + validate AOT artifacts (built by `make artifacts`)\n\
          \x20 analyze    consensus-theory report (lambda2, beta, mixing forecast)\n\
          \x20 trace      record a straggler timing trace / A-B algorithms on one\n\
+         \x20 des        event-driven simulator: async per-worker clocks, scenario sweeps\n\
          \x20 bench      perf-trajectory gate: compare BENCH_speedup.json vs baseline\n\
          \n\
          Run `dybw <subcommand> --help` for options."
@@ -216,7 +219,7 @@ fn cmd_figure(argv: &[String]) -> anyhow::Result<()> {
         "dybw figure",
         "regenerate a paper figure/table",
     ))
-    .positional("id", "table1|fig1..fig7|speedup|baselines|topology|severity|all")
+    .positional("id", "table1|fig1..fig7|speedup|baselines|topology|severity|compression|async|all")
     .opt("out-dir", "results", "CSV/JSON output dir")
     .opt("cells", "0", "concurrent harness cells (0 = auto; 1 = sequential reference)")
     .flag("quick", "shrunk workloads (CI)");
@@ -397,6 +400,70 @@ fn cmd_trace(argv: &[String]) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown trace action '{other}' (record | ab)"),
     }
     Ok(())
+}
+
+fn cmd_des(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "dybw des",
+        "event-driven cluster simulator: asynchronous per-worker time",
+    )
+    .positional("action", "run | template")
+    .opt("scenario", "", "scenario JSON file (default: the built-in ring-1k sweep)")
+    .opt("out-dir", "results", "summary JSON / history CSV output dir")
+    .opt("export-events", "", "write the deterministic per-event log to this path")
+    .opt("workers", "0", "override the scenario's worker count (0 = keep)")
+    .opt("iters", "0", "override iterations per worker (0 = keep)")
+    .opt("seed", "", "override the scenario's seed")
+    .opt(
+        "policies",
+        "",
+        "override the policy sweep, comma-separated: full|static:<b>|dybw",
+    );
+    let a = parse_or_exit(&cmd, argv)?;
+    let action = a.positionals.first().map(String::as_str).unwrap_or("run");
+    match action {
+        "template" => {
+            // a starting point for hand-written scenarios
+            println!(
+                "{}",
+                dybw::des::Scenario::default().to_json().to_string_pretty()
+            );
+            Ok(())
+        }
+        "run" => {
+            let mut scenario = match a.get("scenario") {
+                "" => dybw::des::Scenario::default(),
+                path => dybw::des::Scenario::load(&PathBuf::from(path))?,
+            };
+            if a.get_usize("workers")? > 0 {
+                scenario.workers = a.get_usize("workers")?;
+            }
+            if a.get_usize("iters")? > 0 {
+                scenario.iters = a.get_usize("iters")?;
+            }
+            if !a.get("seed").is_empty() {
+                scenario.seed = a.get_u64("seed")?;
+            }
+            if !a.get("policies").is_empty() {
+                scenario.policies = a
+                    .get("policies")
+                    .split(',')
+                    .map(|p| {
+                        dybw::des::WaitPolicy::parse(p.trim())
+                            .ok_or_else(|| anyhow::anyhow!("bad policy '{p}'"))
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+            }
+            let events = match a.get("export-events") {
+                "" => None,
+                p => Some(PathBuf::from(p)),
+            };
+            let report = scenario.run(&PathBuf::from(a.get("out-dir")), events.as_deref())?;
+            println!("{report}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown des action '{other}' (run | template)\n\n{}", cmd.usage()),
+    }
 }
 
 fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {

@@ -1,0 +1,124 @@
+//! Per-link message-latency model for the event-driven simulator.
+//!
+//! The lockstep drivers never needed one: a global θ(k) cut absorbs all
+//! communication time into the iteration duration. The DES runs workers
+//! on their own clocks, so the time a parameter estimate spends on the
+//! wire between two neighbours becomes a first-class quantity: it decides
+//! *which* n_i − b_i estimates arrive first, and therefore the whole
+//! asynchronous schedule.
+//!
+//! Latency is a **pure function** of (src, dst, k): the jitter draw comes
+//! from a [`stream_seed`]-keyed throwaway RNG, not from a shared stream,
+//! so the sampled value never depends on the order events fire in — the
+//! property the DES determinism tests lean on.
+
+use crate::util::rng::{stream_seed, Rng};
+
+use super::Dist;
+
+/// Tag for link-latency streams (decorrelates them from compute-time
+/// streams keyed on the same seed).
+const LINK_TAG: u64 = 0x4C49_4E4B; // "LINK"
+
+/// Message latency over one edge: fixed propagation base + random jitter,
+/// optionally degraded per edge (heterogeneous links: a slow WAN hop, a
+/// congested rack uplink).
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    /// Fixed per-message latency floor (seconds).
+    pub base: f64,
+    /// Additional random per-message latency.
+    pub jitter: Option<Dist>,
+    /// Per-edge multipliers `(a, b, factor)` applied to BOTH directions
+    /// of the (a, b) edge — heterogeneous-link injection.
+    pub slow_links: Vec<(usize, usize, f64)>,
+    /// Seed of the jitter streams.
+    pub seed: u64,
+}
+
+impl LinkModel {
+    /// Zero-latency network: messages arrive the instant they are sent.
+    pub fn zero() -> Self {
+        LinkModel {
+            base: 0.0,
+            jitter: None,
+            slow_links: Vec::new(),
+            seed: 0,
+        }
+    }
+
+    pub fn new(base: f64, jitter: Option<Dist>, seed: u64) -> Self {
+        LinkModel {
+            base,
+            jitter,
+            slow_links: Vec::new(),
+            seed,
+        }
+    }
+
+    /// Mark the (a, b) edge `factor`x slower in both directions.
+    pub fn with_slow_link(mut self, a: usize, b: usize, factor: f64) -> Self {
+        self.slow_links.push((a, b, factor));
+        self
+    }
+
+    /// Latency of worker `src`'s iteration-`k` message to `dst`.
+    /// Pure in (src, dst, k); directions draw independent jitter.
+    pub fn latency(&self, src: usize, dst: usize, k: usize) -> f64 {
+        let mut l = self.base;
+        if let Some(d) = &self.jitter {
+            let key = stream_seed(
+                self.seed,
+                LINK_TAG,
+                ((src as u64) << 32) | dst as u64,
+                k as u64,
+            );
+            l += d.sample(&mut Rng::new(key));
+        }
+        for &(a, b, f) in &self.slow_links {
+            if (src == a && dst == b) || (src == b && dst == a) {
+                l *= f;
+            }
+        }
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_model_is_zero() {
+        let m = LinkModel::zero();
+        assert_eq!(m.latency(0, 1, 5), 0.0);
+        assert_eq!(m.latency(3, 2, 0), 0.0);
+    }
+
+    #[test]
+    fn latency_is_pure_in_coordinates() {
+        let m = LinkModel::new(0.002, Some(Dist::ShiftedExp { base: 0.0, rate: 500.0 }), 7);
+        let a = m.latency(1, 2, 10);
+        assert_eq!(m.latency(1, 2, 10), a, "same tuple must resample identically");
+        assert_ne!(m.latency(2, 1, 10), a, "directions draw independent jitter");
+        assert_ne!(m.latency(1, 2, 11), a, "iterations draw independent jitter");
+        assert!(a >= 0.002);
+    }
+
+    #[test]
+    fn slow_link_applies_both_directions_only_there() {
+        let m = LinkModel::new(0.01, None, 0).with_slow_link(0, 1, 5.0);
+        assert_eq!(m.latency(0, 1, 3), 0.05);
+        assert_eq!(m.latency(1, 0, 3), 0.05);
+        assert_eq!(m.latency(1, 2, 3), 0.01);
+    }
+
+    #[test]
+    fn jitter_mean_roughly_matches_dist() {
+        let d = Dist::ShiftedExp { base: 0.001, rate: 200.0 };
+        let m = LinkModel::new(0.0, Some(d), 3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|k| m.latency(0, 1, k)).sum::<f64>() / n as f64;
+        assert!((mean - d.mean()).abs() < 0.001, "mean {mean} want {}", d.mean());
+    }
+}

@@ -9,6 +9,7 @@
 //! §Substitutions): a per-worker base distribution plus persistent and
 //! transient slowdown multipliers.
 
+pub mod link;
 pub mod trace;
 
 use crate::util::rng::Rng;
@@ -64,6 +65,36 @@ impl Dist {
                 }
             }
             Dist::LogNormal { mu, sigma } => (mu + 0.5 * sigma * sigma).exp(),
+        }
+    }
+
+    /// Are this distribution's parameters sane AND all samples
+    /// guaranteed >= 0? Time-like quantities (compute durations, link
+    /// latencies) must never go negative — a negative sample would
+    /// schedule simulator events into the past.
+    pub fn nonnegative(&self) -> bool {
+        match *self {
+            Dist::Deterministic { base } => base.is_finite() && base >= 0.0,
+            Dist::Uniform { lo, hi } => lo.is_finite() && hi.is_finite() && lo >= 0.0 && hi >= lo,
+            Dist::ShiftedExp { base, rate } => {
+                base.is_finite() && base >= 0.0 && rate.is_finite() && rate > 0.0
+            }
+            Dist::Pareto { xm, alpha } => {
+                xm.is_finite() && xm > 0.0 && alpha.is_finite() && alpha > 0.0
+            }
+            Dist::LogNormal { mu, sigma } => mu.is_finite() && sigma.is_finite(),
+        }
+    }
+
+    /// The spec string [`Self::parse`] accepts back — `parse(spec(d)) ==
+    /// Some(d)` (f64 Display is shortest-roundtrip, so no precision loss).
+    pub fn spec(&self) -> String {
+        match *self {
+            Dist::Deterministic { base } => format!("det:{base}"),
+            Dist::Uniform { lo, hi } => format!("uniform:{lo},{hi}"),
+            Dist::ShiftedExp { base, rate } => format!("sexp:{base},{rate}"),
+            Dist::Pareto { xm, alpha } => format!("pareto:{xm},{alpha}"),
+            Dist::LogNormal { mu, sigma } => format!("lognormal:{mu},{sigma}"),
         }
     }
 
@@ -204,6 +235,33 @@ mod tests {
         );
         assert_eq!(Dist::parse("bogus:1"), None);
         assert_eq!(Dist::parse("det:a"), None);
+    }
+
+    #[test]
+    fn nonnegative_flags_bad_time_dists() {
+        assert!(Dist::Deterministic { base: 0.0 }.nonnegative());
+        assert!(!Dist::Deterministic { base: -0.1 }.nonnegative());
+        assert!(!Dist::Uniform { lo: -0.05, hi: 0.2 }.nonnegative());
+        assert!(!Dist::Uniform { lo: 0.2, hi: 0.1 }.nonnegative());
+        assert!(!Dist::ShiftedExp { base: 0.1, rate: 0.0 }.nonnegative());
+        assert!(!Dist::Pareto { xm: 0.0, alpha: 2.0 }.nonnegative());
+        assert!(!Dist::Pareto { xm: f64::INFINITY, alpha: 2.0 }.nonnegative());
+        assert!(!Dist::ShiftedExp { base: 0.1, rate: f64::INFINITY }.nonnegative());
+        assert!(Dist::LogNormal { mu: -2.0, sigma: 0.5 }.nonnegative());
+        assert!(!Dist::LogNormal { mu: f64::NAN, sigma: 0.5 }.nonnegative());
+    }
+
+    #[test]
+    fn spec_inverts_parse_for_every_family() {
+        for d in [
+            Dist::Deterministic { base: 0.125 },
+            Dist::Uniform { lo: 0.05, hi: 0.2 },
+            Dist::ShiftedExp { base: 0.08, rate: 25.0 },
+            Dist::Pareto { xm: 0.1, alpha: 2.5 },
+            Dist::LogNormal { mu: -2.0, sigma: 0.5 },
+        ] {
+            assert_eq!(Dist::parse(&d.spec()), Some(d), "spec: {}", d.spec());
+        }
     }
 
     #[test]

@@ -37,7 +37,9 @@ impl Trace {
         self.times.is_empty()
     }
 
-    /// CSV: header `k,w0,w1,...`, one row per iteration.
+    /// CSV: header `k,w0,w1,...`, one row per iteration. Times are
+    /// written with f64 Display (shortest-roundtrip), so a save→load
+    /// cycle reproduces every time bit for bit.
     pub fn save_csv(&self, path: &Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -50,7 +52,7 @@ impl Trace {
         for (k, row) in self.times.iter().enumerate() {
             out.push_str(&k.to_string());
             for t in row {
-                out.push_str(&format!(",{t:.9}"));
+                out.push_str(&format!(",{t}"));
             }
             out.push('\n');
         }
@@ -58,13 +60,31 @@ impl Trace {
         Ok(())
     }
 
+    /// Load a trace, validating rather than panicking on malformed
+    /// input: the header must read `k,w0,w1,...` (each column named for
+    /// its index — a header/worker-count mismatch is an error), every
+    /// data row must have exactly one cell per column (no ragged rows),
+    /// and every time must parse as a finite positive number.
     pub fn load_csv(path: &Path) -> anyhow::Result<Trace> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("cannot read trace {}: {e}", path.display()))?;
         let mut lines = text.lines();
         let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty trace"))?;
-        let workers = header.split(',').count() - 1;
+        let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+        anyhow::ensure!(
+            cols.first() == Some(&"k"),
+            "trace header must start with 'k' (got '{header}')"
+        );
+        let workers = cols.len() - 1;
         anyhow::ensure!(workers > 0, "trace has no worker columns");
+        for (j, col) in cols[1..].iter().enumerate() {
+            anyhow::ensure!(
+                *col == format!("w{j}"),
+                "trace header column {} is '{col}', want 'w{j}' — \
+                 header does not match its own worker count",
+                j + 1
+            );
+        }
         let mut times = Vec::new();
         for (lineno, line) in lines.enumerate() {
             if line.trim().is_empty() {
@@ -73,7 +93,7 @@ impl Trace {
             let cells: Vec<&str> = line.split(',').collect();
             anyhow::ensure!(
                 cells.len() == workers + 1,
-                "trace line {}: {} cells, want {}",
+                "trace line {}: ragged row ({} cells, want {})",
                 lineno + 2,
                 cells.len(),
                 workers + 1
@@ -82,7 +102,7 @@ impl Trace {
                 .iter()
                 .map(|c| c.trim().parse::<f64>())
                 .collect::<Result<_, _>>()
-                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 2))?;
+                .map_err(|e| anyhow::anyhow!("trace line {}: non-numeric cell: {e}", lineno + 2))?;
             anyhow::ensure!(
                 row.iter().all(|&t| t.is_finite() && t > 0.0),
                 "trace line {}: non-positive time",
@@ -90,6 +110,7 @@ impl Trace {
             );
             times.push(row);
         }
+        anyhow::ensure!(!times.is_empty(), "trace has a header but no data rows");
         Ok(Trace { workers, times })
     }
 
@@ -146,7 +167,7 @@ mod tests {
     }
 
     #[test]
-    fn csv_roundtrip() {
+    fn csv_roundtrip_is_bit_exact() {
         let mut rng = Rng::new(1);
         let t = Trace::record(&model(3), 10, &mut rng);
         let dir = std::env::temp_dir().join("dybw_trace_test");
@@ -155,22 +176,49 @@ mod tests {
         let l = Trace::load_csv(&path).unwrap();
         assert_eq!(t.workers, l.workers);
         assert_eq!(t.len(), l.len());
+        // f64 Display is shortest-roundtrip: every time survives exactly
         for (a, b) in t.times.iter().flatten().zip(l.times.iter().flatten()) {
-            assert!((a - b).abs() < 1e-8);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and a second save of the loaded trace is byte-identical
+        let path2 = dir.join("t2.csv");
+        l.save_csv(&path2).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            std::fs::read(&path2).unwrap()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_rejects_garbage_with_errors_not_panics() {
+        let dir = std::env::temp_dir().join("dybw_trace_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        let cases: &[(&str, &str)] = &[
+            ("k,w0,w1\n0,0.5\n", "ragged"),                 // ragged (short) row
+            ("k,w0\n0,0.5,0.6\n", "ragged"),                // ragged (long) row
+            ("k,w0\n0,-1.0\n", "non-positive"),             // negative time
+            ("k,w0\n0,inf\n", "non-positive"),              // non-finite time
+            ("k,w0,w1\n0,0.5,abc\n", "non-numeric"),        // non-numeric cell
+            ("time,w0\n0,0.5\n", "start with 'k'"),         // bad leading column
+            ("k,w0,w5\n0,0.5,0.6\n", "worker count"),       // header/count mismatch
+            ("k,w1,w0\n0,0.5,0.6\n", "worker count"),       // shuffled header
+            ("k\n0\n", "no worker columns"),                // no workers
+            ("k,w0\n", "no data rows"),                     // header only
+        ];
+        for (text, want) in cases {
+            std::fs::write(&path, text).unwrap();
+            let err = Trace::load_csv(&path).unwrap_err().to_string();
+            assert!(err.contains(want), "input {text:?}: error {err:?} missing {want:?}");
         }
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
-    fn load_rejects_garbage() {
-        let dir = std::env::temp_dir().join("dybw_trace_bad");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.csv");
-        std::fs::write(&path, "k,w0,w1\n0,0.5\n").unwrap(); // short row
-        assert!(Trace::load_csv(&path).is_err());
-        std::fs::write(&path, "k,w0\n0,-1.0\n").unwrap(); // negative time
-        assert!(Trace::load_csv(&path).is_err());
-        let _ = std::fs::remove_dir_all(&dir);
+    fn load_missing_file_errors() {
+        let p = std::env::temp_dir().join("dybw_trace_definitely_missing.csv");
+        assert!(Trace::load_csv(&p).is_err());
     }
 
     #[test]
