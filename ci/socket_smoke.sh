@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Two-process socket smoke: one `dybw live --listen` leader plus two
+# `dybw worker` processes on loopback run a short seeded job and leave
+# the exported history under <out-dir>. The socket-smoke CI job runs
+# this twice and byte-compares the results against each other AND
+# against the same seed run in-process — the transport must never
+# change the recorded history.
+#
+# Only the history exports land in <out-dir>; the listen address and
+# process logs go to <out-dir>.scratch so `diff -r` between two runs
+# compares deterministic bytes only.
+set -euo pipefail
+
+out_dir="${1:?usage: socket_smoke.sh <out-dir>}"
+bin="${DYBW_BIN:-target/release/dybw}"
+scratch="${out_dir}.scratch"
+addr_file="$scratch/addr.txt"
+mkdir -p "$out_dir" "$scratch"
+rm -f "$addr_file"
+
+"$bin" live \
+  --workers 2 --topology complete --model lrm_d16_c10_b64 \
+  --train-n 2000 --test-n 512 --iters 8 --eval-every 4 --seed 2021 \
+  --time-scale 0.05 --watchdog 120 \
+  --listen 127.0.0.1:0 --addr-file "$addr_file" \
+  --out-dir "$out_dir" --prefix smoke > "$scratch/leader.log" 2>&1 &
+leader=$!
+
+# wait for the leader to bind and publish its ephemeral port
+for _ in $(seq 1 100); do
+  [ -s "$addr_file" ] && break
+  sleep 0.1
+done
+if [ ! -s "$addr_file" ]; then
+  echo "leader never published an address" >&2
+  cat "$scratch/leader.log" >&2
+  exit 1
+fi
+addr="$(cat "$addr_file")"
+
+"$bin" worker --connect "$addr" --retry-secs 30 > "$scratch/worker0.log" 2>&1 &
+w0=$!
+"$bin" worker --connect "$addr" --retry-secs 30 > "$scratch/worker1.log" 2>&1 &
+w1=$!
+
+fail=0
+wait "$leader" || fail=1
+wait "$w0" || fail=1
+wait "$w1" || fail=1
+if [ "$fail" -ne 0 ]; then
+  for log in leader worker0 worker1; do
+    echo "--- $log.log" >&2
+    cat "$scratch/$log.log" >&2
+  done
+  exit 1
+fi
+echo "socket smoke OK: $(ls "$out_dir" | tr '\n' ' ')"

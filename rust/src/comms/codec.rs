@@ -1,0 +1,716 @@
+//! Framed binary wire codec for the live-driver protocol.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! | offset | size | field                         |
+//! |--------|------|-------------------------------|
+//! | 0      | 4    | magic `"DYBW"`                |
+//! | 4      | 1    | version (currently 1)         |
+//! | 5      | 1    | message type                  |
+//! | 6      | 4    | payload length `L` (u32)      |
+//! | 10     | L    | payload                       |
+//! | 10+L   | 4    | FNV-1a-32 checksum of payload |
+//!
+//! Decoding is hardened: every failure mode — short buffer, bad magic or
+//! version, oversized length prefix, corrupted checksum, malformed or
+//! trailing payload bytes — is a typed [`CodecError`]. No decode path
+//! indexes unchecked or panics; the adversarial tests flip every byte of
+//! valid frames and truncate at every prefix to hold that line.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Frame magic: first bytes of every message on the wire.
+pub const MAGIC: [u8; 4] = *b"DYBW";
+
+/// Wire-format version byte.
+pub const VERSION: u8 = 1;
+
+/// Hard cap on a frame's payload (256 MiB) — rejects absurd length
+/// prefixes before any allocation happens.
+pub const MAX_PAYLOAD: u32 = 1 << 28;
+
+/// Frame overhead: header (magic + version + type + length) + checksum.
+pub const HEADER_LEN: usize = 10;
+const TRAILER_LEN: usize = 4;
+
+/// `Hello.worker` value meaning "assign me any free slot".
+pub const ANY_WORKER: u32 = u32::MAX;
+
+/// Every message the coordinator and workers exchange.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker -> coordinator: first message on a fresh connection.
+    /// `worker` is a requested slot, or [`ANY_WORKER`].
+    Hello { worker: u32 },
+    /// Coordinator -> worker handshake answer: the assigned slot and the
+    /// experiment setup JSON the worker rebuilds its shard from.
+    Init { worker: u32, setup: String },
+    /// Start iteration `k`; sleep the straggler delay out (real seconds).
+    Start { k: u64, delay_s: f64 },
+    /// Abort iteration `k`'s wait (the paper's termination command).
+    Terminate { k: u64 },
+    /// Mix phase: this worker's Metropolis row and, in row order, the
+    /// peers' post-update parameter vectors.
+    Mix {
+        k: u64,
+        active: bool,
+        row: Vec<(u32, f64)>,
+        peers: Vec<Vec<f32>>,
+    },
+    /// Worker -> coordinator: local update done (w̃_j(k) attached).
+    Done {
+        k: u64,
+        loss: f32,
+        terminated: bool,
+        failed: bool,
+        wtilde: Vec<f32>,
+    },
+    /// Worker -> coordinator: mix applied; post-mix w_j(k) attached.
+    MixAck { k: u64, w: Vec<f32> },
+    /// Latency probe (link measurement).
+    Ping { nonce: u64 },
+    /// Probe answer.
+    Pong { nonce: u64 },
+    /// Shut the worker down cleanly.
+    Stop,
+}
+
+impl Msg {
+    /// Wire type byte.
+    fn type_byte(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::Init { .. } => 2,
+            Msg::Start { .. } => 3,
+            Msg::Terminate { .. } => 4,
+            Msg::Mix { .. } => 5,
+            Msg::Done { .. } => 6,
+            Msg::MixAck { .. } => 7,
+            Msg::Ping { .. } => 8,
+            Msg::Pong { .. } => 9,
+            Msg::Stop => 10,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::Init { .. } => "Init",
+            Msg::Start { .. } => "Start",
+            Msg::Terminate { .. } => "Terminate",
+            Msg::Mix { .. } => "Mix",
+            Msg::Done { .. } => "Done",
+            Msg::MixAck { .. } => "MixAck",
+            Msg::Ping { .. } => "Ping",
+            Msg::Pong { .. } => "Pong",
+            Msg::Stop => "Stop",
+        }
+    }
+}
+
+/// Typed decode/IO failure. Decoding never panics: malformed bytes from
+/// the network always surface as one of these.
+#[derive(Debug)]
+pub enum CodecError {
+    BadMagic { got: [u8; 4] },
+    BadVersion { got: u8 },
+    BadMsgType { got: u8 },
+    Oversized { len: u32, max: u32 },
+    Truncated { need: usize, have: usize },
+    BadChecksum { want: u32, got: u32 },
+    BadPayload(&'static str),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::BadMagic { got } => write!(f, "bad frame magic {got:?}"),
+            CodecError::BadVersion { got } => {
+                write!(f, "unsupported wire version {got} (want {VERSION})")
+            }
+            CodecError::BadMsgType { got } => write!(f, "unknown message type {got}"),
+            CodecError::Oversized { len, max } => {
+                write!(f, "payload length {len} exceeds maximum {max}")
+            }
+            CodecError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            CodecError::BadChecksum { want, got } => {
+                write!(f, "payload checksum mismatch: want {want:#010x}, got {got:#010x}")
+            }
+            CodecError::BadPayload(what) => write!(f, "malformed payload: {what}"),
+            CodecError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// FNV-1a 32-bit hash — the frame's payload checksum.
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// ------------------------------------------------------------- encoding
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_vec_f32(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_f32(out, x);
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn encode_payload(msg: &Msg) -> Vec<u8> {
+    let mut p = Vec::new();
+    match msg {
+        Msg::Hello { worker } => put_u32(&mut p, *worker),
+        Msg::Init { worker, setup } => {
+            put_u32(&mut p, *worker);
+            put_str(&mut p, setup);
+        }
+        Msg::Start { k, delay_s } => {
+            put_u64(&mut p, *k);
+            put_f64(&mut p, *delay_s);
+        }
+        Msg::Terminate { k } => put_u64(&mut p, *k),
+        Msg::Mix { k, active, row, peers } => {
+            put_u64(&mut p, *k);
+            p.push(*active as u8);
+            put_u32(&mut p, row.len() as u32);
+            for &(i, wt) in row {
+                put_u32(&mut p, i);
+                put_f64(&mut p, wt);
+            }
+            // one vector per row entry, in row order — the count is the
+            // row length by construction, so decode can't desynchronise
+            for peer in peers {
+                put_vec_f32(&mut p, peer);
+            }
+        }
+        Msg::Done { k, loss, terminated, failed, wtilde } => {
+            put_u64(&mut p, *k);
+            put_f32(&mut p, *loss);
+            p.push(*terminated as u8);
+            p.push(*failed as u8);
+            put_vec_f32(&mut p, wtilde);
+        }
+        Msg::MixAck { k, w } => {
+            put_u64(&mut p, *k);
+            put_vec_f32(&mut p, w);
+        }
+        Msg::Ping { nonce } | Msg::Pong { nonce } => put_u64(&mut p, *nonce),
+        Msg::Stop => {}
+    }
+    p
+}
+
+/// Encode one message as a complete frame.
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(msg.type_byte());
+    put_u32(&mut out, payload.len() as u32);
+    let sum = fnv1a(&payload);
+    out.extend_from_slice(&payload);
+    put_u32(&mut out, sum);
+    out
+}
+
+// ------------------------------------------------------------- decoding
+
+/// Bounds-checked cursor over a payload slice.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or(CodecError::BadPayload("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(CodecError::Truncated { need: end, have: self.buf.len() });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool, CodecError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(CodecError::BadPayload("bool byte not 0/1")),
+        }
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>, CodecError> {
+        let len = self.u32()? as usize;
+        // sanity before allocating: the elements must actually be here
+        let need = len
+            .checked_mul(4)
+            .ok_or(CodecError::BadPayload("vector length overflow"))?;
+        if need > self.remaining() {
+            return Err(CodecError::Truncated {
+                need: self.pos.saturating_add(need),
+                have: self.buf.len(),
+            });
+        }
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, CodecError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CodecError::BadPayload("non-UTF-8 string"))
+    }
+}
+
+fn decode_payload(msg_type: u8, payload: &[u8]) -> Result<Msg, CodecError> {
+    let mut r = Reader::new(payload);
+    let msg = match msg_type {
+        1 => Msg::Hello { worker: r.u32()? },
+        2 => Msg::Init { worker: r.u32()?, setup: r.string()? },
+        3 => Msg::Start { k: r.u64()?, delay_s: r.f64()? },
+        4 => Msg::Terminate { k: r.u64()? },
+        5 => {
+            let k = r.u64()?;
+            let active = r.bool()?;
+            let row_len = r.u32()? as usize;
+            // each row entry is >= 12 payload bytes; reject impossible
+            // counts before reserving anything
+            if row_len.saturating_mul(12) > r.remaining() {
+                return Err(CodecError::Truncated {
+                    need: r.pos.saturating_add(row_len.saturating_mul(12)),
+                    have: payload.len(),
+                });
+            }
+            let mut row = Vec::with_capacity(row_len);
+            for _ in 0..row_len {
+                row.push((r.u32()?, r.f64()?));
+            }
+            let mut peers = Vec::with_capacity(row_len);
+            for _ in 0..row_len {
+                peers.push(r.vec_f32()?);
+            }
+            Msg::Mix { k, active, row, peers }
+        }
+        6 => Msg::Done {
+            k: r.u64()?,
+            loss: r.f32()?,
+            terminated: r.bool()?,
+            failed: r.bool()?,
+            wtilde: r.vec_f32()?,
+        },
+        7 => Msg::MixAck { k: r.u64()?, w: r.vec_f32()? },
+        8 => Msg::Ping { nonce: r.u64()? },
+        9 => Msg::Pong { nonce: r.u64()? },
+        10 => Msg::Stop,
+        other => return Err(CodecError::BadMsgType { got: other }),
+    };
+    if r.remaining() != 0 {
+        return Err(CodecError::BadPayload("trailing bytes after message"));
+    }
+    Ok(msg)
+}
+
+/// Parse and validate a frame header. Returns `(msg_type, payload_len)`.
+fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, u32), CodecError> {
+    if h[0..4] != MAGIC {
+        return Err(CodecError::BadMagic { got: [h[0], h[1], h[2], h[3]] });
+    }
+    if h[4] != VERSION {
+        return Err(CodecError::BadVersion { got: h[4] });
+    }
+    let len = u32::from_le_bytes([h[6], h[7], h[8], h[9]]);
+    if len > MAX_PAYLOAD {
+        return Err(CodecError::Oversized { len, max: MAX_PAYLOAD });
+    }
+    Ok((h[5], len))
+}
+
+/// Decode one frame from the front of `buf`. Returns the message and the
+/// number of bytes consumed.
+pub fn decode(buf: &[u8]) -> Result<(Msg, usize), CodecError> {
+    if buf.len() < HEADER_LEN {
+        return Err(CodecError::Truncated { need: HEADER_LEN, have: buf.len() });
+    }
+    let mut h = [0u8; HEADER_LEN];
+    h.copy_from_slice(&buf[..HEADER_LEN]);
+    let (msg_type, len) = parse_header(&h)?;
+    let total = HEADER_LEN + len as usize + TRAILER_LEN;
+    if buf.len() < total {
+        return Err(CodecError::Truncated { need: total, have: buf.len() });
+    }
+    let payload = &buf[HEADER_LEN..HEADER_LEN + len as usize];
+    let stored = u32::from_le_bytes([
+        buf[total - 4],
+        buf[total - 3],
+        buf[total - 2],
+        buf[total - 1],
+    ]);
+    let computed = fnv1a(payload);
+    if stored != computed {
+        return Err(CodecError::BadChecksum { want: computed, got: stored });
+    }
+    Ok((decode_payload(msg_type, payload)?, total))
+}
+
+/// Write one message as a frame.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> Result<(), CodecError> {
+    w.write_all(&encode(msg)).map_err(CodecError::Io)
+}
+
+/// Read one frame, returning `Ok(None)` on a clean EOF at a frame
+/// boundary (the peer closed the connection between messages).
+pub fn read_frame_opt<R: Read>(r: &mut R) -> Result<Option<Msg>, CodecError> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut filled = 0usize;
+    while filled < HEADER_LEN {
+        match r.read(&mut header[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                return Err(CodecError::Truncated { need: HEADER_LEN, have: filled });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(CodecError::Io(e)),
+        }
+    }
+    let (msg_type, len) = parse_header(&header)?;
+    let mut rest = vec![0u8; len as usize + TRAILER_LEN];
+    r.read_exact(&mut rest).map_err(CodecError::Io)?;
+    let payload = &rest[..len as usize];
+    let stored = u32::from_le_bytes([
+        rest[rest.len() - 4],
+        rest[rest.len() - 3],
+        rest[rest.len() - 2],
+        rest[rest.len() - 1],
+    ]);
+    let computed = fnv1a(payload);
+    if stored != computed {
+        return Err(CodecError::BadChecksum { want: computed, got: stored });
+    }
+    Ok(Some(decode_payload(msg_type, payload)?))
+}
+
+/// Read one frame; EOF before a complete frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Msg, CodecError> {
+    match read_frame_opt(r)? {
+        Some(msg) => Ok(msg),
+        None => Err(CodecError::Truncated { need: HEADER_LEN, have: 0 }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_messages() -> Vec<Msg> {
+        vec![
+            Msg::Hello { worker: 3 },
+            Msg::Hello { worker: ANY_WORKER },
+            Msg::Init { worker: 0, setup: r#"{"workers": 4, "seed": 7}"#.into() },
+            Msg::Init { worker: 1, setup: String::new() },
+            Msg::Start { k: 12, delay_s: 0.125 },
+            Msg::Terminate { k: 12 },
+            Msg::Mix {
+                k: 3,
+                active: true,
+                row: vec![(0, 0.5), (2, 0.25), (3, 0.25)],
+                peers: vec![vec![1.0, -2.5], vec![0.0, 3.25], vec![-0.125, 4.0]],
+            },
+            Msg::Mix { k: 4, active: false, row: Vec::new(), peers: Vec::new() },
+            Msg::Done {
+                k: 9,
+                loss: 0.75,
+                terminated: true,
+                failed: false,
+                wtilde: vec![0.5, -0.5, 1.5],
+            },
+            Msg::Done { k: 1, loss: 2.0, terminated: false, failed: true, wtilde: Vec::new() },
+            Msg::MixAck { k: 9, w: vec![1.0; 17] },
+            Msg::Ping { nonce: u64::MAX },
+            Msg::Pong { nonce: 0 },
+            Msg::Stop,
+        ]
+    }
+
+    #[test]
+    fn round_trip_all_message_types() {
+        for msg in sample_messages() {
+            let frame = encode(&msg);
+            let (back, used) = decode(&frame).unwrap();
+            assert_eq!(used, frame.len(), "{}", msg.name());
+            assert_eq!(back, msg, "{}", msg.name());
+        }
+    }
+
+    #[test]
+    fn round_trip_preserves_float_bits_including_nan() {
+        let msg = Msg::Done {
+            k: 2,
+            loss: f32::NAN,
+            terminated: false,
+            failed: true,
+            wtilde: vec![f32::INFINITY, -0.0, f32::from_bits(0x7fc0_1234)],
+        };
+        let (back, _) = decode(&encode(&msg)).unwrap();
+        let Msg::Done { loss, wtilde, .. } = back else {
+            panic!("wrong variant");
+        };
+        assert_eq!(loss.to_bits(), f32::NAN.to_bits());
+        assert_eq!(wtilde[0].to_bits(), f32::INFINITY.to_bits());
+        assert_eq!(wtilde[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(wtilde[2].to_bits(), 0x7fc0_1234);
+    }
+
+    /// Property-style sweep: randomly sized vector payloads round-trip.
+    #[test]
+    fn round_trip_random_payloads() {
+        let mut rng = Rng::new(0xC0DEC);
+        for trial in 0..200 {
+            let dim = rng.below(64);
+            let deg = rng.below(6);
+            let msg = match trial % 4 {
+                0 => Msg::Done {
+                    k: rng.below(1 << 20) as u64,
+                    loss: rng.uniform() as f32,
+                    terminated: rng.uniform() < 0.5,
+                    failed: false,
+                    wtilde: (0..dim).map(|_| rng.uniform() as f32 - 0.5).collect(),
+                },
+                1 => Msg::MixAck {
+                    k: rng.below(1 << 20) as u64,
+                    w: (0..dim).map(|_| rng.uniform() as f32 * 8.0).collect(),
+                },
+                2 => Msg::Mix {
+                    k: rng.below(1 << 20) as u64,
+                    active: true,
+                    row: (0..deg).map(|i| (i as u32, rng.uniform())).collect(),
+                    peers: (0..deg)
+                        .map(|_| (0..dim).map(|_| rng.uniform() as f32).collect())
+                        .collect(),
+                },
+                _ => Msg::Init {
+                    worker: rng.below(1 << 16) as u32,
+                    setup: "x".repeat(rng.below(300)),
+                },
+            };
+            let (back, _) = decode(&encode(&msg)).unwrap();
+            assert_eq!(back, msg, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_prefix_is_typed_never_a_panic() {
+        for msg in sample_messages() {
+            let frame = encode(&msg);
+            for cut in 0..frame.len() {
+                match decode(&frame[..cut]) {
+                    Err(_) => {}
+                    Ok((m, used)) => {
+                        panic!("decoded {} from a {cut}-byte prefix (used {used})", m.name())
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut frame = encode(&Msg::Stop);
+        frame[0] = b'X';
+        assert!(matches!(decode(&frame), Err(CodecError::BadMagic { .. })));
+    }
+
+    #[test]
+    fn bad_version_is_typed() {
+        let mut frame = encode(&Msg::Stop);
+        frame[4] = 99;
+        assert!(matches!(decode(&frame), Err(CodecError::BadVersion { got: 99 })));
+    }
+
+    #[test]
+    fn bad_msg_type_is_typed() {
+        let mut frame = encode(&Msg::Stop);
+        frame[5] = 200;
+        assert!(matches!(decode(&frame), Err(CodecError::BadMsgType { got: 200 })));
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_without_allocating() {
+        let mut frame = encode(&Msg::Stop);
+        frame[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode(&frame), Err(CodecError::Oversized { .. })));
+    }
+
+    #[test]
+    fn corrupted_payload_fails_the_checksum() {
+        let msg = Msg::MixAck { k: 5, w: vec![1.0, 2.0, 3.0] };
+        let mut frame = encode(&msg);
+        frame[HEADER_LEN + 9] ^= 0x40; // flip one payload bit
+        assert!(matches!(decode(&frame), Err(CodecError::BadChecksum { .. })));
+    }
+
+    #[test]
+    fn inner_vector_length_cannot_overrun() {
+        // hand-build a MixAck whose inner vector claims more floats than
+        // the payload holds; re-checksum so only the length lies
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1);
+        put_u32(&mut payload, 1000); // claims 1000 f32s, provides 1
+        put_f32(&mut payload, 1.0);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC);
+        frame.push(VERSION);
+        frame.push(7);
+        put_u32(&mut frame, payload.len() as u32);
+        let sum = fnv1a(&payload);
+        frame.extend_from_slice(&payload);
+        put_u32(&mut frame, sum);
+        assert!(matches!(decode(&frame), Err(CodecError::Truncated { .. })));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 7); // Terminate payload ...
+        payload.push(0); // ... plus one stray byte
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC);
+        frame.push(VERSION);
+        frame.push(4);
+        put_u32(&mut frame, payload.len() as u32);
+        let sum = fnv1a(&payload);
+        frame.extend_from_slice(&payload);
+        put_u32(&mut frame, sum);
+        assert!(matches!(decode(&frame), Err(CodecError::BadPayload(_))));
+    }
+
+    /// Flip every single byte of every sample frame: decode must return
+    /// (any) typed result — never panic, never loop.
+    #[test]
+    fn every_single_byte_flip_never_panics() {
+        for msg in sample_messages() {
+            let frame = encode(&msg);
+            for i in 0..frame.len() {
+                let mut bad = frame.clone();
+                bad[i] ^= 0xFF;
+                let _ = decode(&bad);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_read_write_round_trip() {
+        let msgs = sample_messages();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_frame(&mut wire, m).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(wire);
+        for m in &msgs {
+            assert_eq!(&read_frame(&mut cursor).unwrap(), m);
+        }
+        // clean EOF at the frame boundary
+        assert!(read_frame_opt(&mut cursor).unwrap().is_none());
+        // but a hard read reports it as truncation
+        assert!(matches!(
+            read_frame(&mut cursor),
+            Err(CodecError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn stream_mid_frame_eof_is_an_error() {
+        let frame = encode(&Msg::Ping { nonce: 3 });
+        let mut cursor = std::io::Cursor::new(frame[..frame.len() - 2].to_vec());
+        assert!(read_frame_opt(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn decode_reports_bytes_consumed_for_concatenated_frames() {
+        let a = encode(&Msg::Ping { nonce: 1 });
+        let b = encode(&Msg::Stop);
+        let mut wire = a.clone();
+        wire.extend_from_slice(&b);
+        let (m1, used1) = decode(&wire).unwrap();
+        assert_eq!(m1, Msg::Ping { nonce: 1 });
+        assert_eq!(used1, a.len());
+        let (m2, used2) = decode(&wire[used1..]).unwrap();
+        assert_eq!(m2, Msg::Stop);
+        assert_eq!(used2, b.len());
+    }
+}

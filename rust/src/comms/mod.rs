@@ -1,0 +1,27 @@
+//! Wire layer for real multi-process deployment.
+//!
+//! The live driver historically ran every worker as a thread in one
+//! process over `mpsc` channels. This module is what lets those workers
+//! become real OS processes talking over TCP without changing a single
+//! training semantic:
+//!
+//! - [`codec`] — a length-prefixed, checksummed binary framing for the
+//!   protocol messages (parameter and gradient vectors included). Every
+//!   malformed input is a typed [`CodecError`]; no decode path panics.
+//! - [`transport`] — the [`transport::Transport`] trait the coordinator
+//!   drives, with two implementations: the in-process
+//!   [`transport::ChannelTransport`] (the degenerate transport — plain
+//!   channels, zero serialisation) and the [`transport::TcpTransport`]
+//!   (persistent per-worker connections, one reader thread per peer).
+//!
+//! The equivalence guarantee: recorded training history is computed from
+//! virtual times on the coordinator (see `coordinator::live`), so a
+//! seeded run produces **bit-identical** history over either transport —
+//! asserted by `live_tcp_bit_identical_to_in_process` and the
+//! `socket-smoke` CI job.
+
+pub mod codec;
+pub mod transport;
+
+pub use codec::{CodecError, Msg};
+pub use transport::{Transport, TransportError};

@@ -1,0 +1,583 @@
+//! Coordinator/worker transports: in-process channels and real TCP.
+//!
+//! The coordinator drives workers through the [`Transport`] trait — send
+//! a [`Msg`] to worker `j`, receive `(j, Msg)` events from any worker —
+//! and each worker holds the matching [`WorkerPort`]. Two
+//! implementations:
+//!
+//! - [`ChannelTransport`] — the degenerate transport: plain `mpsc`
+//!   channels between threads of one process. No serialisation, no
+//!   sockets; what the in-process live driver and the unit tests run on.
+//! - [`TcpTransport`] — persistent per-worker TCP connections (localhost
+//!   or otherwise). One reader thread per peer decodes frames off the
+//!   socket and feeds the same event channel, so the coordinator's
+//!   receive path is identical on both transports — a single
+//!   `recv_timeout` park, no polling.
+//!
+//! Handshake: a connecting worker sends [`Msg::Hello`] (a requested slot
+//! id, or [`ANY_WORKER`] to be assigned one), the coordinator answers
+//! [`Msg::Init`] with the assigned id and the experiment setup JSON.
+//! Every failure is a typed [`TransportError`].
+
+use std::collections::VecDeque;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::codec::{read_frame, read_frame_opt, write_frame, CodecError, Msg};
+
+pub use super::codec::ANY_WORKER;
+
+/// Typed transport failure.
+#[derive(Debug)]
+pub enum TransportError {
+    /// Worker `worker`'s connection/channel is gone (send side).
+    Closed { worker: usize },
+    /// The event stream is gone: every peer hung up.
+    Disconnected,
+    /// No event arrived within the timeout.
+    Timeout { secs: f64 },
+    /// Worker `worker` sent bytes the codec rejected.
+    Codec { worker: usize, err: CodecError },
+    /// Connection setup / Hello-Init exchange failed.
+    Handshake(String),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Closed { worker } => write!(f, "worker {worker} connection closed"),
+            TransportError::Disconnected => write!(f, "all peers disconnected"),
+            TransportError::Timeout { secs } => write!(f, "no message within {secs:.1}s"),
+            TransportError::Codec { worker, err } => {
+                write!(f, "bad frame from worker {worker}: {err}")
+            }
+            TransportError::Handshake(what) => write!(f, "handshake failed: {what}"),
+            TransportError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// One received event: `(worker id, decoded message or codec failure)`.
+type Event = (usize, Result<Msg, CodecError>);
+
+/// Coordinator-side message fabric.
+pub trait Transport {
+    /// Number of worker endpoints.
+    fn workers(&self) -> usize;
+    /// Send `msg` to worker `to`.
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError>;
+    /// Block for the next event from any worker (up to `timeout`).
+    fn recv(&mut self, timeout: Duration) -> Result<(usize, Msg), TransportError>;
+}
+
+fn map_event(ev: Event) -> Result<(usize, Msg), TransportError> {
+    match ev {
+        (j, Ok(msg)) => Ok((j, msg)),
+        (j, Err(err)) => Err(TransportError::Codec { worker: j, err }),
+    }
+}
+
+fn map_recv_timeout(
+    r: Result<Event, RecvTimeoutError>,
+    timeout: Duration,
+) -> Result<(usize, Msg), TransportError> {
+    match r {
+        Ok(ev) => map_event(ev),
+        Err(RecvTimeoutError::Timeout) => {
+            Err(TransportError::Timeout { secs: timeout.as_secs_f64() })
+        }
+        Err(RecvTimeoutError::Disconnected) => Err(TransportError::Disconnected),
+    }
+}
+
+// --------------------------------------------------------- worker side
+
+enum PortTx {
+    /// In-process: push straight into the coordinator's event channel.
+    Chan { tx: Sender<Event>, id: usize },
+    /// TCP: encode onto the socket.
+    Tcp(TcpStream),
+}
+
+/// A worker's endpoint: receive coordinator commands, send answers.
+pub struct WorkerPort {
+    id: usize,
+    rx: Receiver<Event>,
+    tx: PortTx,
+    pending: VecDeque<Msg>,
+}
+
+impl WorkerPort {
+    /// The worker slot this port belongs to.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Re-queue a message so the next `recv` returns it first (used by
+    /// the worker's interruptible straggler wait when a non-Terminate
+    /// command arrives mid-sleep).
+    pub fn push_back(&mut self, msg: Msg) {
+        self.pending.push_back(msg);
+    }
+
+    /// Blocking receive.
+    pub fn recv(&mut self) -> Result<Msg, TransportError> {
+        if let Some(m) = self.pending.pop_front() {
+            return Ok(m);
+        }
+        match self.rx.recv() {
+            Ok(ev) => map_event(ev).map(|(_, m)| m),
+            Err(_) => Err(TransportError::Disconnected),
+        }
+    }
+
+    /// Receive with a timeout; `Ok(None)` means the timeout elapsed.
+    /// This park (not a poll) is what the worker's straggler sleep and
+    /// the old busy-wait loops were replaced with.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Msg>, TransportError> {
+        if let Some(m) = self.pending.pop_front() {
+            return Ok(Some(m));
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => map_event(ev).map(|(_, m)| Some(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(TransportError::Disconnected),
+        }
+    }
+
+    /// Send a message to the coordinator.
+    pub fn send(&mut self, msg: Msg) -> Result<(), TransportError> {
+        let id = self.id;
+        match &mut self.tx {
+            PortTx::Chan { tx, id: from } => tx
+                .send((*from, Ok(msg)))
+                .map_err(|_| TransportError::Disconnected),
+            PortTx::Tcp(stream) => write_frame(stream, &msg).map_err(|e| match e {
+                CodecError::Io(io) => TransportError::Io(io),
+                other => TransportError::Codec { worker: id, err: other },
+            }),
+        }
+    }
+}
+
+impl Drop for WorkerPort {
+    fn drop(&mut self) {
+        // Shutdown (not just drop) so the reader thread's blocked read —
+        // which holds its own clone of the socket — unblocks too.
+        if let PortTx::Tcp(stream) = &self.tx {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+// ------------------------------------------------------ channel fabric
+
+/// The degenerate transport: `mpsc` channels inside one process.
+pub struct ChannelTransport {
+    txs: Vec<Sender<Event>>,
+    rx: Receiver<Event>,
+}
+
+impl ChannelTransport {
+    /// Build a coordinator handle plus `n` worker ports.
+    pub fn pair(n: usize) -> (ChannelTransport, Vec<WorkerPort>) {
+        let (evt_tx, evt_rx) = channel::<Event>();
+        let mut txs = Vec::with_capacity(n);
+        let mut ports = Vec::with_capacity(n);
+        for j in 0..n {
+            let (tx, rx) = channel::<Event>();
+            txs.push(tx);
+            ports.push(WorkerPort {
+                id: j,
+                rx,
+                tx: PortTx::Chan { tx: evt_tx.clone(), id: j },
+                pending: VecDeque::new(),
+            });
+        }
+        // evt_tx is NOT retained here: once every port is gone the
+        // coordinator's recv reports Disconnected instead of hanging.
+        (ChannelTransport { txs, rx: evt_rx }, ports)
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        match self.txs.get(to) {
+            Some(tx) => tx
+                .send((to, Ok(msg)))
+                .map_err(|_| TransportError::Closed { worker: to }),
+            None => Err(TransportError::Closed { worker: to }),
+        }
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<(usize, Msg), TransportError> {
+        map_recv_timeout(self.rx.recv_timeout(timeout), timeout)
+    }
+}
+
+// ---------------------------------------------------------- tcp fabric
+
+/// Decode frames off one peer's socket into the shared event channel.
+fn reader_loop(id: usize, mut stream: TcpStream, tx: Sender<Event>) {
+    loop {
+        match read_frame_opt(&mut stream) {
+            Ok(Some(msg)) => {
+                if tx.send((id, Ok(msg))).is_err() {
+                    return; // coordinator gone
+                }
+            }
+            Ok(None) => return, // peer closed cleanly
+            Err(err) => {
+                let _ = tx.send((id, Err(err)));
+                return;
+            }
+        }
+    }
+}
+
+/// Real-socket transport: one persistent connection per worker.
+pub struct TcpTransport {
+    streams: Vec<TcpStream>,
+    rx: Receiver<Event>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// Accept exactly `n` workers on `listener`, performing the
+    /// Hello/Init handshake with each (`setup` is the experiment JSON
+    /// handed to every worker). Slot ids: a worker may claim a specific
+    /// id in its Hello (duplicates and out-of-range ids are handshake
+    /// errors), or send [`ANY_WORKER`] to get the lowest free slot.
+    pub fn accept(
+        listener: &TcpListener,
+        n: usize,
+        setup: &str,
+        handshake_timeout: Duration,
+    ) -> Result<TcpTransport, TransportError> {
+        let (tx, rx) = channel::<Event>();
+        let mut slots: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        let mut accepted = 0usize;
+        while accepted < n {
+            let (mut stream, _peer) = listener.accept().map_err(TransportError::Io)?;
+            stream.set_nodelay(true).map_err(TransportError::Io)?;
+            stream
+                .set_read_timeout(Some(handshake_timeout))
+                .map_err(TransportError::Io)?;
+            let hello = read_frame(&mut stream)
+                .map_err(|err| TransportError::Codec { worker: accepted, err })?;
+            let Msg::Hello { worker } = hello else {
+                return Err(TransportError::Handshake(format!(
+                    "expected Hello, got {}",
+                    hello.name()
+                )));
+            };
+            let id = if worker == ANY_WORKER {
+                slots
+                    .iter()
+                    .position(|s| s.is_none())
+                    .ok_or_else(|| TransportError::Handshake("no free worker slot".into()))?
+            } else {
+                let id = worker as usize;
+                if id >= n {
+                    return Err(TransportError::Handshake(format!(
+                        "worker id {id} out of range (n = {n})"
+                    )));
+                }
+                if slots[id].is_some() {
+                    return Err(TransportError::Handshake(format!(
+                        "worker id {id} claimed twice"
+                    )));
+                }
+                id
+            };
+            write_frame(
+                &mut stream,
+                &Msg::Init { worker: id as u32, setup: setup.to_string() },
+            )
+            .map_err(|err| match err {
+                CodecError::Io(io) => TransportError::Io(io),
+                other => TransportError::Codec { worker: id, err: other },
+            })?;
+            stream.set_read_timeout(None).map_err(TransportError::Io)?;
+            slots[id] = Some(stream);
+            accepted += 1;
+        }
+        let streams: Vec<TcpStream> = slots.into_iter().flatten().collect();
+        let mut readers = Vec::with_capacity(n);
+        for (id, s) in streams.iter().enumerate() {
+            let clone = s.try_clone().map_err(TransportError::Io)?;
+            let tx = tx.clone();
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("dybw-net-{id}"))
+                    .spawn(move || reader_loop(id, clone, tx))
+                    .map_err(TransportError::Io)?,
+            );
+        }
+        Ok(TcpTransport { streams, rx, readers })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn workers(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        match self.streams.get_mut(to) {
+            Some(stream) => write_frame(stream, &msg).map_err(|e| match e {
+                CodecError::Io(_) => TransportError::Closed { worker: to },
+                other => TransportError::Codec { worker: to, err: other },
+            }),
+            None => Err(TransportError::Closed { worker: to }),
+        }
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<(usize, Msg), TransportError> {
+        map_recv_timeout(self.rx.recv_timeout(timeout), timeout)
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // Shutdown unblocks each reader thread's in-flight read (the
+        // readers own clones of these sockets), then join them so no
+        // thread outlives the transport.
+        for s in &self.streams {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Connect with retry/backoff until `timeout` elapses (the coordinator
+/// may come up after its workers in a launch script).
+pub fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream, TransportError> {
+    let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(50);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(TransportError::Handshake(format!(
+                        "cannot connect to {addr} within {:.1}s: {e}",
+                        timeout.as_secs_f64()
+                    )));
+                }
+                std::thread::sleep(backoff.min(deadline - now));
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+/// Worker-process entry: connect to the coordinator, run the Hello/Init
+/// handshake (claiming slot `requested` if given), and return
+/// `(assigned id, setup JSON, port)` with the reader thread running.
+pub fn connect_worker(
+    addr: &str,
+    requested: Option<u32>,
+    timeout: Duration,
+) -> Result<(u32, String, WorkerPort), TransportError> {
+    let mut stream = connect_retry(addr, timeout)?;
+    stream.set_nodelay(true).map_err(TransportError::Io)?;
+    write_frame(&mut stream, &Msg::Hello { worker: requested.unwrap_or(ANY_WORKER) }).map_err(
+        |e| match e {
+            CodecError::Io(io) => TransportError::Io(io),
+            other => TransportError::Codec { worker: 0, err: other },
+        },
+    )?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(TransportError::Io)?;
+    let init = read_frame(&mut stream).map_err(|err| {
+        TransportError::Handshake(format!("no Init from coordinator at {addr}: {err}"))
+    })?;
+    let Msg::Init { worker, setup } = init else {
+        return Err(TransportError::Handshake(format!(
+            "expected Init, got {}",
+            init.name()
+        )));
+    };
+    stream.set_read_timeout(None).map_err(TransportError::Io)?;
+    let id = worker as usize;
+    let (evt_tx, rx) = channel::<Event>();
+    let clone = stream.try_clone().map_err(TransportError::Io)?;
+    std::thread::Builder::new()
+        .name(format!("dybw-net-{id}"))
+        .spawn(move || reader_loop(id, clone, evt_tx))
+        .map_err(TransportError::Io)?;
+    let port = WorkerPort {
+        id,
+        rx,
+        tx: PortTx::Tcp(stream),
+        pending: VecDeque::new(),
+    };
+    Ok((worker, setup, port))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_pair_round_trips_both_directions() {
+        let (mut t, mut ports) = ChannelTransport::pair(2);
+        assert_eq!(t.workers(), 2);
+        t.send(0, Msg::Ping { nonce: 10 }).unwrap();
+        t.send(1, Msg::Ping { nonce: 11 }).unwrap();
+        for port in ports.iter_mut() {
+            let Msg::Ping { nonce } = port.recv().unwrap() else {
+                panic!("expected Ping");
+            };
+            assert_eq!(nonce, 10 + port.id() as u64);
+            port.send(Msg::Pong { nonce }).unwrap();
+        }
+        let mut seen = [false; 2];
+        for _ in 0..2 {
+            let (j, msg) = t.recv(Duration::from_secs(5)).unwrap();
+            assert_eq!(msg, Msg::Pong { nonce: 10 + j as u64 });
+            seen[j] = true;
+        }
+        assert!(seen[0] && seen[1]);
+    }
+
+    #[test]
+    fn channel_recv_times_out_as_typed_error() {
+        let (mut t, _ports) = ChannelTransport::pair(1);
+        match t.recv(Duration::from_millis(30)) {
+            Err(TransportError::Timeout { secs }) => assert!(secs > 0.0),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn channel_send_to_dropped_port_is_closed() {
+        let (mut t, mut ports) = ChannelTransport::pair(2);
+        ports.remove(0); // worker 0 dies
+        assert!(matches!(
+            t.send(0, Msg::Stop),
+            Err(TransportError::Closed { worker: 0 })
+        ));
+        // worker 1 still reachable
+        t.send(1, Msg::Stop).unwrap();
+        assert_eq!(ports[0].recv().unwrap(), Msg::Stop);
+    }
+
+    #[test]
+    fn channel_recv_disconnects_when_all_ports_dropped() {
+        let (mut t, ports) = ChannelTransport::pair(2);
+        drop(ports);
+        assert!(matches!(
+            t.recv(Duration::from_secs(1)),
+            Err(TransportError::Disconnected)
+        ));
+    }
+
+    #[test]
+    fn push_back_is_returned_first() {
+        let (mut t, mut ports) = ChannelTransport::pair(1);
+        t.send(0, Msg::Stop).unwrap();
+        ports[0].push_back(Msg::Ping { nonce: 1 });
+        assert_eq!(ports[0].recv().unwrap(), Msg::Ping { nonce: 1 });
+        assert_eq!(ports[0].recv().unwrap(), Msg::Stop);
+    }
+
+    #[test]
+    fn tcp_loopback_handshake_and_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        let mut joins = Vec::new();
+        for j in [1u32, 0u32] {
+            let addr = addr.clone();
+            joins.push(std::thread::spawn(move || {
+                let (id, setup, mut port) = connect_worker(&addr, Some(j), timeout).unwrap();
+                assert_eq!(id, j);
+                assert_eq!(setup, "SETUP");
+                let Msg::Ping { nonce } = port.recv().unwrap() else {
+                    panic!("expected Ping");
+                };
+                port.send(Msg::Pong { nonce: nonce + 1 }).unwrap();
+                // coordinator closes; clean shutdown
+                assert!(matches!(port.recv(), Err(TransportError::Disconnected)));
+            }));
+        }
+        let mut t = TcpTransport::accept(&listener, 2, "SETUP", timeout).unwrap();
+        t.send(0, Msg::Ping { nonce: 100 }).unwrap();
+        t.send(1, Msg::Ping { nonce: 200 }).unwrap();
+        for _ in 0..2 {
+            let (j, msg) = t.recv(timeout).unwrap();
+            assert_eq!(msg, Msg::Pong { nonce: 101 + 100 * j as u64 });
+        }
+        drop(t);
+        for h in joins {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn tcp_any_worker_gets_distinct_slots() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        let joins: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let (id, _setup, port) = connect_worker(&addr, None, timeout).unwrap();
+                    drop(port);
+                    id
+                })
+            })
+            .collect();
+        let t = TcpTransport::accept(&listener, 2, "", timeout).unwrap();
+        let mut ids: Vec<u32> = joins.into_iter().map(|h| h.join().unwrap()).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
+        drop(t);
+    }
+
+    #[test]
+    fn tcp_handshake_rejects_out_of_range_id() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        let h = std::thread::spawn(move || {
+            // the coordinator drops the socket on rejection; either a
+            // handshake error or an io error is acceptable here
+            let _ = connect_worker(&addr, Some(7), timeout);
+        });
+        match TcpTransport::accept(&listener, 2, "", timeout) {
+            Err(TransportError::Handshake(msg)) => assert!(msg.contains("out of range")),
+            other => panic!("expected Handshake error, got {:?}", other.err()),
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retry_gives_up_with_typed_error() {
+        // grab a port, then free it so nothing listens there
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let t0 = Instant::now();
+        let err = connect_retry(&addr, Duration::from_millis(250)).unwrap_err();
+        assert!(matches!(err, TransportError::Handshake(_)), "{err}");
+        assert!(t0.elapsed() >= Duration::from_millis(200));
+    }
+}

@@ -1,75 +1,122 @@
-//! Live driver: real threads, real clocks, real termination commands.
+//! Live driver: real workers, real clocks, real termination commands.
 //!
-//! One OS thread per worker; gradient compute goes through the multi-lane
-//! [`ComputeServer`](crate::engine::server) (a facade over the per-worker
-//! [`EnginePool`](crate::engine::EnginePool), so workers really compute
-//! in parallel and no parameter vector is cloned); straggler slowness is
-//! injected as interruptible sleep on top of the real compute time. The
-//! leader (main thread) plays the paper's distributed protocol verbatim:
+//! Workers are independent peers behind a [`Transport`] — in-process
+//! threads over channels ([`ChannelTransport`]), or real OS processes
+//! over TCP ([`crate::comms::transport::TcpTransport`], see
+//! `dybw worker --connect`). Gradient compute goes through the
+//! multi-lane [`ComputeServer`](crate::engine::server) facade; straggler
+//! slowness is injected as an interruptible wait on top of the real
+//! compute time. The leader plays the paper's distributed protocol:
 //!
-//! 1. all workers start iteration k simultaneously;
-//! 2. as local updates complete, workers announce them (`Done`);
-//! 3. for cb-DyBW the leader watches for the first establishment of a
-//!    not-yet-established link of P — at that moment it *terminates the
-//!    iteration network-wide* (the paper's "send a command to the rest
-//!    workers to terminate the current iteration"); stragglers abort
-//!    their wait, keep their local update, and sit the round out;
-//! 4. participants exchange parameters (shared board = the network) and
-//!    apply the Metropolis average; everyone barriers into k+1.
+//! 1. all workers start iteration k simultaneously (`Start`);
+//! 2. as local updates complete, workers announce them (`Done`, carrying
+//!    the updated parameters — the "network" is the message fabric, not
+//!    shared memory);
+//! 3. for cb-DyBW the leader *terminates the iteration network-wide*
+//!    once every planned participant has reported (the paper's "send a
+//!    command to the rest workers to terminate the current iteration");
+//!    stragglers abort their wait, keep their local update, and sit the
+//!    round out;
+//! 4. participants receive their Metropolis row plus the neighbour
+//!    parameters (`Mix`), apply eq. (6), and ack; everyone barriers
+//!    into k+1.
 //!
-//! This driver exists to prove the stack composes end-to-end in wall
-//! clock (e2e example); the figures use the deterministic sim driver.
+//! **Reproducibility contract.** Participation, θ(k), durations, and
+//! every recorded metric are computed from the *virtual* straggler times
+//! drawn on the leader before the iteration is dispatched — the real
+//! clock only shapes `wall_seconds` and the termination-ack latencies.
+//! A seeded run therefore produces bit-identical [`RunHistory`] over any
+//! transport and any machine, which is what the `socket-smoke` CI job
+//! and `live_tcp_bit_identical_to_in_process` assert.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::comms::transport::{ChannelTransport, Transport, TransportError, WorkerPort};
+use crate::comms::Msg;
 use crate::consensus::ConsensusMatrix;
 use crate::engine::server::ComputeClient;
 use crate::engine::{AnyBatch, BatchSource};
 use crate::graph::Graph;
 use crate::metrics::{EvalRecord, IterRecord, RunHistory};
+use crate::straggler::link::LinkMeasure;
 use crate::straggler::StragglerModel;
 use crate::util::rng::Rng;
 
-use super::algorithm::Algorithm;
+use super::algorithm::{plan, Algorithm};
 use super::dtur::Dtur;
 use super::sim::TrainConfig;
 
-/// Leader -> worker messages.
-enum Cmd {
-    Start {
-        k: usize,
-        delay_s: f64,
-    },
-    /// Mix with this worker's Metropolis row (the leader builds P(k)
-    /// once; workers only ever consume their own row).
-    Mix {
-        active: bool,
-        row: Vec<(usize, f64)>,
-    },
-    Stop,
+/// Typed live-driver failure: one worker's problem surfaces as one
+/// error on the leader instead of a cascade of mutex-poison panics.
+#[derive(Debug)]
+pub enum LiveError {
+    /// Algorithm/shape combination the live driver does not implement.
+    Unsupported(String),
+    /// A worker's gradient engine errored (details on the worker's log).
+    ComputeFailed { worker: usize, k: u64 },
+    /// A worker thread panicked (in-process transport only).
+    WorkerPanicked { worker: usize },
+    /// Could not spawn a worker thread.
+    Spawn(std::io::Error),
+    /// No message within the configured watchdog window.
+    Watchdog { secs: f64, at: String },
+    /// A peer broke the protocol (wrong iteration, duplicate Done, bad
+    /// vector length, unexpected message type).
+    Protocol { worker: usize, detail: String },
+    Transport(TransportError),
+    /// Held-out evaluation failed on the leader.
+    Eval(String),
 }
 
-/// Worker -> leader messages.
-struct DoneMsg {
-    loss: f32,
-    terminated: bool,
-    /// Compute failed (shape mismatch, engine error, ...). The leader
-    /// aborts the run with a real error instead of hanging.
-    failed: bool,
+impl std::fmt::Display for LiveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LiveError::Unsupported(what) => f.write_str(what),
+            LiveError::ComputeFailed { worker, k } => {
+                write!(f, "worker {worker} compute failed at iteration {k} (see log)")
+            }
+            LiveError::WorkerPanicked { worker } => write!(f, "worker {worker} panicked"),
+            LiveError::Spawn(e) => write!(f, "failed to spawn worker thread: {e}"),
+            LiveError::Watchdog { secs, at } => {
+                write!(f, "watchdog: no {at} message within {secs:.0}s")
+            }
+            LiveError::Protocol { worker, detail } => {
+                write!(f, "protocol violation from worker {worker}: {detail}")
+            }
+            LiveError::Transport(e) => write!(f, "transport: {e}"),
+            LiveError::Eval(what) => write!(f, "eval failed: {what}"),
+        }
+    }
 }
 
-struct WorkerChans {
-    cmd_tx: Sender<Cmd>,
-    done_rx: Receiver<DoneMsg>,
-    ack_rx: Receiver<usize>,
+impl std::error::Error for LiveError {}
+
+impl From<TransportError> for LiveError {
+    fn from(e: TransportError) -> LiveError {
+        LiveError::Transport(e)
+    }
 }
 
-/// Shared "network": slot j holds worker j's latest locally-updated
-/// parameters w̃_j(k) (post eq. 5), then its post-mix w_j(k).
-type Board = Arc<Vec<Mutex<Vec<f32>>>>;
+/// Knobs that do not affect the recorded history.
+#[derive(Debug, Clone)]
+pub struct LiveOptions {
+    /// Converts the straggler model's virtual seconds into real wait
+    /// seconds (e.g. 0.05 makes a "2s" straggler a 100ms wait so the
+    /// example finishes quickly).
+    pub time_scale: f64,
+    /// How long the leader waits for any worker message before declaring
+    /// the run wedged (previously hardcoded to 180 s).
+    pub watchdog: Duration,
+}
+
+impl Default for LiveOptions {
+    fn default() -> LiveOptions {
+        LiveOptions {
+            time_scale: 1.0,
+            watchdog: Duration::from_secs(180),
+        }
+    }
+}
 
 #[derive(Debug)]
 pub struct LiveOutcome {
@@ -95,10 +142,11 @@ impl LiveOutcome {
     }
 }
 
-/// Run training with real threads. `time_scale` converts the straggler
-/// model's virtual seconds into real sleep seconds (e.g. 0.05 makes a
-/// "2s" straggler a 100ms sleep so the example finishes quickly).
-#[allow(clippy::too_many_arguments)]
+/// Run training in-process: one thread per worker over the channel
+/// transport. Kept as the stable entry point (e2e example, tests);
+/// [`run_live_opts`] exposes the watchdog, and [`drive`] +
+/// [`spawn_workers`] are the pieces multi-process deployments compose
+/// over TCP.
 pub fn run_live(
     graph: Graph,
     algo: Algorithm,
@@ -109,194 +157,332 @@ pub fn run_live(
     eval_batches: Vec<AnyBatch>,
     initial: Vec<f32>,
     time_scale: f64,
-) -> anyhow::Result<LiveOutcome> {
-    anyhow::ensure!(
-        matches!(algo, Algorithm::CbDybw | Algorithm::CbFull),
-        "live driver implements the consensus algorithms (got {})",
-        algo.name()
-    );
+) -> Result<LiveOutcome, LiveError> {
+    let opts = LiveOptions {
+        time_scale,
+        ..Default::default()
+    };
+    run_live_opts(
+        graph,
+        algo,
+        cfg,
+        straggler,
+        compute,
+        sources,
+        eval_batches,
+        initial,
+        &opts,
+    )
+}
+
+/// [`run_live`] with explicit [`LiveOptions`].
+pub fn run_live_opts(
+    graph: Graph,
+    algo: Algorithm,
+    cfg: TrainConfig,
+    straggler: StragglerModel,
+    compute: ComputeClient,
+    sources: Vec<Box<dyn BatchSource>>,
+    eval_batches: Vec<AnyBatch>,
+    initial: Vec<f32>,
+    opts: &LiveOptions,
+) -> Result<LiveOutcome, LiveError> {
     let n = graph.n();
-    anyhow::ensure!(sources.len() == n && straggler.n() == n);
-    let run_start = Instant::now();
+    if sources.len() != n {
+        return Err(LiveError::Unsupported(format!(
+            "need one batch source per worker ({} != {n})",
+            sources.len()
+        )));
+    }
+    let (mut transport, ports) = ChannelTransport::pair(n);
+    let handles = spawn_workers(&cfg, &compute, sources, &initial, ports)?;
+    let result = drive(
+        &mut transport,
+        &graph,
+        algo,
+        &cfg,
+        &straggler,
+        &compute,
+        &eval_batches,
+        initial,
+        opts,
+    );
+    // Dropping the transport disconnects every port, so workers that are
+    // still waiting (e.g. after a mid-run error) unblock and exit.
+    drop(transport);
+    let mut panicked = None;
+    for (j, h) in handles.into_iter().enumerate() {
+        if h.join().is_err() {
+            panicked = Some(j);
+        }
+    }
+    match (result, panicked) {
+        (_, Some(worker)) => Err(LiveError::WorkerPanicked { worker }),
+        (r, None) => r,
+    }
+}
 
-    let board: Board = Arc::new((0..n).map(|_| Mutex::new(initial.clone())).collect());
-    // iteration id whose in-flight waits should abort (0 = none)
-    let terminate = Arc::new(AtomicUsize::new(0));
-
-    // ---- spawn workers ----------------------------------------------------
-    let mut chans = Vec::with_capacity(n);
-    let mut handles = Vec::with_capacity(n);
-    for (j, source) in sources.into_iter().enumerate() {
-        let (cmd_tx, cmd_rx) = channel::<Cmd>();
-        let (done_tx, done_rx) = channel::<DoneMsg>();
-        let (ack_tx, ack_rx) = channel::<usize>();
-        let board = Arc::clone(&board);
-        let terminate = Arc::clone(&terminate);
+/// Spawn one in-process worker thread per port (`ports[i].id()` indexes
+/// `sources`). Worker-side errors are logged, not panicked, so the
+/// leader's typed error is the only failure surface.
+pub fn spawn_workers(
+    cfg: &TrainConfig,
+    compute: &ComputeClient,
+    sources: Vec<Box<dyn BatchSource>>,
+    initial: &[f32],
+    ports: Vec<WorkerPort>,
+) -> Result<Vec<std::thread::JoinHandle<()>>, LiveError> {
+    let mut handles = Vec::with_capacity(ports.len());
+    for (port, source) in ports.into_iter().zip(sources) {
+        let j = port.id();
+        let cfg = cfg.clone();
         let compute = compute.clone();
-        let cfg_l = cfg.clone();
+        let init = initial.to_vec();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("dybw-worker-{j}"))
                 .spawn(move || {
-                    worker_loop(
-                        j, cfg_l, compute, source, board, terminate, cmd_rx, done_tx, ack_tx,
-                    )
-                })?,
+                    if let Err(e) = worker_loop(j, cfg, compute, source, init, port) {
+                        crate::util::log::log(
+                            crate::util::log::Level::Error,
+                            "live",
+                            &format!("worker {j} exited with error: {e}"),
+                        );
+                    }
+                })
+                .map_err(LiveError::Spawn)?,
         );
-        chans.push(WorkerChans {
-            cmd_tx,
-            done_rx,
-            ack_rx,
-        });
     }
+    Ok(handles)
+}
 
-    // ---- leader loop -------------------------------------------------------
+fn recv_watchdogged(
+    transport: &mut dyn Transport,
+    opts: &LiveOptions,
+    at: &str,
+) -> Result<(usize, Msg), LiveError> {
+    match transport.recv(opts.watchdog) {
+        Ok(ev) => Ok(ev),
+        Err(TransportError::Timeout { secs }) => Err(LiveError::Watchdog {
+            secs,
+            at: at.to_string(),
+        }),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// The leader side of the protocol, generic over the transport.
+///
+/// The recorded history is a pure function of the seed: straggler times
+/// are sampled virtually, the plan (participation, θ, duration) is
+/// computed *before* the iteration is dispatched, and workers only
+/// contribute deterministic floats (losses, parameter vectors). Real
+/// time decides nothing but `wall_seconds` and the termination-ack
+/// latencies.
+pub fn drive(
+    transport: &mut dyn Transport,
+    graph: &Graph,
+    algo: Algorithm,
+    cfg: &TrainConfig,
+    straggler: &StragglerModel,
+    compute: &ComputeClient,
+    eval_batches: &[AnyBatch],
+    initial: Vec<f32>,
+    opts: &LiveOptions,
+) -> Result<LiveOutcome, LiveError> {
+    if !matches!(algo, Algorithm::CbDybw | Algorithm::CbFull) {
+        return Err(LiveError::Unsupported(format!(
+            "live driver implements the consensus algorithms (got {})",
+            algo.name()
+        )));
+    }
+    let n = graph.n();
+    if transport.workers() != n || straggler.n() != n {
+        return Err(LiveError::Unsupported(format!(
+            "graph ({n}), transport ({}) and straggler model ({}) disagree on worker count",
+            transport.workers(),
+            straggler.n()
+        )));
+    }
+    let run_start = Instant::now();
+
+    // Leader's view of the network: slot j holds worker j's latest
+    // announced parameters (w̃_j after Done, w_j after MixAck). Plain
+    // owned vectors — no shared-memory mutexes to poison.
+    let mut board: Vec<Vec<f32>> = vec![initial; n];
+
     let mut history = RunHistory::new(&algo.name(), "live", "synthetic", n);
-    let mut dtur = algo.needs_dtur().then(|| Dtur::new(&graph));
+    let mut dtur = algo.needs_dtur().then(|| Dtur::new(graph));
     let mut rng = Rng::new(cfg.seed ^ 0x11FE);
     let mut clock = 0.0f64;
     let mut term_ack_latencies: Vec<f64> = Vec::new();
 
-    // initial eval
     history
         .evals
-        .push(eval_on_board(&board, &eval_batches, &compute, 0, clock)?);
+        .push(eval_board(&board, eval_batches, compute, 0, clock)?);
 
     for k in 1..=cfg.iters {
+        // Virtual plan first: participation and timing are sealed before
+        // any real message is sent, so the history cannot depend on
+        // scheduling or network jitter.
         let t = straggler.sample_iteration(&mut rng);
-        let iter_start = Instant::now();
-        for (j, ch) in chans.iter().enumerate() {
-            ch.cmd_tx
-                .send(Cmd::Start {
-                    k,
-                    delay_s: t[j] * time_scale,
-                })
-                .map_err(|_| anyhow::anyhow!("worker {j} died"))?;
+        let iter_plan = plan(algo, &t, dtur.as_mut());
+        let ku = k as u64;
+
+        for j in 0..n {
+            transport.send(
+                j,
+                Msg::Start {
+                    k: ku,
+                    delay_s: t[j] * opts.time_scale,
+                },
+            )?;
         }
 
-        // Collect Done; for cb-DyBW fire the termination command at the
-        // moment the first unestablished P-link completes.
+        // Collect every worker's Done. Once all planned participants
+        // have reported, fire the real termination command at the
+        // stragglers still waiting out their delay.
         let mut done = vec![false; n];
         let mut losses = vec![0.0f32; n];
-        let mut terminated_flag = vec![false; n];
-        let mut fired = !algo.needs_dtur(); // cb-Full never terminates
+        let mut active_pending = iter_plan.active_count();
+        let mut fired = iter_plan.active.iter().all(|&a| a); // all active: nothing to cut
         let mut fired_at: Option<Instant> = None;
         let mut pending = n;
-        let mut theta_real = f64::NAN;
         while pending > 0 {
-            for (j, ch) in chans.iter().enumerate() {
-                if done[j] {
-                    continue;
-                }
-                if let Ok(msg) = ch.done_rx.try_recv() {
-                    anyhow::ensure!(
-                        !msg.failed,
-                        "worker {j} compute failed at iteration {k} (see log)"
-                    );
+            let (j, msg) = recv_watchdogged(transport, opts, "Done")?;
+            match msg {
+                Msg::Done {
+                    k: mk,
+                    loss,
+                    terminated,
+                    failed,
+                    wtilde,
+                } => {
+                    if mk != ku || done[j] {
+                        return Err(LiveError::Protocol {
+                            worker: j,
+                            detail: format!("Done for iteration {mk} while collecting {ku}"),
+                        });
+                    }
+                    if failed {
+                        return Err(LiveError::ComputeFailed { worker: j, k: ku });
+                    }
+                    if wtilde.len() != board[j].len() {
+                        return Err(LiveError::Protocol {
+                            worker: j,
+                            detail: format!(
+                                "Done carried {} params, expected {}",
+                                wtilde.len(),
+                                board[j].len()
+                            ),
+                        });
+                    }
+                    board[j] = wtilde;
+                    losses[j] = loss;
                     done[j] = true;
-                    losses[j] = msg.loss;
-                    terminated_flag[j] = msg.terminated;
-                    if msg.terminated {
+                    pending -= 1;
+                    if iter_plan.active[j] {
+                        active_pending -= 1;
+                    }
+                    if terminated {
                         // shutdown-ack latency: command fired -> this ack
                         if let Some(t0) = fired_at {
                             term_ack_latencies.push(t0.elapsed().as_secs_f64());
                         }
                     }
-                    pending -= 1;
-                    if !fired {
-                        let finished: Vec<bool> = (0..n)
-                            .map(|i| done[i] && !terminated_flag[i])
-                            .collect();
-                        if let Some(d) = dtur.as_ref() {
-                            let hit = d
-                                .path()
-                                .iter()
-                                .enumerate()
-                                .any(|(idx, &(a, b))| {
-                                    !d.is_established(idx) && finished[a] && finished[b]
-                                });
-                            if hit {
-                                fired = true;
-                                theta_real = iter_start.elapsed().as_secs_f64();
-                                terminate.store(k, Ordering::SeqCst);
-                                fired_at = Some(Instant::now());
+                    if !fired && active_pending == 0 {
+                        fired = true;
+                        let waiting: Vec<usize> = (0..n).filter(|&i| !done[i]).collect();
+                        if !waiting.is_empty() {
+                            fired_at = Some(Instant::now());
+                            for i in waiting {
+                                transport.send(i, Msg::Terminate { k: ku })?;
                             }
                         }
                     }
                 }
-            }
-            if pending > 0 {
-                std::thread::sleep(std::time::Duration::from_micros(200));
+                Msg::Pong { .. } => {} // stale measurement reply
+                other => {
+                    return Err(LiveError::Protocol {
+                        worker: j,
+                        detail: format!("unexpected {} while collecting Done", other.name()),
+                    })
+                }
             }
         }
-        let duration = if theta_real.is_nan() {
-            iter_start.elapsed().as_secs_f64()
-        } else {
-            theta_real
-        };
-        terminate.store(0, Ordering::SeqCst);
 
-        // Active set + DTUR bookkeeping (advance the epoch state with the
-        // *virtual* times so sim and live share Algorithm 2 semantics).
-        let active: Vec<bool> = if let Some(d) = dtur.as_mut() {
-            // feed DTUR the realised finish pattern: genuine finishers get
-            // their virtual t, terminated ones +inf so they're excluded
-            let t_eff: Vec<f64> = (0..n)
-                .map(|j| if terminated_flag[j] { f64::INFINITY } else { t[j] })
-                .collect();
-            d.step(&t_eff).active
-        } else {
-            vec![true; n]
-        };
-
-        // Build P(k) once on the leader and hand each worker its row —
-        // same matrix every worker previously rebuilt for itself.
-        let p = ConsensusMatrix::metropolis(&graph, &active);
-        for (j, ch) in chans.iter().enumerate() {
-            ch.cmd_tx
-                .send(Cmd::Mix {
-                    active: active[j],
-                    row: p.row(j).to_vec(),
-                })
-                .map_err(|_| anyhow::anyhow!("worker died"))?;
+        // Mixing: each participant gets its Metropolis row plus the
+        // neighbour parameters in row order (the order fixes the f32
+        // accumulation, keeping the result transport-independent).
+        let p = ConsensusMatrix::metropolis(graph, &iter_plan.active);
+        for j in 0..n {
+            let msg = if iter_plan.active[j] {
+                let row = p.row(j);
+                Msg::Mix {
+                    k: ku,
+                    active: true,
+                    row: row.iter().map(|&(i, wt)| (i as u32, wt)).collect(),
+                    peers: row.iter().map(|&(i, _)| board[i].clone()).collect(),
+                }
+            } else {
+                Msg::Mix {
+                    k: ku,
+                    active: false,
+                    row: Vec::new(),
+                    peers: Vec::new(),
+                }
+            };
+            transport.send(j, msg)?;
         }
-        for ch in &chans {
-            ch.ack_rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("worker died before ack"))?;
-        }
-
-        clock += duration;
-        let active_count = active.iter().filter(|&&a| a).count();
-        let backup_avg = {
-            let mut total = 0usize;
-            for j in 0..n {
-                total += graph.neighbors(j).filter(|&i| !active[i]).count();
+        let mut acked = vec![false; n];
+        let mut pending = n;
+        while pending > 0 {
+            let (j, msg) = recv_watchdogged(transport, opts, "MixAck")?;
+            match msg {
+                Msg::MixAck { k: mk, w } => {
+                    if mk != ku || acked[j] || w.len() != board[j].len() {
+                        return Err(LiveError::Protocol {
+                            worker: j,
+                            detail: format!(
+                                "bad MixAck (iteration {mk}/{ku}, {} params)",
+                                w.len()
+                            ),
+                        });
+                    }
+                    board[j] = w;
+                    acked[j] = true;
+                    pending -= 1;
+                }
+                Msg::Pong { .. } => {}
+                other => {
+                    return Err(LiveError::Protocol {
+                        worker: j,
+                        detail: format!("unexpected {} while collecting MixAck", other.name()),
+                    })
+                }
             }
-            total as f64 / n as f64
-        };
+        }
+
+        clock += iter_plan.duration;
         history.iters.push(IterRecord {
             k,
-            duration,
+            duration: iter_plan.duration,
             clock,
             train_loss: losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64,
-            active: active_count,
-            backup_avg,
-            theta: theta_real,
+            active: iter_plan.active_count(),
+            backup_avg: iter_plan.backup_avg(graph),
+            theta: iter_plan.theta,
         });
 
         if cfg.eval_every > 0 && k % cfg.eval_every == 0 {
             history
                 .evals
-                .push(eval_on_board(&board, &eval_batches, &compute, k, clock)?);
+                .push(eval_board(&board, eval_batches, compute, k, clock)?);
         }
     }
 
-    for ch in &chans {
-        let _ = ch.cmd_tx.send(Cmd::Stop);
-    }
-    for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+    for j in 0..n {
+        let _ = transport.send(j, Msg::Stop);
     }
     Ok(LiveOutcome {
         history,
@@ -305,29 +491,33 @@ pub fn run_live(
     })
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
+/// The worker side of the protocol: runs against a [`WorkerPort`] from
+/// either transport (in a spawned thread, or as the whole body of a
+/// `dybw worker` process).
+pub fn worker_loop(
     j: usize,
     cfg: TrainConfig,
     compute: ComputeClient,
     mut source: Box<dyn BatchSource>,
-    board: Board,
-    terminate: Arc<AtomicUsize>,
-    cmd_rx: Receiver<Cmd>,
-    done_tx: Sender<DoneMsg>,
-    ack_tx: Sender<usize>,
-) {
-    let mut w: Vec<f32> = board[j].lock().unwrap().clone();
-    let mut wtilde: Vec<f32> = w.clone();
+    initial: Vec<f32>,
+    mut port: WorkerPort,
+) -> Result<(), LiveError> {
+    let mut w = initial;
+    let mut wtilde = w.clone();
     // Leased buffers: the gradient is written in place by the engine pool
     // every iteration, the mix accumulator swaps with `w` every round —
     // neither is ever reallocated.
     let mut grad: Vec<f32> = vec![0.0; compute.param_count()];
     let mut mix_buf: Vec<f32> = vec![0.0; w.len()];
-    while let Ok(cmd) = cmd_rx.recv() {
+    loop {
+        let cmd = match port.recv() {
+            Ok(m) => m,
+            Err(TransportError::Disconnected) => return Ok(()),
+            Err(e) => return Err(e.into()),
+        };
         match cmd {
-            Cmd::Stop => break,
-            Cmd::Start { k, delay_s } => {
+            Msg::Stop => return Ok(()),
+            Msg::Start { k, delay_s } => {
                 let start = Instant::now();
                 let batch = source.next_train(cfg.batch_size);
                 let loss = match compute.grad_into(&w, &batch, &mut grad) {
@@ -338,73 +528,167 @@ fn worker_loop(
                             "live",
                             &format!("worker {j} compute failed: {e}"),
                         );
-                        let _ = done_tx.send(DoneMsg {
+                        let _ = port.send(Msg::Done {
+                            k,
                             loss: f32::NAN,
                             terminated: false,
                             failed: true,
+                            wtilde: Vec::new(),
                         });
-                        break;
+                        return Ok(());
                     }
                 };
                 // Straggler injection: wait out the remaining virtual
-                // compute time, abortable by the termination command.
+                // compute time parked on the port (no polling), abortable
+                // by this iteration's termination command.
                 let mut terminated = false;
-                while start.elapsed().as_secs_f64() < delay_s {
-                    if terminate.load(Ordering::SeqCst) == k {
-                        terminated = true;
+                let mut stash: Vec<Msg> = Vec::new();
+                loop {
+                    let elapsed = start.elapsed().as_secs_f64();
+                    if delay_s.is_nan() || elapsed >= delay_s {
                         break;
                     }
-                    std::thread::sleep(std::time::Duration::from_micros(300));
+                    let remaining = Duration::from_secs_f64((delay_s - elapsed).min(3600.0));
+                    match port.recv_timeout(remaining) {
+                        Ok(None) => {} // waited it out; re-check the clock
+                        Ok(Some(Msg::Terminate { k: tk })) => {
+                            if tk == k {
+                                terminated = true;
+                                break;
+                            }
+                            // stale command from an earlier iteration
+                        }
+                        Ok(Some(other)) => stash.push(other),
+                        Err(TransportError::Disconnected) => return Ok(()),
+                        Err(e) => return Err(e.into()),
+                    }
+                }
+                for m in stash {
+                    port.push_back(m);
                 }
                 // eq. (5): local update (kept even when terminated).
-                let eta = cfg.lr(k) as f32;
+                let eta = cfg.lr(k as usize) as f32;
                 wtilde.copy_from_slice(&w);
                 crate::util::vecmath::axpy(&mut wtilde, -eta, &grad);
-                *board[j].lock().unwrap() = wtilde.clone();
-                let _ = done_tx.send(DoneMsg {
-                    loss,
-                    terminated,
-                    failed: false,
-                });
+                if port
+                    .send(Msg::Done {
+                        k,
+                        loss,
+                        terminated,
+                        failed: false,
+                        wtilde: wtilde.clone(),
+                    })
+                    .is_err()
+                {
+                    return Ok(());
+                }
             }
-            Cmd::Mix { active, row } => {
+            Msg::Mix {
+                k,
+                active,
+                row,
+                peers,
+            } => {
+                if peers.len() != row.len() {
+                    return Err(LiveError::Protocol {
+                        worker: j,
+                        detail: format!("Mix with {} rows but {} peers", row.len(), peers.len()),
+                    });
+                }
                 if active {
                     // eq. (6) over the active neighbourhood, accumulated
                     // in row order (deterministic) into the leased buffer.
                     mix_buf.fill(0.0);
-                    for &(i, wt) in &row {
-                        let src = board[i].lock().unwrap();
-                        crate::util::vecmath::axpy(&mut mix_buf, wt as f32, &src);
+                    for (&(_, wt), peer) in row.iter().zip(&peers) {
+                        if peer.len() != w.len() {
+                            return Err(LiveError::Protocol {
+                                worker: j,
+                                detail: format!(
+                                    "Mix peer carried {} params, expected {}",
+                                    peer.len(),
+                                    w.len()
+                                ),
+                            });
+                        }
+                        crate::util::vecmath::axpy(&mut mix_buf, wt as f32, peer);
                     }
                     std::mem::swap(&mut w, &mut mix_buf);
                 } else {
                     w.copy_from_slice(&wtilde);
                 }
-                *board[j].lock().unwrap() = w.clone();
-                let _ = ack_tx.send(j);
+                if port.send(Msg::MixAck { k, w: w.clone() }).is_err() {
+                    return Ok(());
+                }
+            }
+            Msg::Ping { nonce } => {
+                if port.send(Msg::Pong { nonce }).is_err() {
+                    return Ok(());
+                }
+            }
+            // a termination command that raced the Done we already sent
+            Msg::Terminate { .. } => {}
+            other => {
+                return Err(LiveError::Protocol {
+                    worker: j,
+                    detail: format!("unexpected {} outside an iteration", other.name()),
+                })
             }
         }
     }
 }
 
-fn eval_on_board(
-    board: &Board,
+/// Measure real per-worker round-trip latency with Ping/Pong (run
+/// before or after training — it exchanges no RNG draws, so it never
+/// perturbs the seeded history). One-way latency is estimated as RTT/2;
+/// feed the result to [`LinkMeasure::calibrated`] to turn the deployed
+/// network into a DES [`crate::straggler::link::LinkModel`].
+pub fn measure_links(
+    transport: &mut dyn Transport,
+    rounds: usize,
+    opts: &LiveOptions,
+) -> Result<LinkMeasure, LiveError> {
+    let n = transport.workers();
+    let mut m = LinkMeasure::new(n);
+    for r in 0..rounds {
+        for j in 0..n {
+            let nonce = (r * n + j) as u64;
+            let t0 = Instant::now();
+            transport.send(j, Msg::Ping { nonce })?;
+            loop {
+                let (from, msg) = recv_watchdogged(transport, opts, "Pong")?;
+                match msg {
+                    Msg::Pong { nonce: got } if from == j && got == nonce => {
+                        m.record(j, t0.elapsed().as_secs_f64() / 2.0);
+                        break;
+                    }
+                    Msg::Pong { .. } => {} // stale or cross-talk; keep waiting
+                    other => {
+                        return Err(LiveError::Protocol {
+                            worker: from,
+                            detail: format!("unexpected {} during link measurement", other.name()),
+                        })
+                    }
+                }
+            }
+        }
+    }
+    Ok(m)
+}
+
+fn eval_board(
+    board: &[Vec<f32>],
     eval_batches: &[AnyBatch],
     compute: &ComputeClient,
     k: usize,
     clock: f64,
-) -> anyhow::Result<EvalRecord> {
+) -> Result<EvalRecord, LiveError> {
     let n = board.len();
-    let dim = board[0].lock().unwrap().len();
+    let dim = board[0].len();
     let mut avg = vec![0.0f32; dim];
-    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(n);
-    for slot in board.iter() {
-        rows.push(slot.lock().unwrap().clone());
-    }
-    for r in &rows {
+    for r in board {
         crate::util::vecmath::axpy(&mut avg, 1.0 / n as f32, r);
     }
-    let consensus_error = rows
+    let consensus_error = board
         .iter()
         .map(|r| crate::util::vecmath::dist(r, &avg))
         .fold(0.0, f64::max);
@@ -413,7 +697,9 @@ fn eval_on_board(
     let mut total = 0usize;
     // Batches fan across the pool's lanes; the reduction runs in batch
     // order, so the result is independent of the lane count.
-    let scores = compute.eval_many(&avg, eval_batches)?;
+    let scores = compute
+        .eval_many(&avg, eval_batches)
+        .map_err(|e| LiveError::Eval(e.to_string()))?;
     for ((l, c), b) in scores.into_iter().zip(eval_batches) {
         let r = b.rows();
         loss_sum += l as f64 * r as f64;
@@ -432,6 +718,7 @@ fn eval_on_board(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comms::transport::{connect_worker, TcpTransport};
     use crate::coordinator::setup::Setup;
     use crate::data::batch::BatchSampler;
     use crate::data::partition::{split, Partition};
@@ -441,8 +728,25 @@ mod tests {
     use crate::graph::topology;
     use crate::model::ModelMeta;
     use crate::straggler::Dist;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
 
-    fn run(algo: Algorithm, iters: usize) -> LiveOutcome {
+    /// Everything one live run needs, built deterministically from fixed
+    /// seeds — calling this twice yields bit-identical inputs, which the
+    /// transport-equivalence tests lean on.
+    struct TestParts {
+        g: Graph,
+        cfg: TrainConfig,
+        straggler: StragglerModel,
+        client: ComputeClient,
+        _server: ComputeServer,
+        sources: Vec<Box<dyn BatchSource>>,
+        eval: Vec<AnyBatch>,
+        init: Vec<f32>,
+    }
+
+    fn test_parts(iters: usize) -> TestParts {
         let n = 4;
         let mut rng = Rng::new(3);
         let g = topology::random_connected(n, 0.6, &mut rng);
@@ -455,14 +759,12 @@ mod tests {
             .enumerate()
             .map(|(j, s)| Box::new(DenseSource::new(s, 50 + j as u64)) as Box<dyn BatchSource>)
             .collect();
-        let eval: Vec<AnyBatch> = BatchSampler::full_batches(
-            &test.subset(&(0..192).collect::<Vec<_>>()),
-            32,
-        )
-        .into_iter()
-        .map(AnyBatch::Dense)
-        .collect();
-        let (_srv, client) = ComputeServer::spawn(native_factory(meta.clone()), 2).unwrap();
+        let eval: Vec<AnyBatch> =
+            BatchSampler::full_batches(&test.subset(&(0..192).collect::<Vec<_>>()), 32)
+                .into_iter()
+                .map(AnyBatch::Dense)
+                .collect();
+        let (server, client) = ComputeServer::spawn(native_factory(meta.clone()), 2).unwrap();
         let straggler = StragglerModel {
             base: Dist::Uniform { lo: 0.02, hi: 0.05 },
             worker_scale: vec![1.0; n],
@@ -480,8 +782,30 @@ mod tests {
             ..Default::default()
         };
         let init = meta.init_params(&mut rng);
+        TestParts {
+            g,
+            cfg,
+            straggler,
+            client,
+            _server: server,
+            sources,
+            eval,
+            init,
+        }
+    }
+
+    fn run(algo: Algorithm, iters: usize) -> LiveOutcome {
+        let p = test_parts(iters);
         run_live(
-            g, algo, cfg, straggler, client, sources, eval, init, 1.0,
+            p.g,
+            algo,
+            p.cfg,
+            p.straggler,
+            p.client,
+            p.sources,
+            p.eval,
+            p.init,
+            1.0,
         )
         .unwrap()
     }
@@ -493,7 +817,7 @@ mod tests {
         let first = &out.history.evals[0];
         let last = out.history.evals.last().unwrap();
         assert!(last.test_loss < first.test_loss, "{first:?} -> {last:?}");
-        assert!(out.wall_seconds > 0.1); // really slept
+        assert!(out.wall_seconds > 0.1); // really waited
         // with a forced 6x transient straggler every round, termination
         // fires and the aborted workers' acks get timed
         assert!(
@@ -517,13 +841,95 @@ mod tests {
     fn live_dybw_faster_than_full() {
         let a = run(Algorithm::CbDybw, 10);
         let b = run(Algorithm::CbFull, 10);
-        // cb-Full waits out every 6x straggler sleep; DyBW terminates them.
+        // cb-Full waits out every 6x straggler; DyBW terminates them.
         assert!(
             a.history.total_time() < b.history.total_time(),
             "dybw {:.3}s vs full {:.3}s",
             a.history.total_time(),
             b.history.total_time()
         );
+    }
+
+    /// The reproducibility contract: the recorded history is a pure
+    /// function of the seed — real scheduling/jitter may only move
+    /// `wall_seconds` and the ack latencies.
+    #[test]
+    fn live_history_reproducible() {
+        let a = run(Algorithm::CbDybw, 6);
+        let b = run(Algorithm::CbDybw, 6);
+        assert!(
+            a.history.bits_eq(&b.history),
+            "two same-seed live runs diverged"
+        );
+    }
+
+    /// The tentpole guarantee: the same seeded run over real TCP sockets
+    /// (framed binary codec, reader threads, the works) produces history
+    /// bit-identical to the in-process channel transport.
+    #[test]
+    fn live_tcp_bit_identical_to_in_process() {
+        let reference = run(Algorithm::CbDybw, 5);
+
+        let p = test_parts(5);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(20);
+        let mut joins = Vec::new();
+        for (j, source) in p.sources.into_iter().enumerate() {
+            let addr = addr.clone();
+            let cfg = p.cfg.clone();
+            let client = p.client.clone();
+            let init = p.init.clone();
+            joins.push(std::thread::spawn(move || {
+                let (id, _setup, port) = connect_worker(&addr, Some(j as u32), timeout).unwrap();
+                worker_loop(id as usize, cfg, client, source, init, port).unwrap();
+            }));
+        }
+        let mut transport = TcpTransport::accept(&listener, 4, "", timeout).unwrap();
+        let opts = LiveOptions::default();
+        let out = drive(
+            &mut transport,
+            &p.g,
+            Algorithm::CbDybw,
+            &p.cfg,
+            &p.straggler,
+            &p.client,
+            &p.eval,
+            p.init.clone(),
+            &opts,
+        )
+        .unwrap();
+        drop(transport);
+        for h in joins {
+            h.join().unwrap();
+        }
+        assert!(
+            out.history.bits_eq(&reference.history),
+            "TCP history diverged from the in-process transport"
+        );
+    }
+
+    #[test]
+    fn measure_links_roundtrip_over_channels() {
+        let p = test_parts(1);
+        let (mut transport, ports) = ChannelTransport::pair(4);
+        let handles = spawn_workers(&p.cfg, &p.client, p.sources, &p.init, ports).unwrap();
+        let opts = LiveOptions::default();
+        let m = measure_links(&mut transport, 3, &opts).unwrap();
+        assert_eq!(m.count(), 12);
+        let model = m.calibrated(7);
+        let mut rng = Rng::new(1);
+        for _ in 0..32 {
+            let l = model.latency(0, 1, rng.below(100));
+            assert!(l.is_finite() && l >= 0.0);
+        }
+        for j in 0..4 {
+            transport.send(j, Msg::Stop).unwrap();
+        }
+        drop(transport);
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]
@@ -570,6 +976,15 @@ mod tests {
         }
     }
 
+    /// The leader's watchdog window for the scale tests, configurable so
+    /// slow shared runners can stretch it: `DYBW_LIVE_WATCHDOG_SECS`.
+    fn watchdog_secs() -> u64 {
+        std::env::var("DYBW_LIVE_WATCHDOG_SECS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(180)
+    }
+
     /// One full live run at `lanes` compute lanes on the CI-sized scale
     /// workload: 32 real worker threads, a 2NN model heavy enough that
     /// compute (not straggler sleep) dominates the iteration — but with
@@ -577,7 +992,7 @@ mod tests {
     /// baseline is genuinely serial (no intra-kernel threads) and the
     /// pooled-vs-sequential comparison isn't noise-bound on small CI
     /// runners.
-    fn scale_run(lanes: usize) -> anyhow::Result<LiveOutcome> {
+    fn scale_run(lanes: usize) -> Result<LiveOutcome, LiveError> {
         let n = 32;
         let mut rng = Rng::new(42);
         let g = topology::random_connected(n, 0.25, &mut rng);
@@ -595,7 +1010,10 @@ mod tests {
                 .into_iter()
                 .map(AnyBatch::Dense)
                 .collect();
-        let (_srv, client) = ComputeServer::spawn(native_factory(meta.clone()), lanes)?;
+        let (_srv, client) =
+            ComputeServer::spawn(native_factory(meta.clone()), lanes).map_err(|e| {
+                LiveError::Unsupported(format!("pool spawn failed: {e}"))
+            })?;
         let straggler = StragglerModel {
             base: Dist::Uniform { lo: 0.005, hi: 0.01 },
             worker_scale: vec![1.0; n],
@@ -613,7 +1031,21 @@ mod tests {
             ..Default::default()
         };
         let init = meta.init_params(&mut rng);
-        run_live(g, Algorithm::CbDybw, cfg, straggler, client, sources, eval, init, 1.0)
+        let opts = LiveOptions {
+            time_scale: 1.0,
+            watchdog: Duration::from_secs(watchdog_secs()),
+        };
+        run_live_opts(
+            g,
+            Algorithm::CbDybw,
+            cfg,
+            straggler,
+            client,
+            sources,
+            eval,
+            init,
+            &opts,
+        )
     }
 
     /// Run `scale_run` under a watchdog so a scheduling deadlock becomes
@@ -621,17 +1053,18 @@ mod tests {
     /// propagated as itself (not misreported as a deadlock).
     fn scale_run_watchdogged(lanes: usize) -> LiveOutcome {
         use std::sync::mpsc::RecvTimeoutError;
+        let secs = watchdog_secs();
         let (tx, rx) = channel();
         let h = std::thread::spawn(move || {
             let _ = tx.send(scale_run(lanes));
         });
-        match rx.recv_timeout(std::time::Duration::from_secs(180)) {
+        match rx.recv_timeout(Duration::from_secs(secs)) {
             Ok(out) => {
                 h.join().unwrap();
                 out.unwrap()
             }
             Err(RecvTimeoutError::Timeout) => {
-                panic!("live scale run ({lanes} lanes) deadlocked: no result within 180s")
+                panic!("live scale run ({lanes} lanes) deadlocked: no result within {secs}s")
             }
             Err(RecvTimeoutError::Disconnected) => {
                 // The run thread died without sending — surface its panic.
@@ -685,7 +1118,7 @@ mod tests {
                     max * 1e3
                 );
                 assert!(min >= 0.0 && min <= med && med <= max);
-                // acks ride a 300us poll loop + channel; anything near a
+                // acks ride the parked port + channel; anything near a
                 // second means the command path regressed
                 assert!(max < 5.0, "termination ack took {max:.2}s");
             }
@@ -719,7 +1152,7 @@ mod tests {
                 .map(AnyBatch::Dense)
                 .collect();
         // Shared call counter across lanes: the failure lands partway
-        // through iteration 3 of 6, exercising the `failed` DoneMsg branch.
+        // through iteration 3 of 6, exercising the `failed` Done branch.
         let calls = Arc::new(AtomicUsize::new(0));
         let meta_f = meta.clone();
         let factory: EngineFactory = Arc::new(move || {
@@ -747,11 +1180,25 @@ mod tests {
             ..Default::default()
         };
         let init = meta.init_params(&mut rng);
-        let err = run_live(g, Algorithm::CbFull, cfg, straggler, client, sources, eval, init, 1.0)
-            .unwrap_err();
+        let err = run_live(
+            g,
+            Algorithm::CbFull,
+            cfg,
+            straggler,
+            client,
+            sources,
+            eval,
+            init,
+            1.0,
+        )
+        .unwrap_err();
         assert!(
             err.to_string().contains("compute failed"),
             "expected a compute-failure error, got: {err}"
+        );
+        assert!(
+            matches!(err, LiveError::ComputeFailed { .. }),
+            "expected the typed variant, got: {err:?}"
         );
     }
 }

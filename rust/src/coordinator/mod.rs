@@ -10,10 +10,12 @@
 //!   fanned out over the per-worker engine pool (native or PJRT), virtual
 //!   compute times from the straggler model. Regenerates every figure
 //!   reproducibly from one seed, bit-identically at any pool size.
-//! - [`live`] — the wall-clock driver: one OS thread per worker, real
-//!   sleeps for stragglers, gradients computed in parallel through the
-//!   multi-lane compute server. Used by the e2e example to prove the
-//!   stack composes.
+//! - [`live`] — the wall-clock driver: REAL workers (one OS thread per
+//!   worker in-process, or one OS *process* per worker over the framed
+//!   TCP transport in [`comms`](crate::comms)), real sleeps for
+//!   stragglers, gradients in parallel through the multi-lane compute
+//!   server. The recorded history is a pure function of the seed, so
+//!   every transport produces bit-identical runs.
 //! - [`setup`] — config -> trainer wiring shared by CLI/experiments.
 
 pub mod algorithm;

@@ -237,6 +237,29 @@ impl Setup {
         )
     }
 
+    /// Build the pieces of a live (real-worker) run from the same
+    /// [`Self::build_parts`] substrate as the sim/DES trainers — same
+    /// RNG order, so a seed means the same graph/model/data in every
+    /// driver, and in every PROCESS: a `dybw worker` rebuilds identical
+    /// parts from the setup JSON the coordinator hands it at handshake,
+    /// which is what makes the TCP run bit-identical to the in-process
+    /// one.
+    pub fn build_live(&self) -> anyhow::Result<LiveParts> {
+        let p = self.build_parts()?;
+        let (server, client) =
+            crate::engine::server::ComputeServer::from_pool(std::sync::Arc::new(p.pool));
+        Ok(LiveParts {
+            graph: p.graph,
+            cfg: p.cfg,
+            straggler: p.straggler,
+            server,
+            client,
+            sources: p.sources,
+            eval_batches: p.eval_batches,
+            init: p.init,
+        })
+    }
+
     /// Build the asynchronous event-driven trainer (full-fidelity DES).
     ///
     /// Same model/data/pool wiring as [`Self::build_sim`] (one shared
@@ -388,6 +411,7 @@ impl Setup {
             .set("train_n", self.train_n.into())
             .set("test_n", self.test_n.into())
             .set("threads", self.threads.into())
+            .set("straggler", self.straggler_base.spec().into())
             .set("straggler_factor", self.straggler_factor.into())
             .set("force_straggler", self.force_straggler.into())
             .set("iters", self.train.iters.into())
@@ -483,6 +507,20 @@ impl Setup {
         }
         Ok(())
     }
+}
+
+/// Everything a live run needs (see [`Setup::build_live`]): the common
+/// substrate plus the engine pool wrapped in the compute server/client
+/// facade the live driver's workers share.
+pub struct LiveParts {
+    pub graph: crate::graph::Graph,
+    pub cfg: TrainConfig,
+    pub straggler: StragglerModel,
+    pub server: crate::engine::server::ComputeServer,
+    pub client: crate::engine::server::ComputeClient,
+    pub sources: Vec<Box<dyn BatchSource>>,
+    pub eval_batches: Vec<AnyBatch>,
+    pub init: Vec<f32>,
 }
 
 /// Everything [`Setup::build_parts`] assembles before a trainer exists:
@@ -587,6 +625,33 @@ mod tests {
         s2.apply_json(&j).unwrap();
         assert_eq!(s2.threads, 3);
         assert_eq!(s2.resolve_threads(), 3);
+    }
+
+    #[test]
+    fn straggler_base_json_roundtrip() {
+        let mut s = Setup::default();
+        s.straggler_base = Dist::Uniform { lo: 0.02, hi: 0.05 };
+        let j = s.to_json();
+        let mut s2 = Setup::default();
+        s2.apply_json(&j).unwrap();
+        assert_eq!(s2.straggler_base, s.straggler_base);
+    }
+
+    #[test]
+    fn build_live_parts_smoke() {
+        let mut s = Setup::default();
+        s.model = "lrm_d16_c10_b64".into();
+        s.workers = 3;
+        s.train_n = 1500;
+        s.test_n = 256;
+        s.threads = 2;
+        let p = s.build_live().unwrap();
+        assert_eq!(p.graph.n(), 3);
+        assert_eq!(p.sources.len(), 3);
+        assert_eq!(p.straggler.n(), 3);
+        assert_eq!(p.client.param_count(), p.init.len());
+        assert!(!p.eval_batches.is_empty());
+        assert_eq!(p.server.lanes(), 2);
     }
 
     #[test]

@@ -319,14 +319,9 @@ impl Scenario {
             );
             anyhow::ensure!(f.is_finite() && f > 0.0, "persistent factor must be positive");
         }
-        for &(a, b, f) in &self.slow_links {
-            anyhow::ensure!(
-                a < self.workers && b < self.workers,
-                "slow_links edge ({a},{b}) outside 0..{}",
-                self.workers
-            );
-            anyhow::ensure!(f.is_finite() && f >= 0.0, "slow link factor must be >= 0");
-        }
+        // typed slow_links checks (range, factor, duplicate edges) live
+        // on the model itself so every constructor path shares them
+        self.link_model().validate(self.workers)?;
         Ok(())
     }
 
@@ -680,6 +675,8 @@ mod tests {
             r#"{"persistent": [[1.5, 2.0]]}"#,
             r#"{"persistent": [[1, -2.0]]}"#,
             r#"{"slow_links": [[1, 2]]}"#,
+            r#"{"slow_links": [[0, 1, 2.0], [1, 0, 3.0]]}"#,
+            r#"{"slow_links": [[0, 1, -2.0]]}"#,
             r#"{"link_jitter": 5}"#,
             r#"{"link_jitter": "uniform:-0.01,0.01"}"#,
             r#"{"link_base": -0.002}"#,
@@ -711,6 +708,11 @@ mod tests {
         s.persistent.clear();
         s.slow_links = vec![(0, 99, 4.0)];
         assert!(s.run(&dir, None).unwrap_err().to_string().contains("slow_links"));
+        // duplicate edges (even direction-flipped) would compound their
+        // factors; they must be rejected, not applied twice
+        s.slow_links = vec![(0, 1, 4.0), (1, 0, 2.0)];
+        let err = s.run(&dir, None).unwrap_err().to_string();
+        assert!(err.contains("slow_links") && err.contains("more than once"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -71,9 +71,16 @@ impl ComputeServer {
         factory: EngineFactory,
         lanes: usize,
     ) -> anyhow::Result<(ComputeServer, ComputeClient)> {
-        let pool = Arc::new(EnginePool::new(factory, lanes)?);
+        Ok(Self::from_pool(Arc::new(EnginePool::new(factory, lanes)?)))
+    }
+
+    /// Wrap an existing pool in the server/client facade — what lets a
+    /// `Setup`-built [`EnginePool`] (data synthesis already fanned over
+    /// it) be handed straight to the live driver without spinning up a
+    /// second set of lanes.
+    pub fn from_pool(pool: Arc<EnginePool>) -> (ComputeServer, ComputeClient) {
         let client = ComputeClient { pool: Arc::clone(&pool) };
-        Ok((ComputeServer { pool }, client))
+        (ComputeServer { pool }, client)
     }
 
     pub fn param_count(&self) -> usize {
@@ -134,6 +141,19 @@ mod tests {
         let (loss, correct) = client.eval(&w, &batch()).unwrap();
         assert!((loss - (10f32).ln()).abs() < 1e-4);
         assert!(correct <= 16);
+    }
+
+    #[test]
+    fn from_pool_reuses_the_given_pool() {
+        let meta = ModelMeta::lrm(8, 10, 16);
+        let pool = crate::engine::EnginePool::new(native_factory(meta.clone()), 2).unwrap();
+        let (server, client) = ComputeServer::from_pool(std::sync::Arc::new(pool));
+        assert_eq!(server.lanes(), 2);
+        assert_eq!(client.param_count(), meta.param_count);
+        let w = meta.init_params(&mut Rng::new(4));
+        let mut g = vec![0.0f32; client.param_count()];
+        let loss = client.grad_into(&w, &batch(), &mut g).unwrap();
+        assert!(loss.is_finite() && g.iter().any(|&v| v != 0.0));
     }
 
     #[test]

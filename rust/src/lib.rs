@@ -38,6 +38,7 @@
     clippy::inherent_to_string
 )]
 
+pub mod comms;
 pub mod consensus;
 pub mod coordinator;
 pub mod data;

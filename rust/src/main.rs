@@ -7,6 +7,8 @@
 //! - `artifacts`— list and validate the AOT artifact set
 //! - `analyze`  — consensus-theory numbers (λ₂, β, mixing forecast)
 //! - `des`      — event-driven cluster simulator (async per-worker time)
+//! - `live`     — real-worker driver: in-process threads or a TCP leader
+//! - `worker`   — one worker process that joins a `live --listen` leader
 //! - `bench`    — perf-trajectory tooling (regression gate vs baseline)
 
 // Same rationale as the crate-level allows in lib.rs (config structs are
@@ -14,7 +16,11 @@
 #![allow(clippy::field_reassign_with_default)]
 
 use std::path::PathBuf;
+use std::time::Duration;
 
+use dybw::comms::transport::{connect_worker, ChannelTransport, TcpTransport};
+use dybw::comms::Transport;
+use dybw::coordinator::live::{self, LiveOptions};
 use dybw::coordinator::setup::{Backend, DatasetProfile, Setup};
 use dybw::coordinator::Algorithm;
 use dybw::data::partition::Partition;
@@ -54,6 +60,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "analyze" => cmd_analyze(rest),
         "trace" => cmd_trace(rest),
         "des" => cmd_des(rest),
+        "live" => cmd_live(rest),
+        "worker" => cmd_worker(rest),
         "bench" => cmd_bench(rest),
         "help" | "--help" | "-h" => {
             print_global_help();
@@ -77,6 +85,8 @@ fn print_global_help() {
          \x20 analyze    consensus-theory report (lambda2, beta, mixing forecast)\n\
          \x20 trace      record a straggler timing trace / A-B algorithms on one\n\
          \x20 des        event-driven simulator: async per-worker clocks, scenario sweeps\n\
+         \x20 live       real-worker driver: in-process threads, or a TCP leader (--listen)\n\
+         \x20 worker     one worker process: `dybw worker --connect <addr>`\n\
          \x20 bench      perf-trajectory gate: compare BENCH_speedup.json vs baseline\n\
          \n\
          Run `dybw <subcommand> --help` for options."
@@ -464,6 +474,179 @@ fn cmd_des(argv: &[String]) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown des action '{other}' (run | template)\n\n{}", cmd.usage()),
     }
+}
+
+fn cmd_live(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = setup_opts(Command::new(
+        "dybw live",
+        "real-worker driver: in-process threads, or a TCP leader",
+    ))
+    .opt("listen", "", "TCP listen address (e.g. 127.0.0.1:0); empty = in-process threads")
+    .opt("addr-file", "", "write the bound listen address to this file (launch scripts)")
+    .opt("time-scale", "1", "multiply injected straggler sleeps (0 = no real sleeping)")
+    .opt("watchdog", "180", "seconds without protocol progress before the leader aborts")
+    .opt("measure-links", "0", "Ping/Pong rounds before training; calibrates a DES LinkModel")
+    .opt("out-dir", "results", "where to write CSV/JSON histories")
+    .opt("prefix", "live", "history file name prefix");
+    let a = parse_or_exit(&cmd, argv)?;
+    let s = setup_from_args(&a)?;
+    let opts = LiveOptions {
+        time_scale: a.get_f64("time-scale")?,
+        watchdog: Duration::from_secs(a.get_u64("watchdog")?),
+    };
+    let measure_rounds = a.get_usize("measure-links")?;
+    let n = s.workers;
+    let mut parts = s.build_live()?;
+    let mode = if a.get("listen").is_empty() {
+        "in-process"
+    } else {
+        "tcp"
+    };
+    let algo = s.algo.name();
+    let lanes = parts.server.lanes();
+    println!("# dybw live: {algo} / {} / {n} workers / {lanes} pool lanes / {mode}", s.model);
+
+    let outcome = if a.get("listen").is_empty() {
+        let (mut transport, ports) = ChannelTransport::pair(n);
+        let sources = std::mem::take(&mut parts.sources);
+        let handles =
+            live::spawn_workers(&parts.cfg, &parts.client, sources, &parts.init, ports)?;
+        if measure_rounds > 0 {
+            run_measure(&mut transport, measure_rounds, &opts, parts.cfg.seed)?;
+        }
+        let result = live::drive(
+            &mut transport,
+            &parts.graph,
+            s.algo,
+            &parts.cfg,
+            &parts.straggler,
+            &parts.client,
+            &parts.eval_batches,
+            parts.init.clone(),
+            &opts,
+        );
+        // disconnect the ports so workers unblock even on a mid-run error
+        drop(transport);
+        for h in handles {
+            let _ = h.join();
+        }
+        result?
+    } else {
+        let listener = std::net::TcpListener::bind(a.get("listen"))?;
+        let addr = listener.local_addr()?;
+        let addr_file = a.get("addr-file");
+        if !addr_file.is_empty() {
+            std::fs::write(addr_file, addr.to_string())?;
+        }
+        println!("listening on {addr} — waiting for {n} x `dybw worker --connect {addr}`");
+        let setup_json = s.to_json().to_string_pretty();
+        let mut transport = TcpTransport::accept(&listener, n, &setup_json, opts.watchdog)?;
+        if measure_rounds > 0 {
+            run_measure(&mut transport, measure_rounds, &opts, parts.cfg.seed)?;
+        }
+        live::drive(
+            &mut transport,
+            &parts.graph,
+            s.algo,
+            &parts.cfg,
+            &parts.straggler,
+            &parts.client,
+            &parts.eval_batches,
+            parts.init.clone(),
+            &opts,
+        )?
+    };
+
+    let out_dir = PathBuf::from(a.get("out-dir"));
+    let prefix = a.get("prefix");
+    export::write_csv(&outcome.history, &out_dir, prefix)?;
+    export::write_json(&outcome.history, &out_dir, prefix)?;
+    print_history_summary(&outcome.history);
+    println!("  wall-clock          : {:.1}s", outcome.wall_seconds);
+    if let Some((min, med, max)) = outcome.term_ack_summary() {
+        println!(
+            "  term-ack latency    : min {:.1}ms / median {:.1}ms / max {:.1}ms",
+            min * 1e3,
+            med * 1e3,
+            max * 1e3
+        );
+    }
+    println!("(histories written under {})", out_dir.display());
+    Ok(())
+}
+
+/// Ping/Pong the fleet and print the calibrated DES link model.
+fn run_measure(
+    transport: &mut dyn Transport,
+    rounds: usize,
+    opts: &LiveOptions,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let m = live::measure_links(transport, rounds, opts)?;
+    println!("## link measurement ({rounds} rounds)\n{}", m.summary());
+    let model = m.calibrated(seed);
+    let jitter = match model.jitter {
+        Some(j) => format!(" + jitter {}", j.spec()),
+        None => ", no jitter".to_string(),
+    };
+    println!("calibrated LinkModel: base {:.3}ms{jitter}", model.base * 1e3);
+    Ok(())
+}
+
+fn cmd_worker(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new(
+        "dybw worker",
+        "one worker process: connects to a `dybw live --listen` leader",
+    )
+    .req("connect", "leader address, e.g. 127.0.0.1:4040")
+    .opt("worker-id", "", "claim a specific worker slot (empty = any free slot)")
+    .opt("retry-secs", "30", "keep retrying the initial connection for this long")
+    .opt("threads", "0", "engine-pool lanes override (0 = keep the leader's setting)");
+    let a = parse_or_exit(&cmd, argv)?;
+    let worker_id = a.get("worker-id");
+    let requested = if worker_id.is_empty() {
+        None
+    } else {
+        let id: u32 = worker_id
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--worker-id expects an integer, got '{worker_id}'"))?;
+        Some(id)
+    };
+    let addr = a.get("connect");
+    let timeout = Duration::from_secs(a.get_u64("retry-secs")?);
+    let (slot, setup_json, port) = connect_worker(addr, requested, timeout)?;
+    anyhow::ensure!(
+        !setup_json.trim().is_empty(),
+        "leader sent an empty setup — is it a `dybw live --listen` process?"
+    );
+    // Rebuild the leader's exact Setup; build_live then replays the same
+    // seeded construction, so this process holds bit-identical data/init.
+    let mut s = Setup::default();
+    let j = Json::parse(&setup_json).map_err(|e| anyhow::anyhow!("bad setup from leader: {e}"))?;
+    s.apply_json(&j)?;
+    let threads = a.get_usize("threads")?;
+    if threads > 0 {
+        s.threads = threads; // lane count never enters the math — safe to override
+    }
+    let id = slot as usize;
+    let mut parts = s.build_live()?;
+    anyhow::ensure!(
+        id < parts.sources.len(),
+        "leader assigned slot {id}, but the setup has only {} workers",
+        parts.sources.len()
+    );
+    let source = std::mem::take(&mut parts.sources)
+        .into_iter()
+        .nth(id)
+        .expect("bounds checked above");
+    println!(
+        "worker {id}: connected to {addr} ({} params, {} pool lanes)",
+        parts.client.param_count(),
+        parts.server.lanes()
+    );
+    live::worker_loop(id, parts.cfg, parts.client, source, parts.init, port)?;
+    println!("worker {id}: done");
+    Ok(())
 }
 
 fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {

@@ -11,6 +11,12 @@
 //! from a [`stream_seed`]-keyed throwaway RNG, not from a shared stream,
 //! so the sampled value never depends on the order events fire in — the
 //! property the DES determinism tests lean on.
+//!
+//! [`LinkMeasure`] closes the loop with reality: the live driver's
+//! `measure` mode (see `coordinator::live::measure_links`) records real
+//! per-worker latencies over the deployed transport, and
+//! [`LinkMeasure::calibrated`] fits them into a [`LinkModel`] the DES can
+//! replay — the model stops being an uncalibrated assumption.
 
 use crate::util::rng::{stream_seed, Rng};
 
@@ -19,6 +25,39 @@ use super::Dist;
 /// Tag for link-latency streams (decorrelates them from compute-time
 /// streams keyed on the same seed).
 const LINK_TAG: u64 = 0x4C49_4E4B; // "LINK"
+
+/// A rejected `slow_links` configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LinkConfigError {
+    /// An endpoint index does not name a worker.
+    EdgeOutOfRange { a: usize, b: usize, n: usize },
+    /// The same (undirected) edge appears more than once — factors would
+    /// silently compound.
+    DuplicateEdge { a: usize, b: usize },
+    /// A non-finite or negative slowdown factor.
+    BadFactor { a: usize, b: usize, factor: f64 },
+}
+
+impl std::fmt::Display for LinkConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            LinkConfigError::EdgeOutOfRange { a, b, n } => {
+                write!(f, "slow_links edge ({a},{b}) outside 0..{n}")
+            }
+            LinkConfigError::DuplicateEdge { a, b } => {
+                write!(f, "slow_links lists edge ({a},{b}) more than once")
+            }
+            LinkConfigError::BadFactor { a, b, factor } => {
+                write!(
+                    f,
+                    "slow_links factor {factor} for edge ({a},{b}) must be finite and >= 0"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for LinkConfigError {}
 
 /// Message latency over one edge: fixed propagation base + random jitter,
 /// optionally degraded per edge (heterogeneous links: a slow WAN hop, a
@@ -30,7 +69,8 @@ pub struct LinkModel {
     /// Additional random per-message latency.
     pub jitter: Option<Dist>,
     /// Per-edge multipliers `(a, b, factor)` applied to BOTH directions
-    /// of the (a, b) edge — heterogeneous-link injection.
+    /// of the (a, b) edge — heterogeneous-link injection. At most one
+    /// entry per undirected edge ([`Self::validate`] enforces this).
     pub slow_links: Vec<(usize, usize, f64)>,
     /// Seed of the jitter streams.
     pub seed: u64,
@@ -62,6 +102,27 @@ impl LinkModel {
         self
     }
 
+    /// Check the `slow_links` table against a network of `n` workers:
+    /// every endpoint must name a worker, every factor must be a sane
+    /// multiplier, and no (undirected) edge may appear twice — a
+    /// duplicate would otherwise apply its factor multiplicatively, and
+    /// an out-of-range index would silently never match.
+    pub fn validate(&self, n: usize) -> Result<(), LinkConfigError> {
+        let mut seen = std::collections::BTreeSet::new();
+        for &(a, b, factor) in &self.slow_links {
+            if a >= n || b >= n {
+                return Err(LinkConfigError::EdgeOutOfRange { a, b, n });
+            }
+            if !(factor.is_finite() && factor >= 0.0) {
+                return Err(LinkConfigError::BadFactor { a, b, factor });
+            }
+            if !seen.insert((a.min(b), a.max(b))) {
+                return Err(LinkConfigError::DuplicateEdge { a, b });
+            }
+        }
+        Ok(())
+    }
+
     /// Latency of worker `src`'s iteration-`k` message to `dst`.
     /// Pure in (src, dst, k); directions draw independent jitter.
     pub fn latency(&self, src: usize, dst: usize, k: usize) -> f64 {
@@ -78,9 +139,106 @@ impl LinkModel {
         for &(a, b, f) in &self.slow_links {
             if (src == a && dst == b) || (src == b && dst == a) {
                 l *= f;
+                // an edge has ONE factor; even if a duplicate entry
+                // slipped past validation it must not compound
+                break;
             }
         }
         l
+    }
+}
+
+/// Real per-worker latency samples recorded over a live transport
+/// (coordinator <-> worker one-way estimates, RTT/2).
+#[derive(Debug, Clone)]
+pub struct LinkMeasure {
+    samples: Vec<Vec<f64>>,
+}
+
+impl LinkMeasure {
+    pub fn new(n: usize) -> Self {
+        LinkMeasure {
+            samples: vec![Vec::new(); n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Record one one-way latency estimate (seconds) for `worker`.
+    pub fn record(&mut self, worker: usize, seconds: f64) {
+        self.samples[worker].push(seconds.max(0.0));
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> usize {
+        self.samples.iter().map(|s| s.len()).sum()
+    }
+
+    /// The global latency floor across all samples (0 when empty).
+    pub fn base(&self) -> f64 {
+        let min = self
+            .samples
+            .iter()
+            .flatten()
+            .copied()
+            .fold(f64::INFINITY, f64::min);
+        if min.is_finite() {
+            min
+        } else {
+            0.0
+        }
+    }
+
+    /// Fit a [`LinkModel`] to the measurements: the observed floor
+    /// becomes `base`, the mean excess over the floor becomes an
+    /// exponential jitter (the classic shifted-exponential link model).
+    /// With no samples (or no spread) the model is deterministic.
+    pub fn calibrated(&self, seed: u64) -> LinkModel {
+        if self.count() == 0 {
+            return LinkModel::zero();
+        }
+        let base = self.base();
+        let total = self.count() as f64;
+        let mean_excess =
+            self.samples.iter().flatten().map(|&s| s - base).sum::<f64>() / total;
+        let jitter = if mean_excess > 1e-9 {
+            Some(Dist::ShiftedExp {
+                base: 0.0,
+                rate: 1.0 / mean_excess,
+            })
+        } else {
+            None
+        };
+        LinkModel {
+            base,
+            jitter,
+            slow_links: Vec::new(),
+            seed,
+        }
+    }
+
+    /// Human-readable per-worker summary (count / min / mean / max, ms).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (j, s) in self.samples.iter().enumerate() {
+            if s.is_empty() {
+                out.push_str(&format!("  worker {j}: no samples\n"));
+                continue;
+            }
+            let min = s.iter().copied().fold(f64::INFINITY, f64::min);
+            let max = s.iter().copied().fold(0.0f64, f64::max);
+            let mean = s.iter().sum::<f64>() / s.len() as f64;
+            out.push_str(&format!(
+                "  worker {j}: {} samples, min {:.3}ms / mean {:.3}ms / max {:.3}ms\n",
+                s.len(),
+                min * 1e3,
+                mean * 1e3,
+                max * 1e3
+            ));
+        }
+        out
     }
 }
 
@@ -114,11 +272,117 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_slow_link_entries_apply_once() {
+        // the old code compounded duplicates: 0.01 * 5 * 5 = 0.25
+        let m = LinkModel::new(0.01, None, 0)
+            .with_slow_link(0, 1, 5.0)
+            .with_slow_link(0, 1, 5.0);
+        assert!((m.latency(0, 1, 3) - 0.05).abs() < 1e-12);
+        // same for a duplicate written in the reversed direction
+        let m = LinkModel::new(0.01, None, 0)
+            .with_slow_link(0, 1, 5.0)
+            .with_slow_link(1, 0, 3.0);
+        assert!((m.latency(0, 1, 3) - 0.05).abs() < 1e-12);
+        assert!((m.latency(1, 0, 3) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_duplicates() {
+        let m = LinkModel::new(0.01, None, 0)
+            .with_slow_link(0, 1, 5.0)
+            .with_slow_link(1, 0, 3.0);
+        assert_eq!(
+            m.validate(4),
+            Err(LinkConfigError::DuplicateEdge { a: 1, b: 0 })
+        );
+        let ok = LinkModel::new(0.01, None, 0)
+            .with_slow_link(0, 1, 5.0)
+            .with_slow_link(1, 2, 3.0);
+        assert_eq!(ok.validate(4), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_indices() {
+        let m = LinkModel::new(0.01, None, 0).with_slow_link(0, 7, 2.0);
+        assert_eq!(
+            m.validate(4),
+            Err(LinkConfigError::EdgeOutOfRange { a: 0, b: 7, n: 4 })
+        );
+        assert_eq!(m.validate(8), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_bad_factors() {
+        for bad in [f64::NAN, f64::INFINITY, -2.0] {
+            let m = LinkModel::new(0.01, None, 0).with_slow_link(0, 1, bad);
+            assert!(
+                matches!(m.validate(4), Err(LinkConfigError::BadFactor { .. })),
+                "factor {bad} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn config_errors_mention_slow_links() {
+        // scenario-load errors surface these through anyhow; grepping
+        // for "slow_links" in the message is the documented contract
+        for e in [
+            LinkConfigError::EdgeOutOfRange { a: 0, b: 9, n: 4 },
+            LinkConfigError::DuplicateEdge { a: 1, b: 2 },
+            LinkConfigError::BadFactor { a: 0, b: 1, factor: f64::NAN },
+        ] {
+            assert!(e.to_string().contains("slow_links"), "{e}");
+        }
+    }
+
+    #[test]
     fn jitter_mean_roughly_matches_dist() {
         let d = Dist::ShiftedExp { base: 0.001, rate: 200.0 };
         let m = LinkModel::new(0.0, Some(d), 3);
         let n = 20_000;
         let mean: f64 = (0..n).map(|k| m.latency(0, 1, k)).sum::<f64>() / n as f64;
         assert!((mean - d.mean()).abs() < 0.001, "mean {mean} want {}", d.mean());
+    }
+
+    #[test]
+    fn measure_calibrates_to_a_sane_model() {
+        let mut m = LinkMeasure::new(2);
+        for i in 0..50 {
+            m.record(0, 0.001 + (i % 5) as f64 * 1e-4);
+            m.record(1, 0.0012 + (i % 3) as f64 * 1e-4);
+        }
+        assert_eq!(m.count(), 100);
+        assert!((m.base() - 0.001).abs() < 1e-12);
+        let model = m.calibrated(11);
+        assert!((model.base - 0.001).abs() < 1e-12);
+        let d = model.jitter.expect("spread should produce jitter");
+        assert!(d.nonnegative());
+        // mean of the fitted model tracks the sample mean
+        let sample_mean = 0.001 + (0.0 + 1.0 + 2.0 + 3.0 + 4.0) / 5.0 * 1e-4 / 2.0
+            + (0.0002 + (0.0 + 1.0 + 2.0) / 3.0 * 1e-4) / 2.0;
+        assert!((model.base + d.mean() - sample_mean).abs() < 1e-5);
+        let s = m.summary();
+        assert!(s.contains("worker 0") && s.contains("worker 1"));
+    }
+
+    #[test]
+    fn empty_measure_is_the_zero_model() {
+        let m = LinkMeasure::new(3);
+        assert_eq!(m.count(), 0);
+        assert_eq!(m.base(), 0.0);
+        let model = m.calibrated(0);
+        assert_eq!(model.latency(0, 1, 0), 0.0);
+        assert!(model.jitter.is_none());
+    }
+
+    #[test]
+    fn constant_measure_has_no_jitter() {
+        let mut m = LinkMeasure::new(1);
+        for _ in 0..10 {
+            m.record(0, 0.002);
+        }
+        let model = m.calibrated(1);
+        assert!(model.jitter.is_none());
+        assert_eq!(model.latency(0, 0, 0), 0.002);
     }
 }
