@@ -15,8 +15,8 @@
 //!   pool/*         — 16-worker gradient fan-out vs engine-pool size
 //!   synth/*        — gaussian-mixture synthesis vs pool size (the
 //!                    bit-identical counter-based substream fan-out)
-//!   des/*          — event-driven simulator throughput (10k-worker ring,
-//!                    timing-only, events/second)
+//!   des/*          — event-driven simulator throughput (10k/100k/1M-worker
+//!                    rings, timing-only, events/second)
 //!
 //! end-to-end (figure-scale workloads, small iteration counts):
 //!   iter/cb-dybw, iter/cb-full — one full training iteration
@@ -127,41 +127,49 @@ fn main() {
     bench_end_to_end(&filter);
 }
 
-/// The event-driven core at scale: a 10,000-worker ring under the dybw
-/// wait policy, timing-only. Measures raw throughput of the event queue
-/// + per-worker state machines; compute/link times are pure functions of
-/// their coordinates, so memory stays flat at any scale.
+/// The event-driven core at scale: dybw-policy rings, timing-only.
+/// Measures raw throughput of the calendar event queue + the CSR/bitset
+/// per-worker state machines; compute/link times are pure functions of
+/// their coordinates, so memory stays flat in the iteration count. The
+/// 10k case is the quick smoke number, 100k matches the scale whose
+/// events/sec `figure speedup` measures and CI gates, and the 1M case
+/// (one sample, few iterations) exercises the regime the calendar
+/// queue exists for.
 fn bench_des(filter: &Option<String>) {
     use dybw::des::{ClusterSim, ComputeTimes, NoHooks, WaitPolicy};
     use dybw::straggler::link::LinkModel;
-    let name = "des/events-10k-workers";
-    if !wants(filter, name) {
-        return;
+    let cases: [(&str, usize, usize, usize); 3] = [
+        ("des/events-10k-workers", 10_000, 10, 5),
+        ("des/events-100k-workers", 100_000, 5, 3),
+        ("des/events-1m-workers", 1_000_000, 3, 1),
+    ];
+    for (name, n, iters, samples) in cases {
+        if !wants(filter, name) {
+            continue;
+        }
+        let times = ComputeTimes::PerWorker {
+            dist: Dist::ShiftedExp { base: 0.08, rate: 25.0 },
+            scale: vec![1.0; n],
+            seed: 11,
+        };
+        let link = LinkModel::new(0.002, Some(Dist::ShiftedExp { base: 0.0, rate: 800.0 }), 12);
+        let mut events = 0u64;
+        let mut r = bench(name, samples, || {
+            let mut sim = ClusterSim::new(
+                topology::ring(n),
+                WaitPolicy::Dybw,
+                iters,
+                times.clone(),
+                link.clone(),
+            )
+            .unwrap();
+            let stats = sim.run(&mut NoHooks).unwrap();
+            events = stats.events;
+            std::hint::black_box(stats.makespan);
+        });
+        r.throughput = Some(format!("{:.2}M events/s", events as f64 * 1e3 / r.mean_ns));
+        print_result(&r);
     }
-    let n = 10_000;
-    let iters = 10;
-    let times = ComputeTimes::PerWorker {
-        dist: Dist::ShiftedExp { base: 0.08, rate: 25.0 },
-        scale: vec![1.0; n],
-        seed: 11,
-    };
-    let link = LinkModel::new(0.002, Some(Dist::ShiftedExp { base: 0.0, rate: 800.0 }), 12);
-    let mut events = 0u64;
-    let mut r = bench(name, 5, || {
-        let mut sim = ClusterSim::new(
-            topology::ring(n),
-            WaitPolicy::Dybw,
-            iters,
-            times.clone(),
-            link.clone(),
-        )
-        .unwrap();
-        let stats = sim.run(&mut NoHooks).unwrap();
-        events = stats.events;
-        std::hint::black_box(stats.makespan);
-    });
-    r.throughput = Some(format!("{:.2}M events/s", events as f64 * 1e3 / r.mean_ns));
-    print_result(&r);
 }
 
 /// The vecmath micro-kernels: `dot` (4 independent f64 accumulation

@@ -773,6 +773,8 @@ mod tests {
             transient_factor: 6.0,
             force_one_straggler: true,
             outages: Vec::new(),
+            diurnal_amp: 0.0,
+            diurnal_period: 0.0,
         };
         let cfg = TrainConfig {
             iters,
@@ -1022,6 +1024,8 @@ mod tests {
             transient_factor: 1.0,
             force_one_straggler: false,
             outages: Vec::new(),
+            diurnal_amp: 0.0,
+            diurnal_period: 0.0,
         };
         let cfg = TrainConfig {
             iters: 6,
@@ -1171,6 +1175,8 @@ mod tests {
             transient_factor: 1.0,
             force_one_straggler: false,
             outages: Vec::new(),
+            diurnal_amp: 0.0,
+            diurnal_period: 0.0,
         };
         let cfg = TrainConfig {
             iters: 6,

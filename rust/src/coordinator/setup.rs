@@ -190,19 +190,7 @@ impl Setup {
 
         let mut rng = Rng::new(self.train.seed);
         let graph = topology::build(self.topology, self.workers, &mut rng);
-
-        let mut straggler = StragglerModel {
-            base: self.straggler_base,
-            worker_scale: (0..self.workers).map(|_| rng.uniform_in(0.8, 1.25)).collect(),
-            persistent: vec![1.0; self.workers],
-            transient_prob: 0.15,
-            transient_factor: self.straggler_factor,
-            force_one_straggler: self.force_straggler,
-            outages: Vec::new(),
-        };
-        if !self.force_straggler && self.straggler_factor <= 1.0 {
-            straggler.transient_prob = 0.0;
-        }
+        let straggler = self.straggler_model(&mut rng);
 
         // The pool comes up first so data synthesis can fan over its
         // lanes (pool construction consumes no RNG, so the stream
@@ -312,6 +300,49 @@ impl Setup {
             p.init,
             &self.model,
         )
+    }
+
+    /// The straggler model this setup trains under, with per-worker pace
+    /// scales drawn from `rng` (consumes exactly `workers` draws — the
+    /// stream position is part of [`Self::build_parts`]'s contract).
+    fn straggler_model(&self, rng: &mut Rng) -> StragglerModel {
+        let mut straggler = StragglerModel {
+            base: self.straggler_base,
+            worker_scale: (0..self.workers).map(|_| rng.uniform_in(0.8, 1.25)).collect(),
+            persistent: vec![1.0; self.workers],
+            transient_prob: 0.15,
+            transient_factor: self.straggler_factor,
+            force_one_straggler: self.force_straggler,
+            outages: Vec::new(),
+            diurnal_amp: 0.0,
+            diurnal_period: 0.0,
+        };
+        if !self.force_straggler && self.straggler_factor <= 1.0 {
+            straggler.transient_prob = 0.0;
+        }
+        straggler
+    }
+
+    /// Record one compute-time realisation for this setup's straggler
+    /// model — the shareable half of a DES build.
+    ///
+    /// Drawn from a dedicated seed-derived stream (model scales, then
+    /// the trace), so it is a pure function of (seed, workers, straggler
+    /// knobs) and cheap: no data synthesis, no engine pool. Harnesses
+    /// that sweep wait policies over one scenario should record this
+    /// once and hand it to every [`Self::build_des_with_times`] cell, so
+    /// the policies A/B on literally the same realisation instead of
+    /// each cell re-recording its own. Note it is NOT the realisation
+    /// [`Self::build_des`] records internally (that one continues the
+    /// shared build-parts stream) — pick one source per comparison.
+    pub fn record_des_trace(&self) -> std::sync::Arc<crate::straggler::trace::Trace> {
+        let mut rng = Rng::new(self.train.seed);
+        let model = self.straggler_model(&mut rng);
+        std::sync::Arc::new(crate::straggler::trace::Trace::record(
+            &model,
+            self.train.iters.max(1),
+            &mut rng,
+        ))
     }
 
     /// Synthesize + partition data, build per-worker sources + eval set.
@@ -652,6 +683,24 @@ mod tests {
         assert_eq!(p.client.param_count(), p.init.len());
         assert!(!p.eval_batches.is_empty());
         assert_eq!(p.server.lanes(), 2);
+    }
+
+    #[test]
+    fn record_des_trace_is_pure_in_the_seed() {
+        let mut s = Setup::default();
+        s.workers = 4;
+        s.train.iters = 7;
+        let a = s.record_des_trace();
+        let b = s.record_des_trace();
+        assert_eq!(a.workers, 4);
+        assert_eq!(a.len(), 7);
+        assert!(a.times.iter().flatten().all(|t| t.is_finite() && *t > 0.0));
+        // pure function of the setup: same seed, same realisation
+        assert_eq!(a.times, b.times);
+        // different seed, different realisation
+        s.train.seed ^= 0x9e37;
+        let c = s.record_des_trace();
+        assert_ne!(a.times, c.times);
     }
 
     #[test]

@@ -17,12 +17,27 @@
 //! hangs real `EnginePool` gradient jobs and the eq. (6) averaging on
 //! the hooks without changing one line of the schedule.
 //!
+//! Scale: per-worker state lives in one flat [`WorkerBank`] — CSR
+//! adjacency arenas, bitsets for arrived/established flags, and
+//! structure-of-arrays scalars — roughly 75 bytes per ring worker and
+//! zero per-worker heap allocations, so a 10^6-worker scenario fits in
+//! well under a gigabyte. The event loop drains all events sharing a
+//! timestamp at once ([`EventQueue::drain_simultaneous`]) so full
+//! fidelity can batch simultaneous gradient jobs through
+//! `EnginePool::grad_many` ([`DesHooks::on_compute_batch`]); each event
+//! is still *processed* one at a time in exact `(time, seq)` order, so
+//! the schedule — and the event log — is bit-identical to the unbatched
+//! loop. The event log itself can stream to any writer ([`LogSink`])
+//! instead of accumulating strings in memory.
+//!
 //! Determinism: event times are pure functions of (worker, k) / (src,
 //! dst, k), the queue breaks ties by insertion order, and per-worker
 //! mailboxes are plain vectors — two same-seed runs process the same
 //! events in the same order and serialise identical event logs
 //! (byte-for-byte, asserted by tests and the CI `des-smoke` job).
 
+use std::collections::HashMap;
+use std::io::Write;
 use std::sync::Arc;
 
 use crate::graph::Graph;
@@ -32,7 +47,7 @@ use crate::straggler::Dist;
 use crate::util::rng::{stream_seed, Rng};
 
 use super::core::{Event, EventQueue, Time};
-use super::policy::{WaitPolicy, WorkerWait};
+use super::policy::WaitPolicy;
 
 /// Tag for compute-time streams (see `stream_seed`).
 const COMPUTE_TAG: u64 = 0x434F_4D50; // "COMP"
@@ -108,6 +123,23 @@ pub struct MixInfo<'a> {
 /// Simulation callbacks. Timing-only mode uses the no-op defaults; full
 /// fidelity implements real gradient + averaging math on top.
 pub trait DesHooks {
+    /// Opt in to [`Self::on_compute_batch`] notifications.
+    fn wants_compute_batch(&self) -> bool {
+        false
+    }
+
+    /// All `(worker, k)` compute completions sharing one virtual
+    /// timestamp, in event order, delivered BEFORE their individual
+    /// [`Self::on_compute_done`] calls. The per-event calls still fire;
+    /// this is a prefetch window: the workers' states are untouched by
+    /// any event earlier in the batch (a worker's mix always follows its
+    /// own compute), so independent per-worker work — gradient jobs in
+    /// full fidelity — can fan out together (`EnginePool::grad_many`)
+    /// with results bit-identical to the one-at-a-time path.
+    fn on_compute_batch(&mut self, _items: &[(usize, usize)]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
     /// Worker `i` finished computing iteration `k`'s local update (its
     /// estimate is broadcast immediately after this returns).
     fn on_compute_done(&mut self, _worker: usize, _k: usize) -> anyhow::Result<()> {
@@ -123,6 +155,17 @@ pub trait DesHooks {
 /// Timing-only: no side effects beyond the recorded statistics.
 pub struct NoHooks;
 impl DesHooks for NoHooks {}
+
+/// Where processed-event log lines go.
+///
+/// `Memory` is the historical behaviour (one `String` per event —
+/// convenient for tests and byte-identity diffs); `Writer` streams each
+/// line as it happens, so exporting the event log of a 10^5+-worker run
+/// costs no memory proportional to the event count.
+pub enum LogSink {
+    Memory(Vec<String>),
+    Writer(Box<dyn Write + Send>),
+}
 
 /// Aggregate outcome of one simulated run.
 #[derive(Debug, Clone)]
@@ -165,28 +208,278 @@ impl ClusterStats {
     }
 }
 
-struct WorkerState {
-    /// Sorted global neighbour ids.
-    nbrs: Vec<usize>,
-    /// Current iteration (1-based); `iters + 1` once finished.
-    k: usize,
-    compute_done: bool,
-    /// When the current iteration's own compute completed.
-    compute_done_at: Time,
-    /// arrived[j] ⇔ nbrs[j]'s current-iteration estimate is here.
-    arrived: Vec<bool>,
-    /// Early arrivals per neighbour: iterations > k already received
-    /// (a fast neighbour can run ahead — the lag is unbounded in
-    /// principle, so this buffers rather than asserts).
-    pending: Vec<Vec<usize>>,
-    wait: WorkerWait,
-    last_mix_at: Time,
-    finish_at: Time,
+/// A plain bitset over `0..bits`.
+struct BitSet {
+    words: Vec<u64>,
 }
 
-impl WorkerState {
-    fn local_idx(&self, global: usize) -> Option<usize> {
-        self.nbrs.binary_search(&global).ok()
+impl BitSet {
+    fn new(bits: usize) -> Self {
+        BitSet {
+            words: vec![0u64; bits.div_ceil(64)],
+        }
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> bool {
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize) {
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    fn clear(&mut self, i: usize) {
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+}
+
+const NO_PENDING: u32 = u32::MAX;
+
+/// Flat per-worker simulation state: CSR adjacency + bitsets + SoA
+/// scalars, shared by all workers. Replaces the old
+/// one-struct-per-worker layout (whose `Vec<Vec<usize>>` pending lists,
+/// `Vec<bool>` arrival flags, and per-worker `WorkerWait` cost ~8 heap
+/// allocations and ~400 bytes per ring worker) with ~75 bytes per ring
+/// worker and zero per-worker allocations — the difference between a
+/// 10^6-worker scenario fitting in memory or not.
+///
+/// The wait-policy semantics (including the DTUR epoch rule and the
+/// 2·deg coverage audit) are re-implemented here over the flat arrays;
+/// [`WorkerWait`](super::policy::WorkerWait) remains the reference
+/// implementation, and a property test below drives both on identical
+/// arrival sequences and asserts equal decisions.
+struct WorkerBank {
+    policy: WaitPolicy,
+    /// CSR row offsets into `nbrs` (`n + 1` entries).
+    offsets: Vec<u32>,
+    /// Neighbour arena, ascending within each worker's segment.
+    nbrs: Vec<u32>,
+    // --- per worker (structure of arrays) ---
+    /// Current iteration (1-based); `iters + 1` once finished.
+    k: Vec<u32>,
+    compute_done: BitSet,
+    compute_done_at: Vec<Time>,
+    last_mix_at: Vec<Time>,
+    finish_at: Vec<Time>,
+    /// Arrived estimates for the current iteration (count of set bits in
+    /// the worker's `arrived` slot range — O(1) ready checks).
+    arrived_count: Vec<u32>,
+    /// Dybw: arrived estimates over not-yet-established links.
+    fresh_count: Vec<u32>,
+    /// Full/static: arrivals needed before the worker may mix.
+    needed: Vec<u32>,
+    /// Dybw: iterations completed in the current DTUR epoch.
+    epoch_pos: Vec<u32>,
+    /// Commits so far (the coverage audit's clock).
+    mixes: Vec<u32>,
+    // --- per slot (CSR arena order) ---
+    arrived: BitSet,
+    /// Dybw: links counted this epoch (the LocalDtur `established` set).
+    established: BitSet,
+    /// Coverage audit: mix index at which the slot was last counted.
+    last_counted: Vec<u32>,
+    /// One buffered early arrival per slot (`NO_PENDING` = none); the
+    /// rare slot holding several buffers the rest in `pending_more`
+    /// (lookup-only map — iteration order never observed).
+    pending_first: Vec<u32>,
+    pending_more: HashMap<u32, Vec<u32>>,
+    coverage_violations: u64,
+}
+
+impl WorkerBank {
+    fn new(graph: &Graph, policy: WaitPolicy) -> Self {
+        let n = graph.n();
+        let total_slots: usize = (0..n).map(|i| graph.degree(i)).sum();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut nbrs: Vec<u32> = Vec::with_capacity(total_slots);
+        offsets.push(0u32);
+        for i in 0..n {
+            // Graph adjacency iterates ascending (BTreeSet), so each CSR
+            // segment is sorted by construction — binary search below.
+            nbrs.extend(graph.neighbors(i).map(|j| j as u32));
+            offsets.push(nbrs.len() as u32);
+        }
+        let slots = nbrs.len();
+        let needed = (0..n)
+            .map(|i| {
+                let deg = (offsets[i + 1] - offsets[i]) as usize;
+                let need = match policy {
+                    WaitPolicy::Full => deg,
+                    // b clamped to deg − 1: a worker always waits for at
+                    // least one estimate (see WorkerWait::ready).
+                    WaitPolicy::Static { b } => deg.saturating_sub(b).max(1),
+                    WaitPolicy::Dybw => 0,
+                };
+                need as u32
+            })
+            .collect();
+        WorkerBank {
+            policy,
+            offsets,
+            nbrs,
+            k: vec![1; n],
+            compute_done: BitSet::new(n),
+            compute_done_at: vec![0.0; n],
+            last_mix_at: vec![0.0; n],
+            finish_at: vec![f64::NAN; n],
+            arrived_count: vec![0; n],
+            fresh_count: vec![0; n],
+            needed,
+            epoch_pos: vec![0; n],
+            mixes: vec![0; n],
+            arrived: BitSet::new(slots),
+            established: BitSet::new(slots),
+            last_counted: vec![0; slots],
+            pending_first: vec![NO_PENDING; slots],
+            pending_more: HashMap::new(),
+            coverage_violations: 0,
+        }
+    }
+
+    #[inline]
+    fn slot_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.offsets[i] as usize..self.offsets[i + 1] as usize
+    }
+
+    #[inline]
+    fn deg(&self, i: usize) -> usize {
+        (self.offsets[i + 1] - self.offsets[i]) as usize
+    }
+
+    /// The slot of global neighbour `src` in worker `i`'s segment.
+    fn local_slot(&self, i: usize, src: usize) -> Option<usize> {
+        let r = self.slot_range(i);
+        self.nbrs[r.clone()]
+            .binary_search(&(src as u32))
+            .ok()
+            .map(|off| r.start + off)
+    }
+
+    /// Record the current-iteration arrival in `slot` of worker `i`.
+    fn on_arrival(&mut self, i: usize, slot: usize) {
+        if !self.arrived.get(slot) {
+            self.arrived.set(slot);
+            self.arrived_count[i] += 1;
+            if !self.established.get(slot) {
+                self.fresh_count[i] += 1;
+            }
+        }
+    }
+
+    /// May worker `i` mix now? O(1) from the maintained counts.
+    #[inline]
+    fn ready(&self, i: usize) -> bool {
+        match self.policy {
+            WaitPolicy::Full | WaitPolicy::Static { .. } => {
+                self.arrived_count[i] >= self.needed[i]
+            }
+            WaitPolicy::Dybw => self.fresh_count[i] > 0,
+        }
+    }
+
+    /// Commit worker `i`'s iteration with the arrived set as the counted
+    /// set; advances the DTUR epoch and coverage audit. Returns b_i(k).
+    fn commit(&mut self, i: usize) -> usize {
+        debug_assert!(self.ready(i));
+        let deg = self.deg(i);
+        let range = self.slot_range(i);
+        self.mixes[i] += 1;
+        let mix = self.mixes[i];
+        let window = 2 * deg as u32;
+        let mut established_count = 0usize;
+        for slot in range.clone() {
+            let a = self.arrived.get(slot);
+            // coverage audit (all policies): starved neighbours re-arm
+            // after each violation, so sustained starvation counts once
+            // per 2·deg window (see WorkerWait::commit).
+            if a {
+                self.last_counted[slot] = mix;
+            } else if mix - self.last_counted[slot] >= window {
+                self.coverage_violations += 1;
+                self.last_counted[slot] = mix;
+            }
+            if matches!(self.policy, WaitPolicy::Dybw) {
+                if a {
+                    self.established.set(slot);
+                }
+                if self.established.get(slot) {
+                    established_count += 1;
+                }
+            }
+        }
+        if matches!(self.policy, WaitPolicy::Dybw) {
+            self.epoch_pos[i] += 1;
+            // epoch ends after d_i = deg iterations, or early once every
+            // link established (LocalDtur::commit)
+            if self.epoch_pos[i] >= deg as u32 || established_count == deg {
+                for slot in range {
+                    self.established.clear(slot);
+                }
+                self.epoch_pos[i] = 0;
+            }
+        }
+        deg - self.arrived_count[i] as usize
+    }
+
+    /// Clear worker `i`'s arrival state for iteration `next_k` and move
+    /// any buffered early arrival for `next_k` in.
+    fn advance(&mut self, i: usize, next_k: usize) {
+        let mut arrived_count = 0u32;
+        let mut fresh_count = 0u32;
+        for slot in self.slot_range(i) {
+            self.arrived.clear(slot);
+            if self.pending_take(slot, next_k as u32) {
+                self.arrived.set(slot);
+                arrived_count += 1;
+                if !self.established.get(slot) {
+                    fresh_count += 1;
+                }
+            }
+        }
+        self.arrived_count[i] = arrived_count;
+        self.fresh_count[i] = fresh_count;
+    }
+
+    /// Buffer an early arrival (iteration `k` > the worker's current).
+    fn pending_push(&mut self, slot: usize, k: usize) {
+        let k = k as u32;
+        if self.pending_first[slot] == NO_PENDING {
+            self.pending_first[slot] = k;
+        } else {
+            self.pending_more.entry(slot as u32).or_default().push(k);
+        }
+    }
+
+    /// Remove the buffered arrival for iteration `k` of `slot`, if any.
+    /// Iterations are distinct per slot (each (src, k) is broadcast
+    /// once), so membership is all that matters.
+    fn pending_take(&mut self, slot: usize, k: u32) -> bool {
+        if self.pending_first[slot] == k {
+            self.pending_first[slot] = match self.pending_more.get_mut(&(slot as u32)) {
+                Some(more) => {
+                    let next = more.pop().unwrap_or(NO_PENDING);
+                    if more.is_empty() {
+                        self.pending_more.remove(&(slot as u32));
+                    }
+                    next
+                }
+                None => NO_PENDING,
+            };
+            return true;
+        }
+        if let Some(more) = self.pending_more.get_mut(&(slot as u32)) {
+            if let Some(pos) = more.iter().position(|&pk| pk == k) {
+                more.swap_remove(pos);
+                if more.is_empty() {
+                    self.pending_more.remove(&(slot as u32));
+                }
+                return true;
+            }
+        }
+        false
     }
 }
 
@@ -198,7 +491,7 @@ pub struct ClusterSim {
     times: ComputeTimes,
     link: LinkModel,
     /// When set, every processed event is appended as one log line.
-    log: Option<Vec<String>>,
+    log: Option<LogSink>,
 }
 
 impl ClusterSim {
@@ -212,6 +505,10 @@ impl ClusterSim {
         anyhow::ensure!(graph.n() >= 2, "need >= 2 workers");
         anyhow::ensure!(graph.is_connected(), "graph must be connected");
         anyhow::ensure!(iters >= 1, "need >= 1 iteration");
+        anyhow::ensure!(
+            graph.n() < u32::MAX as usize && iters < u32::MAX as usize,
+            "worker count and iteration count must fit u32"
+        );
         anyhow::ensure!(
             times.workers() == graph.n(),
             "compute-time source has {} workers, graph {}",
@@ -228,15 +525,42 @@ impl ClusterSim {
         })
     }
 
-    /// Record one line per processed event (for byte-for-byte
+    /// Record one line per processed event in memory (for byte-for-byte
     /// reproducibility diffs). Costs memory ∝ events; off by default.
     pub fn enable_log(&mut self) {
-        self.log = Some(Vec::new());
+        self.log = Some(LogSink::Memory(Vec::new()));
     }
 
-    /// The recorded event log (empty unless [`Self::enable_log`]).
+    /// Stream one line per processed event to `sink` as it happens —
+    /// constant memory, for exporting logs of 10^5+-worker runs.
+    pub fn stream_log(&mut self, sink: Box<dyn Write + Send>) {
+        self.log = Some(LogSink::Writer(sink));
+    }
+
+    /// The recorded in-memory event log (empty unless [`Self::enable_log`]).
     pub fn take_log(&mut self) -> Vec<String> {
-        self.log.take().unwrap_or_default()
+        match self.log.take() {
+            Some(LogSink::Memory(v)) => v,
+            other => {
+                self.log = other;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Recover the streaming sink set by [`Self::stream_log`] (flushed),
+    /// e.g. to hand the same writer to the next policy's run.
+    pub fn take_sink(&mut self) -> anyhow::Result<Option<Box<dyn Write + Send>>> {
+        match self.log.take() {
+            Some(LogSink::Writer(mut w)) => {
+                w.flush()?;
+                Ok(Some(w))
+            }
+            other => {
+                self.log = other;
+                Ok(None)
+            }
+        }
     }
 
     /// Run the full simulation: every worker completes `iters`
@@ -245,23 +569,7 @@ impl ClusterSim {
         let n = self.graph.n();
         let iters = self.iters;
         let mut q = EventQueue::new();
-        let mut workers: Vec<WorkerState> = (0..n)
-            .map(|i| {
-                let nbrs: Vec<usize> = self.graph.neighbors(i).collect();
-                let deg = nbrs.len();
-                WorkerState {
-                    nbrs,
-                    k: 1,
-                    compute_done: false,
-                    compute_done_at: 0.0,
-                    arrived: vec![false; deg],
-                    pending: vec![Vec::new(); deg],
-                    wait: WorkerWait::new(self.policy, deg),
-                    last_mix_at: 0.0,
-                    finish_at: f64::NAN,
-                }
-            })
-            .collect();
+        let mut bank = WorkerBank::new(&self.graph, self.policy);
 
         // global-frontier bookkeeping: done_at[c] = workers with exactly
         // c completed iterations; min/max completed track the spread.
@@ -280,112 +588,140 @@ impl ClusterSim {
         let mut finished = 0usize;
 
         for i in 0..n {
-            q.schedule(self.times.time(i, 1), Event::ComputeDone { worker: i, k: 1 });
+            q.schedule(self.times.time(i, 1), Event::ComputeDone { worker: i, k: 1 })?;
         }
 
-        while let Some((seq, now, ev)) = q.pop() {
-            if let Some(log) = self.log.as_mut() {
-                log.push(ev.log_line(seq, now));
-            }
-            // which worker might become ready to mix because of this event
-            let candidate = match ev {
-                Event::ComputeDone { worker, k } => {
-                    let w = &mut workers[worker];
-                    debug_assert_eq!(w.k, k);
-                    w.compute_done = true;
-                    w.compute_done_at = now;
-                    hooks.on_compute_done(worker, k)?;
-                    // broadcast the estimate to every neighbour
-                    for idx in 0..workers[worker].nbrs.len() {
-                        let dst = workers[worker].nbrs[idx];
-                        let at = now + self.link.latency(worker, dst, k);
-                        q.schedule(at, Event::MsgArrive { dst, src: worker, k });
-                        messages_sent += 1;
-                    }
-                    Some(worker)
+        // MixInfo scratch (reused across mixes; filled per mix in O(deg),
+        // which the commit/audit pass costs anyway)
+        let mut nbr_scratch: Vec<usize> = Vec::new();
+        let mut counted_scratch: Vec<bool> = Vec::new();
+        // same-timestamp event batches (reused)
+        let mut batch: Vec<(u64, Time, Event)> = Vec::new();
+        let mut compute_batch: Vec<(usize, usize)> = Vec::new();
+        let wants_batch = hooks.wants_compute_batch();
+
+        while q.drain_simultaneous(&mut batch) > 0 {
+            if wants_batch {
+                // hand all simultaneous compute completions to the hook
+                // first (a gradient-prefetch window; see the trait docs),
+                // then process each event exactly as the one-at-a-time
+                // loop would.
+                compute_batch.clear();
+                compute_batch.extend(batch.iter().filter_map(|&(_, _, ev)| match ev {
+                    Event::ComputeDone { worker, k } => Some((worker, k)),
+                    Event::MsgArrive { .. } => None,
+                }));
+                if compute_batch.len() > 1 {
+                    hooks.on_compute_batch(&compute_batch)?;
                 }
-                Event::MsgArrive { dst, src, k } => {
-                    let w = &mut workers[dst];
-                    if w.k > iters || k < w.k {
-                        // receiver finished, or the sender was a backup
-                        // for an iteration the receiver already mixed
-                        stale += 1;
-                        None
-                    } else {
-                        let idx = w
-                            .local_idx(src)
-                            .ok_or_else(|| anyhow::anyhow!("message over non-edge {src}->{dst}"))?;
-                        if k > w.k {
-                            w.pending[idx].push(k);
+            }
+            for &(seq, now, ev) in &batch {
+                match &mut self.log {
+                    Some(LogSink::Memory(v)) => v.push(ev.log_line(seq, now)),
+                    Some(LogSink::Writer(w)) => {
+                        w.write_all(ev.log_line(seq, now).as_bytes())?;
+                        w.write_all(b"\n")?;
+                    }
+                    None => {}
+                }
+                // which worker might become ready to mix because of this event
+                let candidate = match ev {
+                    Event::ComputeDone { worker, k } => {
+                        debug_assert_eq!(bank.k[worker] as usize, k);
+                        bank.compute_done.set(worker);
+                        bank.compute_done_at[worker] = now;
+                        hooks.on_compute_done(worker, k)?;
+                        // broadcast the estimate to every neighbour
+                        for slot in bank.slot_range(worker) {
+                            let dst = bank.nbrs[slot] as usize;
+                            let at = now + self.link.latency(worker, dst, k);
+                            q.schedule(at, Event::MsgArrive { dst, src: worker, k })?;
+                            messages_sent += 1;
+                        }
+                        Some(worker)
+                    }
+                    Event::MsgArrive { dst, src, k } => {
+                        let wk = bank.k[dst] as usize;
+                        if wk > iters || k < wk {
+                            // receiver finished, or the sender was a backup
+                            // for an iteration the receiver already mixed
+                            stale += 1;
                             None
                         } else {
-                            w.arrived[idx] = true;
-                            Some(dst)
+                            let slot = bank.local_slot(dst, src).ok_or_else(|| {
+                                anyhow::anyhow!("message over non-edge {src}->{dst}")
+                            })?;
+                            if k > wk {
+                                bank.pending_push(slot, k);
+                                None
+                            } else {
+                                bank.on_arrival(dst, slot);
+                                Some(dst)
+                            }
                         }
                     }
+                };
+
+                // mix if the wait rule is now satisfied
+                let Some(i) = candidate else { continue };
+                if !bank.compute_done.get(i) || !bank.ready(i) {
+                    continue;
                 }
-            };
-
-            // mix if the wait rule is now satisfied
-            let Some(i) = candidate else { continue };
-            let w = &mut workers[i];
-            if !w.compute_done || !w.wait.ready(&w.arrived) {
-                continue;
-            }
-            let k = w.k;
-            let backup = w.wait.commit(&w.arrived);
-            let iter_duration = now - w.last_mix_at;
-            let wait = now - w.compute_done_at;
-            dur_sum += iter_duration;
-            wait_sum += wait;
-            backup_sum += backup as u64;
-
-            // frontier update: worker completed iteration k
-            done_at[k - 1] -= 1;
-            done_at[k] += 1;
-            while min_done < iters && done_at[min_done] == 0 {
-                min_done += 1;
-            }
-            max_done = max_done.max(k);
-            max_lag = max_lag.max(max_done - min_done);
-
-            let info = MixInfo {
-                worker: i,
-                k,
-                now,
-                iter_duration,
-                wait,
-                nbrs: &w.nbrs,
-                counted: &w.arrived,
-                backup,
-                min_done,
-            };
-            hooks.on_mix(&info)?;
-
-            // advance to iteration k+1 (or finish)
-            let w = &mut workers[i];
-            w.k += 1;
-            w.compute_done = false;
-            w.last_mix_at = now;
-            if w.k > iters {
-                w.finish_at = now;
-                finished += 1;
-                continue;
-            }
-            let next_k = w.k;
-            for (slot, pend) in w.arrived.iter_mut().zip(w.pending.iter_mut()) {
-                *slot = false;
-                // move any early arrival for the new iteration in
-                let before = pend.len();
-                pend.retain(|&pk| pk != next_k);
-                if pend.len() != before {
-                    *slot = true;
+                let k = bank.k[i] as usize;
+                nbr_scratch.clear();
+                counted_scratch.clear();
+                for slot in bank.slot_range(i) {
+                    nbr_scratch.push(bank.nbrs[slot] as usize);
+                    counted_scratch.push(bank.arrived.get(slot));
                 }
+                let backup = bank.commit(i);
+                let iter_duration = now - bank.last_mix_at[i];
+                let wait = now - bank.compute_done_at[i];
+                dur_sum += iter_duration;
+                wait_sum += wait;
+                backup_sum += backup as u64;
+
+                // frontier update: worker completed iteration k
+                done_at[k - 1] -= 1;
+                done_at[k] += 1;
+                while min_done < iters && done_at[min_done] == 0 {
+                    min_done += 1;
+                }
+                max_done = max_done.max(k);
+                max_lag = max_lag.max(max_done - min_done);
+
+                let info = MixInfo {
+                    worker: i,
+                    k,
+                    now,
+                    iter_duration,
+                    wait,
+                    nbrs: &nbr_scratch,
+                    counted: &counted_scratch,
+                    backup,
+                    min_done,
+                };
+                hooks.on_mix(&info)?;
+
+                // advance to iteration k+1 (or finish)
+                bank.k[i] += 1;
+                bank.compute_done.clear(i);
+                bank.last_mix_at[i] = now;
+                if bank.k[i] as usize > iters {
+                    bank.finish_at[i] = now;
+                    finished += 1;
+                    continue;
+                }
+                let next_k = bank.k[i] as usize;
+                bank.advance(i, next_k);
+                q.schedule(
+                    now + self.times.time(i, next_k),
+                    Event::ComputeDone { worker: i, k: next_k },
+                )?;
             }
-            q.schedule(
-                now + self.times.time(i, next_k),
-                Event::ComputeDone { worker: i, k: next_k },
-            );
+        }
+        if let Some(LogSink::Writer(w)) = &mut self.log {
+            w.flush()?;
         }
 
         anyhow::ensure!(
@@ -398,16 +734,16 @@ impl ClusterSim {
             policy: self.policy.name(),
             workers: n,
             iters,
-            makespan: workers.iter().map(|w| w.finish_at).fold(0.0, f64::max),
+            makespan: bank.finish_at.iter().copied().fold(0.0, f64::max),
             mean_iter_duration: dur_sum / total_iters,
             mean_backup: backup_sum as f64 / total_iters,
             mean_wait: wait_sum / total_iters,
             messages_sent,
             stale_messages: stale,
             events: q.processed(),
-            coverage_violations: workers.iter().map(|w| w.wait.coverage_violations).sum(),
+            coverage_violations: bank.coverage_violations,
             max_lag,
-            worker_finish: workers.iter().map(|w| w.finish_at).collect(),
+            worker_finish: bank.finish_at.clone(),
         })
     }
 }
@@ -415,8 +751,10 @@ impl ClusterSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::des::policy::WorkerWait;
     use crate::graph::topology;
     use crate::straggler::StragglerModel;
+    use std::sync::Mutex;
 
     fn ring_trace(n: usize, iters: usize, seed: u64) -> Arc<Trace> {
         let mut rng = Rng::new(seed);
@@ -497,6 +835,54 @@ mod tests {
         for (a, b) in s1.worker_finish.iter().zip(&s2.worker_finish) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    /// A `Write` that appends into a shared buffer — lets the test keep
+    /// a handle to bytes written through the boxed sink.
+    #[derive(Clone)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn streamed_log_is_byte_identical_to_memory_log() {
+        let trace = ring_trace(20, 8, 13);
+        let link = LinkModel::new(0.001, Some(Dist::ShiftedExp { base: 0.0, rate: 600.0 }), 4);
+        let build = || {
+            ClusterSim::new(
+                topology::ring(20),
+                WaitPolicy::Dybw,
+                8,
+                ComputeTimes::Replay(trace.clone()),
+                link.clone(),
+            )
+            .unwrap()
+        };
+        let mut mem_sim = build();
+        mem_sim.enable_log();
+        mem_sim.run(&mut NoHooks).unwrap();
+        let mut expect: String = String::new();
+        for line in mem_sim.take_log() {
+            expect.push_str(&line);
+            expect.push('\n');
+        }
+
+        let buf = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+        let mut stream_sim = build();
+        stream_sim.stream_log(Box::new(buf.clone()));
+        stream_sim.run(&mut NoHooks).unwrap();
+        let sink = stream_sim.take_sink().unwrap();
+        assert!(sink.is_some(), "sink must be recoverable after the run");
+        assert!(stream_sim.take_log().is_empty(), "no in-memory log when streaming");
+        let got = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        assert_eq!(got, expect, "streamed event log diverged from in-memory log");
     }
 
     #[test]
@@ -582,5 +968,77 @@ mod tests {
         assert!(ClusterSim::new(g.clone(), WaitPolicy::Full, 5, times, LinkModel::zero()).is_err());
         let times = ComputeTimes::homogeneous(4, Dist::Deterministic { base: 0.1 }, 0);
         assert!(ClusterSim::new(g, WaitPolicy::Full, 0, times, LinkModel::zero()).is_err());
+    }
+
+    /// Property: the flattened `WorkerBank` wait/commit/audit semantics
+    /// match the reference `WorkerWait` on identical arrival sequences,
+    /// for every policy. Seeded sweep (no proptest crate offline) with
+    /// the failing seed in the assert message.
+    #[test]
+    fn worker_bank_matches_reference_worker_wait() {
+        for case in 0..150u64 {
+            let mut rng = Rng::new(0xBA4C + case);
+            let deg = 2 + (rng.next_u64() % 5) as usize; // 2..=6
+            let policy = match rng.next_u64() % 3 {
+                0 => WaitPolicy::Full,
+                1 => WaitPolicy::Static { b: (rng.next_u64() % (deg as u64 + 2)) as usize },
+                _ => WaitPolicy::Dybw,
+            };
+            // complete graph on deg+1 nodes gives worker 0 degree `deg`
+            let g = topology::complete(deg + 1);
+            let mut bank = WorkerBank::new(&g, policy);
+            let mut re = WorkerWait::new(policy, deg);
+            let mut arrived = vec![false; deg];
+            let mut commits = 0usize;
+            while commits < 6 * deg {
+                // grow the arrival set one estimate at a time
+                let j = (rng.next_u64() as usize) % deg;
+                if !arrived[j] {
+                    arrived[j] = true;
+                    // worker 0's neighbours are 1..=deg, so slot j maps
+                    // to neighbour j+1
+                    bank.on_arrival(0, bank.local_slot(0, j + 1).unwrap());
+                }
+                assert_eq!(
+                    bank.ready(0),
+                    re.ready(&arrived),
+                    "case {case}, policy {}: ready diverged on {arrived:?}",
+                    policy.name()
+                );
+                if bank.ready(0) && rng.next_u64() % 2 == 0 {
+                    let b_bank = bank.commit(0);
+                    let b_re = re.commit(&arrived);
+                    assert_eq!(b_bank, b_re, "case {case}: backup count diverged");
+                    bank.advance(0, commits + 2); // no pending: clears arrivals
+                    arrived.iter_mut().for_each(|a| *a = false);
+                    commits += 1;
+                }
+            }
+            assert_eq!(
+                bank.coverage_violations,
+                re.coverage_violations,
+                "case {case}, policy {}: audit diverged",
+                policy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn pending_buffer_handles_deep_early_arrivals() {
+        // a slot can buffer several future iterations (fast neighbour
+        // far ahead); membership semantics must survive the overflow map
+        let g = topology::ring(4);
+        let mut bank = WorkerBank::new(&g, WaitPolicy::Full);
+        let slot = bank.local_slot(0, 1).unwrap();
+        for k in [5usize, 3, 9, 7] {
+            bank.pending_push(slot, k);
+        }
+        assert!(!bank.pending_take(slot, 4));
+        assert!(bank.pending_take(slot, 3));
+        assert!(!bank.pending_take(slot, 3), "taken entries stay gone");
+        assert!(bank.pending_take(slot, 5));
+        assert!(bank.pending_take(slot, 9));
+        assert!(bank.pending_take(slot, 7));
+        assert!(!bank.pending_take(slot, 7));
     }
 }

@@ -38,6 +38,9 @@ pub struct DesOutcome {
     pub stats: ClusterStats,
     /// Per-event log lines (only when event logging was requested).
     pub event_log: Vec<String>,
+    /// Gradient jobs that ran through the batched `grad_many` path
+    /// (same-timestamp compute completions fanned out together).
+    pub batched_jobs: u64,
 }
 
 /// The asynchronous trainer.
@@ -53,6 +56,7 @@ pub struct DesTrainer {
     params: Vec<Vec<f32>>,
     model_name: String,
     log_events: bool,
+    batch_compute: bool,
 }
 
 impl DesTrainer {
@@ -88,12 +92,21 @@ impl DesTrainer {
             params: vec![initial; n],
             model_name: model_name.to_string(),
             log_events: false,
+            batch_compute: true,
         })
     }
 
     /// Record the per-event log (reproducibility diffs; costs memory).
     pub fn log_events(&mut self) {
         self.log_events = true;
+    }
+
+    /// Enable/disable batching same-timestamp gradient jobs through
+    /// `EnginePool::grad_many` (on by default). The unbatched path is
+    /// kept for the bit-identity assertions: both must produce the same
+    /// event log, history, and final parameters.
+    pub fn set_batch_compute(&mut self, on: bool) {
+        self.batch_compute = on;
     }
 
     /// Replace the compute-time source (e.g. a CSV trace replay).
@@ -156,6 +169,10 @@ impl DesTrainer {
             outboxes: &outboxes,
             history: &mut history,
             next_milestone: self.cfg.eval_every.max(1),
+            batch_compute: self.batch_compute,
+            precomputed: vec![false; n],
+            batch_grads: Vec::new(),
+            batched_jobs: 0,
         };
         let mut sim = ClusterSim::new(
             self.graph.clone(),
@@ -168,10 +185,12 @@ impl DesTrainer {
             sim.enable_log();
         }
         let stats = sim.run(&mut hooks)?;
+        let batched_jobs = hooks.batched_jobs;
         Ok(DesOutcome {
             history,
             stats,
             event_log: sim.take_log(),
+            batched_jobs,
         })
     }
 }
@@ -225,18 +244,63 @@ struct FullHooks<'a> {
     outboxes: &'a [Vec<(usize, usize)>],
     history: &'a mut RunHistory,
     next_milestone: usize,
+    batch_compute: bool,
+    /// precomputed[i] ⇔ tilde[i]/last_loss[i] already hold iteration
+    /// k's eq. (5) update (computed by the batch hook).
+    precomputed: Vec<bool>,
+    batch_grads: Vec<Vec<f32>>,
+    batched_jobs: u64,
 }
 
 impl DesHooks for FullHooks<'_> {
-    fn on_compute_done(&mut self, i: usize, k: usize) -> anyhow::Result<()> {
-        let batch = self.sources[i].next_train(self.cfg.batch_size);
-        let loss = self
+    fn wants_compute_batch(&self) -> bool {
+        self.batch_compute
+    }
+
+    fn on_compute_batch(&mut self, items: &[(usize, usize)]) -> anyhow::Result<()> {
+        // Fan all simultaneous gradient jobs out together. Safe because
+        // no event earlier in the batch can touch these workers' params
+        // or batch streams (a worker's mix always follows its own
+        // compute event), and bit-identical because each lane job is the
+        // exact same pure computation grad_one would run; batch draws
+        // happen in event order, just as the per-event path would.
+        let dim = self.grad_buf.len();
+        while self.batch_grads.len() < items.len() {
+            self.batch_grads.push(vec![0.0f32; dim]);
+        }
+        let batches: Vec<AnyBatch> = items
+            .iter()
+            .map(|&(i, _)| self.sources[i].next_train(self.cfg.batch_size))
+            .collect();
+        let ws: Vec<&[f32]> = items.iter().map(|&(i, _)| self.params[i].as_slice()).collect();
+        let losses = self
             .pool
-            .grad_one(&self.params[i], &batch, &mut self.grad_buf)?;
-        self.last_loss[i] = loss;
-        let eta = self.cfg.lr(k) as f32;
-        self.tilde[i].copy_from_slice(&self.params[i]);
-        vecmath::axpy(&mut self.tilde[i], -eta, &self.grad_buf);
+            .grad_many(&ws, &batches, &mut self.batch_grads[..items.len()])?;
+        for (j, &(i, k)) in items.iter().enumerate() {
+            self.last_loss[i] = losses[j];
+            let eta = self.cfg.lr(k) as f32;
+            self.tilde[i].copy_from_slice(&self.params[i]);
+            vecmath::axpy(&mut self.tilde[i], -eta, &self.batch_grads[j]);
+            self.precomputed[i] = true;
+        }
+        self.batched_jobs += items.len() as u64;
+        Ok(())
+    }
+
+    fn on_compute_done(&mut self, i: usize, k: usize) -> anyhow::Result<()> {
+        if self.precomputed[i] {
+            // the batch hook already ran eq. (5) for this event
+            self.precomputed[i] = false;
+        } else {
+            let batch = self.sources[i].next_train(self.cfg.batch_size);
+            let loss = self
+                .pool
+                .grad_one(&self.params[i], &batch, &mut self.grad_buf)?;
+            self.last_loss[i] = loss;
+            let eta = self.cfg.lr(k) as f32;
+            self.tilde[i].copy_from_slice(&self.params[i]);
+            vecmath::axpy(&mut self.tilde[i], -eta, &self.grad_buf);
+        }
         let estimate = Arc::new(self.tilde[i].clone());
         for &(dst, slot) in &self.outboxes[i] {
             if !self.finished[dst] {
@@ -316,6 +380,17 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn build(policy: WaitPolicy, iters: usize, seed: u64, trace: Arc<Trace>) -> DesTrainer {
+        let link = LinkModel::new(0.002, Some(Dist::ShiftedExp { base: 0.0, rate: 500.0 }), seed);
+        build_custom(policy, iters, seed, ComputeTimes::Replay(trace), link)
+    }
+
+    fn build_custom(
+        policy: WaitPolicy,
+        iters: usize,
+        seed: u64,
+        times: ComputeTimes,
+        link: LinkModel,
+    ) -> DesTrainer {
         let n = 6;
         let mut rng = Rng::new(seed);
         let g = topology::ring(n);
@@ -344,12 +419,11 @@ mod tests {
             seed,
             ..Default::default()
         };
-        let link = LinkModel::new(0.002, Some(Dist::ShiftedExp { base: 0.0, rate: 500.0 }), seed);
         DesTrainer::new(
             g,
             policy,
             cfg,
-            ComputeTimes::Replay(trace),
+            times,
             link,
             pool,
             sources,
@@ -447,6 +521,38 @@ mod tests {
         let tb = ob.history.time_to_test_loss(target);
         assert!(ta.is_some() && tb.is_some(), "target {target} unreached");
         assert!(oa.history.total_time() < ob.history.total_time());
+    }
+
+    #[test]
+    fn batched_grad_many_is_bit_identical_to_unbatched() {
+        // Deterministic compute times + zero link latency force mass
+        // timestamp ties, so the batch hook actually fans simultaneous
+        // gradients through grad_many — and the run must still be bit
+        // for bit the run the one-at-a-time path produces: same event
+        // log, same history, same final parameters, for every policy.
+        for policy in [WaitPolicy::Dybw, WaitPolicy::Full, WaitPolicy::Static { b: 1 }] {
+            let run = |batched: bool| {
+                let times =
+                    ComputeTimes::homogeneous(6, Dist::Deterministic { base: 0.1 }, 0);
+                let mut t = build_custom(policy, 20, 11, times, LinkModel::zero());
+                t.log_events();
+                t.set_batch_compute(batched);
+                let out = t.run().unwrap();
+                let avg = t.average_params();
+                (out, avg)
+            };
+            let (ob, pb) = run(true);
+            let (ou, pu) = run(false);
+            assert!(ob.batched_jobs > 0, "{}: batching never engaged", policy.name());
+            assert_eq!(ou.batched_jobs, 0);
+            assert_eq!(ob.event_log, ou.event_log, "{}: event logs diverged", policy.name());
+            assert!(!ob.event_log.is_empty());
+            assert!(ob.history.bits_eq(&ou.history), "{}: histories diverged", policy.name());
+            assert_eq!(pb.len(), pu.len());
+            for (a, b) in pb.iter().zip(&pu) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: final params diverged", policy.name());
+            }
+        }
     }
 
     #[test]

@@ -9,15 +9,16 @@
 //! instant different workers sit at different iterations. This layer
 //! simulates exactly that regime on a deterministic discrete-event core:
 //!
-//! - [`core`] — virtual clock + binary-heap event queue with stable
-//!   tie-breaking (the determinism substrate).
+//! - [`core`] — virtual clock + calendar event queue with stable
+//!   tie-breaking (the determinism substrate; a reference binary-heap
+//!   backend remains as the equivalence oracle).
 //! - [`policy`] — per-worker wait rules: `full`, `static:b`, and `dybw`
 //!   (the per-worker [`LocalDtur`](crate::coordinator::dtur::LocalDtur)
 //!   driven by locally observed arrival times).
 //! - [`cluster`] — the timing-only simulator: per-worker state machines
 //!   over the straggler substrate plus a per-link latency model
-//!   ([`straggler::link`](crate::straggler::link)); scales a scenario
-//!   sweep to thousands of workers in milliseconds.
+//!   ([`straggler::link`](crate::straggler::link)); CSR/bitset worker
+//!   state scales a scenario sweep to 10^5–10^6 workers.
 //! - [`full`] — full fidelity: the same schedule drives real
 //!   [`EnginePool`](crate::engine::EnginePool) gradient jobs,
 //!   bit-reproducible under a fixed seed.
@@ -30,8 +31,8 @@ pub mod full;
 pub mod policy;
 pub mod scenario;
 
-pub use self::core::{Event, EventQueue, Time};
-pub use cluster::{ClusterSim, ClusterStats, ComputeTimes, DesHooks, MixInfo, NoHooks};
+pub use self::core::{Event, EventQueue, ScheduleError, Time};
+pub use cluster::{ClusterSim, ClusterStats, ComputeTimes, DesHooks, LogSink, MixInfo, NoHooks};
 pub use full::{DesOutcome, DesTrainer};
 pub use policy::{WaitPolicy, WorkerWait};
 pub use scenario::{Fidelity, Scenario};

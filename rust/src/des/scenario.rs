@@ -7,8 +7,9 @@
 //! replays it under every policy, so the sweep is a variance-free A/B on
 //! the exact same realisation — the strongest form of the paper's
 //! comparisons, now on the asynchronous timeline. Timing-only scenarios
-//! scale to thousands of workers in milliseconds; full-fidelity
-//! scenarios run real gradients through [`Setup`]'s model/data wiring.
+//! scale to 10^5–10^6 workers (event log streamed to disk, never
+//! buffered); full-fidelity scenarios run real gradients through
+//! [`Setup`]'s model/data wiring.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -67,6 +68,11 @@ pub struct Scenario {
     pub hetero: f64,
     pub transient_prob: f64,
     pub transient_factor: f64,
+    /// Diurnal swing amplitude in [0, 1): compute times are multiplied
+    /// by 1 + amp·sin(2πk/period). 0 disables.
+    pub diurnal_amp: f64,
+    /// Diurnal period in iterations (must be > 0 when amp > 0).
+    pub diurnal_period: f64,
     /// Persistent stragglers: (worker, factor).
     pub persistent: Vec<(usize, f64)>,
     pub link_base: f64,
@@ -100,6 +106,8 @@ impl Default for Scenario {
             hetero: 0.2,
             transient_prob: 0.15,
             transient_factor: 4.0,
+            diurnal_amp: 0.0,
+            diurnal_period: 0.0,
             persistent: Vec::new(),
             link_base: 0.002,
             link_jitter: Some(Dist::ShiftedExp { base: 0.0, rate: 800.0 }),
@@ -128,8 +136,9 @@ impl Scenario {
     pub fn from_json(j: &Json) -> anyhow::Result<Scenario> {
         const KNOWN: &[&str] = &[
             "name", "workers", "topology", "iters", "seed", "fidelity", "policies", "compute",
-            "hetero", "transient_prob", "transient_factor", "persistent", "link_base",
-            "link_jitter", "slow_links", "trace_file", "model", "train_n", "test_n", "eval_every",
+            "hetero", "transient_prob", "transient_factor", "diurnal_amp", "diurnal_period",
+            "persistent", "link_base", "link_jitter", "slow_links", "trace_file", "model",
+            "train_n", "test_n", "eval_every",
         ];
         let Json::Obj(map) = j else {
             anyhow::bail!("scenario must be a JSON object");
@@ -210,6 +219,12 @@ impl Scenario {
         }
         if let Some(v) = field(j, "transient_factor", Json::as_f64, "a number")? {
             s.transient_factor = v;
+        }
+        if let Some(v) = field(j, "diurnal_amp", Json::as_f64, "a number")? {
+            s.diurnal_amp = v;
+        }
+        if let Some(v) = field(j, "diurnal_period", Json::as_f64, "a number")? {
+            s.diurnal_period = v;
         }
         if let Some(arr) = field(j, "persistent", Json::as_arr, "an array of pairs")? {
             s.persistent = parse_pairs(arr, "persistent")?
@@ -296,6 +311,18 @@ impl Scenario {
             "transient_factor must be positive"
         );
         anyhow::ensure!(
+            (0.0..1.0).contains(&self.diurnal_amp),
+            "diurnal_amp must be in [0, 1) — amplitudes >= 1 make compute times non-positive"
+        );
+        anyhow::ensure!(
+            self.diurnal_period.is_finite() && self.diurnal_period >= 0.0,
+            "diurnal_period must be >= 0"
+        );
+        anyhow::ensure!(
+            self.diurnal_amp == 0.0 || self.diurnal_period > 0.0,
+            "diurnal_amp > 0 needs diurnal_period > 0"
+        );
+        anyhow::ensure!(
             self.link_base.is_finite() && self.link_base >= 0.0,
             "link_base must be >= 0"
         );
@@ -343,6 +370,8 @@ impl Scenario {
             .set("hetero", self.hetero.into())
             .set("transient_prob", self.transient_prob.into())
             .set("transient_factor", self.transient_factor.into())
+            .set("diurnal_amp", self.diurnal_amp.into())
+            .set("diurnal_period", self.diurnal_period.into())
             .set(
                 "persistent",
                 Json::Arr(
@@ -393,6 +422,8 @@ impl Scenario {
             transient_factor: self.transient_factor,
             force_one_straggler: self.transient_prob > 0.0,
             outages: Vec::new(),
+            diurnal_amp: self.diurnal_amp,
+            diurnal_period: self.diurnal_period,
         };
         for &(w, f) in &self.persistent {
             m.persistent[w] = f;
@@ -461,7 +492,20 @@ impl Scenario {
             "max-lag",
             "p50 fin"
         ));
-        let mut log_out = String::new();
+        // the event log streams straight to the file (never buffered in
+        // memory — at 10^6 workers a Vec<String> log would dwarf the
+        // simulator state); the one BufWriter is threaded through every
+        // policy's run via stream_log/take_sink
+        let mut sink: Option<Box<dyn std::io::Write + Send>> = match export_events {
+            Some(p) => {
+                if let Some(dir) = p.parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                let f = std::fs::File::create(p)?;
+                Some(Box::new(std::io::BufWriter::new(f)))
+            }
+            None => None,
+        };
         let mut summary = Json::obj();
         for &policy in &self.policies {
             let mut sim = ClusterSim::new(
@@ -471,20 +515,20 @@ impl Scenario {
                 ComputeTimes::Replay(trace.clone()),
                 link.clone(),
             )?;
-            if export_events.is_some() {
-                sim.enable_log();
+            if let Some(mut w) = sink.take() {
+                use std::io::Write;
+                writeln!(w, "# scenario={} policy={}", self.name, policy.name())?;
+                sim.stream_log(w);
             }
             let stats = sim.run(&mut NoHooks)?;
             out.push_str(&render_stats_row(&stats));
             if export_events.is_some() {
-                log_out.push_str(&format!("# scenario={} policy={}\n", self.name, policy.name()));
-                for line in sim.take_log() {
-                    log_out.push_str(&line);
-                    log_out.push('\n');
-                }
+                sink = sim.take_sink()?;
+                anyhow::ensure!(sink.is_some(), "event-log sink lost during run");
             }
             summary.set(&policy.name(), stats_json(&stats));
         }
+        drop(sink); // BufWriter flushed by take_sink; close before returning
         out.push_str(
             "(cover-miss > 0 ⇒ the policy left a neighbour unheard for 2·deg straight\n \
              iterations — the Assumption-2 connectivity cb-DyBW keeps for free)\n",
@@ -494,12 +538,6 @@ impl Scenario {
             out_dir.join(format!("des.{}.summary.json", self.name)),
             summary.to_string_pretty(),
         )?;
-        if let Some(p) = export_events {
-            if let Some(dir) = p.parent() {
-                std::fs::create_dir_all(dir)?;
-            }
-            std::fs::write(p, log_out)?;
-        }
         Ok(out)
     }
 
@@ -684,6 +722,12 @@ mod tests {
             r#"{"compute": "uniform:-0.05,0.2"}"#,
             r#"{"transient_prob": 1.5}"#,
             r#"{"transient_factor": 0}"#,
+            r#"{"diurnal_amp": 1.0}"#,
+            r#"{"diurnal_amp": -0.1}"#,
+            r#"{"diurnal_amp": 0.3}"#,
+            r#"{"diurnal_amp": 0.3, "diurnal_period": 0}"#,
+            r#"{"diurnal_period": -2}"#,
+            r#"{"topology": "racks:0"}"#,
             r#"{"workers": "250"}"#,
             r#"{"wrokers": 6}"#,
             r#"{"seed": 1.5}"#,
@@ -693,6 +737,29 @@ mod tests {
             let j = Json::parse(bad).unwrap();
             assert!(Scenario::from_json(&j).is_err(), "accepted: {bad}");
         }
+    }
+
+    #[test]
+    fn heavy_tail_diurnal_racks_scenario_runs_and_roundtrips() {
+        let dir = std::env::temp_dir().join("dybw_des_scn_divers");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Scenario::default();
+        s.name = "divers".into();
+        s.workers = 60;
+        s.iters = 6;
+        s.topology = Topology::Racks(5);
+        s.compute = crate::straggler::Dist::Pareto { xm: 0.05, alpha: 2.5 };
+        s.diurnal_amp = 0.4;
+        s.diurnal_period = 3.0;
+        let out = s.run(&dir, None).unwrap();
+        assert!(out.contains("racks:5"), "{out}");
+        assert!(out.contains("dybw"));
+        let s2 = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(s2.topology, Topology::Racks(5));
+        assert_eq!(s2.diurnal_amp, 0.4);
+        assert_eq!(s2.diurnal_period, 3.0);
+        assert_eq!(s2.compute, s.compute);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

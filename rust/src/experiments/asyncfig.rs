@@ -97,22 +97,32 @@ fn scale_panel(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<Stri
 }
 
 /// Panel 2: full-fidelity time-vs-loss, cb-DyBW vs full barrier.
+///
+/// One realisation per (scenario, seed): the compute-time trace is
+/// recorded once up front and shared by `Arc` across the policy cells
+/// on the [`super::run_cells`] scheduler, so dybw-vs-full is an A/B on
+/// literally the same realisation — previously each cell re-recorded
+/// an identical trace from scratch inside its own build.
 fn loss_panel(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Result<String> {
     let iters = if quick { 40 } else { 200 };
+    let mut shared = super::cell_setup(base);
+    shared.model = "lrm_d64_c10_b256".into();
+    shared.train.iters = iters;
+    shared.train.eval_every = (iters / 20).max(1);
+    let trace = shared.record_des_trace();
     let jobs: Vec<_> = [WaitPolicy::Dybw, WaitPolicy::Full]
         .into_iter()
         .map(|policy| {
-            let mut s = super::cell_setup(base);
-            s.model = "lrm_d64_c10_b256".into();
-            s.train.iters = iters;
-            s.train.eval_every = (iters / 20).max(1);
+            let s = shared.clone();
+            let trace = trace.clone();
             move || -> anyhow::Result<RunHistory> {
                 let link = LinkModel::new(
                     0.002,
                     Some(Dist::ShiftedExp { base: 0.0, rate: 800.0 }),
                     s.train.seed,
                 );
-                let mut trainer = s.build_des(policy, link)?;
+                let mut trainer =
+                    s.build_des_with_times(policy, link, Some(ComputeTimes::Replay(trace)))?;
                 let o = trainer.run()?;
                 export::write_csv(&o.history, out_dir, &format!("async.{}", policy.name()))?;
                 Ok(o.history)

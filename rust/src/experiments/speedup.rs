@@ -11,10 +11,11 @@
 //! [`EnginePool`](crate::engine::EnginePool) refactor: identical 16-worker
 //! 2NN training (bit-identical histories), sequential (1 lane) vs pooled
 //! (4 lanes), plus the eq. (6) mixing phase in isolation (sequential loop
-//! vs pooled row fan-out at figure-scale dimension), all reported as
-//! wall-clock seconds and written to `BENCH_speedup.json` so CI can track
-//! the perf trajectory. [`gate`] turns that JSON into a regression gate
-//! against a committed baseline.
+//! vs pooled row fan-out at figure-scale dimension), plus the DES event
+//! core's throughput (events/second on a 100k-worker timing-only ring),
+//! all reported as wall-clock seconds and written to
+//! `BENCH_speedup.json` so CI can track the perf trajectory. [`gate`]
+//! turns that JSON into a regression gate against a committed baseline.
 
 use std::path::Path;
 use std::time::Instant;
@@ -158,6 +159,9 @@ pub fn pool_wall_clock(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Res
     let dp = data_phase(base, quick)?;
     out.push_str(&dp.report());
 
+    let des = des_phase(quick)?;
+    out.push_str(&des.report());
+
     let mut j = Json::obj();
     j.set("bench", "pool_speedup".into())
         .set("model", s.model.as_str().into())
@@ -193,7 +197,12 @@ pub fn pool_wall_clock(base: &Setup, out_dir: &Path, quick: bool) -> anyhow::Res
         .set("data_prefetch_off_seconds", dp.pf_off_s.into())
         .set("data_prefetch_on_seconds", dp.pf_on_s.into())
         .set("data_prefetch_speedup", dp.pf_speedup().into())
-        .set("data_prefetch_bit_identical", dp.pf_identical.into());
+        .set("data_prefetch_bit_identical", dp.pf_identical.into())
+        .set("des_workers", des.workers.into())
+        .set("des_iters", des.iters.into())
+        .set("des_events", (des.events as i64).into())
+        .set("des_seconds", des.seconds.into())
+        .set("des_mevents_per_sec", des.mevents_per_sec().into());
     std::fs::create_dir_all(out_dir)?;
     let path = out_dir.join("BENCH_speedup.json");
     std::fs::write(&path, j.to_string())?;
@@ -445,6 +454,87 @@ fn data_phase(base: &Setup, quick: bool) -> anyhow::Result<DataPhase> {
     })
 }
 
+/// Result of the DES-throughput measurement: events/second through the
+/// calendar event queue + CSR worker state, timing-only, at the scale
+/// the CI gate tracks.
+struct DesPhase {
+    workers: usize,
+    iters: usize,
+    events: u64,
+    seconds: f64,
+}
+
+impl DesPhase {
+    fn mevents_per_sec(&self) -> f64 {
+        self.events as f64 / self.seconds.max(1e-12) / 1e6
+    }
+
+    fn report(&self) -> String {
+        let mut out = String::from("=== DES throughput: calendar event queue at scale ===\n");
+        out.push_str(&format!(
+            "workload: {}-worker ring x {} iters/worker, dybw policy, timing-only\n",
+            self.workers, self.iters
+        ));
+        out.push_str(&format!("  events                : {}\n", self.events));
+        out.push_str(&format!("  wall clock            : {:.3}s (best rep)\n", self.seconds));
+        out.push_str(&format!(
+            "  throughput            : {:.2}M events/s wall-clock\n",
+            self.mevents_per_sec()
+        ));
+        out
+    }
+}
+
+/// One timing-only DES run at gate scale (100k-worker ring in the quick
+/// CI configuration, 1M in the full run, small in debug), best-of-reps.
+/// Compute/link times are pure functions of their coordinates, so
+/// repetitions must agree exactly — the event count and the makespan
+/// bits are asserted across reps (determinism is part of the contract,
+/// and the min over reps rejects shared-runner noise). The ring is
+/// built outside the timed section: the number tracks the event core,
+/// not graph construction.
+fn des_phase(quick: bool) -> anyhow::Result<DesPhase> {
+    use crate::des::{ClusterSim, ComputeTimes, NoHooks, WaitPolicy};
+    use crate::straggler::link::LinkModel;
+    use crate::straggler::Dist;
+    let (workers, iters) = if cfg!(debug_assertions) {
+        (10_000, 3)
+    } else if quick {
+        (100_000, 5)
+    } else {
+        (1_000_000, 3)
+    };
+    let reps = if cfg!(debug_assertions) { 1 } else { 3 };
+    let times = ComputeTimes::PerWorker {
+        dist: Dist::ShiftedExp { base: 0.08, rate: 25.0 },
+        scale: vec![1.0; workers],
+        seed: 11,
+    };
+    let link = LinkModel::new(0.002, Some(Dist::ShiftedExp { base: 0.0, rate: 800.0 }), 12);
+    let one = || -> anyhow::Result<(f64, u64, f64)> {
+        let mut sim = ClusterSim::new(
+            crate::graph::topology::ring(workers),
+            WaitPolicy::Dybw,
+            iters,
+            times.clone(),
+            link.clone(),
+        )?;
+        let t0 = Instant::now();
+        let stats = sim.run(&mut NoHooks)?;
+        Ok((t0.elapsed().as_secs_f64(), stats.events, stats.makespan))
+    };
+    let (mut best_s, events, makespan) = one()?;
+    for _ in 1..reps {
+        let (s2, e2, m2) = one()?;
+        anyhow::ensure!(
+            e2 == events && m2.to_bits() == makespan.to_bits(),
+            "repeated DES runs diverged (nondeterminism)"
+        );
+        best_s = best_s.min(s2);
+    }
+    Ok(DesPhase { workers, iters, events, seconds: best_s })
+}
+
 /// CI perf-trajectory gate: compare a freshly measured `BENCH_speedup.json`
 /// against the committed baseline. Fails when pooled execution stopped
 /// being bit-identical (correctness regression — never tolerated) or when
@@ -484,6 +574,8 @@ pub fn gate(current: &Path, baseline: &Path, tolerance: f64) -> anyhow::Result<S
         "data_synth_threads",
         "data_prefetch_workers",
         "data_prefetch_iters",
+        "des_workers",
+        "des_iters",
     ] {
         if let (Some(c), Some(b)) = (cur.get(key), base.get(key)) {
             let (cs, bs) = (c.to_string(), b.to_string());
@@ -575,6 +667,40 @@ pub fn gate(current: &Path, baseline: &Path, tolerance: f64) -> anyhow::Result<S
             (None, None) => {}
         }
     }
+    // DES throughput (absolute M events/s, not a ratio) gates with the
+    // same schema-evolution rules as the data_phase sections: a floor
+    // only when the baseline carries one, and a current missing the
+    // section against a baseline that has it is a stale artifact.
+    {
+        let key = "des_mevents_per_sec";
+        match (
+            cur.get(key).and_then(|v| v.as_f64()),
+            base.get(key).and_then(|v| v.as_f64()),
+        ) {
+            (Some(c), Some(b)) => {
+                let floor = b * tolerance;
+                let ok = c >= floor;
+                out.push_str(&format!(
+                    "  {key:<26}: {c:.3} vs baseline {b:.3} (floor {floor:.3} M events/s) {}\n",
+                    if ok { "ok" } else { "REGRESSION" }
+                ));
+                if !ok {
+                    failures.push(format!(
+                        "{key} {c:.3} fell below {floor:.3} ({tolerance} x baseline {b:.3})"
+                    ));
+                }
+            }
+            (Some(c), None) => {
+                out.push_str(&format!("  {key:<26}: {c:.3} (no baseline floor; not gated)\n"));
+            }
+            (None, Some(_)) => {
+                failures.push(format!(
+                    "{key} missing from current — stale bench artifact predates the des section"
+                ));
+            }
+            (None, None) => {}
+        }
+    }
     if !failures.is_empty() {
         anyhow::bail!("{out}\nperf gate FAILED:\n  - {}", failures.join("\n  - "));
     }
@@ -633,6 +759,11 @@ mod tests {
         assert_eq!(j.get("data_prefetch_bit_identical").and_then(|v| v.as_bool()), Some(true));
         assert!(j.get("data_synth_speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
         assert!(j.get("data_prefetch_speedup").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // the DES-throughput section: events measured and positive
+        assert!(out.contains("DES throughput"));
+        assert!(j.get("des_events").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(j.get("des_mevents_per_sec").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(j.get("des_workers").and_then(|v| v.as_usize()).unwrap() >= 10_000);
         // and a self-gate against the fresh numbers passes trivially
         let path = dir.join("BENCH_speedup.json");
         assert!(gate(&path, &path, 0.75).is_ok());
@@ -733,6 +864,43 @@ mod tests {
         std::fs::write(&stale, j.to_string()).unwrap();
         let err = gate(&stale, &new_base, 0.75).unwrap_err();
         assert!(err.to_string().contains("stale bench artifact"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Schema evolution for the DES section, both directions: a current
+    /// with a des number against an old baseline reports but does not
+    /// gate; a baseline with a des floor rejects a stale current and
+    /// fails a regressed one.
+    #[test]
+    fn gate_handles_des_section_evolution() {
+        let dir = std::env::temp_dir().join("dybw_gate_des_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let write_des = |name: &str, des: Option<f64>| {
+            let mut j = Json::obj();
+            j.set("speedup", 2.0.into())
+                .set("mix_speedup", 2.0.into())
+                .set("bit_identical", true.into())
+                .set("mix_bit_identical", true.into());
+            if let Some(d) = des {
+                j.set("des_mevents_per_sec", d.into());
+            }
+            let p = dir.join(name);
+            std::fs::write(&p, j.to_string()).unwrap();
+            p
+        };
+        let base_old = write_des("base_old.json", None);
+        let cur_with = write_des("cur_with.json", Some(5.0));
+        let report = gate(&cur_with, &base_old, 0.75).unwrap();
+        assert!(report.contains("no baseline floor"), "{report}");
+
+        let base_new = write_des("base_new.json", Some(4.0));
+        assert!(gate(&cur_with, &base_new, 0.75).is_ok());
+        let cur_slow = write_des("cur_slow.json", Some(1.0));
+        let err = gate(&cur_slow, &base_new, 0.75).unwrap_err().to_string();
+        assert!(err.contains("des_mevents_per_sec"), "{err}");
+        let cur_stale = write_des("cur_stale.json", None);
+        let err = gate(&cur_stale, &base_new, 0.75).unwrap_err().to_string();
+        assert!(err.contains("stale bench artifact"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -18,10 +18,21 @@ pub enum Topology {
     Grid,
     /// Erdős–Rényi G(n, p) conditioned on connectivity (paper's setup).
     RandomConnected,
+    /// Hierarchical rack-of-rings: `r` racks, each an internal ring,
+    /// whose gateway nodes form an inter-rack ring (datacenter-style
+    /// two-level hierarchy; parsed from `racks:<r>`).
+    Racks(usize),
 }
 
 impl Topology {
     pub fn parse(s: &str) -> Option<Topology> {
+        if let Some(r) = s.strip_prefix("racks:") {
+            let r = r.parse::<usize>().ok()?;
+            if r == 0 {
+                return None;
+            }
+            return Some(Topology::Racks(r));
+        }
         Some(match s {
             "ring" => Topology::Ring,
             "complete" | "full" => Topology::Complete,
@@ -32,13 +43,16 @@ impl Topology {
         })
     }
 
-    pub fn name(&self) -> &'static str {
+    /// The spec string [`Self::parse`] accepts back:
+    /// `parse(&t.name()) == Some(t)`.
+    pub fn name(&self) -> String {
         match self {
-            Topology::Ring => "ring",
-            Topology::Complete => "complete",
-            Topology::Star => "star",
-            Topology::Grid => "grid",
-            Topology::RandomConnected => "random",
+            Topology::Ring => "ring".into(),
+            Topology::Complete => "complete".into(),
+            Topology::Star => "star".into(),
+            Topology::Grid => "grid".into(),
+            Topology::RandomConnected => "random".into(),
+            Topology::Racks(r) => format!("racks:{r}"),
         }
     }
 }
@@ -50,6 +64,7 @@ pub fn build(kind: Topology, n: usize, rng: &mut Rng) -> Graph {
         Topology::Star => star(n),
         Topology::Grid => grid(n),
         Topology::RandomConnected => random_connected(n, 0.4, rng),
+        Topology::Racks(r) => rack_of_rings(n, r),
     }
 }
 
@@ -149,6 +164,43 @@ pub fn random_connected(n: usize, p: f64, rng: &mut Rng) -> Graph {
     g
 }
 
+/// Two-level hierarchy: `racks` near-equal contiguous racks, a ring
+/// inside each rack, and the first node of every rack (its "gateway" /
+/// top-of-rack switch) joined into an inter-rack ring. Degree stays
+/// O(1) — at most 4 (two intra-rack + two inter-rack on gateways) — so
+/// million-worker instances stay sparse, while the diameter drops from
+/// O(n) (flat ring) to O(n/r + r).
+pub fn rack_of_rings(n: usize, racks: usize) -> Graph {
+    let racks = racks.clamp(1, n.max(1));
+    if racks <= 1 {
+        return ring(n);
+    }
+    let mut g = Graph::empty(n);
+    // contiguous rack slices: the first `n % racks` racks get one extra
+    let base = n / racks;
+    let extra = n % racks;
+    let mut starts = Vec::with_capacity(racks + 1);
+    let mut at = 0;
+    for r in 0..racks {
+        starts.push(at);
+        at += base + usize::from(r < extra);
+    }
+    starts.push(n);
+    for r in 0..racks {
+        let (lo, hi) = (starts[r], starts[r + 1]);
+        let m = hi - lo;
+        if m >= 2 {
+            for i in 0..m {
+                g.add_edge(lo + i, lo + (i + 1) % m);
+            }
+        }
+    }
+    for r in 0..racks {
+        g.add_edge(starts[r], starts[(r + 1) % racks]);
+    }
+    g
+}
+
 /// The fixed 10-worker network from the paper's Figure 2 (approximate
 /// reconstruction — the exact edge list is not published; we build a
 /// random connected 10-node graph with comparable average degree and pin
@@ -228,7 +280,56 @@ mod tests {
     fn parse_names() {
         assert_eq!(Topology::parse("ring"), Some(Topology::Ring));
         assert_eq!(Topology::parse("full"), Some(Topology::Complete));
+        assert_eq!(Topology::parse("racks:8"), Some(Topology::Racks(8)));
+        assert_eq!(Topology::parse("racks:0"), None);
+        assert_eq!(Topology::parse("racks:x"), None);
         assert_eq!(Topology::parse("nope"), None);
+    }
+
+    #[test]
+    fn name_roundtrips_through_parse() {
+        for t in [
+            Topology::Ring,
+            Topology::Complete,
+            Topology::Star,
+            Topology::Grid,
+            Topology::RandomConnected,
+            Topology::Racks(12),
+        ] {
+            assert_eq!(Topology::parse(&t.name()), Some(t), "name: {}", t.name());
+        }
+    }
+
+    #[test]
+    fn rack_of_rings_connected_sparse_for_many_shapes() {
+        for &(n, r) in &[(2usize, 2usize), (5, 2), (9, 3), (10, 4), (24, 6), (50, 7), (100, 10)] {
+            let g = rack_of_rings(n, r);
+            assert_eq!(g.n(), n);
+            assert!(g.is_connected(), "racks({n},{r}) not connected");
+            for v in 0..n {
+                assert!(g.degree(v) <= 4, "racks({n},{r}): degree({v}) = {}", g.degree(v));
+            }
+        }
+    }
+
+    #[test]
+    fn rack_of_rings_degenerates_to_ring() {
+        assert_eq!(rack_of_rings(8, 1), ring(8));
+        // more racks than workers: clamped, still connected
+        let g = rack_of_rings(3, 10);
+        assert!(g.is_connected());
+        assert_eq!(g.n(), 3);
+    }
+
+    #[test]
+    fn rack_of_rings_gateways_link_racks() {
+        // 12 workers, 3 racks of 4: gateways 0, 4, 8 form the top ring
+        let g = rack_of_rings(12, 3);
+        assert!(g.has_edge(0, 4) && g.has_edge(4, 8) && g.has_edge(8, 0));
+        // intra-rack ring intact
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 2) && g.has_edge(2, 3) && g.has_edge(3, 0));
+        // no stray cross-rack edges off the gateways
+        assert!(!g.has_edge(1, 5) && !g.has_edge(3, 4));
     }
 
     #[test]

@@ -358,6 +358,8 @@ fn cmd_trace(argv: &[String]) -> anyhow::Result<()> {
                 transient_factor: s.straggler_factor,
                 force_one_straggler: s.force_straggler,
                 outages: Vec::new(),
+                diurnal_amp: 0.0,
+                diurnal_period: 0.0,
             };
             let trace = dybw::straggler::trace::Trace::record(
                 &model,

@@ -137,6 +137,14 @@ pub struct StragglerModel {
     pub force_one_straggler: bool,
     /// Scheduled degradation windows (failure injection).
     pub outages: Vec<Outage>,
+    /// Diurnal load swing: every draw at iteration k is multiplied by
+    /// `1 + diurnal_amp · sin(2πk / diurnal_period)` (shared-cluster
+    /// day/night interference). Amplitude must stay in [0, 1) so times
+    /// remain positive; 0 disables. Applies only when the iteration
+    /// index is known ([`Self::sample_iteration_at`]).
+    pub diurnal_amp: f64,
+    /// Period of the diurnal swing in iterations (0 disables).
+    pub diurnal_period: f64,
 }
 
 impl StragglerModel {
@@ -150,6 +158,8 @@ impl StragglerModel {
             transient_factor: 1.0,
             force_one_straggler: false,
             outages: Vec::new(),
+            diurnal_amp: 0.0,
+            diurnal_period: 0.0,
         }
     }
 
@@ -165,6 +175,8 @@ impl StragglerModel {
             transient_factor: 4.0,
             force_one_straggler: true,
             outages: Vec::new(),
+            diurnal_amp: 0.0,
+            diurnal_period: 0.0,
         }
     }
 
@@ -185,10 +197,21 @@ impl StragglerModel {
         self.sample_iteration_at(usize::MAX, rng)
     }
 
+    /// The multiplicative diurnal swing at iteration `k` (1.0 when the
+    /// swing is disabled or the iteration index is unknown). Pure in
+    /// `k` — no RNG draws — so enabling it never shifts the stream.
+    pub fn diurnal_factor(&self, k: usize) -> f64 {
+        if self.diurnal_amp <= 0.0 || self.diurnal_period <= 0.0 || k == usize::MAX {
+            return 1.0;
+        }
+        1.0 + self.diurnal_amp * (std::f64::consts::TAU * k as f64 / self.diurnal_period).sin()
+    }
+
     /// Draw t_·(k) for iteration `k`, applying any scheduled [`Outage`]
-    /// whose window contains `k`.
+    /// whose window contains `k`, plus the diurnal swing.
     pub fn sample_iteration_at(&self, k: usize, rng: &mut Rng) -> Vec<f64> {
         let n = self.n();
+        let diurnal = self.diurnal_factor(k);
         let mut transient = vec![false; n];
         for t in transient.iter_mut() {
             *t = rng.uniform() < self.transient_prob;
@@ -207,7 +230,7 @@ impl StragglerModel {
                         t *= o.factor;
                     }
                 }
-                t
+                t * diurnal
             })
             .collect()
     }
@@ -333,6 +356,27 @@ mod tests {
         let model = StragglerModel::homogeneous(3, Dist::Deterministic { base: 0.25 });
         let ts = model.sample_iteration(&mut rng);
         assert_eq!(ts, vec![0.25; 3]);
+    }
+
+    #[test]
+    fn diurnal_swing_modulates_deterministically() {
+        let mut model = StragglerModel::homogeneous(2, Dist::Deterministic { base: 1.0 });
+        model.diurnal_amp = 0.5;
+        model.diurnal_period = 4.0;
+        let mut rng = Rng::new(7);
+        // sin(2πk/4) over k = 0..4: 0, +1, 0, −1
+        let want = [1.0, 1.5, 1.0, 0.5];
+        for (k, w) in want.iter().enumerate() {
+            let ts = model.sample_iteration_at(k, &mut rng);
+            assert!((ts[0] - w).abs() < 1e-9, "k={k}: {} want {w}", ts[0]);
+            assert!(ts.iter().all(|&t| t > 0.0));
+        }
+        // unknown iteration index (sample_iteration): swing off
+        assert_eq!(model.sample_iteration(&mut rng), vec![1.0; 2]);
+        assert_eq!(model.diurnal_factor(usize::MAX), 1.0);
+        // disabled swing is exactly 1 at every k
+        model.diurnal_amp = 0.0;
+        assert_eq!(model.diurnal_factor(3), 1.0);
     }
 
     #[test]

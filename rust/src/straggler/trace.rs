@@ -21,11 +21,14 @@ pub struct Trace {
 }
 
 impl Trace {
-    /// Record `iters` iterations from a model.
+    /// Record `iters` iterations from a model. The real iteration index
+    /// is threaded through, so k-dependent effects (outage windows,
+    /// diurnal swing) land in the trace; models without them record
+    /// exactly what they always did (the index costs no RNG draws).
     pub fn record(model: &StragglerModel, iters: usize, rng: &mut Rng) -> Trace {
         Trace {
             workers: model.n(),
-            times: (0..iters).map(|_| model.sample_iteration(rng)).collect(),
+            times: (0..iters).map(|k| model.sample_iteration_at(k, rng)).collect(),
         }
     }
 
@@ -164,6 +167,18 @@ mod tests {
         assert_eq!(t.workers, 5);
         assert_eq!(t.len(), 40);
         assert!(t.times.iter().flatten().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn record_threads_the_iteration_index() {
+        // a diurnal model's trace must actually swing with k
+        let mut m = StragglerModel::homogeneous(2, Dist::Deterministic { base: 1.0 });
+        m.diurnal_amp = 0.5;
+        m.diurnal_period = 4.0;
+        let mut rng = Rng::new(4);
+        let t = Trace::record(&m, 4, &mut rng);
+        assert!((t.times[1][0] - 1.5).abs() < 1e-9, "{:?}", t.times);
+        assert!((t.times[3][0] - 0.5).abs() < 1e-9, "{:?}", t.times);
     }
 
     #[test]
