@@ -1,24 +1,182 @@
 //! Checkpointing: save/resume training state (framework feature).
 //!
-//! A checkpoint captures iteration counter, virtual clock, and every
-//! worker's parameter vector. Format: a JSON header (versioned, with a
-//! content checksum) followed by raw little-endian f32 data — readable
-//! from numpy with a two-line loader, cheap to write from the hot loop.
+//! A checkpoint captures iteration counter, virtual clock, every worker's
+//! parameter vector, and (optionally) the run history recorded so far —
+//! the last part is what makes a killed-and-replayed run export
+//! byte-identical series to an uninterrupted one. Format: a JSON header
+//! (versioned, with a content checksum) followed by raw little-endian f32
+//! data — readable from numpy with a two-line loader, cheap to write from
+//! the hot loop. History floats are stored as `{:016x}` bit patterns
+//! (`f64::to_bits`) because the JSON writer cannot represent NaN (θ is
+//! NaN for the non-DyBW baselines) and because resume must reproduce
+//! every recorded f64 bit-for-bit, not merely to printed precision.
+//!
+//! Every decode failure is a typed [`CkptError`] — the adversarial tests
+//! below truncate at each byte offset, flip checksum bytes, and append
+//! trailing garbage, and each must surface as the right variant (never a
+//! panic, never a silently-wrong checkpoint).
 
-use std::io::{Read, Write};
+use std::fmt;
+use std::io::Write;
 use std::path::Path;
 
 use crate::consensus::mixing::ParamBuffers;
+use crate::metrics::{EvalRecord, IterRecord, RunHistory};
 use crate::util::json::Json;
 
 const MAGIC: &str = "dybw-ckpt-v1";
+/// Header-length sanity bound (headers carry history, so they grow with
+/// the iteration count; 256 MiB is far beyond any real run's header).
+const MAX_HEADER: u64 = 1 << 28;
 
-#[derive(Debug, Clone, PartialEq)]
+/// Typed checkpoint decode/IO failure.
+#[derive(Debug)]
+pub enum CkptError {
+    Io(std::io::Error),
+    /// File ends before the declared payload does.
+    Truncated { need: usize, got: usize },
+    /// Magic string missing or wrong — not a dybw checkpoint.
+    BadMagic,
+    /// Declared header length fails the sanity bound.
+    AbsurdHeader(u64),
+    /// Header present but not the JSON we wrote.
+    BadHeader(String),
+    /// Payload bytes do not hash to the header's checksum.
+    BadChecksum { got: String, want: String },
+    /// Extra bytes after the declared payload.
+    TrailingGarbage { extra: usize },
+}
+
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint io error: {e}"),
+            CkptError::Truncated { need, got } => {
+                write!(f, "checkpoint truncated: need {need} bytes, got {got}")
+            }
+            CkptError::BadMagic => write!(f, "not a dybw checkpoint (bad magic)"),
+            CkptError::AbsurdHeader(n) => write!(f, "absurd header length {n}"),
+            CkptError::BadHeader(msg) => write!(f, "bad checkpoint header: {msg}"),
+            CkptError::BadChecksum { got, want } => {
+                write!(f, "checkpoint corrupted: checksum {got} != {want}")
+            }
+            CkptError::TrailingGarbage { extra } => {
+                write!(f, "checkpoint has {extra} trailing garbage bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CkptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CkptError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> Self {
+        CkptError::Io(e)
+    }
+}
+
+#[derive(Debug, Clone)]
 pub struct Checkpoint {
     pub iteration: usize,
     pub clock: f64,
     pub model: String,
     pub params: Vec<Vec<f32>>,
+    /// History recorded up to `iteration` (empty for bare snapshots).
+    pub history: RunHistory,
+}
+
+/// Bit-exact equality: params byte-for-byte, clock via `to_bits`, and the
+/// history through [`RunHistory::bits_eq`] — the same oracle the
+/// determinism tests use, so two checkpoints compare equal iff a resumed
+/// run is indistinguishable from the original.
+impl PartialEq for Checkpoint {
+    fn eq(&self, other: &Checkpoint) -> bool {
+        self.iteration == other.iteration
+            && self.clock.to_bits() == other.clock.to_bits()
+            && self.model == other.model
+            && self.params == other.params
+            && self.history.algo == other.history.algo
+            && self.history.model == other.history.model
+            && self.history.dataset == other.history.dataset
+            && self.history.bits_eq(&other.history)
+    }
+}
+
+fn hex_bits(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn parse_bits(s: &str) -> Result<f64, CkptError> {
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|_| CkptError::BadHeader(format!("bad f64 bit pattern '{s}'")))
+}
+
+fn iter_to_str(r: &IterRecord) -> String {
+    format!(
+        "{};{};{};{};{};{};{}",
+        r.k,
+        hex_bits(r.duration),
+        hex_bits(r.clock),
+        hex_bits(r.train_loss),
+        r.active,
+        hex_bits(r.backup_avg),
+        hex_bits(r.theta)
+    )
+}
+
+fn iter_from_str(s: &str) -> Result<IterRecord, CkptError> {
+    let p: Vec<&str> = s.split(';').collect();
+    if p.len() != 7 {
+        return Err(CkptError::BadHeader(format!("bad iter record '{s}'")));
+    }
+    let int = |x: &str| {
+        x.parse::<usize>()
+            .map_err(|_| CkptError::BadHeader(format!("bad integer '{x}'")))
+    };
+    Ok(IterRecord {
+        k: int(p[0])?,
+        duration: parse_bits(p[1])?,
+        clock: parse_bits(p[2])?,
+        train_loss: parse_bits(p[3])?,
+        active: int(p[4])?,
+        backup_avg: parse_bits(p[5])?,
+        theta: parse_bits(p[6])?,
+    })
+}
+
+fn eval_to_str(r: &EvalRecord) -> String {
+    format!(
+        "{};{};{};{};{}",
+        r.k,
+        hex_bits(r.clock),
+        hex_bits(r.test_loss),
+        hex_bits(r.test_error),
+        hex_bits(r.consensus_error)
+    )
+}
+
+fn eval_from_str(s: &str) -> Result<EvalRecord, CkptError> {
+    let p: Vec<&str> = s.split(';').collect();
+    if p.len() != 5 {
+        return Err(CkptError::BadHeader(format!("bad eval record '{s}'")));
+    }
+    Ok(EvalRecord {
+        k: p[0]
+            .parse::<usize>()
+            .map_err(|_| CkptError::BadHeader(format!("bad integer '{}'", p[0])))?,
+        clock: parse_bits(p[1])?,
+        test_loss: parse_bits(p[2])?,
+        test_error: parse_bits(p[3])?,
+        consensus_error: parse_bits(p[4])?,
+    })
 }
 
 impl Checkpoint {
@@ -28,6 +186,7 @@ impl Checkpoint {
             clock,
             model: model.to_string(),
             params: (0..bufs.n()).map(|j| bufs.get(j).to_vec()).collect(),
+            history: RunHistory::default(),
         }
     }
 
@@ -45,74 +204,168 @@ impl Checkpoint {
         h
     }
 
-    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
+    fn header(&self) -> Json {
         let mut header = Json::obj();
         header
             .set("magic", MAGIC.into())
             .set("iteration", self.iteration.into())
-            .set("clock", self.clock.into())
+            .set("clock", hex_bits(self.clock).into())
             .set("model", self.model.as_str().into())
             .set("workers", self.params.len().into())
             .set("dim", self.params.first().map(|p| p.len()).unwrap_or(0).into())
             .set("checksum", format!("{:016x}", self.checksum()).into());
-        let htext = header.to_string();
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(&(htext.len() as u64).to_le_bytes())?;
-        f.write_all(htext.as_bytes())?;
-        for row in &self.params {
-            // SAFETY: f32 slice -> bytes view of the same length*4
-            let bytes = unsafe {
-                std::slice::from_raw_parts(row.as_ptr() as *const u8, row.len() * 4)
-            };
-            f.write_all(bytes)?;
+        if !self.history.iters.is_empty() || !self.history.evals.is_empty() {
+            let h = &self.history;
+            header
+                .set("algo", h.algo.as_str().into())
+                .set("hmodel", h.model.as_str().into())
+                .set("dataset", h.dataset.as_str().into())
+                .set("hworkers", h.workers.into())
+                .set("iters", h.iters.iter().map(iter_to_str).collect::<Vec<_>>().into())
+                .set("evals", h.evals.iter().map(eval_to_str).collect::<Vec<_>>().into());
         }
-        Ok(())
+        header
     }
 
-    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
-        let mut f = std::fs::File::open(path)
-            .map_err(|e| anyhow::anyhow!("cannot open checkpoint {}: {e}", path.display()))?;
-        let mut len8 = [0u8; 8];
-        f.read_exact(&mut len8)?;
-        let hlen = u64::from_le_bytes(len8) as usize;
-        anyhow::ensure!(hlen < 1 << 20, "absurd header length");
-        let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
-        let header = Json::parse(std::str::from_utf8(&hbuf)?)
-            .map_err(|e| anyhow::anyhow!("bad checkpoint header: {e}"))?;
-        anyhow::ensure!(
-            header.get("magic").and_then(|v| v.as_str()) == Some(MAGIC),
-            "not a dybw checkpoint"
-        );
+    /// Serialise to the on-disk byte layout:
+    /// `u64 LE header length | JSON header | workers*dim raw LE f32`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let htext = self.header().to_string();
+        let dim = self.params.first().map(|p| p.len()).unwrap_or(0);
+        let mut out = Vec::with_capacity(8 + htext.len() + self.params.len() * dim * 4);
+        out.extend_from_slice(&(htext.len() as u64).to_le_bytes());
+        out.extend_from_slice(htext.as_bytes());
+        for row in &self.params {
+            for v in row {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode a full checkpoint image. The buffer must contain exactly
+    /// the declared payload — short reads are [`CkptError::Truncated`],
+    /// extra bytes are [`CkptError::TrailingGarbage`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, CkptError> {
+        if bytes.len() < 8 {
+            return Err(CkptError::Truncated { need: 8, got: bytes.len() });
+        }
+        let hlen64 = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+        if hlen64 > MAX_HEADER {
+            return Err(CkptError::AbsurdHeader(hlen64));
+        }
+        let hlen = hlen64 as usize;
+        if bytes.len() < 8 + hlen {
+            return Err(CkptError::Truncated { need: 8 + hlen, got: bytes.len() });
+        }
+        let htext = std::str::from_utf8(&bytes[8..8 + hlen])
+            .map_err(|e| CkptError::BadHeader(e.to_string()))?;
+        let header = Json::parse(htext).map_err(|e| CkptError::BadHeader(e.to_string()))?;
+        if header.get("magic").and_then(|v| v.as_str()) != Some(MAGIC) {
+            return Err(CkptError::BadMagic);
+        }
         let workers = header.get("workers").and_then(|v| v.as_usize()).unwrap_or(0);
         let dim = header.get("dim").and_then(|v| v.as_usize()).unwrap_or(0);
+        let need = 8 + hlen + workers * dim * 4;
+        if bytes.len() < need {
+            return Err(CkptError::Truncated { need, got: bytes.len() });
+        }
+        if bytes.len() > need {
+            return Err(CkptError::TrailingGarbage { extra: bytes.len() - need });
+        }
         let mut params = Vec::with_capacity(workers);
-        let mut raw = vec![0u8; dim * 4];
+        let mut off = 8 + hlen;
         for _ in 0..workers {
-            f.read_exact(&mut raw)?;
             let mut row = vec![0.0f32; dim];
-            for (i, chunk) in raw.chunks_exact(4).enumerate() {
-                row[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            for slot in row.iter_mut() {
+                *slot = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+                off += 4;
             }
             params.push(row);
         }
+        // clock: hex bit-pattern since the history extension; plain JSON
+        // number in older files.
+        let clock = match header.get("clock") {
+            Some(Json::Str(s)) => parse_bits(s)?,
+            Some(v) => v.as_f64().ok_or_else(|| CkptError::BadHeader("bad clock".into()))?,
+            None => 0.0,
+        };
+        let mut history = RunHistory::default();
+        if header.get("iters").is_some() || header.get("evals").is_some() {
+            let arr = |key: &str| -> Result<Vec<String>, CkptError> {
+                match header.get(key) {
+                    None => Ok(Vec::new()),
+                    Some(v) => v
+                        .as_arr()
+                        .ok_or_else(|| CkptError::BadHeader(format!("'{key}' not an array")))?
+                        .iter()
+                        .map(|x| {
+                            x.as_str().map(str::to_string).ok_or_else(|| {
+                                CkptError::BadHeader(format!("'{key}' entry not a string"))
+                            })
+                        })
+                        .collect(),
+                }
+            };
+            history.algo = header
+                .get("algo")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string();
+            history.model = header
+                .get("hmodel")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string();
+            history.dataset = header
+                .get("dataset")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string();
+            history.workers = header.get("hworkers").and_then(|v| v.as_usize()).unwrap_or(0);
+            history.iters = arr("iters")?
+                .iter()
+                .map(|s| iter_from_str(s))
+                .collect::<Result<_, _>>()?;
+            history.evals = arr("evals")?
+                .iter()
+                .map(|s| eval_from_str(s))
+                .collect::<Result<_, _>>()?;
+        }
         let ckpt = Checkpoint {
             iteration: header.get("iteration").and_then(|v| v.as_usize()).unwrap_or(0),
-            clock: header.get("clock").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            clock,
             model: header
                 .get("model")
                 .and_then(|v| v.as_str())
                 .unwrap_or("")
                 .to_string(),
             params,
+            history,
         };
-        let want = header.get("checksum").and_then(|v| v.as_str()).unwrap_or("");
+        let want = header
+            .get("checksum")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string();
         let got = format!("{:016x}", ckpt.checksum());
-        anyhow::ensure!(want == got, "checkpoint corrupted: checksum {got} != {want}");
+        if want != got {
+            return Err(CkptError::BadChecksum { got, want });
+        }
         Ok(ckpt)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), CkptError> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint, CkptError> {
+        Checkpoint::from_bytes(&std::fs::read(path)?)
     }
 
     pub fn into_buffers(self) -> ParamBuffers {
@@ -134,7 +387,37 @@ mod tests {
             params: (0..4)
                 .map(|_| (0..36).map(|_| rng.normal() as f32).collect())
                 .collect(),
+            history: RunHistory::default(),
         }
+    }
+
+    fn sample_with_history() -> Checkpoint {
+        let mut c = sample();
+        let mut h = RunHistory::new("cb-dybw", "lrm", "synthetic", 4);
+        let mut clock = 0.0;
+        for k in 1..=6 {
+            clock += 0.125;
+            h.iters.push(IterRecord {
+                k,
+                duration: 0.125,
+                clock,
+                train_loss: 1.0 / k as f64,
+                active: 3,
+                backup_avg: 0.5,
+                // NaN theta is the baseline-algorithm case the hex-bit
+                // encoding exists for.
+                theta: if k % 2 == 0 { f64::NAN } else { 0.125 },
+            });
+        }
+        h.evals.push(EvalRecord {
+            k: 5,
+            clock: 0.625,
+            test_loss: 0.5,
+            test_error: 0.25,
+            consensus_error: 1e-9,
+        });
+        c.history = h;
+        c
     }
 
     #[test]
@@ -149,6 +432,16 @@ mod tests {
     }
 
     #[test]
+    fn history_roundtrips_bit_exactly_including_nan_theta() {
+        let c = sample_with_history();
+        let l = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(c, l);
+        assert!(l.history.iters[1].theta.is_nan());
+        assert_eq!(l.history.algo, "cb-dybw");
+        assert_eq!(l.history.evals.len(), 1);
+    }
+
+    #[test]
     fn corruption_detected() {
         let dir = std::env::temp_dir().join("dybw_ckpt_corrupt");
         let path = dir.join("b.ckpt");
@@ -159,6 +452,7 @@ mod tests {
         bytes[last] ^= 0xFF;
         std::fs::write(&path, bytes).unwrap();
         let err = Checkpoint::load(&path).unwrap_err();
+        assert!(matches!(err, CkptError::BadChecksum { .. }));
         assert!(err.to_string().contains("corrupted"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -179,5 +473,52 @@ mod tests {
         let bufs = c.clone().into_buffers();
         let c2 = Checkpoint::from_buffers(c.iteration, c.clock, &c.model, &bufs);
         assert_eq!(c.params, c2.params);
+    }
+
+    #[test]
+    fn truncation_at_every_offset_is_a_typed_error() {
+        // Mirror of the codec fuzz suite: every strict prefix must decode
+        // to Truncated / BadHeader / BadChecksum — never panic, never Ok.
+        let bytes = sample_with_history().to_bytes();
+        for cut in 0..bytes.len() {
+            let err = Checkpoint::from_bytes(&bytes[..cut]).unwrap_err();
+            match err {
+                CkptError::Truncated { .. }
+                | CkptError::BadHeader(_)
+                | CkptError::BadChecksum { .. }
+                | CkptError::AbsurdHeader(_)
+                | CkptError::BadMagic => {}
+                other => panic!("cut {cut}: unexpected error {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes.extend_from_slice(b"xx");
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(matches!(err, CkptError::TrailingGarbage { extra: 2 }));
+    }
+
+    #[test]
+    fn checksum_flip_in_header_detected() {
+        let c = sample();
+        let bytes = c.to_bytes();
+        let text = String::from_utf8_lossy(&bytes[8..]).into_owned();
+        // find the checksum hex in the header and flip its first digit
+        let pos = 8 + text.find("checksum").unwrap() + "checksum\":\"".len();
+        let mut bad = bytes.clone();
+        bad[pos] = if bad[pos] == b'0' { b'1' } else { b'0' };
+        let err = Checkpoint::from_bytes(&bad).unwrap_err();
+        assert!(matches!(err, CkptError::BadChecksum { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn absurd_header_length_rejected() {
+        let mut bytes = vec![0u8; 16];
+        bytes[..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(matches!(err, CkptError::AbsurdHeader(_)));
     }
 }

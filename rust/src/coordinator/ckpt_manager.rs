@@ -1,0 +1,241 @@
+//! Retention-aware checkpoint manager: atomic writes, pruned history,
+//! restart-from-latest discovery.
+//!
+//! [`Checkpoint`](super::checkpoint::Checkpoint) knows how to encode one
+//! snapshot; the manager owns a *directory* of them:
+//!
+//! - **Atomic saves** — bytes go to a `.tmp-` file first, `fsync`, then
+//!   a rename onto the final `ckpt-<iteration>.dybw` name (plus a
+//!   best-effort directory sync). A kill mid-write can leave a stale tmp
+//!   file but never a half-written checkpoint under the real name.
+//! - **Retention** — after every save the oldest checkpoints beyond
+//!   `retain` are deleted, deterministically (iteration order, not
+//!   mtime, so two same-seed runs leave byte-identical directories).
+//! - **`latest()`** — walks checkpoints newest-first and returns the
+//!   first that decodes intact, skipping corrupt/truncated files and
+//!   tmp leftovers. Recovery never trusts a file the codec rejects.
+//!
+//! Single-writer by design: one training process owns a directory. The
+//! tmp name is derived from the iteration, so concurrent writers would
+//! clobber each other — that is out of scope, same as for the event logs.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use super::checkpoint::{Checkpoint, CkptError};
+
+const PREFIX: &str = "ckpt-";
+const SUFFIX: &str = ".dybw";
+const TMP_PREFIX: &str = ".tmp-";
+
+#[derive(Debug, Clone)]
+pub struct CkptManager {
+    dir: PathBuf,
+    /// Keep this many newest checkpoints; 0 = keep everything.
+    retain: usize,
+}
+
+impl CkptManager {
+    pub fn new(dir: &Path, retain: usize) -> Result<CkptManager, CkptError> {
+        std::fs::create_dir_all(dir)?;
+        Ok(CkptManager { dir: dir.to_path_buf(), retain })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_name(iteration: usize) -> String {
+        // zero-padded so lexicographic order == iteration order
+        format!("{PREFIX}{iteration:010}{SUFFIX}")
+    }
+
+    /// Atomically persist one checkpoint and prune beyond the retention
+    /// limit. Returns the final path.
+    pub fn save(&self, ckpt: &Checkpoint) -> Result<PathBuf, CkptError> {
+        let final_path = self.dir.join(Self::file_name(ckpt.iteration));
+        let tmp_path = self
+            .dir
+            .join(format!("{TMP_PREFIX}{}", Self::file_name(ckpt.iteration)));
+        {
+            let mut f = File::create(&tmp_path)?;
+            f.write_all(&ckpt.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp_path, &final_path)?;
+        // Durability of the rename itself needs a directory sync; not
+        // every platform lets you open a directory, so best effort.
+        if let Ok(d) = File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        self.prune()?;
+        Ok(final_path)
+    }
+
+    /// All checkpoint files, ascending by iteration. Non-checkpoint
+    /// names (tmp leftovers, foreign files) are ignored.
+    pub fn list(&self) -> Result<Vec<(usize, PathBuf)>, CkptError> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            let Some(mid) = name.strip_prefix(PREFIX).and_then(|s| s.strip_suffix(SUFFIX))
+            else {
+                continue;
+            };
+            if let Ok(iter) = mid.parse::<usize>() {
+                out.push((iter, path));
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    fn prune(&self) -> Result<(), CkptError> {
+        if self.retain == 0 {
+            return Ok(());
+        }
+        let files = self.list()?;
+        if files.len() > self.retain {
+            for (_, path) in &files[..files.len() - self.retain] {
+                std::fs::remove_file(path)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Newest checkpoint that decodes intact, with its path. Corrupt or
+    /// truncated files are skipped (recovery falls back to the next
+    /// newest), stale tmp files never match the name filter.
+    pub fn latest(&self) -> Result<Option<(Checkpoint, PathBuf)>, CkptError> {
+        for (_, path) in self.list()?.into_iter().rev() {
+            if let Ok(ckpt) = Checkpoint::load(&path) {
+                return Ok(Some((ckpt, path)));
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RunHistory;
+    use crate::util::rng::Rng;
+
+    fn snap(iteration: usize) -> Checkpoint {
+        let mut rng = Rng::new(iteration as u64);
+        Checkpoint {
+            iteration,
+            clock: iteration as f64 * 0.5,
+            model: "lrm".into(),
+            params: (0..3)
+                .map(|_| (0..8).map(|_| rng.normal() as f32).collect())
+                .collect(),
+            history: RunHistory::default(),
+        }
+    }
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dybw_ckpt_mgr_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn save_list_latest() {
+        let dir = fresh_dir("basic");
+        let mgr = CkptManager::new(&dir, 0).unwrap();
+        for k in [4usize, 8, 12] {
+            mgr.save(&snap(k)).unwrap();
+        }
+        let iters: Vec<usize> = mgr.list().unwrap().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(iters, vec![4, 8, 12]);
+        let (latest, path) = mgr.latest().unwrap().unwrap();
+        assert_eq!(latest, snap(12));
+        assert!(path.ends_with("ckpt-0000000012.dybw"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_prunes_oldest_deterministically() {
+        let dir = fresh_dir("retain");
+        let mgr = CkptManager::new(&dir, 2).unwrap();
+        for k in [4usize, 8, 12, 16] {
+            mgr.save(&snap(k)).unwrap();
+        }
+        let iters: Vec<usize> = mgr.list().unwrap().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(iters, vec![12, 16]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_skips_corrupt_and_truncated_to_newest_intact() {
+        let dir = fresh_dir("skip");
+        let mgr = CkptManager::new(&dir, 0).unwrap();
+        mgr.save(&snap(4)).unwrap();
+        mgr.save(&snap(8)).unwrap();
+        let p12 = mgr.save(&snap(12)).unwrap();
+        let p16 = mgr.save(&snap(16)).unwrap();
+        // newest truncated mid-payload, second-newest checksum-flipped
+        let bytes = std::fs::read(&p16).unwrap();
+        std::fs::write(&p16, &bytes[..bytes.len() / 2]).unwrap();
+        let mut bytes = std::fs::read(&p12).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&p12, bytes).unwrap();
+        let (latest, _) = mgr.latest().unwrap().unwrap();
+        assert_eq!(latest, snap(8), "latest() must fall back to the newest intact file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_tmp_and_foreign_files_are_ignored() {
+        let dir = fresh_dir("stale");
+        let mgr = CkptManager::new(&dir, 0).unwrap();
+        mgr.save(&snap(4)).unwrap();
+        // a crash between write and rename leaves exactly this
+        std::fs::write(dir.join(".tmp-ckpt-0000000099.dybw"), b"half-written").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"unrelated").unwrap();
+        // garbage under a valid checkpoint name must be skipped, not fatal
+        std::fs::write(dir.join("ckpt-0000000050.dybw"), b"garbage").unwrap();
+        let iters: Vec<usize> = mgr.list().unwrap().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(iters, vec![4, 50]);
+        let (latest, _) = mgr.latest().unwrap().unwrap();
+        assert_eq!(latest, snap(4));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_directory_has_no_latest() {
+        let dir = fresh_dir("empty");
+        let mgr = CkptManager::new(&dir, 3).unwrap();
+        assert!(mgr.latest().unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoints_with_history_survive_the_manager() {
+        use crate::metrics::IterRecord;
+        let dir = fresh_dir("hist");
+        let mgr = CkptManager::new(&dir, 1).unwrap();
+        let mut c = snap(20);
+        c.history = RunHistory::new("cb-dybw", "lrm", "synthetic", 3);
+        c.history.iters.push(IterRecord {
+            k: 20,
+            duration: 0.1,
+            clock: 2.0,
+            train_loss: 0.3,
+            active: 3,
+            backup_avg: 0.0,
+            theta: f64::NAN,
+        });
+        mgr.save(&c).unwrap();
+        let (l, _) = mgr.latest().unwrap().unwrap();
+        assert_eq!(l, c);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

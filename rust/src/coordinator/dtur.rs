@@ -165,6 +165,18 @@ impl LocalDtur {
         self.established.len()
     }
 
+    /// Churn: the neighbourhood changed, so the epoch length d_i changes
+    /// with it. The current epoch is abandoned — established links of
+    /// the old neighbour set say nothing about the new indexing — and a
+    /// fresh epoch starts over the new degree. (The B-bounded
+    /// connectivity guarantee then holds with B = new d_i from the next
+    /// commit onward.)
+    pub fn set_degree(&mut self, degree: usize) {
+        self.established.clear();
+        self.established.resize(degree, false);
+        self.epoch_pos = 0;
+    }
+
     pub fn is_established(&self, nbr: usize) -> bool {
         self.established[nbr]
     }

@@ -20,6 +20,7 @@
 
 pub mod algorithm;
 pub mod checkpoint;
+pub mod ckpt_manager;
 pub mod dtur;
 pub mod live;
 pub mod setup;

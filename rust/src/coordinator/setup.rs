@@ -430,15 +430,7 @@ impl Setup {
             .set("algo", self.algo.name().to_lowercase().into())
             .set("model", self.model.as_str().into())
             .set("dataset", self.dataset.name().into())
-            .set(
-                "partition",
-                match self.partition {
-                    Partition::Iid => "iid".to_string(),
-                    Partition::LabelShards => "shards".to_string(),
-                    Partition::Dirichlet { alpha } => format!("dirichlet:{alpha}"),
-                }
-                .into(),
-            )
+            .set("partition", self.partition.name().into())
             .set("train_n", self.train_n.into())
             .set("test_n", self.test_n.into())
             .set("threads", self.threads.into())
@@ -470,8 +462,7 @@ impl Setup {
             self.workers = v;
         }
         if let Some(v) = j.get("topology").and_then(|v| v.as_str()) {
-            self.topology =
-                Topology::parse(v).ok_or_else(|| anyhow::anyhow!("bad topology '{v}'"))?;
+            self.topology = Topology::parse(v)?;
         }
         if let Some(v) = j.get("algo").and_then(|v| v.as_str()) {
             self.algo = Algorithm::parse(v).ok_or_else(|| anyhow::anyhow!("bad algo '{v}'"))?;
@@ -484,8 +475,7 @@ impl Setup {
                 DatasetProfile::parse(v).ok_or_else(|| anyhow::anyhow!("bad dataset '{v}'"))?;
         }
         if let Some(v) = j.get("partition").and_then(|v| v.as_str()) {
-            self.partition =
-                Partition::parse(v).ok_or_else(|| anyhow::anyhow!("bad partition '{v}'"))?;
+            self.partition = Partition::parse(v)?;
         }
         if let Some(v) = j.get("train_n").and_then(|v| v.as_usize()) {
             self.train_n = v;
@@ -497,8 +487,7 @@ impl Setup {
             self.threads = v;
         }
         if let Some(v) = j.get("straggler").and_then(|v| v.as_str()) {
-            self.straggler_base =
-                Dist::parse(v).ok_or_else(|| anyhow::anyhow!("bad straggler '{v}'"))?;
+            self.straggler_base = Dist::parse(v)?;
         }
         if let Some(v) = j.get("straggler_factor").and_then(|v| v.as_f64()) {
             self.straggler_factor = v;

@@ -109,6 +109,20 @@ pub struct SimTrainer {
     /// Last iteration actually completed by `run` (== `start_k` until the
     /// first iteration finishes); this is what checkpoints stamp.
     last_k: usize,
+    /// When set, `run` persists a checkpoint (with history) through the
+    /// manager every `ckpt_every` iterations.
+    pub ckpt_mgr: Option<super::ckpt_manager::CkptManager>,
+    /// Checkpoint cadence in iterations; 0 disables periodic saves.
+    pub ckpt_every: usize,
+    /// Model name stamped into periodic checkpoints.
+    pub ckpt_model: String,
+    /// Fault injection: `run` errors out right after completing (and
+    /// checkpointing, if due) this iteration — the CI kill-and-replay
+    /// harness uses it to die at a deterministic point.
+    pub kill_at: Option<usize>,
+    /// History carried over from a restored checkpoint; `run` continues
+    /// appending to it instead of starting a fresh series.
+    resume_history: Option<RunHistory>,
 }
 
 /// Compressed-gossip state: the operator + one error-feedback buffer per
@@ -178,6 +192,11 @@ impl SimTrainer {
             compression: None,
             start_k: 0,
             last_k: 0,
+            ckpt_mgr: None,
+            ckpt_every: 0,
+            ckpt_model: "sim".to_string(),
+            kill_at: None,
+            resume_history: None,
         })
     }
 
@@ -195,7 +214,16 @@ impl SimTrainer {
     }
 
     /// Resume from a checkpoint: restores parameters, clock, and the
-    /// iteration counter (subsequent `run` continues from there).
+    /// iteration counter, then **fast-forwards every stream** — the
+    /// straggler RNG (or trace replay), the per-worker batch samplers,
+    /// and the global DTUR epoch state — by replaying iterations
+    /// `1..=ckpt.iteration` without compute. A subsequent `run` therefore
+    /// continues bit-for-bit where the original run left off, which is
+    /// what makes kill-and-replay byte-identical (the old restore left
+    /// the streams at zero, so resumed runs silently diverged).
+    ///
+    /// Call on a freshly built trainer (same seed/config), after setting
+    /// `trace` if the original run replayed one.
     pub fn restore(&mut self, ckpt: super::checkpoint::Checkpoint) -> anyhow::Result<()> {
         anyhow::ensure!(
             ckpt.params.len() == self.graph.n(),
@@ -207,12 +235,46 @@ impl SimTrainer {
             ckpt.params[0].len() == self.pool.param_count(),
             "checkpoint param dim mismatch"
         );
+        for k in 1..=ckpt.iteration {
+            let t = match self.trace.as_mut() {
+                Some(replay) => replay.next_iteration(),
+                None => self.straggler.sample_iteration_at(k, &mut self.rng),
+            };
+            let _ = plan(self.algo, &t, self.dtur.as_mut());
+            for src in self.sources.iter_mut() {
+                let _ = src.next_train(self.cfg.batch_size);
+            }
+        }
         self.clock = ckpt.clock;
         self.start_k = ckpt.iteration;
         self.last_k = ckpt.iteration;
         self.params = ParamBuffers::from_initial(ckpt.params);
         self.prefetched = None;
+        self.resume_history = (!ckpt.history.iters.is_empty()
+            || !ckpt.history.evals.is_empty())
+        .then_some(ckpt.history);
         Ok(())
+    }
+
+    /// Restore from the newest intact checkpoint in `ckpt_mgr`'s
+    /// directory, if any. Returns whether a checkpoint was found.
+    pub fn resume_latest(&mut self) -> anyhow::Result<bool> {
+        let found = match self.ckpt_mgr.as_ref() {
+            None => None,
+            Some(mgr) => mgr.latest()?,
+        };
+        match found {
+            Some((ckpt, _)) => {
+                self.restore(ckpt)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Iteration the next `run` starts after (0 on a fresh trainer).
+    pub fn start_k(&self) -> usize {
+        self.start_k
     }
 
     pub fn params(&self) -> &ParamBuffers {
@@ -242,15 +304,20 @@ impl SimTrainer {
     /// Run the full training loop, returning the recorded history.
     pub fn run(&mut self) -> anyhow::Result<RunHistory> {
         let n = self.graph.n();
-        let mut history = RunHistory::new(
-            &self.algo.name(),
-            self.pool.backend(),
-            "synthetic",
-            n,
-        );
-        // initial eval (k = start)
-        let e0 = self.evaluate(self.start_k)?;
-        history.evals.push(e0);
+        let mut history = match self.resume_history.take() {
+            // restored mid-run: the series (including the k = start eval
+            // and any eval already due at the checkpoint boundary) was
+            // carried in the checkpoint — appending continues it exactly.
+            Some(h) => h,
+            None => {
+                let mut h =
+                    RunHistory::new(&self.algo.name(), self.pool.backend(), "synthetic", n);
+                // initial eval (k = start)
+                let e0 = self.evaluate(self.start_k)?;
+                h.evals.push(e0);
+                h
+            }
+        };
 
         for k in (self.start_k + 1)..=(self.start_k + self.cfg.iters) {
             // --- timing: draw t_j(k), derive the participation plan -----
@@ -371,6 +438,22 @@ impl SimTrainer {
             if self.cfg.eval_every > 0 && k % self.cfg.eval_every == 0 {
                 let e = self.evaluate(k)?;
                 history.evals.push(e);
+            }
+
+            if self.ckpt_every > 0 && k % self.ckpt_every == 0 {
+                if let Some(mgr) = self.ckpt_mgr.as_ref() {
+                    let mut c = super::checkpoint::Checkpoint::from_buffers(
+                        k,
+                        self.clock,
+                        &self.ckpt_model,
+                        &self.params,
+                    );
+                    c.history = history.clone();
+                    mgr.save(&c)?;
+                }
+            }
+            if self.kill_at == Some(k) {
+                anyhow::bail!("killed at iteration {k} (kill_at fault injection)");
             }
         }
         Ok(history)
@@ -633,6 +716,48 @@ mod tests {
         let resumed_first = h2.evals.first().unwrap().test_loss;
         let original_first = h1.evals.first().unwrap().test_loss;
         assert!(resumed_first < original_first * 0.9);
+    }
+
+    /// The PR-8 recovery invariant: a run killed mid-flight and resumed
+    /// from `ckpt_manager::latest()` in a fresh trainer produces a
+    /// bit-identical history and final parameters to the uninterrupted
+    /// same-seed run. Exercises the stream fast-forward in `restore` and
+    /// the history carried inside checkpoints.
+    #[test]
+    fn kill_and_replay_is_bit_identical() {
+        use crate::coordinator::ckpt_manager::CkptManager;
+        let dir = std::env::temp_dir().join("dybw_sim_killreplay");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mgr = CkptManager::new(&dir, 2).unwrap();
+
+        let mut full = build(Algorithm::CbDybw, 30, 21);
+        let h_full = full.run().unwrap();
+        let p_full = full.average_params();
+
+        // kill at iteration 10; checkpoints land at 4 and 8
+        let mut killed = build(Algorithm::CbDybw, 30, 21);
+        killed.ckpt_mgr = Some(mgr.clone());
+        killed.ckpt_every = 4;
+        killed.kill_at = Some(10);
+        let err = killed.run().unwrap_err();
+        assert!(err.to_string().contains("killed at iteration 10"), "{err}");
+
+        // "new process": fresh same-seed trainer, restore newest intact
+        let mut resumed = build(Algorithm::CbDybw, 30, 21);
+        resumed.ckpt_mgr = Some(mgr);
+        resumed.ckpt_every = 4;
+        assert!(resumed.resume_latest().unwrap());
+        assert_eq!(resumed.start_k(), 8);
+        resumed.cfg.iters = 30 - 8;
+        let h_res = resumed.run().unwrap();
+
+        assert!(h_full.bits_eq(&h_res), "killed-and-replayed history diverged");
+        let p_res = resumed.average_params();
+        assert_eq!(p_full.len(), p_res.len());
+        for (x, y) in p_full.iter().zip(&p_res) {
+            assert_eq!(x.to_bits(), y.to_bits(), "replayed params diverged");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

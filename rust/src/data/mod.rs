@@ -12,6 +12,7 @@
 pub mod batch;
 pub mod partition;
 pub mod pca;
+pub mod reshard;
 pub mod synthetic;
 
 /// A dense classification dataset: row-major features + integer labels.

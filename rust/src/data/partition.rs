@@ -8,6 +8,7 @@
 
 use super::Dataset;
 use crate::engine::EnginePool;
+use crate::util::parse::ParseError;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -22,17 +23,30 @@ pub enum Partition {
 }
 
 impl Partition {
-    pub fn parse(s: &str) -> Option<Partition> {
+    /// The spec string [`Self::parse`] accepts back —
+    /// `parse(&p.name()) == Ok(p)` for every value.
+    pub fn name(&self) -> String {
+        match *self {
+            Partition::Iid => "iid".to_string(),
+            Partition::LabelShards => "shards".to_string(),
+            Partition::Dirichlet { alpha } => format!("dirichlet:{alpha}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Partition, ParseError> {
+        const EXPECTED: &str = "iid | shards | dirichlet:<alpha>";
         if s == "iid" {
-            return Some(Partition::Iid);
+            return Ok(Partition::Iid);
         }
         if s == "shards" || s == "label_shards" {
-            return Some(Partition::LabelShards);
+            return Ok(Partition::LabelShards);
         }
         if let Some(a) = s.strip_prefix("dirichlet:") {
-            return a.parse().ok().map(|alpha| Partition::Dirichlet { alpha });
+            if let Ok(alpha) = a.parse() {
+                return Ok(Partition::Dirichlet { alpha });
+            }
         }
-        None
+        Err(ParseError::new("partition", s, EXPECTED))
     }
 }
 
@@ -289,13 +303,24 @@ mod tests {
 
     #[test]
     fn parse_names() {
-        assert_eq!(Partition::parse("iid"), Some(Partition::Iid));
-        assert_eq!(Partition::parse("shards"), Some(Partition::LabelShards));
+        assert_eq!(Partition::parse("iid"), Ok(Partition::Iid));
+        assert_eq!(Partition::parse("shards"), Ok(Partition::LabelShards));
         assert_eq!(
             Partition::parse("dirichlet:0.5"),
-            Some(Partition::Dirichlet { alpha: 0.5 })
+            Ok(Partition::Dirichlet { alpha: 0.5 })
         );
-        assert_eq!(Partition::parse("nope"), None);
+        for p in [
+            Partition::Iid,
+            Partition::LabelShards,
+            Partition::Dirichlet { alpha: 0.5 },
+        ] {
+            assert_eq!(Partition::parse(&p.name()), Ok(p), "name: {}", p.name());
+        }
+        for bad in ["nope", "", "dirichlet:x", "iid "] {
+            let err = Partition::parse(bad).unwrap_err();
+            assert_eq!(err.what, "partition", "input: {bad}");
+            assert_eq!(err.input, bad);
+        }
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Consistent-hash resharding: move ~1/N of the shards on churn.
+//!
+//! [`partition`](super::partition) splits a dataset into per-worker index
+//! sets once, up front. Under churn that is not enough: when a worker
+//! joins or leaves, naively re-running the partitioner reshuffles almost
+//! every shard. A [`HashRing`] with virtual nodes gives the standard
+//! consistent-hashing guarantee instead — a single membership change
+//! moves only the shards adjacent to the new/removed worker's ring
+//! points, ~S/N of them, and nothing else.
+//!
+//! Everything is keyed off [`stream_seed`](crate::util::rng::stream_seed)
+//! coordinates (worker id × vnode index, shard id), so the ring is a pure
+//! function of `(seed, members)`: two processes that agree on those agree
+//! on every shard placement without exchanging any state.
+//!
+//! Invariants asserted by the tests below:
+//! - **Determinism**: same seed + same members ⇒ identical assignment.
+//! - **Movement minimality (join)**: shards that move all move *to* the
+//!   joining worker, and their count is ≤ ⌈S/N_new⌉ plus virtual-node
+//!   slack.
+//! - **Movement minimality (leave)**: exactly the departing worker's
+//!   shards move; every other shard keeps its owner.
+
+use crate::util::rng::stream_seed;
+
+/// Tag for ring-point hashing (`b"RING"` as big-endian u32).
+const RING_TAG: u32 = 0x5249_4E47;
+/// Tag for shard-key hashing (`b"SHRD"`).
+const SHARD_TAG: u32 = 0x5348_5244;
+
+/// Default virtual nodes per worker. 64 keeps the max/mean load ratio
+/// near 1.3 while the ring for 10^3 workers stays under a megabyte.
+pub const DEFAULT_VNODES: usize = 64;
+
+/// A consistent-hash ring mapping shard ids to worker ids.
+///
+/// Ring points are `(hash, worker)` pairs sorted by hash; a shard is
+/// owned by the first ring point at or after its own hash (wrapping).
+/// Ties on hash break toward the smaller worker id, so the assignment is
+/// a total function even in the astronomically unlikely collision case.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    seed: u64,
+    vnodes: usize,
+    /// Sorted by (hash, worker).
+    points: Vec<(u64, u32)>,
+}
+
+fn point_hash(seed: u64, worker: u32, vnode: usize) -> u64 {
+    stream_seed(seed, RING_TAG as u64, worker as u64, vnode as u64)
+}
+
+fn shard_hash(seed: u64, shard: usize) -> u64 {
+    stream_seed(seed, SHARD_TAG as u64, shard as u64, 0)
+}
+
+impl HashRing {
+    /// Build a ring over `members` with [`DEFAULT_VNODES`] per worker.
+    pub fn new(seed: u64, members: &[u32]) -> HashRing {
+        HashRing::with_vnodes(seed, members, DEFAULT_VNODES)
+    }
+
+    /// Build a ring with an explicit virtual-node count.
+    pub fn with_vnodes(seed: u64, members: &[u32], vnodes: usize) -> HashRing {
+        assert!(vnodes > 0, "a ring needs at least one vnode per worker");
+        let mut ring = HashRing {
+            seed,
+            vnodes,
+            points: Vec::with_capacity(members.len() * vnodes),
+        };
+        for &w in members {
+            ring.insert_points(w);
+        }
+        ring.points.sort_unstable();
+        ring
+    }
+
+    fn insert_points(&mut self, worker: u32) {
+        for v in 0..self.vnodes {
+            self.points.push((point_hash(self.seed, worker, v), worker));
+        }
+    }
+
+    /// Number of distinct workers on the ring.
+    pub fn members(&self) -> usize {
+        self.points.len() / self.vnodes
+    }
+
+    /// Add a worker's virtual nodes. No-op if already present.
+    pub fn add_worker(&mut self, worker: u32) {
+        if self.points.binary_search(&(point_hash(self.seed, worker, 0), worker)).is_ok() {
+            return;
+        }
+        self.insert_points(worker);
+        self.points.sort_unstable();
+    }
+
+    /// Remove a worker's virtual nodes. No-op if absent.
+    pub fn remove_worker(&mut self, worker: u32) {
+        self.points.retain(|&(_, w)| w != worker);
+    }
+
+    /// Owner of one shard: successor ring point of the shard's hash.
+    pub fn owner(&self, shard: usize) -> u32 {
+        assert!(!self.points.is_empty(), "ring has no members");
+        let h = shard_hash(self.seed, shard);
+        let i = self.points.partition_point(|&(ph, _)| ph < h);
+        let i = if i == self.points.len() { 0 } else { i };
+        self.points[i].1
+    }
+
+    /// Owners of shards `0..shards`, as one vector.
+    pub fn assignment(&self, shards: usize) -> Vec<u32> {
+        (0..shards).map(|s| self.owner(s)).collect()
+    }
+}
+
+/// Shards whose owner differs between two assignments, as
+/// `(shard, old_owner, new_owner)` triples in shard order.
+pub fn moved(before: &[u32], after: &[u32]) -> Vec<(usize, u32, u32)> {
+    assert_eq!(before.len(), after.len());
+    before
+        .iter()
+        .zip(after.iter())
+        .enumerate()
+        .filter(|(_, (b, a))| b != a)
+        .map(|(s, (&b, &a))| (s, b, a))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHARDS: usize = 512;
+
+    fn members(n: u32) -> Vec<u32> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let a = HashRing::new(7, &members(8)).assignment(SHARDS);
+        let b = HashRing::new(7, &members(8)).assignment(SHARDS);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seed_changes_assignment() {
+        let a = HashRing::new(7, &members(8)).assignment(SHARDS);
+        let b = HashRing::new(8, &members(8)).assignment(SHARDS);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn member_order_is_irrelevant() {
+        let fwd = HashRing::new(3, &members(6)).assignment(SHARDS);
+        let rev: Vec<u32> = (0..6).rev().collect();
+        let bwd = HashRing::new(3, &rev).assignment(SHARDS);
+        assert_eq!(fwd, bwd);
+    }
+
+    #[test]
+    fn every_member_owns_something() {
+        let asn = HashRing::new(11, &members(8)).assignment(SHARDS);
+        for w in 0..8u32 {
+            assert!(asn.contains(&w), "worker {w} owns no shards");
+        }
+    }
+
+    #[test]
+    fn join_moves_only_to_the_new_worker_and_few_shards() {
+        let mut ring = HashRing::new(42, &members(8));
+        let before = ring.assignment(SHARDS);
+        ring.add_worker(8);
+        let after = ring.assignment(SHARDS);
+        let mv = moved(&before, &after);
+        assert!(!mv.is_empty(), "a joining worker should take some shards");
+        for &(s, _, to) in &mv {
+            assert_eq!(to, 8, "shard {s} moved to {to}, not the joiner");
+        }
+        // Expected share is S/9 ≈ 57; vnode imbalance at V=64 stays well
+        // under 2x, and ⌈S/N⌉ + S/4 is the asserted envelope.
+        let bound = SHARDS.div_ceil(9) + SHARDS / 4;
+        assert!(mv.len() <= bound, "join moved {} shards (bound {bound})", mv.len());
+    }
+
+    #[test]
+    fn leave_moves_exactly_the_departed_workers_shards() {
+        let mut ring = HashRing::new(42, &members(9));
+        let before = ring.assignment(SHARDS);
+        ring.remove_worker(3);
+        let after = ring.assignment(SHARDS);
+        for (s, (&b, &a)) in before.iter().zip(after.iter()).enumerate() {
+            if b == 3 {
+                assert_ne!(a, 3, "shard {s} still on the departed worker");
+            } else {
+                assert_eq!(a, b, "shard {s} moved although its owner stayed");
+            }
+        }
+    }
+
+    #[test]
+    fn join_then_leave_round_trips() {
+        let mut ring = HashRing::new(9, &members(8));
+        let before = ring.assignment(SHARDS);
+        ring.add_worker(8);
+        ring.remove_worker(8);
+        assert_eq!(ring.assignment(SHARDS), before);
+    }
+
+    #[test]
+    fn add_is_idempotent() {
+        let mut ring = HashRing::new(5, &members(4));
+        let n = ring.points.len();
+        ring.add_worker(2);
+        assert_eq!(ring.points.len(), n);
+    }
+
+    #[test]
+    fn matches_fresh_build_after_churn() {
+        // Incremental add/remove must land exactly where a from-scratch
+        // build of the same membership lands.
+        let mut ring = HashRing::new(13, &members(8));
+        ring.remove_worker(2);
+        ring.add_worker(9);
+        let fresh: Vec<u32> = members(8).into_iter().filter(|&w| w != 2).chain([9]).collect();
+        let rebuilt = HashRing::new(13, &fresh);
+        assert_eq!(ring.assignment(SHARDS), rebuilt.assignment(SHARDS));
+    }
+}

@@ -194,6 +194,10 @@ pub struct ClusterStats {
     pub coverage_violations: u64,
     /// Max observed iteration spread between fastest and slowest worker.
     pub max_lag: usize,
+    /// Workers that left the cluster for good (a [`FaultPlan`] departure
+    /// with no later rejoin); their `worker_finish` entry is the leave
+    /// time. Always 0 without an injected fault plan.
+    pub departed: usize,
     /// Per-worker completion time of iteration K.
     pub worker_finish: Vec<Time>,
 }
@@ -236,6 +240,95 @@ impl BitSet {
     }
 }
 
+/// Declarative churn/failure schedule for one simulated run. Times are
+/// virtual; every fault is scheduled up-front on the event queue, so a
+/// faulty run is exactly as deterministic (and byte-identical under a
+/// fixed seed) as a clean one.
+///
+/// Semantics:
+/// - A **down** worker computes nothing and cannot mix, but its mailbox
+///   is durable: estimates sent to it still land (its consensus state is
+///   not lost, mirroring a process that restarts from a checkpoint). On
+///   rejoin its current iteration's compute is rescheduled from the up
+///   time — work in flight at the down moment is lost, a completed
+///   not-yet-mixed update survives.
+/// - Workers listed in `initially_down` join the cluster at their first
+///   `ups` time (late joiners); a down worker with no remaining `ups`
+///   entry has left for good and is retired from the run (counted in
+///   [`ClusterStats::departed`], not deadlocking the finish audit).
+/// - A **down edge** queues traffic (store-and-forward): estimates sent
+///   across a partitioned edge deliver when the partition heals, paying
+///   the usual pure-function link latency from the heal time. Membership
+///   is untouched — partitions slow a neighbour down, they do not remove
+///   it.
+/// - Neighbours of a down worker re-derive their DTUR epoch length d_i
+///   from the live degree, and the coverage audit exempts a faulted peer
+///   (down, or behind a partitioned edge) until it recovers — so churn
+///   windows never count as Assumption-2 violations.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Workers absent from t = 0 (each must join via an `ups` entry).
+    pub initially_down: Vec<usize>,
+    /// (worker, time): scheduled departures.
+    pub downs: Vec<(usize, Time)>,
+    /// (worker, time): scheduled (re)joins.
+    pub ups: Vec<(usize, Time)>,
+    /// (a, b, time): the a–b edge partitions at `time`.
+    pub link_downs: Vec<(usize, usize, Time)>,
+    /// (a, b, time): the a–b edge heals at `time`.
+    pub link_ups: Vec<(usize, usize, Time)>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.initially_down.is_empty()
+            && self.downs.is_empty()
+            && self.ups.is_empty()
+            && self.link_downs.is_empty()
+            && self.link_ups.is_empty()
+    }
+}
+
+/// Undirected-edge key (normalised endpoint order).
+fn edge_key(a: usize, b: usize) -> (u32, u32) {
+    if a < b {
+        (a as u32, b as u32)
+    } else {
+        (b as u32, a as u32)
+    }
+}
+
+/// Mutable fault bookkeeping while a run is in flight. Allocated only
+/// when a [`FaultPlan`] is installed; the clean path never touches it.
+struct FaultState {
+    /// Workers currently down.
+    down: BitSet,
+    /// Future `WorkerUp` events still scheduled per worker — 0 at a
+    /// `WorkerDown` means the departure is terminal.
+    rejoins_left: Vec<u32>,
+    /// Time of each worker's currently valid `ComputeDone` event. A
+    /// completion superseded by a crash (its reschedule at rejoin bears
+    /// a different timestamp) is recognised — and skipped — here.
+    valid_done_at: Vec<Time>,
+    /// Down edges → traffic queued on them as (src, dst, k), send order.
+    down_edges: HashMap<(u32, u32), Vec<(u32, u32, u32)>>,
+}
+
+impl FaultState {
+    fn new(n: usize) -> Self {
+        FaultState {
+            down: BitSet::new(n),
+            rejoins_left: vec![0; n],
+            valid_done_at: vec![f64::NAN; n],
+            down_edges: HashMap::new(),
+        }
+    }
+
+    fn edge_down(&self, a: usize, b: usize) -> bool {
+        self.down_edges.contains_key(&edge_key(a, b))
+    }
+}
+
 const NO_PENDING: u32 = u32::MAX;
 
 /// Flat per-worker simulation state: CSR adjacency + bitsets + SoA
@@ -271,6 +364,10 @@ struct WorkerBank {
     fresh_count: Vec<u32>,
     /// Full/static: arrivals needed before the worker may mix.
     needed: Vec<u32>,
+    /// Neighbours currently up (= degree without churn). The DTUR epoch
+    /// length d_i, the audit window, and the full/static quotas are all
+    /// measured against this live view.
+    live_deg: Vec<u32>,
     /// Dybw: iterations completed in the current DTUR epoch.
     epoch_pos: Vec<u32>,
     /// Commits so far (the coverage audit's clock).
@@ -316,6 +413,7 @@ impl WorkerBank {
                 need as u32
             })
             .collect();
+        let live_deg: Vec<u32> = (0..n).map(|i| offsets[i + 1] - offsets[i]).collect();
         WorkerBank {
             policy,
             offsets,
@@ -328,6 +426,7 @@ impl WorkerBank {
             arrived_count: vec![0; n],
             fresh_count: vec![0; n],
             needed,
+            live_deg,
             epoch_pos: vec![0; n],
             mixes: vec![0; n],
             arrived: BitSet::new(slots),
@@ -342,11 +441,6 @@ impl WorkerBank {
     #[inline]
     fn slot_range(&self, i: usize) -> std::ops::Range<usize> {
         self.offsets[i] as usize..self.offsets[i + 1] as usize
-    }
-
-    #[inline]
-    fn deg(&self, i: usize) -> usize {
-        (self.offsets[i + 1] - self.offsets[i]) as usize
     }
 
     /// The slot of global neighbour `src` in worker `i`'s segment.
@@ -376,52 +470,118 @@ impl WorkerBank {
             WaitPolicy::Full | WaitPolicy::Static { .. } => {
                 self.arrived_count[i] >= self.needed[i]
             }
-            WaitPolicy::Dybw => self.fresh_count[i] > 0,
+            // an islanded worker (every neighbour down) mixes alone
+            WaitPolicy::Dybw => self.fresh_count[i] > 0 || self.live_deg[i] == 0,
         }
+    }
+
+    /// Churn: worker `i`'s live membership changed (a neighbour went
+    /// down or came back, or `i` itself just rejoined). Re-derives the
+    /// live degree and the policy's arrival quota, restarts the DTUR
+    /// epoch with the new d_i (a half-finished epoch over the old
+    /// membership proves nothing about the new one), and re-arms the
+    /// coverage audit across the whole neighbourhood — the 2·d_i
+    /// starvation window is measured against the new membership from the
+    /// moment it exists.
+    fn membership_changed(&mut self, i: usize, faults: &FaultState) {
+        let range = self.slot_range(i);
+        let mut live = 0u32;
+        for slot in range.clone() {
+            if !faults.down.get(self.nbrs[slot] as usize) {
+                live += 1;
+            }
+        }
+        self.live_deg[i] = live;
+        self.needed[i] = match self.policy {
+            WaitPolicy::Full => live,
+            // islanded workers (live = 0) mix alone instead of deadlocking
+            WaitPolicy::Static { b } => {
+                if live == 0 {
+                    0
+                } else {
+                    (live as usize).saturating_sub(b).max(1) as u32
+                }
+            }
+            WaitPolicy::Dybw => 0,
+        };
+        let mix = self.mixes[i];
+        for slot in range {
+            self.established.clear(slot);
+            self.last_counted[slot] = mix;
+        }
+        self.epoch_pos[i] = 0;
+        // every arrival is fresh again once the established set clears
+        self.fresh_count[i] = self.arrived_count[i];
     }
 
     /// Commit worker `i`'s iteration with the arrived set as the counted
     /// set; advances the DTUR epoch and coverage audit. Returns b_i(k).
-    fn commit(&mut self, i: usize) -> usize {
+    ///
+    /// Under churn (`faults` set) every per-neighbour quantity is
+    /// measured against the LIVE membership: the DTUR epoch length is
+    /// the live degree (the d_i re-derivation), the audit window is
+    /// 2·live_deg, and a neighbour that is down — or behind a
+    /// partitioned edge — is exempt from the starvation audit while the
+    /// fault lasts (its window re-arms, so recovery starts a fresh
+    /// 2·d_i grace period instead of firing a spurious violation).
+    fn commit(&mut self, i: usize, faults: Option<&FaultState>) -> usize {
         debug_assert!(self.ready(i));
-        let deg = self.deg(i);
+        let live_deg = self.live_deg[i];
         let range = self.slot_range(i);
         self.mixes[i] += 1;
         let mix = self.mixes[i];
-        let window = 2 * deg as u32;
-        let mut established_count = 0usize;
+        let window = 2 * live_deg.max(1);
+        let mut established_live = 0u32;
+        let mut arrived_live = 0u32;
+        let mut live_seen = 0u32;
         for slot in range.clone() {
             let a = self.arrived.get(slot);
+            let (nbr_down, exempt) = match faults {
+                Some(f) => {
+                    let nbr = self.nbrs[slot] as usize;
+                    let d = f.down.get(nbr);
+                    (d, d || f.edge_down(i, nbr))
+                }
+                None => (false, false),
+            };
             // coverage audit (all policies): starved neighbours re-arm
             // after each violation, so sustained starvation counts once
-            // per 2·deg window (see WorkerWait::commit).
-            if a {
+            // per 2·deg window (see WorkerWait::commit); faulted
+            // neighbours stay armed without ever firing.
+            if a || exempt {
                 self.last_counted[slot] = mix;
             } else if mix - self.last_counted[slot] >= window {
                 self.coverage_violations += 1;
                 self.last_counted[slot] = mix;
             }
+            if !nbr_down {
+                live_seen += 1;
+                if a {
+                    arrived_live += 1;
+                }
+            }
             if matches!(self.policy, WaitPolicy::Dybw) {
                 if a {
                     self.established.set(slot);
                 }
-                if self.established.get(slot) {
-                    established_count += 1;
+                if !nbr_down && self.established.get(slot) {
+                    established_live += 1;
                 }
             }
         }
         if matches!(self.policy, WaitPolicy::Dybw) {
             self.epoch_pos[i] += 1;
-            // epoch ends after d_i = deg iterations, or early once every
-            // link established (LocalDtur::commit)
-            if self.epoch_pos[i] >= deg as u32 || established_count == deg {
+            // epoch ends after d_i = live_deg iterations, or early once
+            // every live link established (LocalDtur::commit)
+            if self.epoch_pos[i] >= live_deg.max(1) || established_live == live_seen {
                 for slot in range {
                     self.established.clear(slot);
                 }
                 self.epoch_pos[i] = 0;
             }
         }
-        deg - self.arrived_count[i] as usize
+        // b_i(k): live neighbours whose estimate was not counted
+        (live_seen - arrived_live) as usize
     }
 
     /// Clear worker `i`'s arrival state for iteration `next_k` and move
@@ -490,6 +650,8 @@ pub struct ClusterSim {
     iters: usize,
     times: ComputeTimes,
     link: LinkModel,
+    /// Injected churn/failure schedule (empty = clean run).
+    faults: FaultPlan,
     /// When set, every processed event is appended as one log line.
     log: Option<LogSink>,
 }
@@ -521,8 +683,15 @@ impl ClusterSim {
             iters,
             times,
             link,
+            faults: FaultPlan::default(),
             log: None,
         })
+    }
+
+    /// Inject a churn/failure schedule (see [`FaultPlan`]). Indices and
+    /// edges are validated against the graph at run time.
+    pub fn set_faults(&mut self, faults: FaultPlan) {
+        self.faults = faults;
     }
 
     /// Record one line per processed event in memory (for byte-for-byte
@@ -586,19 +755,80 @@ impl ClusterSim {
         let mut messages_sent = 0u64;
         let mut stale = 0u64;
         let mut finished = 0usize;
+        let mut departed = 0usize;
+
+        // Fault schedule: every churn event is known up-front, so the
+        // processed order is a pure function of the plan — a faulty run
+        // is exactly as reproducible as a clean one.
+        let faults_on = !self.faults.is_empty();
+        let mut fstate = FaultState::new(n);
+        if faults_on {
+            for &w in &self.faults.initially_down {
+                anyhow::ensure!(w < n, "fault worker index {w} >= workers {n}");
+                fstate.down.set(w);
+            }
+            for &(w, t) in &self.faults.downs {
+                anyhow::ensure!(w < n, "fault worker index {w} >= workers {n}");
+                q.schedule(t, Event::WorkerDown { worker: w })?;
+            }
+            for &(w, t) in &self.faults.ups {
+                anyhow::ensure!(w < n, "fault worker index {w} >= workers {n}");
+                q.schedule(t, Event::WorkerUp { worker: w })?;
+                fstate.rejoins_left[w] += 1;
+            }
+            for &(a, b, _) in self.faults.link_downs.iter().chain(&self.faults.link_ups) {
+                anyhow::ensure!(a < n && b < n, "fault edge {a}-{b} out of range");
+                anyhow::ensure!(
+                    bank.local_slot(a, b).is_some(),
+                    "fault on non-edge {a}-{b}"
+                );
+            }
+            for &(a, b, t) in &self.faults.link_downs {
+                q.schedule(t, Event::LinkDown { a, b })?;
+            }
+            for &(a, b, t) in &self.faults.link_ups {
+                q.schedule(t, Event::LinkUp { a, b })?;
+            }
+            for &w in &self.faults.initially_down {
+                anyhow::ensure!(
+                    fstate.rejoins_left[w] > 0,
+                    "initially-down worker {w} never joins (no ups entry)"
+                );
+            }
+        }
 
         for i in 0..n {
-            q.schedule(self.times.time(i, 1), Event::ComputeDone { worker: i, k: 1 })?;
+            if faults_on && fstate.down.get(i) {
+                continue; // joins later; compute starts at its WorkerUp
+            }
+            let t = self.times.time(i, 1);
+            q.schedule(t, Event::ComputeDone { worker: i, k: 1 })?;
+            if faults_on {
+                fstate.valid_done_at[i] = t;
+            }
+        }
+        if faults_on {
+            // initially-down members shrink their neighbours' live view
+            for i in 0..n {
+                bank.membership_changed(i, &fstate);
+            }
         }
 
         // MixInfo scratch (reused across mixes; filled per mix in O(deg),
         // which the commit/audit pass costs anyway)
         let mut nbr_scratch: Vec<usize> = Vec::new();
         let mut counted_scratch: Vec<bool> = Vec::new();
+        // workers an event may have made ready to mix (usually 0 or 1;
+        // a membership change can free a whole neighbourhood at once)
+        let mut cands: Vec<usize> = Vec::new();
         // same-timestamp event batches (reused)
         let mut batch: Vec<(u64, Time, Event)> = Vec::new();
         let mut compute_batch: Vec<(usize, usize)> = Vec::new();
-        let wants_batch = hooks.wants_compute_batch();
+        // the gradient-prefetch window assumes every batched completion
+        // is valid; under churn a completion can be superseded by a
+        // crash, so batching is disabled (the one-at-a-time path is the
+        // bit-identical reference anyway)
+        let wants_batch = hooks.wants_compute_batch() && !faults_on;
 
         while q.drain_simultaneous(&mut batch) > 0 {
             if wants_batch {
@@ -609,7 +839,7 @@ impl ClusterSim {
                 compute_batch.clear();
                 compute_batch.extend(batch.iter().filter_map(|&(_, _, ev)| match ev {
                     Event::ComputeDone { worker, k } => Some((worker, k)),
-                    Event::MsgArrive { .. } => None,
+                    _ => None,
                 }));
                 if compute_batch.len() > 1 {
                     hooks.on_compute_batch(&compute_batch)?;
@@ -624,21 +854,43 @@ impl ClusterSim {
                     }
                     None => {}
                 }
-                // which worker might become ready to mix because of this event
-                let candidate = match ev {
+                // workers that might become ready to mix because of this
+                // event (membership changes can free several at once)
+                cands.clear();
+                match ev {
                     Event::ComputeDone { worker, k } => {
-                        debug_assert_eq!(bank.k[worker] as usize, k);
-                        bank.compute_done.set(worker);
-                        bank.compute_done_at[worker] = now;
-                        hooks.on_compute_done(worker, k)?;
-                        // broadcast the estimate to every neighbour
-                        for slot in bank.slot_range(worker) {
-                            let dst = bank.nbrs[slot] as usize;
-                            let at = now + self.link.latency(worker, dst, k);
-                            q.schedule(at, Event::MsgArrive { dst, src: worker, k })?;
-                            messages_sent += 1;
+                        if faults_on
+                            && (fstate.down.get(worker)
+                                || k != bank.k[worker] as usize
+                                || bank.compute_done.get(worker)
+                                || now != fstate.valid_done_at[worker])
+                        {
+                            // a completion lost to a crash (superseded by
+                            // the reschedule at rejoin) — skip it
+                        } else {
+                            debug_assert_eq!(bank.k[worker] as usize, k);
+                            bank.compute_done.set(worker);
+                            bank.compute_done_at[worker] = now;
+                            hooks.on_compute_done(worker, k)?;
+                            // broadcast the estimate to every neighbour
+                            for slot in bank.slot_range(worker) {
+                                let dst = bank.nbrs[slot] as usize;
+                                if faults_on {
+                                    if let Some(queued) =
+                                        fstate.down_edges.get_mut(&edge_key(worker, dst))
+                                    {
+                                        // partitioned edge: store-and-forward
+                                        queued.push((worker as u32, dst as u32, k as u32));
+                                        messages_sent += 1;
+                                        continue;
+                                    }
+                                }
+                                let at = now + self.link.latency(worker, dst, k);
+                                q.schedule(at, Event::MsgArrive { dst, src: worker, k })?;
+                                messages_sent += 1;
+                            }
+                            cands.push(worker);
                         }
-                        Some(worker)
                     }
                     Event::MsgArrive { dst, src, k } => {
                         let wk = bank.k[dst] as usize;
@@ -646,78 +898,152 @@ impl ClusterSim {
                             // receiver finished, or the sender was a backup
                             // for an iteration the receiver already mixed
                             stale += 1;
-                            None
                         } else {
                             let slot = bank.local_slot(dst, src).ok_or_else(|| {
                                 anyhow::anyhow!("message over non-edge {src}->{dst}")
                             })?;
                             if k > wk {
                                 bank.pending_push(slot, k);
-                                None
                             } else {
                                 bank.on_arrival(dst, slot);
-                                Some(dst)
+                                cands.push(dst);
                             }
                         }
                     }
-                };
-
-                // mix if the wait rule is now satisfied
-                let Some(i) = candidate else { continue };
-                if !bank.compute_done.get(i) || !bank.ready(i) {
-                    continue;
+                    Event::WorkerDown { worker } => {
+                        if !fstate.down.get(worker) && (bank.k[worker] as usize) <= iters {
+                            fstate.down.set(worker);
+                            // neighbours re-derive their live membership
+                            // (a smaller quota may make them ready now)
+                            for slot in bank.slot_range(worker) {
+                                let nbr = bank.nbrs[slot] as usize;
+                                if !fstate.down.get(nbr) && (bank.k[nbr] as usize) <= iters {
+                                    bank.membership_changed(nbr, &fstate);
+                                    cands.push(nbr);
+                                }
+                            }
+                            if fstate.rejoins_left[worker] == 0 {
+                                // terminal departure: retire the worker so
+                                // the cluster neither waits for it nor
+                                // trips the finish audit
+                                let c = bank.k[worker] as usize - 1;
+                                done_at[c] -= 1;
+                                while min_done < iters && done_at[min_done] == 0 {
+                                    min_done += 1;
+                                }
+                                bank.k[worker] = iters as u32 + 1;
+                                bank.finish_at[worker] = now;
+                                finished += 1;
+                                departed += 1;
+                            }
+                        }
+                    }
+                    Event::WorkerUp { worker } => {
+                        fstate.rejoins_left[worker] =
+                            fstate.rejoins_left[worker].saturating_sub(1);
+                        if fstate.down.get(worker) && (bank.k[worker] as usize) <= iters {
+                            fstate.down.clear(worker);
+                            for slot in bank.slot_range(worker) {
+                                let nbr = bank.nbrs[slot] as usize;
+                                if !fstate.down.get(nbr) && (bank.k[nbr] as usize) <= iters {
+                                    bank.membership_changed(nbr, &fstate);
+                                    cands.push(nbr);
+                                }
+                            }
+                            // the rejoiner re-derives its own view too: the
+                            // membership it left may not be the one it finds
+                            bank.membership_changed(worker, &fstate);
+                            if bank.compute_done.get(worker) {
+                                // its completed update survived the outage
+                                // (durable mailbox may already satisfy it)
+                                cands.push(worker);
+                            } else {
+                                let k = bank.k[worker] as usize;
+                                let t = now + self.times.time(worker, k);
+                                q.schedule(t, Event::ComputeDone { worker, k })?;
+                                fstate.valid_done_at[worker] = t;
+                            }
+                        }
+                    }
+                    Event::LinkDown { a, b } => {
+                        fstate.down_edges.entry(edge_key(a, b)).or_default();
+                    }
+                    Event::LinkUp { a, b } => {
+                        if let Some(queued) = fstate.down_edges.remove(&edge_key(a, b)) {
+                            // partition heals: queued traffic drains in
+                            // send order, paying link latency from now
+                            for (src, dst, k) in queued {
+                                let (src, dst, k) = (src as usize, dst as usize, k as usize);
+                                let at = now + self.link.latency(src, dst, k);
+                                q.schedule(at, Event::MsgArrive { dst, src, k })?;
+                            }
+                        }
+                    }
                 }
-                let k = bank.k[i] as usize;
-                nbr_scratch.clear();
-                counted_scratch.clear();
-                for slot in bank.slot_range(i) {
-                    nbr_scratch.push(bank.nbrs[slot] as usize);
-                    counted_scratch.push(bank.arrived.get(slot));
-                }
-                let backup = bank.commit(i);
-                let iter_duration = now - bank.last_mix_at[i];
-                let wait = now - bank.compute_done_at[i];
-                dur_sum += iter_duration;
-                wait_sum += wait;
-                backup_sum += backup as u64;
 
-                // frontier update: worker completed iteration k
-                done_at[k - 1] -= 1;
-                done_at[k] += 1;
-                while min_done < iters && done_at[min_done] == 0 {
-                    min_done += 1;
-                }
-                max_done = max_done.max(k);
-                max_lag = max_lag.max(max_done - min_done);
+                // mix every candidate whose wait rule is now satisfied
+                for idx in 0..cands.len() {
+                    let i = cands[idx];
+                    if faults_on && fstate.down.get(i) {
+                        continue;
+                    }
+                    if !bank.compute_done.get(i) || !bank.ready(i) {
+                        continue;
+                    }
+                    let k = bank.k[i] as usize;
+                    nbr_scratch.clear();
+                    counted_scratch.clear();
+                    for slot in bank.slot_range(i) {
+                        nbr_scratch.push(bank.nbrs[slot] as usize);
+                        counted_scratch.push(bank.arrived.get(slot));
+                    }
+                    let backup =
+                        bank.commit(i, if faults_on { Some(&fstate) } else { None });
+                    let iter_duration = now - bank.last_mix_at[i];
+                    let wait = now - bank.compute_done_at[i];
+                    dur_sum += iter_duration;
+                    wait_sum += wait;
+                    backup_sum += backup as u64;
 
-                let info = MixInfo {
-                    worker: i,
-                    k,
-                    now,
-                    iter_duration,
-                    wait,
-                    nbrs: &nbr_scratch,
-                    counted: &counted_scratch,
-                    backup,
-                    min_done,
-                };
-                hooks.on_mix(&info)?;
+                    // frontier update: worker completed iteration k
+                    done_at[k - 1] -= 1;
+                    done_at[k] += 1;
+                    while min_done < iters && done_at[min_done] == 0 {
+                        min_done += 1;
+                    }
+                    max_done = max_done.max(k);
+                    max_lag = max_lag.max(max_done - min_done);
 
-                // advance to iteration k+1 (or finish)
-                bank.k[i] += 1;
-                bank.compute_done.clear(i);
-                bank.last_mix_at[i] = now;
-                if bank.k[i] as usize > iters {
-                    bank.finish_at[i] = now;
-                    finished += 1;
-                    continue;
+                    let info = MixInfo {
+                        worker: i,
+                        k,
+                        now,
+                        iter_duration,
+                        wait,
+                        nbrs: &nbr_scratch,
+                        counted: &counted_scratch,
+                        backup,
+                        min_done,
+                    };
+                    hooks.on_mix(&info)?;
+
+                    // advance to iteration k+1 (or finish)
+                    bank.k[i] += 1;
+                    bank.compute_done.clear(i);
+                    bank.last_mix_at[i] = now;
+                    if bank.k[i] as usize > iters {
+                        bank.finish_at[i] = now;
+                        finished += 1;
+                        continue;
+                    }
+                    let next_k = bank.k[i] as usize;
+                    bank.advance(i, next_k);
+                    let t = now + self.times.time(i, next_k);
+                    q.schedule(t, Event::ComputeDone { worker: i, k: next_k })?;
+                    if faults_on {
+                        fstate.valid_done_at[i] = t;
+                    }
                 }
-                let next_k = bank.k[i] as usize;
-                bank.advance(i, next_k);
-                q.schedule(
-                    now + self.times.time(i, next_k),
-                    Event::ComputeDone { worker: i, k: next_k },
-                )?;
             }
         }
         if let Some(LogSink::Writer(w)) = &mut self.log {
@@ -726,7 +1052,7 @@ impl ClusterSim {
 
         anyhow::ensure!(
             finished == n,
-            "deadlock: only {finished}/{n} workers finished (policy {})",
+            "deadlock: only {finished}/{n} workers finished (policy {}, {departed} departed)",
             self.policy.name()
         );
         let total_iters = (n * iters) as f64;
@@ -743,6 +1069,7 @@ impl ClusterSim {
             events: q.processed(),
             coverage_violations: bank.coverage_violations,
             max_lag,
+            departed,
             worker_finish: bank.finish_at.clone(),
         })
     }
@@ -1006,7 +1333,7 @@ mod tests {
                     policy.name()
                 );
                 if bank.ready(0) && rng.next_u64() % 2 == 0 {
-                    let b_bank = bank.commit(0);
+                    let b_bank = bank.commit(0, None);
                     let b_re = re.commit(&arrived);
                     assert_eq!(b_bank, b_re, "case {case}: backup count diverged");
                     bank.advance(0, commits + 2); // no pending: clears arrivals
@@ -1021,6 +1348,166 @@ mod tests {
                 policy.name()
             );
         }
+    }
+
+    /// A churn plan exercising every fault type: one transient outage,
+    /// one terminal departure, one partition window on an edge.
+    fn churn_plan() -> FaultPlan {
+        FaultPlan {
+            initially_down: Vec::new(),
+            downs: vec![(3, 0.8), (7, 1.2)],
+            ups: vec![(3, 2.0)],
+            link_downs: vec![(0, 1, 0.5)],
+            link_ups: vec![(0, 1, 2.5)],
+        }
+    }
+
+    fn run_churn(policy: WaitPolicy, seed: u64) -> (ClusterStats, Vec<String>) {
+        let n = 12;
+        let g = topology::ring(n);
+        let times = ComputeTimes::PerWorker {
+            dist: Dist::ShiftedExp { base: 0.05, rate: 20.0 },
+            scale: vec![1.0; n],
+            seed,
+        };
+        let link = LinkModel::new(0.002, Some(Dist::ShiftedExp { base: 0.0, rate: 500.0 }), seed);
+        let mut sim = ClusterSim::new(g, policy, 20, times, link).unwrap();
+        sim.set_faults(churn_plan());
+        sim.enable_log();
+        let stats = sim.run(&mut NoHooks).unwrap();
+        let log = sim.take_log();
+        (stats, log)
+    }
+
+    #[test]
+    fn churn_runs_are_byte_identical() {
+        // same seed + same fault plan → identical event logs, stats bits
+        let (s1, l1) = run_churn(WaitPolicy::Dybw, 77);
+        let (s2, l2) = run_churn(WaitPolicy::Dybw, 77);
+        assert_eq!(l1, l2, "churn event logs diverged across same-seed runs");
+        assert!(l1.iter().any(|l| l.contains("worker_down")), "no churn in log");
+        assert!(l1.iter().any(|l| l.contains("worker_up")));
+        assert!(l1.iter().any(|l| l.contains("link_down")));
+        assert_eq!(s1.makespan.to_bits(), s2.makespan.to_bits());
+        assert_eq!(s1.events, s2.events);
+    }
+
+    #[test]
+    fn dybw_and_full_keep_coverage_under_churn() {
+        // The tentpole invariant: a neighbour that is down or behind a
+        // partition is never counted as an Assumption-2 violation, and
+        // after recovery every current neighbour is re-covered within
+        // the re-derived 2·d_i window — zero audit violations end to
+        // end for both violation-free-by-construction policies.
+        for policy in [WaitPolicy::Dybw, WaitPolicy::Full] {
+            let (stats, _) = run_churn(policy, 41);
+            assert_eq!(
+                stats.coverage_violations, 0,
+                "{}: churn produced audit violations",
+                policy.name()
+            );
+            // worker 7 left for good; everyone else finished the workload
+            assert_eq!(stats.departed, 1, "{}", policy.name());
+            assert!(stats.makespan.is_finite() && stats.makespan > 0.0);
+            // the partition healed at 2.5: traffic queued on the 0-1 edge
+            // was delivered afterwards, so the run outlived the window
+            assert!(stats.makespan > 2.5, "{}: makespan {}", policy.name(), stats.makespan);
+        }
+    }
+
+    #[test]
+    fn terminal_departure_retires_worker_at_leave_time() {
+        let (stats, _) = run_churn(WaitPolicy::Dybw, 19);
+        // worker 7 leaves at t = 1.2 and its finish time is the leave time
+        assert_eq!(stats.departed, 1);
+        assert!((stats.worker_finish[7] - 1.2).abs() < 1e-12, "{}", stats.worker_finish[7]);
+        // the survivors' finish times are real completions, after the leave
+        for (i, &f) in stats.worker_finish.iter().enumerate() {
+            if i != 7 {
+                assert!(f > 1.2, "worker {i} finished at {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn late_joiner_catches_up_and_finishes() {
+        // worker 5 does not exist until t = 0.6; after joining it drains
+        // the durable mailbox (neighbours' earlier broadcasts) and still
+        // completes the full workload — no deadlock, no departures.
+        let n = 8;
+        let g = topology::ring(n);
+        let times = ComputeTimes::homogeneous(n, Dist::Deterministic { base: 0.1 }, 0);
+        for policy in [WaitPolicy::Full, WaitPolicy::Dybw] {
+            let mut sim =
+                ClusterSim::new(g.clone(), policy, 10, times.clone(), LinkModel::zero()).unwrap();
+            sim.set_faults(FaultPlan {
+                initially_down: vec![5],
+                ups: vec![(5, 0.6)],
+                ..FaultPlan::default()
+            });
+            let stats = sim.run(&mut NoHooks).unwrap();
+            assert_eq!(stats.departed, 0, "{}", policy.name());
+            assert_eq!(stats.coverage_violations, 0, "{}", policy.name());
+            // the joiner's first compute starts at the join time
+            assert!(stats.worker_finish[5] > 0.6, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn clean_run_is_unchanged_by_empty_fault_plan() {
+        // set_faults(default) must leave the clean fast path — and its
+        // byte-exact event log — untouched
+        let trace = ring_trace(20, 8, 5);
+        let link = LinkModel::new(0.001, Some(Dist::ShiftedExp { base: 0.0, rate: 600.0 }), 2);
+        let run = |with_empty_plan: bool| {
+            let mut sim = ClusterSim::new(
+                topology::ring(20),
+                WaitPolicy::Dybw,
+                8,
+                ComputeTimes::Replay(trace.clone()),
+                link.clone(),
+            )
+            .unwrap();
+            if with_empty_plan {
+                sim.set_faults(FaultPlan::default());
+            }
+            sim.enable_log();
+            let stats = sim.run(&mut NoHooks).unwrap();
+            (stats, sim.take_log())
+        };
+        let (s1, l1) = run(false);
+        let (s2, l2) = run(true);
+        assert_eq!(l1, l2);
+        assert_eq!(s1.makespan.to_bits(), s2.makespan.to_bits());
+        assert_eq!(s1.departed, 0);
+    }
+
+    #[test]
+    fn rejects_bad_fault_plans() {
+        let build = || {
+            let times = ComputeTimes::homogeneous(6, Dist::Deterministic { base: 0.1 }, 0);
+            ClusterSim::new(topology::ring(6), WaitPolicy::Full, 5, times, LinkModel::zero())
+                .unwrap()
+        };
+        // worker index out of range
+        let mut sim = build();
+        sim.set_faults(FaultPlan { downs: vec![(9, 1.0)], ..FaultPlan::default() });
+        let err = sim.run(&mut NoHooks).unwrap_err().to_string();
+        assert!(err.contains("fault worker index"), "{err}");
+        // partition on a non-edge
+        let mut sim = build();
+        sim.set_faults(FaultPlan {
+            link_downs: vec![(0, 3, 1.0)],
+            link_ups: vec![(0, 3, 2.0)],
+            ..FaultPlan::default()
+        });
+        let err = sim.run(&mut NoHooks).unwrap_err().to_string();
+        assert!(err.contains("non-edge"), "{err}");
+        // initially-down worker that never joins
+        let mut sim = build();
+        sim.set_faults(FaultPlan { initially_down: vec![2], ..FaultPlan::default() });
+        let err = sim.run(&mut NoHooks).unwrap_err().to_string();
+        assert!(err.contains("never joins"), "{err}");
     }
 
     #[test]

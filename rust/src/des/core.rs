@@ -40,6 +40,14 @@ pub enum Event {
     ComputeDone { worker: usize, k: usize },
     /// Worker `dst` receives `src`'s iteration-`k` parameter estimate.
     MsgArrive { dst: usize, src: usize, k: usize },
+    /// Fault plan: the worker crashes / leaves the membership.
+    WorkerDown { worker: usize },
+    /// Fault plan: the worker (re)joins the membership.
+    WorkerUp { worker: usize },
+    /// Fault plan: the edge (a, b) partitions (messages queue).
+    LinkDown { a: usize, b: usize },
+    /// Fault plan: the edge (a, b) heals (queued messages deliver).
+    LinkUp { a: usize, b: usize },
 }
 
 impl Event {
@@ -53,6 +61,10 @@ impl Event {
             Event::MsgArrive { dst, src, k } => {
                 format!("{seq} {time} msg_arrive src={src} dst={dst} k={k}")
             }
+            Event::WorkerDown { worker } => format!("{seq} {time} worker_down w={worker}"),
+            Event::WorkerUp { worker } => format!("{seq} {time} worker_up w={worker}"),
+            Event::LinkDown { a, b } => format!("{seq} {time} link_down a={a} b={b}"),
+            Event::LinkUp { a, b } => format!("{seq} {time} link_up a={a} b={b}"),
         }
     }
 }
@@ -504,6 +516,16 @@ mod tests {
         assert_eq!(e.log_line(12, 0.25), "12 0.25 msg_arrive src=7 dst=3 k=2");
         let c = Event::ComputeDone { worker: 5, k: 9 };
         assert_eq!(c.log_line(0, 1.5), "0 1.5 compute_done w=5 k=9");
+        assert_eq!(
+            Event::WorkerDown { worker: 4 }.log_line(3, 2.5),
+            "3 2.5 worker_down w=4"
+        );
+        assert_eq!(Event::WorkerUp { worker: 4 }.log_line(4, 3.5), "4 3.5 worker_up w=4");
+        assert_eq!(
+            Event::LinkDown { a: 1, b: 2 }.log_line(5, 4.5),
+            "5 4.5 link_down a=1 b=2"
+        );
+        assert_eq!(Event::LinkUp { a: 1, b: 2 }.log_line(6, 5.5), "6 5.5 link_up a=1 b=2");
     }
 
     #[test]

@@ -20,17 +20,46 @@
 //! sorted-neighbour order — two same-seed runs produce identical event
 //! logs, histories, and final parameters (asserted in tests).
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::ckpt_manager::CkptManager;
 use crate::engine::{AnyBatch, BatchSource, EnginePool};
 use crate::graph::Graph;
 use crate::metrics::{EvalRecord, IterRecord, RunHistory};
 use crate::straggler::link::LinkModel;
 use crate::util::vecmath;
 
-use super::cluster::{ClusterSim, ClusterStats, ComputeTimes, DesHooks, MixInfo};
+use super::cluster::{ClusterSim, ClusterStats, ComputeTimes, DesHooks, FaultPlan, MixInfo};
 use super::policy::WaitPolicy;
 use crate::coordinator::TrainConfig;
+
+/// Checkpoint/restart wiring for a full-fidelity run.
+///
+/// The asynchronous DES is bit-reproducible from its seed, so recovery
+/// is a **verified replay**: checkpoints are written atomically (via
+/// [`CkptManager`]) every `every` frontier milestones, and a resumed
+/// run re-executes from iteration 0, asserting — bit for bit — that
+/// the replayed parameters, clock, and history at the latest intact
+/// checkpoint's milestone equal what was persisted before the crash.
+/// Divergence is a hard error (the store was corrupt or the binary
+/// changed); agreement proves the resumed run's outputs are byte-
+/// identical to an uninterrupted one, which CI enforces with `cmp`.
+#[derive(Debug, Clone)]
+pub struct RecoveryOpts {
+    /// Checkpoint directory (created on demand).
+    pub dir: PathBuf,
+    /// Checkpoint every this many global-frontier iterations (0 = off).
+    pub every: usize,
+    /// Keep only the newest `retain` checkpoints (0 = keep all).
+    pub retain: usize,
+    /// Fault injection: abort right after saving the checkpoint at this
+    /// milestone (must be a multiple of `every` to trigger).
+    pub kill_at: Option<usize>,
+    /// Verify the replay against the latest intact on-disk checkpoint.
+    pub resume: bool,
+}
 
 /// Outcome of one full-fidelity DES run.
 pub struct DesOutcome {
@@ -57,6 +86,8 @@ pub struct DesTrainer {
     model_name: String,
     log_events: bool,
     batch_compute: bool,
+    faults: FaultPlan,
+    recovery: Option<RecoveryOpts>,
 }
 
 impl DesTrainer {
@@ -93,7 +124,19 @@ impl DesTrainer {
             model_name: model_name.to_string(),
             log_events: false,
             batch_compute: true,
+            faults: FaultPlan::default(),
+            recovery: None,
         })
+    }
+
+    /// Inject scheduled membership/partition events into the run.
+    pub fn set_faults(&mut self, faults: FaultPlan) {
+        self.faults = faults;
+    }
+
+    /// Enable milestone checkpointing (and optionally kill/resume).
+    pub fn set_recovery(&mut self, recovery: RecoveryOpts) {
+        self.recovery = Some(recovery);
     }
 
     /// Record the per-event log (reproducibility diffs; costs memory).
@@ -153,6 +196,26 @@ impl DesTrainer {
             0.0,
         )?);
 
+        let ckpt = match &self.recovery {
+            Some(r) if r.every > 0 => {
+                let mgr = CkptManager::new(&r.dir, r.retain)?;
+                let verify = if r.resume {
+                    mgr.latest()?.map(|(c, _)| c)
+                } else {
+                    None
+                };
+                Some(CkptState {
+                    mgr,
+                    every: r.every,
+                    kill_at: r.kill_at,
+                    verify,
+                    next: r.every,
+                    model: &self.model_name,
+                })
+            }
+            _ => None,
+        };
+
         let mut hooks = FullHooks {
             cfg: &self.cfg,
             pool: &self.pool,
@@ -173,6 +236,7 @@ impl DesTrainer {
             precomputed: vec![false; n],
             batch_grads: Vec::new(),
             batched_jobs: 0,
+            ckpt,
         };
         let mut sim = ClusterSim::new(
             self.graph.clone(),
@@ -181,6 +245,7 @@ impl DesTrainer {
             self.times.clone(),
             self.link.clone(),
         )?;
+        sim.set_faults(self.faults.clone());
         if self.log_events {
             sim.enable_log();
         }
@@ -250,6 +315,20 @@ struct FullHooks<'a> {
     precomputed: Vec<bool>,
     batch_grads: Vec<Vec<f32>>,
     batched_jobs: u64,
+    ckpt: Option<CkptState<'a>>,
+}
+
+/// Milestone checkpointing state (see [`RecoveryOpts`]).
+struct CkptState<'a> {
+    mgr: CkptManager,
+    every: usize,
+    kill_at: Option<usize>,
+    /// Latest intact on-disk checkpoint, cross-checked bit-for-bit when
+    /// a verified replay passes its milestone.
+    verify: Option<Checkpoint>,
+    /// Next frontier milestone to checkpoint at.
+    next: usize,
+    model: &'a str,
 }
 
 impl DesHooks for FullHooks<'_> {
@@ -359,6 +438,50 @@ impl DesHooks for FullHooks<'_> {
             )?;
             self.history.evals.push(rec);
             self.next_milestone += self.cfg.eval_every;
+        }
+
+        // checkpoint whenever the global frontier crosses a milestone
+        if let Some(c) = self.ckpt.as_mut() {
+            while info.min_done >= c.next {
+                let m = c.next;
+                c.next += c.every;
+                if matches!(&c.verify, Some(v) if v.iteration == m) {
+                    let v = c.verify.take().unwrap();
+                    anyhow::ensure!(
+                        v.clock.to_bits() == info.now.to_bits(),
+                        "resume verification failed at milestone {m}: replayed \
+                         clock {} != checkpointed {}",
+                        info.now,
+                        v.clock
+                    );
+                    anyhow::ensure!(
+                        v.history.bits_eq(self.history),
+                        "resume verification failed at milestone {m}: replayed \
+                         history diverges from the checkpoint"
+                    );
+                    let same = v.params.len() == self.params.len()
+                        && v.params.iter().zip(self.params.iter()).all(|(a, b)| {
+                            a.len() == b.len()
+                                && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+                        });
+                    anyhow::ensure!(
+                        same,
+                        "resume verification failed at milestone {m}: replayed \
+                         parameters diverge from the checkpoint"
+                    );
+                }
+                let snap = Checkpoint {
+                    iteration: m,
+                    clock: info.now,
+                    model: c.model.to_string(),
+                    params: self.params.clone(),
+                    history: self.history.clone(),
+                };
+                c.mgr.save(&snap)?;
+                if c.kill_at == Some(m) {
+                    anyhow::bail!("killed at checkpoint milestone {m} (kill_at fault injection)");
+                }
+            }
         }
         Ok(())
     }
@@ -552,6 +675,95 @@ mod tests {
             for (a, b) in pb.iter().zip(&pu) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{}: final params diverged", policy.name());
             }
+        }
+    }
+
+    /// PR-8 tentpole: kill a full-fidelity run right after a milestone
+    /// checkpoint, resume from `CkptManager::latest()`, and the
+    /// verified replay must reproduce the uninterrupted run — event
+    /// log, history, and final parameters, bit for bit.
+    #[test]
+    fn full_fidelity_kill_and_resume_is_bit_identical() {
+        let trace = test_trace(30);
+        let dir = std::env::temp_dir().join(format!("dybw-des-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let run = |recovery: Option<RecoveryOpts>| {
+            let mut t = build(WaitPolicy::Dybw, 30, 13, trace.clone());
+            t.log_events();
+            if let Some(r) = recovery {
+                t.set_recovery(r);
+            }
+            t.run().map(|o| {
+                let avg = t.average_params();
+                (o, avg)
+            })
+        };
+        // uninterrupted reference — no checkpointing at all
+        let (base, pbase) = run(None).unwrap();
+        // killed right after saving the milestone-20 checkpoint
+        let err = run(Some(RecoveryOpts {
+            dir: dir.clone(),
+            every: 10,
+            retain: 2,
+            kill_at: Some(20),
+            resume: false,
+        }))
+        .unwrap_err();
+        assert!(err.to_string().contains("killed at checkpoint milestone 20"), "{err}");
+        // resumed: replay from zero, verified against the latest intact
+        // checkpoint at its milestone, then run to completion
+        let (resumed, pres) = run(Some(RecoveryOpts {
+            dir: dir.clone(),
+            every: 10,
+            retain: 2,
+            kill_at: None,
+            resume: true,
+        }))
+        .unwrap();
+        assert_eq!(base.event_log, resumed.event_log, "event logs diverged");
+        assert!(!base.event_log.is_empty());
+        assert!(base.history.bits_eq(&resumed.history), "histories diverged");
+        assert_eq!(pbase.len(), pres.len());
+        for (a, b) in pbase.iter().zip(&pres) {
+            assert_eq!(a.to_bits(), b.to_bits(), "final params diverged");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// PR-8 tentpole: real gradients under churn. A down/up cycle plus
+    /// a partition window must stay bit-reproducible, keep DTUR
+    /// coverage intact, and finish every worker.
+    #[test]
+    fn full_fidelity_churn_run_is_bit_identical_and_covered() {
+        let trace = test_trace(25);
+        let faults = FaultPlan {
+            downs: vec![(2, 0.5)],
+            ups: vec![(2, 1.0)],
+            link_downs: vec![(0, 1, 0.3)],
+            link_ups: vec![(0, 1, 1.5)],
+            ..Default::default()
+        };
+        let run = || {
+            let mut t = build(WaitPolicy::Dybw, 25, 17, trace.clone());
+            t.log_events();
+            t.set_faults(faults.clone());
+            let out = t.run().unwrap();
+            let avg = t.average_params();
+            (out, avg)
+        };
+        let (o1, p1) = run();
+        let (o2, p2) = run();
+        assert_eq!(o1.event_log, o2.event_log, "event logs diverged");
+        assert!(o1.event_log.iter().any(|l| l.contains("worker_down")));
+        assert!(o1.event_log.iter().any(|l| l.contains("link_down")));
+        assert!(o1.history.bits_eq(&o2.history), "histories diverged");
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.to_bits(), b.to_bits(), "final params diverged");
+        }
+        assert_eq!(o1.stats.coverage_violations, 0);
+        assert_eq!(o1.stats.departed, 0);
+        for r in &o1.history.iters {
+            assert!(r.train_loss.is_finite());
         }
     }
 

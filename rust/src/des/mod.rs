@@ -32,7 +32,9 @@ pub mod policy;
 pub mod scenario;
 
 pub use self::core::{Event, EventQueue, ScheduleError, Time};
-pub use cluster::{ClusterSim, ClusterStats, ComputeTimes, DesHooks, LogSink, MixInfo, NoHooks};
-pub use full::{DesOutcome, DesTrainer};
+pub use cluster::{
+    ClusterSim, ClusterStats, ComputeTimes, DesHooks, FaultPlan, LogSink, MixInfo, NoHooks,
+};
+pub use full::{DesOutcome, DesTrainer, RecoveryOpts};
 pub use policy::{WaitPolicy, WorkerWait};
-pub use scenario::{Fidelity, Scenario};
+pub use scenario::{Fidelity, Scenario, ScenarioFaults};

@@ -22,6 +22,7 @@
 //! persistently slow neighbour is silently never heard from.
 
 use crate::coordinator::dtur::LocalDtur;
+use crate::util::parse::ParseError;
 
 /// The asynchronous wait rule, parsed from scenario/CLI specs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,15 +45,20 @@ impl WaitPolicy {
         }
     }
 
-    /// Parse `"full"`, `"static:<b>"`, `"dybw"`.
-    pub fn parse(s: &str) -> Option<WaitPolicy> {
+    /// Parse `"full"`, `"static:<b>"`, `"dybw"` (alias `"cb-dybw"`).
+    /// Round-trip contract: `parse(&p.name()) == Ok(p)` for every
+    /// policy; anything else is a typed [`ParseError`].
+    pub fn parse(s: &str) -> Result<WaitPolicy, ParseError> {
         match s {
-            "full" => Some(WaitPolicy::Full),
-            "dybw" | "cb-dybw" => Some(WaitPolicy::Dybw),
+            "full" => Ok(WaitPolicy::Full),
+            "dybw" | "cb-dybw" => Ok(WaitPolicy::Dybw),
             _ => s
                 .strip_prefix("static:")
                 .and_then(|b| b.parse().ok())
-                .map(|b| WaitPolicy::Static { b }),
+                .map(|b| WaitPolicy::Static { b })
+                .ok_or_else(|| {
+                    ParseError::new("wait policy", s, "full | static:<b> | dybw")
+                }),
         }
     }
 }
@@ -104,6 +110,29 @@ impl WorkerWait {
         }
     }
 
+    /// Churn: the worker's neighbourhood changed size. The DTUR epoch
+    /// restarts with the new d_i (a half-finished epoch over the old
+    /// neighbour set proves nothing about the new one), and the audit
+    /// re-arms every neighbour at the current mix index — the 2·d_i
+    /// starvation window is measured against the *new* membership from
+    /// the moment it exists, so a just-joined neighbour is not instantly
+    /// "starved" and a just-removed one cannot violate.
+    pub fn set_degree(&mut self, deg: usize) {
+        if deg == self.deg {
+            return;
+        }
+        self.deg = deg;
+        if let Some(d) = self.dtur.as_mut() {
+            d.set_degree(deg);
+        }
+        self.last_counted.clear();
+        self.last_counted.resize(deg, self.mixes);
+    }
+
+    pub fn deg(&self) -> usize {
+        self.deg
+    }
+
     /// Commit the iteration with `arrived` as the counted set; returns
     /// this round's backup count b_i(k) and advances epoch/audit state.
     pub fn commit(&mut self, arrived: &[bool]) -> usize {
@@ -131,12 +160,20 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for p in [WaitPolicy::Full, WaitPolicy::Static { b: 2 }, WaitPolicy::Dybw] {
-            assert_eq!(WaitPolicy::parse(&p.name()), Some(p));
+        for b in 0..6 {
+            let p = WaitPolicy::Static { b };
+            assert_eq!(WaitPolicy::parse(&p.name()), Ok(p));
         }
-        assert_eq!(WaitPolicy::parse("cb-dybw"), Some(WaitPolicy::Dybw));
-        assert_eq!(WaitPolicy::parse("static:x"), None);
-        assert_eq!(WaitPolicy::parse("wat"), None);
+        for p in [WaitPolicy::Full, WaitPolicy::Dybw] {
+            assert_eq!(WaitPolicy::parse(&p.name()), Ok(p));
+        }
+        assert_eq!(WaitPolicy::parse("cb-dybw"), Ok(WaitPolicy::Dybw));
+        for bad in ["static:x", "static:", "wat", "", "Full", "dybw "] {
+            let err = WaitPolicy::parse(bad).unwrap_err();
+            assert_eq!(err.what, "wait policy");
+            assert_eq!(err.input, bad);
+            assert!(err.to_string().contains("static:<b>"));
+        }
     }
 
     #[test]
@@ -199,6 +236,39 @@ mod tests {
                 w.commit(&arrived);
             }
             assert_eq!(w.coverage_violations, 0, "deg {deg}");
+        }
+    }
+
+    /// PR-8 churn satellite: after a mid-run degree change the epoch
+    /// restarts with the new d_i, and every *current* neighbour is
+    /// re-covered within 2·d_i commits — zero audit violations across
+    /// growth, shrink, and no-op changes.
+    #[test]
+    fn dybw_recovers_coverage_after_degree_change() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        fn drive(w: &mut WorkerWait, rng: &mut crate::util::rng::Rng, rounds: usize) {
+            for _ in 0..rounds {
+                let deg = w.deg();
+                let mut arrived = vec![false; deg];
+                let mut order: Vec<usize> = (0..deg).collect();
+                rng.shuffle(&mut order);
+                for &j in &order {
+                    arrived[j] = true;
+                    if w.ready(&arrived) {
+                        break;
+                    }
+                }
+                assert!(w.ready(&arrived));
+                w.commit(&arrived);
+            }
+        }
+        for (from, to) in [(3usize, 5usize), (5, 2), (2, 6), (4, 4)] {
+            let mut w = WorkerWait::new(WaitPolicy::Dybw, from);
+            drive(&mut w, &mut rng, 2 * from + 1); // land mid-epoch
+            w.set_degree(to);
+            assert_eq!(w.deg(), to);
+            drive(&mut w, &mut rng, 6 * to);
+            assert_eq!(w.coverage_violations, 0, "{from}->{to}");
         }
     }
 

@@ -21,9 +21,11 @@ use crate::straggler::link::LinkModel;
 use crate::straggler::trace::Trace;
 use crate::straggler::{Dist, StragglerModel};
 use crate::util::json::Json;
+use crate::util::parse::ParseError;
 use crate::util::rng::Rng;
 
-use super::cluster::{ClusterSim, ClusterStats, ComputeTimes, NoHooks};
+use super::cluster::{ClusterSim, ClusterStats, ComputeTimes, FaultPlan, NoHooks};
+use super::full::RecoveryOpts;
 use super::policy::WaitPolicy;
 
 /// Simulation fidelity.
@@ -43,12 +45,103 @@ impl Fidelity {
         }
     }
 
-    pub fn parse(s: &str) -> Option<Fidelity> {
+    /// Round-trip contract: `parse(f.name()) == Ok(f)` for every
+    /// fidelity; anything else is a typed [`ParseError`].
+    pub fn parse(s: &str) -> Result<Fidelity, ParseError> {
         match s {
-            "timing" => Some(Fidelity::Timing),
-            "full" => Some(Fidelity::Full),
-            _ => None,
+            "timing" => Ok(Fidelity::Timing),
+            "full" => Ok(Fidelity::Full),
+            _ => Err(ParseError::new("fidelity", s, "timing | full")),
         }
+    }
+}
+
+/// Declarative churn/fault schedule, compiled to a [`FaultPlan`] of
+/// per-worker membership events on the DES calendar. Everything is
+/// scheduled up front at known virtual times, so faulty runs keep the
+/// byte-identical-event-log reproducibility contract.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScenarioFaults {
+    /// Workers absent at t = 0 (each needs a later `joins` entry).
+    pub initially_down: Vec<usize>,
+    /// (worker, time): the worker (re)joins the cluster.
+    pub joins: Vec<(usize, f64)>,
+    /// (worker, time): the worker leaves; terminal when no later join.
+    pub leaves: Vec<(usize, f64)>,
+    /// (a, b, from, to): the edge a–b is partitioned on [from, to);
+    /// messages queue (store-and-forward) and drain at heal time.
+    pub partitions: Vec<(usize, usize, f64, f64)>,
+    /// (rack, from, to): correlated outage — every worker in the rack
+    /// (per [`topology::rack_slices`]) leaves at `from`, rejoins at
+    /// `to`. Only valid on a `racks:<r>` topology.
+    pub rack_outages: Vec<(usize, f64, f64)>,
+}
+
+impl ScenarioFaults {
+    pub fn is_empty(&self) -> bool {
+        self.initially_down.is_empty()
+            && self.joins.is_empty()
+            && self.leaves.is_empty()
+            && self.partitions.is_empty()
+            && self.rack_outages.is_empty()
+    }
+
+    /// Expand the declarative schedule into raw membership events.
+    /// Index/window errors are caught here (and again by the DES, which
+    /// additionally checks partitioned pairs are graph edges).
+    pub fn compile(&self, topology: Topology, workers: usize) -> anyhow::Result<FaultPlan> {
+        fn check(w: usize, t: f64, workers: usize, what: &str) -> anyhow::Result<()> {
+            anyhow::ensure!(w < workers, "{what} worker index {w} >= workers {workers}");
+            anyhow::ensure!(t.is_finite() && t >= 0.0, "{what} time must be finite and >= 0");
+            Ok(())
+        }
+        let mut plan = FaultPlan {
+            initially_down: self.initially_down.clone(),
+            ..FaultPlan::default()
+        };
+        for &w in &self.initially_down {
+            anyhow::ensure!(w < workers, "initially_down worker index {w} >= workers {workers}");
+        }
+        for &(w, t) in &self.joins {
+            check(w, t, workers, "joins")?;
+            plan.ups.push((w, t));
+        }
+        for &(w, t) in &self.leaves {
+            check(w, t, workers, "leaves")?;
+            plan.downs.push((w, t));
+        }
+        for &(a, b, from, to) in &self.partitions {
+            check(a, from, workers, "partitions")?;
+            check(b, to, workers, "partitions")?;
+            anyhow::ensure!(to > from, "partition window on {a}-{b} must have to > from");
+            plan.link_downs.push((a, b, from));
+            plan.link_ups.push((a, b, to));
+        }
+        if !self.rack_outages.is_empty() {
+            let Topology::Racks(r) = topology else {
+                anyhow::bail!(
+                    "rack_outages need a racks:<r> topology (scenario has {})",
+                    topology.name()
+                );
+            };
+            let slices = topology::rack_slices(workers, r);
+            for &(rack, from, to) in &self.rack_outages {
+                anyhow::ensure!(
+                    rack < slices.len(),
+                    "rack outage rack {rack} >= racks {}",
+                    slices.len()
+                );
+                anyhow::ensure!(
+                    from.is_finite() && from >= 0.0 && to.is_finite() && to > from,
+                    "rack {rack} outage window must have 0 <= from < to"
+                );
+                for w in slices[rack].clone() {
+                    plan.downs.push((w, from));
+                    plan.ups.push((w, to));
+                }
+            }
+        }
+        Ok(plan)
     }
 }
 
@@ -81,6 +174,8 @@ pub struct Scenario {
     pub slow_links: Vec<(usize, usize, f64)>,
     /// Replay this CSV instead of recording from the model.
     pub trace_file: Option<PathBuf>,
+    /// Scheduled churn/partition/outage events (empty = no faults).
+    pub faults: ScenarioFaults,
     // full-fidelity knobs (ignored in timing mode)
     pub model: String,
     pub train_n: usize,
@@ -113,6 +208,7 @@ impl Default for Scenario {
             link_jitter: Some(Dist::ShiftedExp { base: 0.0, rate: 800.0 }),
             slow_links: Vec::new(),
             trace_file: None,
+            faults: ScenarioFaults::default(),
             model: "lrm_d64_c10_b256".into(),
             train_n: 12_000,
             test_n: 2_048,
@@ -133,46 +229,59 @@ impl Scenario {
     /// Strict: unknown keys and present-but-mistyped values are errors —
     /// a scenario file must never silently run something other than
     /// what it describes.
+    ///
+    /// The schema nests settings into sections:
+    ///
+    /// ```text
+    /// { "name": ..., "iters": ..., "seed": ..., "fidelity": ...,
+    ///   "policies": [...],
+    ///   "cluster":  { "workers", "topology" },
+    ///   "timing":   { "compute", "hetero", "transient_prob",
+    ///                 "transient_factor", "diurnal_amp",
+    ///                 "diurnal_period", "persistent", "trace_file" },
+    ///   "links":    { "base", "jitter", "slow_links" },
+    ///   "faults":   { "initially_down", "joins", "leaves",
+    ///                 "partitions", "rack_outages" },
+    ///   "training": { "model", "train_n", "test_n", "eval_every" } }
+    /// ```
+    ///
+    /// The pre-PR-8 flat keys (`workers`, `compute`, `link_base`, …)
+    /// still parse — with a deprecation warning on stderr — so old
+    /// scenario files keep working; nested sections take precedence
+    /// when both spellings appear.
     pub fn from_json(j: &Json) -> anyhow::Result<Scenario> {
         const KNOWN: &[&str] = &[
-            "name", "workers", "topology", "iters", "seed", "fidelity", "policies", "compute",
-            "hetero", "transient_prob", "transient_factor", "diurnal_amp", "diurnal_period",
-            "persistent", "link_base", "link_jitter", "slow_links", "trace_file", "model",
-            "train_n", "test_n", "eval_every",
+            "name", "iters", "seed", "fidelity", "policies", "cluster", "timing", "links",
+            "faults", "training",
+        ];
+        const LEGACY: &[&str] = &[
+            "workers", "topology", "compute", "hetero", "transient_prob", "transient_factor",
+            "diurnal_amp", "diurnal_period", "persistent", "link_base", "link_jitter",
+            "slow_links", "trace_file", "model", "train_n", "test_n", "eval_every",
         ];
         let Json::Obj(map) = j else {
             anyhow::bail!("scenario must be a JSON object");
         };
         for key in map.keys() {
             anyhow::ensure!(
-                KNOWN.contains(&key.as_str()),
-                "unknown scenario field '{key}' (known: {KNOWN:?})"
+                KNOWN.contains(&key.as_str()) || LEGACY.contains(&key.as_str()),
+                "unknown scenario field '{key}' (top-level: {KNOWN:?})"
             );
         }
-        // `field(j, key, Json::as_x, "an x")?` = Some(parsed) | None if
-        // absent | typed error if present with the wrong type.
-        fn field<'j, T>(
-            j: &'j Json,
-            key: &str,
-            get: impl Fn(&'j Json) -> Option<T>,
-            want: &str,
-        ) -> anyhow::Result<Option<T>> {
-            match j.get(key) {
-                None => Ok(None),
-                Some(v) => get(v)
-                    .map(Some)
-                    .ok_or_else(|| anyhow::anyhow!("scenario field '{key}' must be {want}")),
-            }
+        let legacy: Vec<&str> = LEGACY
+            .iter()
+            .copied()
+            .filter(|k| map.contains_key(*k))
+            .collect();
+        if !legacy.is_empty() {
+            eprintln!(
+                "warning: scenario uses legacy flat fields {legacy:?}; nest them under \
+                 cluster/timing/links/training (run `dybw des template` for the schema)"
+            );
         }
         let mut s = Scenario::default();
         if let Some(v) = field(j, "name", Json::as_str, "a string")? {
             s.name = v.to_string();
-        }
-        if let Some(v) = field(j, "workers", Json::as_usize, "an integer")? {
-            s.workers = v;
-        }
-        if let Some(v) = field(j, "topology", Json::as_str, "a topology name")? {
-            s.topology = Topology::parse(v).ok_or_else(|| anyhow::anyhow!("bad topology '{v}'"))?;
         }
         if let Some(v) = field(j, "iters", Json::as_usize, "an integer")? {
             s.iters = v;
@@ -196,97 +305,49 @@ impl Scenario {
             };
         }
         if let Some(v) = field(j, "fidelity", Json::as_str, "\"timing\" or \"full\"")? {
-            s.fidelity = Fidelity::parse(v).ok_or_else(|| anyhow::anyhow!("bad fidelity '{v}'"))?;
+            s.fidelity = Fidelity::parse(v)?;
         }
         if let Some(arr) = field(j, "policies", Json::as_arr, "an array of policy names")? {
             s.policies = arr
                 .iter()
                 .map(|p| {
-                    p.as_str()
-                        .and_then(WaitPolicy::parse)
-                        .ok_or_else(|| anyhow::anyhow!("bad policy {p:?}"))
+                    let spec = p
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("bad policy {p:?}"))?;
+                    Ok(WaitPolicy::parse(spec)?)
                 })
                 .collect::<anyhow::Result<_>>()?;
         }
-        if let Some(v) = field(j, "compute", Json::as_str, "a dist spec")? {
-            s.compute = Dist::parse(v).ok_or_else(|| anyhow::anyhow!("bad compute '{v}'"))?;
+        // legacy flat keys first, nested sections on top (nested wins)
+        apply_cluster(&mut s, j)?;
+        apply_timing(&mut s, j)?;
+        apply_links(&mut s, j, "link_base", "link_jitter")?;
+        apply_training(&mut s, j)?;
+        if let Some(sec) = section(j, "cluster", &["workers", "topology"])? {
+            apply_cluster(&mut s, sec)?;
         }
-        if let Some(v) = field(j, "hetero", Json::as_f64, "a number")? {
-            s.hetero = v;
+        if let Some(sec) = section(
+            j,
+            "timing",
+            &[
+                "compute", "hetero", "transient_prob", "transient_factor", "diurnal_amp",
+                "diurnal_period", "persistent", "trace_file",
+            ],
+        )? {
+            apply_timing(&mut s, sec)?;
         }
-        if let Some(v) = field(j, "transient_prob", Json::as_f64, "a number")? {
-            s.transient_prob = v;
+        if let Some(sec) = section(j, "links", &["base", "jitter", "slow_links"])? {
+            apply_links(&mut s, sec, "base", "jitter")?;
         }
-        if let Some(v) = field(j, "transient_factor", Json::as_f64, "a number")? {
-            s.transient_factor = v;
+        if let Some(sec) = section(
+            j,
+            "faults",
+            &["initially_down", "joins", "leaves", "partitions", "rack_outages"],
+        )? {
+            apply_faults(&mut s, sec)?;
         }
-        if let Some(v) = field(j, "diurnal_amp", Json::as_f64, "a number")? {
-            s.diurnal_amp = v;
-        }
-        if let Some(v) = field(j, "diurnal_period", Json::as_f64, "a number")? {
-            s.diurnal_period = v;
-        }
-        if let Some(arr) = field(j, "persistent", Json::as_arr, "an array of pairs")? {
-            s.persistent = parse_pairs(arr, "persistent")?
-                .into_iter()
-                .map(|(a, f)| {
-                    anyhow::ensure!(
-                        a >= 0.0 && a.fract() == 0.0,
-                        "persistent worker index must be a non-negative integer (got {a})"
-                    );
-                    Ok((a as usize, f))
-                })
-                .collect::<anyhow::Result<_>>()?;
-        }
-        if let Some(v) = field(j, "link_base", Json::as_f64, "a number")? {
-            s.link_base = v;
-        }
-        if let Some(v) = j.get("link_jitter") {
-            // strict like every other field: only "none" or a dist spec
-            let spec = v
-                .as_str()
-                .ok_or_else(|| anyhow::anyhow!("link_jitter must be \"none\" or a dist spec"))?;
-            s.link_jitter = match spec {
-                "none" => None,
-                spec => Some(
-                    Dist::parse(spec).ok_or_else(|| anyhow::anyhow!("bad link_jitter '{spec}'"))?,
-                ),
-            };
-        }
-        if let Some(arr) = field(j, "slow_links", Json::as_arr, "an array of triples")? {
-            s.slow_links = arr
-                .iter()
-                .map(|t| {
-                    let t = t.as_arr().filter(|t| t.len() == 3).ok_or_else(|| {
-                        anyhow::anyhow!("slow_links entries are [a, b, factor] triples")
-                    })?;
-                    let get = |i: usize| {
-                        t[i].as_f64()
-                            .ok_or_else(|| anyhow::anyhow!("non-numeric slow_links entry"))
-                    };
-                    let (a, b) = (get(0)?, get(1)?);
-                    anyhow::ensure!(
-                        a >= 0.0 && a.fract() == 0.0 && b >= 0.0 && b.fract() == 0.0,
-                        "slow_links endpoints must be non-negative integers"
-                    );
-                    Ok((a as usize, b as usize, get(2)?))
-                })
-                .collect::<anyhow::Result<_>>()?;
-        }
-        if let Some(v) = field(j, "trace_file", Json::as_str, "a path string")? {
-            s.trace_file = Some(PathBuf::from(v));
-        }
-        if let Some(v) = field(j, "model", Json::as_str, "a model name")? {
-            s.model = v.to_string();
-        }
-        if let Some(v) = field(j, "train_n", Json::as_usize, "an integer")? {
-            s.train_n = v;
-        }
-        if let Some(v) = field(j, "test_n", Json::as_usize, "an integer")? {
-            s.test_n = v;
-        }
-        if let Some(v) = field(j, "eval_every", Json::as_usize, "an integer")? {
-            s.eval_every = v;
+        if let Some(sec) = section(j, "training", &["model", "train_n", "test_n", "eval_every"])? {
+            apply_training(&mut s, sec)?;
         }
         s.validate()?;
         Ok(s)
@@ -349,23 +410,22 @@ impl Scenario {
         // typed slow_links checks (range, factor, duplicate edges) live
         // on the model itself so every constructor path shares them
         self.link_model().validate(self.workers)?;
+        // fault indices/windows/topology constraints (compiled again at
+        // run time; the DES additionally checks partitioned edges exist)
+        self.faults.compile(self.topology, self.workers)?;
         Ok(())
     }
 
+    /// Emit the nested schema (the only one `des template` prints;
+    /// legacy flat keys are parse-only).
     pub fn to_json(&self) -> Json {
-        let mut o = Json::obj();
-        o.set("name", self.name.as_str().into())
+        let mut cluster = Json::obj();
+        cluster
             .set("workers", self.workers.into())
-            .set("topology", self.topology.name().into())
-            .set("iters", self.iters.into())
-            // string, not number: JSON numbers are f64-backed, which
-            // would corrupt seeds above 2^53 on a round trip
-            .set("seed", self.seed.to_string().into())
-            .set("fidelity", self.fidelity.name().into())
-            .set(
-                "policies",
-                self.policies.iter().map(|p| p.name()).collect::<Vec<_>>().into(),
-            )
+            .set("topology", self.topology.name().into());
+
+        let mut timing = Json::obj();
+        timing
             .set("compute", self.compute.spec().into())
             .set("hetero", self.hetero.into())
             .set("transient_prob", self.transient_prob.into())
@@ -380,10 +440,16 @@ impl Scenario {
                         .map(|&(w, f)| Json::Arr(vec![(w).into(), f.into()]))
                         .collect(),
                 ),
-            )
-            .set("link_base", self.link_base.into())
+            );
+        if let Some(p) = &self.trace_file {
+            timing.set("trace_file", p.display().to_string().into());
+        }
+
+        let mut links = Json::obj();
+        links
+            .set("base", self.link_base.into())
             .set(
-                "link_jitter",
+                "jitter",
                 match &self.link_jitter {
                     Some(d) => d.spec().into(),
                     None => "none".into(),
@@ -397,13 +463,68 @@ impl Scenario {
                         .map(|&(a, b, f)| Json::Arr(vec![a.into(), b.into(), f.into()]))
                         .collect(),
                 ),
-            )
+            );
+
+        let mut training = Json::obj();
+        training
             .set("model", self.model.as_str().into())
             .set("train_n", self.train_n.into())
             .set("test_n", self.test_n.into())
             .set("eval_every", self.eval_every.into());
-        if let Some(p) = &self.trace_file {
-            o.set("trace_file", p.display().to_string().into());
+
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str().into())
+            .set("iters", self.iters.into())
+            // string, not number: JSON numbers are f64-backed, which
+            // would corrupt seeds above 2^53 on a round trip
+            .set("seed", self.seed.to_string().into())
+            .set("fidelity", self.fidelity.name().into())
+            .set(
+                "policies",
+                self.policies.iter().map(|p| p.name()).collect::<Vec<_>>().into(),
+            )
+            .set("cluster", cluster)
+            .set("timing", timing)
+            .set("links", links)
+            .set("training", training);
+        if !self.faults.is_empty() {
+            let pair = |w: usize, t: f64| Json::Arr(vec![w.into(), t.into()]);
+            let mut f = Json::obj();
+            f.set(
+                "initially_down",
+                Json::Arr(self.faults.initially_down.iter().map(|&w| w.into()).collect()),
+            )
+            .set(
+                "joins",
+                Json::Arr(self.faults.joins.iter().map(|&(w, t)| pair(w, t)).collect()),
+            )
+            .set(
+                "leaves",
+                Json::Arr(self.faults.leaves.iter().map(|&(w, t)| pair(w, t)).collect()),
+            )
+            .set(
+                "partitions",
+                Json::Arr(
+                    self.faults
+                        .partitions
+                        .iter()
+                        .map(|&(a, b, from, to)| {
+                            Json::Arr(vec![a.into(), b.into(), from.into(), to.into()])
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "rack_outages",
+                Json::Arr(
+                    self.faults
+                        .rack_outages
+                        .iter()
+                        .map(|&(r, from, to)| Json::Arr(vec![r.into(), from.into(), to.into()]))
+                        .collect(),
+                ),
+            );
+            o.set("faults", f);
         }
         o
     }
@@ -461,10 +582,33 @@ impl Scenario {
     /// `export_events` is set, appends every policy's deterministic
     /// event log to that file (the CI reproducibility artifact).
     pub fn run(&self, out_dir: &Path, export_events: Option<&Path>) -> anyhow::Result<String> {
+        self.run_with_recovery(out_dir, export_events, None)
+    }
+
+    /// Like [`Scenario::run`], with checkpoint/kill/resume wiring for
+    /// the full-fidelity path (see [`RecoveryOpts`]).
+    pub fn run_with_recovery(
+        &self,
+        out_dir: &Path,
+        export_events: Option<&Path>,
+        recovery: Option<RecoveryOpts>,
+    ) -> anyhow::Result<String> {
         self.validate()?;
+        if recovery.is_some() {
+            anyhow::ensure!(
+                self.fidelity == Fidelity::Full,
+                "checkpoint/recovery needs a full-fidelity scenario (this one is {})",
+                self.fidelity.name()
+            );
+            anyhow::ensure!(
+                self.policies.len() == 1,
+                "checkpoint/recovery needs exactly one policy (scenario sweeps {})",
+                self.policies.len()
+            );
+        }
         match self.fidelity {
             Fidelity::Timing => self.run_timing(out_dir, export_events),
-            Fidelity::Full => self.run_full(out_dir, export_events),
+            Fidelity::Full => self.run_full(out_dir, export_events, recovery),
         }
     }
 
@@ -473,6 +617,7 @@ impl Scenario {
         let graph = topology::build(self.topology, self.workers, &mut rng);
         let trace = self.build_trace(&mut rng)?;
         let link = self.link_model();
+        let fault_plan = self.faults.compile(self.topology, self.workers)?;
         let mut out = format!(
             "=== DES scenario '{}' (timing-only, {} workers, {}, {} iters/worker) ===\n",
             self.name,
@@ -515,6 +660,7 @@ impl Scenario {
                 ComputeTimes::Replay(trace.clone()),
                 link.clone(),
             )?;
+            sim.set_faults(fault_plan.clone());
             if let Some(mut w) = sink.take() {
                 use std::io::Write;
                 writeln!(w, "# scenario={} policy={}", self.name, policy.name())?;
@@ -541,7 +687,12 @@ impl Scenario {
         Ok(out)
     }
 
-    fn run_full(&self, out_dir: &Path, export_events: Option<&Path>) -> anyhow::Result<String> {
+    fn run_full(
+        &self,
+        out_dir: &Path,
+        export_events: Option<&Path>,
+        recovery: Option<RecoveryOpts>,
+    ) -> anyhow::Result<String> {
         let mut setup = Setup::default();
         setup.workers = self.workers;
         setup.topology = self.topology;
@@ -561,6 +712,7 @@ impl Scenario {
         let _ = topology::build(self.topology, self.workers, &mut rng);
         let trace = self.build_trace(&mut rng)?;
         let link = self.link_model();
+        let fault_plan = self.faults.compile(self.topology, self.workers)?;
 
         let mut out = format!(
             "=== DES scenario '{}' (full fidelity, {} workers, {}, {} iters/worker) ===\n",
@@ -580,6 +732,10 @@ impl Scenario {
                 link.clone(),
                 Some(ComputeTimes::Replay(trace.clone())),
             )?;
+            trainer.set_faults(fault_plan.clone());
+            if let Some(r) = &recovery {
+                trainer.set_recovery(r.clone());
+            }
             if export_events.is_some() {
                 trainer.log_events();
             }
@@ -619,6 +775,207 @@ impl Scenario {
         }
         Ok(out)
     }
+}
+
+/// `field(j, key, Json::as_x, "an x")?` = Some(parsed) | None if
+/// absent | typed error if present with the wrong type.
+fn field<'j, T>(
+    j: &'j Json,
+    key: &str,
+    get: impl Fn(&'j Json) -> Option<T>,
+    want: &str,
+) -> anyhow::Result<Option<T>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => get(v)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("scenario field '{key}' must be {want}")),
+    }
+}
+
+/// Fetch a nested section object, rejecting non-objects and unknown
+/// keys (same strictness as the top level).
+fn section<'j>(j: &'j Json, name: &str, known: &[&str]) -> anyhow::Result<Option<&'j Json>> {
+    match j.get(name) {
+        None => Ok(None),
+        Some(sec) => {
+            let Json::Obj(map) = sec else {
+                anyhow::bail!("scenario section '{name}' must be an object");
+            };
+            for key in map.keys() {
+                anyhow::ensure!(
+                    known.contains(&key.as_str()),
+                    "unknown field '{key}' in scenario section '{name}' (known: {known:?})"
+                );
+            }
+            Ok(Some(sec))
+        }
+    }
+}
+
+fn apply_cluster(s: &mut Scenario, j: &Json) -> anyhow::Result<()> {
+    if let Some(v) = field(j, "workers", Json::as_usize, "an integer")? {
+        s.workers = v;
+    }
+    if let Some(v) = field(j, "topology", Json::as_str, "a topology name")? {
+        s.topology = Topology::parse(v)?;
+    }
+    Ok(())
+}
+
+fn apply_timing(s: &mut Scenario, j: &Json) -> anyhow::Result<()> {
+    if let Some(v) = field(j, "compute", Json::as_str, "a dist spec")? {
+        s.compute = Dist::parse(v)?;
+    }
+    if let Some(v) = field(j, "hetero", Json::as_f64, "a number")? {
+        s.hetero = v;
+    }
+    if let Some(v) = field(j, "transient_prob", Json::as_f64, "a number")? {
+        s.transient_prob = v;
+    }
+    if let Some(v) = field(j, "transient_factor", Json::as_f64, "a number")? {
+        s.transient_factor = v;
+    }
+    if let Some(v) = field(j, "diurnal_amp", Json::as_f64, "a number")? {
+        s.diurnal_amp = v;
+    }
+    if let Some(v) = field(j, "diurnal_period", Json::as_f64, "a number")? {
+        s.diurnal_period = v;
+    }
+    if let Some(arr) = field(j, "persistent", Json::as_arr, "an array of pairs")? {
+        s.persistent = parse_pairs(arr, "persistent")?
+            .into_iter()
+            .map(|(a, f)| Ok((worker_index(a, "persistent")?, f)))
+            .collect::<anyhow::Result<_>>()?;
+    }
+    if let Some(v) = field(j, "trace_file", Json::as_str, "a path string")? {
+        s.trace_file = Some(PathBuf::from(v));
+    }
+    Ok(())
+}
+
+fn apply_links(s: &mut Scenario, j: &Json, base_key: &str, jitter_key: &str) -> anyhow::Result<()> {
+    if let Some(v) = field(j, base_key, Json::as_f64, "a number")? {
+        s.link_base = v;
+    }
+    if let Some(v) = j.get(jitter_key) {
+        // strict like every other field: only "none" or a dist spec
+        let spec = v
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("{jitter_key} must be \"none\" or a dist spec"))?;
+        s.link_jitter = match spec {
+            "none" => None,
+            spec => Some(Dist::parse(spec)?),
+        };
+    }
+    if let Some(arr) = field(j, "slow_links", Json::as_arr, "an array of triples")? {
+        s.slow_links = parse_tuples(arr, 3, "slow_links", "[a, b, factor] triples")?
+            .into_iter()
+            .map(|t| {
+                Ok((
+                    worker_index(t[0], "slow_links")?,
+                    worker_index(t[1], "slow_links")?,
+                    t[2],
+                ))
+            })
+            .collect::<anyhow::Result<_>>()?;
+    }
+    Ok(())
+}
+
+fn apply_training(s: &mut Scenario, j: &Json) -> anyhow::Result<()> {
+    if let Some(v) = field(j, "model", Json::as_str, "a model name")? {
+        s.model = v.to_string();
+    }
+    if let Some(v) = field(j, "train_n", Json::as_usize, "an integer")? {
+        s.train_n = v;
+    }
+    if let Some(v) = field(j, "test_n", Json::as_usize, "an integer")? {
+        s.test_n = v;
+    }
+    if let Some(v) = field(j, "eval_every", Json::as_usize, "an integer")? {
+        s.eval_every = v;
+    }
+    Ok(())
+}
+
+fn apply_faults(s: &mut Scenario, j: &Json) -> anyhow::Result<()> {
+    if let Some(arr) = field(j, "initially_down", Json::as_arr, "an array of worker indices")? {
+        s.faults.initially_down = arr
+            .iter()
+            .map(|v| {
+                let f = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("non-numeric initially_down entry"))?;
+                worker_index(f, "initially_down")
+            })
+            .collect::<anyhow::Result<_>>()?;
+    }
+    if let Some(arr) = field(j, "joins", Json::as_arr, "an array of [worker, time] pairs")? {
+        s.faults.joins = parse_pairs(arr, "joins")?
+            .into_iter()
+            .map(|(w, t)| Ok((worker_index(w, "joins")?, t)))
+            .collect::<anyhow::Result<_>>()?;
+    }
+    if let Some(arr) = field(j, "leaves", Json::as_arr, "an array of [worker, time] pairs")? {
+        s.faults.leaves = parse_pairs(arr, "leaves")?
+            .into_iter()
+            .map(|(w, t)| Ok((worker_index(w, "leaves")?, t)))
+            .collect::<anyhow::Result<_>>()?;
+    }
+    if let Some(arr) = field(j, "partitions", Json::as_arr, "an array of [a, b, from, to]")? {
+        s.faults.partitions = parse_tuples(arr, 4, "partitions", "[a, b, from, to] quadruples")?
+            .into_iter()
+            .map(|q| {
+                Ok((
+                    worker_index(q[0], "partitions")?,
+                    worker_index(q[1], "partitions")?,
+                    q[2],
+                    q[3],
+                ))
+            })
+            .collect::<anyhow::Result<_>>()?;
+    }
+    if let Some(arr) = field(j, "rack_outages", Json::as_arr, "an array of [rack, from, to]")? {
+        s.faults.rack_outages = parse_tuples(arr, 3, "rack_outages", "[rack, from, to] triples")?
+            .into_iter()
+            .map(|t| Ok((worker_index(t[0], "rack_outages")?, t[1], t[2])))
+            .collect::<anyhow::Result<_>>()?;
+    }
+    Ok(())
+}
+
+/// A JSON number used as a worker/rack index: must be an exact
+/// non-negative integer.
+fn worker_index(f: f64, what: &str) -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        f >= 0.0 && f.fract() == 0.0,
+        "{what} index must be a non-negative integer (got {f})"
+    );
+    Ok(f as usize)
+}
+
+/// Fixed-arity numeric tuples (`[[a, b, ...], ...]`).
+fn parse_tuples(
+    arr: &[Json],
+    arity: usize,
+    what: &str,
+    shape: &str,
+) -> anyhow::Result<Vec<Vec<f64>>> {
+    arr.iter()
+        .map(|t| {
+            let t = t
+                .as_arr()
+                .filter(|t| t.len() == arity)
+                .ok_or_else(|| anyhow::anyhow!("{what} entries are {shape}"))?;
+            t.iter()
+                .map(|v| {
+                    v.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("non-numeric {what} entry"))
+                })
+                .collect::<anyhow::Result<Vec<f64>>>()
+        })
+        .collect()
 }
 
 fn parse_pairs(arr: &[Json], what: &str) -> anyhow::Result<Vec<(f64, f64)>> {
@@ -664,6 +1021,7 @@ fn stats_json(s: &ClusterStats) -> Json {
         .set("stale_messages", (s.stale_messages as i64).into())
         .set("events", (s.events as i64).into())
         .set("coverage_violations", (s.coverage_violations as i64).into())
+        .set("departed", (s.departed as i64).into())
         .set("max_lag", s.max_lag.into())
         .set("p50_finish", s.finish_percentile(50.0).into())
         .set("p99_finish", s.finish_percentile(99.0).into());
@@ -733,10 +1091,122 @@ mod tests {
             r#"{"seed": 1.5}"#,
             r#"{"seed": "abc"}"#,
             r#"[]"#,
+            // nested sections are exactly as strict as the flat keys
+            r#"{"cluster": {"workers": 1}}"#,
+            r#"{"cluster": {"wrokers": 6}}"#,
+            r#"{"cluster": 5}"#,
+            r#"{"cluster": {"topology": "racks:0"}}"#,
+            r#"{"links": {"link_base": 0.001}}"#,
+            r#"{"links": {"base": -0.002}}"#,
+            r#"{"timing": {"compute": "nope:1"}}"#,
+            r#"{"training": {"eval_every": "often"}}"#,
+            r#"{"faults": {"leaves": [[2000, 1.0]]}}"#,
+            r#"{"faults": {"joins": [[1.5, 1.0]]}}"#,
+            r#"{"faults": {"partitions": [[0, 1, 2.0]]}}"#,
+            r#"{"faults": {"partitions": [[0, 1, 2.0, 1.0]]}}"#,
+            r#"{"faults": {"rack_outages": [[0, 0.5, 1.0]]}}"#,
+            r#"{"faults": {"sabotage": []}}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(Scenario::from_json(&j).is_err(), "accepted: {bad}");
         }
+    }
+
+    #[test]
+    fn fidelity_parse_roundtrips() {
+        for f in [Fidelity::Timing, Fidelity::Full] {
+            assert_eq!(Fidelity::parse(f.name()), Ok(f));
+        }
+        for bad in ["", "timing ", "Full", "exact"] {
+            let err = Fidelity::parse(bad).unwrap_err();
+            assert_eq!(err.what, "fidelity");
+            assert_eq!(err.input, bad);
+            assert!(err.to_string().contains("timing | full"));
+        }
+    }
+
+    #[test]
+    fn faults_section_roundtrips() {
+        let mut s = Scenario::default();
+        s.topology = Topology::Racks(4);
+        s.faults.initially_down = vec![7];
+        s.faults.joins = vec![(7, 0.5)];
+        s.faults.leaves = vec![(3, 1.25)];
+        s.faults.partitions = vec![(0, 1, 0.5, 2.0)];
+        s.faults.rack_outages = vec![(2, 1.0, 3.0)];
+        let s2 = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(s2.faults, s.faults);
+        // no faults → no faults section emitted, and it parses back empty
+        let s3 = Scenario::from_json(&Scenario::default().to_json()).unwrap();
+        assert!(s3.faults.is_empty());
+        assert!(Scenario::default().to_json().get("faults").is_none());
+    }
+
+    #[test]
+    fn legacy_flat_scenario_still_parses() {
+        // a pre-PR-8 flat file: every key at top level
+        let j = Json::parse(
+            r#"{"name": "old", "workers": 40, "topology": "racks:4", "iters": 5,
+                "hetero": 0.1, "link_base": 0.001, "link_jitter": "none",
+                "model": "lrm_d16_c10_b64", "eval_every": 5, "train_n": 4000}"#,
+        )
+        .unwrap();
+        let s = Scenario::from_json(&j).unwrap();
+        assert_eq!(s.workers, 40);
+        assert_eq!(s.topology, Topology::Racks(4));
+        assert_eq!(s.hetero, 0.1);
+        assert_eq!(s.link_base, 0.001);
+        assert_eq!(s.link_jitter, None);
+        assert_eq!(s.model, "lrm_d16_c10_b64");
+        assert_eq!(s.eval_every, 5);
+        assert_eq!(s.train_n, 4000);
+        // the nested re-emission describes the same scenario
+        let s2 = Scenario::from_json(&s.to_json()).unwrap();
+        assert_eq!(s2.workers, s.workers);
+        assert_eq!(s2.topology, s.topology);
+        assert_eq!(s2.link_base, s.link_base);
+        // nested sections take precedence when both spellings appear
+        let j = Json::parse(r#"{"workers": 10, "cluster": {"workers": 20}}"#).unwrap();
+        assert_eq!(Scenario::from_json(&j).unwrap().workers, 20);
+    }
+
+    /// PR-8 tentpole: a correlated rack outage (every worker in the
+    /// rack down for a window) must leave zero coverage violations
+    /// after recovery, retire nobody, and stay byte-reproducible.
+    #[test]
+    fn rack_outage_scenario_recovers_coverage() {
+        let dir = std::env::temp_dir().join("dybw_des_scn_rack_outage");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = Scenario::default();
+        s.name = "rackout".into();
+        s.workers = 40;
+        s.iters = 30;
+        s.topology = Topology::Racks(4);
+        s.policies = vec![WaitPolicy::Dybw, WaitPolicy::Full];
+        s.faults.rack_outages = vec![(1, 0.4, 1.2)];
+        let events = dir.join("events.log");
+        let out = s.run(&dir, Some(&events)).unwrap();
+        assert!(out.contains("dybw"), "{out}");
+        let log = std::fs::read_to_string(&events).unwrap();
+        assert!(log.contains("worker_down"));
+        assert!(log.contains("worker_up"));
+        // fault events are scheduled up front, so churn runs keep the
+        // byte-identical reproducibility contract
+        s.run(&dir, Some(&events)).unwrap();
+        assert_eq!(std::fs::read_to_string(&events).unwrap(), log);
+        let summary = std::fs::read_to_string(dir.join("des.rackout.summary.json")).unwrap();
+        let j = Json::parse(&summary).unwrap();
+        for p in ["dybw", "full"] {
+            let stat = |key: &str| {
+                j.get(p)
+                    .and_then(|o| o.get(key))
+                    .and_then(Json::as_f64)
+                    .unwrap()
+            };
+            assert_eq!(stat("coverage_violations"), 0.0, "{p}");
+            assert_eq!(stat("departed"), 0.0, "{p}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! Theorem 1 depends on connectivity).
 
 use super::Graph;
+use crate::util::parse::ParseError;
 use crate::util::rng::Rng;
 
 /// Named topology kinds, parsed from config / CLI.
@@ -25,26 +26,32 @@ pub enum Topology {
 }
 
 impl Topology {
-    pub fn parse(s: &str) -> Option<Topology> {
+    /// Parse a topology spec. Round-trip contract:
+    /// `parse(&t.name()) == Ok(t)` for every topology; anything else is
+    /// a typed [`ParseError`].
+    pub fn parse(s: &str) -> Result<Topology, ParseError> {
+        let err = || {
+            ParseError::new("topology", s, "ring | complete | star | grid | random | racks:<r>")
+        };
         if let Some(r) = s.strip_prefix("racks:") {
-            let r = r.parse::<usize>().ok()?;
+            let r = r.parse::<usize>().map_err(|_| err())?;
             if r == 0 {
-                return None;
+                return Err(err());
             }
-            return Some(Topology::Racks(r));
+            return Ok(Topology::Racks(r));
         }
-        Some(match s {
+        Ok(match s {
             "ring" => Topology::Ring,
             "complete" | "full" => Topology::Complete,
             "star" => Topology::Star,
             "grid" | "torus" => Topology::Grid,
             "random" | "random_connected" => Topology::RandomConnected,
-            _ => return None,
+            _ => return Err(err()),
         })
     }
 
     /// The spec string [`Self::parse`] accepts back:
-    /// `parse(&t.name()) == Some(t)`.
+    /// `parse(&t.name()) == Ok(t)`.
     pub fn name(&self) -> String {
         match self {
             Topology::Ring => "ring".into(),
@@ -176,19 +183,9 @@ pub fn rack_of_rings(n: usize, racks: usize) -> Graph {
         return ring(n);
     }
     let mut g = Graph::empty(n);
-    // contiguous rack slices: the first `n % racks` racks get one extra
-    let base = n / racks;
-    let extra = n % racks;
-    let mut starts = Vec::with_capacity(racks + 1);
-    let mut at = 0;
-    for r in 0..racks {
-        starts.push(at);
-        at += base + usize::from(r < extra);
-    }
-    starts.push(n);
-    for r in 0..racks {
-        let (lo, hi) = (starts[r], starts[r + 1]);
-        let m = hi - lo;
+    let slices = rack_slices(n, racks);
+    for s in &slices {
+        let (lo, m) = (s.start, s.len());
         if m >= 2 {
             for i in 0..m {
                 g.add_edge(lo + i, lo + (i + 1) % m);
@@ -196,9 +193,27 @@ pub fn rack_of_rings(n: usize, racks: usize) -> Graph {
         }
     }
     for r in 0..racks {
-        g.add_edge(starts[r], starts[(r + 1) % racks]);
+        g.add_edge(slices[r].start, slices[(r + 1) % racks].start);
     }
     g
+}
+
+/// The contiguous member ranges of each rack in a [`rack_of_rings`]
+/// topology — the first `n % racks` racks get one extra member. Exposed
+/// so fault injection can expand a rack-level outage window into the
+/// exact per-worker membership events the topology implies.
+pub fn rack_slices(n: usize, racks: usize) -> Vec<std::ops::Range<usize>> {
+    let racks = racks.clamp(1, n.max(1));
+    let base = n / racks;
+    let extra = n % racks;
+    let mut slices = Vec::with_capacity(racks);
+    let mut at = 0;
+    for r in 0..racks {
+        let hi = at + base + usize::from(r < extra);
+        slices.push(at..hi);
+        at = hi;
+    }
+    slices
 }
 
 /// The fixed 10-worker network from the paper's Figure 2 (approximate
@@ -278,12 +293,15 @@ mod tests {
 
     #[test]
     fn parse_names() {
-        assert_eq!(Topology::parse("ring"), Some(Topology::Ring));
-        assert_eq!(Topology::parse("full"), Some(Topology::Complete));
-        assert_eq!(Topology::parse("racks:8"), Some(Topology::Racks(8)));
-        assert_eq!(Topology::parse("racks:0"), None);
-        assert_eq!(Topology::parse("racks:x"), None);
-        assert_eq!(Topology::parse("nope"), None);
+        assert_eq!(Topology::parse("ring"), Ok(Topology::Ring));
+        assert_eq!(Topology::parse("full"), Ok(Topology::Complete));
+        assert_eq!(Topology::parse("racks:8"), Ok(Topology::Racks(8)));
+        for bad in ["racks:0", "racks:x", "racks:", "nope", "", "Ring", "ring "] {
+            let err = Topology::parse(bad).unwrap_err();
+            assert_eq!(err.what, "topology");
+            assert_eq!(err.input, bad);
+            assert!(err.to_string().contains("racks:<r>"), "{err}");
+        }
     }
 
     #[test]
@@ -296,7 +314,36 @@ mod tests {
             Topology::RandomConnected,
             Topology::Racks(12),
         ] {
-            assert_eq!(Topology::parse(&t.name()), Some(t), "name: {}", t.name());
+            assert_eq!(Topology::parse(&t.name()), Ok(t), "name: {}", t.name());
+        }
+    }
+
+    #[test]
+    fn rack_slices_match_the_built_topology() {
+        for &(n, r) in &[(12usize, 3usize), (10, 4), (50, 7), (3, 10), (8, 1)] {
+            let slices = rack_slices(n, r);
+            // cover 0..n exactly, contiguously
+            let mut at = 0;
+            for s in &slices {
+                assert_eq!(s.start, at);
+                assert!(!s.is_empty() || n < r, "empty rack in ({n},{r})");
+                at = s.end;
+            }
+            assert_eq!(at, n);
+            // rack sizes differ by at most one
+            let sizes: Vec<usize> = slices.iter().map(|s| s.len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "({n},{r}): {sizes:?}");
+            // gateways (slice starts) really are the inter-rack ring
+            if r >= 2 && n >= r {
+                let g = rack_of_rings(n, r);
+                for w in 0..slices.len() {
+                    let (a, b) = (slices[w].start, slices[(w + 1) % slices.len()].start);
+                    if a != b {
+                        assert!(g.has_edge(a, b), "({n},{r}): gateway edge {a}-{b} missing");
+                    }
+                }
+            }
         }
     }
 

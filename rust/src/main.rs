@@ -130,18 +130,15 @@ fn setup_from_args(a: &Args) -> anyhow::Result<Setup> {
         s.apply_json(&j)?;
     }
     s.workers = a.get_usize("workers")?;
-    s.topology = Topology::parse(a.get("topology"))
-        .ok_or_else(|| anyhow::anyhow!("bad --topology"))?;
+    s.topology = Topology::parse(a.get("topology"))?;
     s.algo = Algorithm::parse(a.get("algo")).ok_or_else(|| anyhow::anyhow!("bad --algo"))?;
     s.model = a.get("model").to_string();
     s.dataset = DatasetProfile::parse(a.get("dataset"))
         .ok_or_else(|| anyhow::anyhow!("bad --dataset"))?;
-    s.partition = Partition::parse(a.get("partition"))
-        .ok_or_else(|| anyhow::anyhow!("bad --partition"))?;
+    s.partition = Partition::parse(a.get("partition"))?;
     s.train_n = a.get_usize("train-n")?;
     s.test_n = a.get_usize("test-n")?;
-    s.straggler_base = Dist::parse(a.get("straggler"))
-        .ok_or_else(|| anyhow::anyhow!("bad --straggler"))?;
+    s.straggler_base = Dist::parse(a.get("straggler"))?;
     s.straggler_factor = a.get_f64("straggler-factor")?;
     s.train.iters = a.get_usize("iters")?;
     s.train.lr0 = a.get_f64("lr0")?;
@@ -166,7 +163,12 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     let cmd = setup_opts(Command::new("dybw train", "run one training job"))
         .opt("out-dir", "results", "where to write CSV/JSON histories")
         .flag("compare-full", "also run cb-Full and print the comparison")
-        .opt("target-loss", "0.5", "target test loss for time-to-loss reporting");
+        .opt("target-loss", "0.5", "target test loss for time-to-loss reporting")
+        .opt("ckpt-dir", "", "checkpoint directory (enables periodic checkpointing)")
+        .opt("ckpt-every", "0", "checkpoint every k iterations (needs --ckpt-dir)")
+        .opt("ckpt-retain", "3", "keep only the newest k checkpoints (0 = keep all)")
+        .opt("kill-at", "0", "abort right after checkpointing iteration k (fault injection)")
+        .flag("resume", "restore the latest intact checkpoint in --ckpt-dir, then continue");
     let a = parse_or_exit(&cmd, argv)?;
     let s = setup_from_args(&a)?;
     let out_dir = PathBuf::from(a.get("out-dir"));
@@ -183,6 +185,39 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         s.resolve_threads()
     );
     let mut trainer = s.build_sim()?;
+    let ckpt_dir = a.get("ckpt-dir");
+    if !ckpt_dir.is_empty() {
+        let every = a.get_usize("ckpt-every")?;
+        anyhow::ensure!(every > 0, "--ckpt-dir needs --ckpt-every > 0");
+        trainer.ckpt_mgr = Some(dybw::coordinator::ckpt_manager::CkptManager::new(
+            &PathBuf::from(ckpt_dir),
+            a.get_usize("ckpt-retain")?,
+        )?);
+        trainer.ckpt_every = every;
+        trainer.ckpt_model = s.model.clone();
+        if a.get_usize("kill-at")? > 0 {
+            trainer.kill_at = Some(a.get_usize("kill-at")?);
+        }
+        if a.flag("resume") {
+            if trainer.resume_latest()? {
+                let done = trainer.start_k();
+                // the remaining budget, so resumed + original runs end at
+                // the same total iteration count
+                trainer.cfg.iters = trainer.cfg.iters.saturating_sub(done);
+                println!(
+                    "# resumed from iteration {done} ({} iterations to go)",
+                    trainer.cfg.iters
+                );
+            } else {
+                println!("# --resume: no intact checkpoint under {ckpt_dir}; starting fresh");
+            }
+        }
+    } else {
+        anyhow::ensure!(
+            !a.flag("resume") && a.get_usize("kill-at")? == 0,
+            "--resume/--kill-at need --ckpt-dir"
+        );
+    }
     trainer.on_iter = Some(Box::new(|r| {
         if r.k % 50 == 0 {
             println!(
@@ -251,7 +286,7 @@ fn cmd_topology(argv: &[String]) -> anyhow::Result<()> {
         .opt("topology", "random", "ring|grid|star|complete|random")
         .opt("seed", "2021", "seed");
     let a = parse_or_exit(&cmd, argv)?;
-    let kind = Topology::parse(a.get("topology")).ok_or_else(|| anyhow::anyhow!("bad topology"))?;
+    let kind = Topology::parse(a.get("topology"))?;
     let mut rng = Rng::new(a.get_u64("seed")?);
     let g = topology::build(kind, a.get_usize("workers")?, &mut rng);
     println!(
@@ -313,7 +348,7 @@ fn cmd_analyze(argv: &[String]) -> anyhow::Result<()> {
         .opt("topology", "random", "graph kind")
         .opt("seed", "2021", "seed");
     let a = parse_or_exit(&cmd, argv)?;
-    let kind = Topology::parse(a.get("topology")).ok_or_else(|| anyhow::anyhow!("bad topology"))?;
+    let kind = Topology::parse(a.get("topology"))?;
     let mut rng = Rng::new(a.get_u64("seed")?);
     let g = topology::build(kind, a.get_usize("workers")?, &mut rng);
     let p = dybw::consensus::ConsensusMatrix::metropolis_full(&g);
@@ -430,7 +465,12 @@ fn cmd_des(argv: &[String]) -> anyhow::Result<()> {
         "policies",
         "",
         "override the policy sweep, comma-separated: full|static:<b>|dybw",
-    );
+    )
+    .opt("ckpt-dir", "", "full fidelity: checkpoint directory (needs exactly one policy)")
+    .opt("ckpt-every", "0", "checkpoint every k frontier iterations (needs --ckpt-dir)")
+    .opt("ckpt-retain", "3", "keep only the newest k checkpoints (0 = keep all)")
+    .opt("kill-at", "0", "abort right after the milestone-k checkpoint (fault injection)")
+    .flag("resume", "verified replay against the latest checkpoint in --ckpt-dir");
     let a = parse_or_exit(&cmd, argv)?;
     let action = a.positionals.first().map(String::as_str).unwrap_or("run");
     match action {
@@ -460,17 +500,41 @@ fn cmd_des(argv: &[String]) -> anyhow::Result<()> {
                 scenario.policies = a
                     .get("policies")
                     .split(',')
-                    .map(|p| {
-                        dybw::des::WaitPolicy::parse(p.trim())
-                            .ok_or_else(|| anyhow::anyhow!("bad policy '{p}'"))
-                    })
+                    .map(|p| Ok(dybw::des::WaitPolicy::parse(p.trim())?))
                     .collect::<anyhow::Result<_>>()?;
             }
             let events = match a.get("export-events") {
                 "" => None,
                 p => Some(PathBuf::from(p)),
             };
-            let report = scenario.run(&PathBuf::from(a.get("out-dir")), events.as_deref())?;
+            let recovery = match a.get("ckpt-dir") {
+                "" => {
+                    anyhow::ensure!(
+                        !a.flag("resume") && a.get_usize("kill-at")? == 0,
+                        "--resume/--kill-at need --ckpt-dir"
+                    );
+                    None
+                }
+                dir => {
+                    let every = a.get_usize("ckpt-every")?;
+                    anyhow::ensure!(every > 0, "--ckpt-dir needs --ckpt-every > 0");
+                    Some(dybw::des::RecoveryOpts {
+                        dir: PathBuf::from(dir),
+                        every,
+                        retain: a.get_usize("ckpt-retain")?,
+                        kill_at: match a.get_usize("kill-at")? {
+                            0 => None,
+                            k => Some(k),
+                        },
+                        resume: a.flag("resume"),
+                    })
+                }
+            };
+            let report = scenario.run_with_recovery(
+                &PathBuf::from(a.get("out-dir")),
+                events.as_deref(),
+                recovery,
+            )?;
             println!("{report}");
             Ok(())
         }

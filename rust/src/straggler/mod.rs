@@ -12,6 +12,7 @@
 pub mod link;
 pub mod trace;
 
+use crate::util::parse::ParseError;
 use crate::util::rng::Rng;
 
 /// A scheduled degradation window: worker `worker` runs `factor`x slower
@@ -87,7 +88,7 @@ impl Dist {
     }
 
     /// The spec string [`Self::parse`] accepts back — `parse(spec(d)) ==
-    /// Some(d)` (f64 Display is shortest-roundtrip, so no precision loss).
+    /// Ok(d)` (f64 Display is shortest-roundtrip, so no precision loss).
     pub fn spec(&self) -> String {
         match *self {
             Dist::Deterministic { base } => format!("det:{base}"),
@@ -100,20 +101,25 @@ impl Dist {
 
     /// Parse `"det:0.1"`, `"uniform:0.05,0.2"`, `"sexp:0.1,20"`,
     /// `"pareto:0.1,2.5"`, `"lognormal:-2,0.5"`.
-    pub fn parse(s: &str) -> Option<Dist> {
-        let (kind, rest) = s.split_once(':')?;
+    pub fn parse(s: &str) -> Result<Dist, ParseError> {
+        const EXPECTED: &str = concat!(
+            "det:<base> | uniform:<lo>,<hi> | sexp:<base>,<rate> | ",
+            "pareto:<xm>,<alpha> | lognormal:<mu>,<sigma>"
+        );
+        let err = || ParseError::new("distribution", s, EXPECTED);
+        let (kind, rest) = s.split_once(':').ok_or_else(err)?;
         let nums: Vec<f64> = rest
             .split(',')
             .map(|x| x.trim().parse::<f64>())
             .collect::<Result<_, _>>()
-            .ok()?;
-        Some(match (kind, nums.as_slice()) {
+            .map_err(|_| err())?;
+        Ok(match (kind, nums.as_slice()) {
             ("det", [b]) => Dist::Deterministic { base: *b },
             ("uniform", [lo, hi]) => Dist::Uniform { lo: *lo, hi: *hi },
             ("sexp", [b, r]) => Dist::ShiftedExp { base: *b, rate: *r },
             ("pareto", [xm, a]) => Dist::Pareto { xm: *xm, alpha: *a },
             ("lognormal", [mu, s]) => Dist::LogNormal { mu: *mu, sigma: *s },
-            _ => return None,
+            _ => return Err(err()),
         })
     }
 }
@@ -247,17 +253,20 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        assert_eq!(Dist::parse("det:0.5"), Some(Dist::Deterministic { base: 0.5 }));
+        assert_eq!(Dist::parse("det:0.5"), Ok(Dist::Deterministic { base: 0.5 }));
         assert_eq!(
             Dist::parse("sexp:0.1,20"),
-            Some(Dist::ShiftedExp { base: 0.1, rate: 20.0 })
+            Ok(Dist::ShiftedExp { base: 0.1, rate: 20.0 })
         );
         assert_eq!(
             Dist::parse("pareto:1,2"),
-            Some(Dist::Pareto { xm: 1.0, alpha: 2.0 })
+            Ok(Dist::Pareto { xm: 1.0, alpha: 2.0 })
         );
-        assert_eq!(Dist::parse("bogus:1"), None);
-        assert_eq!(Dist::parse("det:a"), None);
+        for bad in ["bogus:1", "det:a", "det", "", "sexp:0.1", "det:1,2"] {
+            let err = Dist::parse(bad).unwrap_err();
+            assert_eq!(err.what, "distribution", "input: {bad}");
+            assert_eq!(err.input, bad);
+        }
     }
 
     #[test]
@@ -283,7 +292,7 @@ mod tests {
             Dist::Pareto { xm: 0.1, alpha: 2.5 },
             Dist::LogNormal { mu: -2.0, sigma: 0.5 },
         ] {
-            assert_eq!(Dist::parse(&d.spec()), Some(d), "spec: {}", d.spec());
+            assert_eq!(Dist::parse(&d.spec()), Ok(d), "spec: {}", d.spec());
         }
     }
 

@@ -13,6 +13,7 @@
 pub mod cli;
 pub mod json;
 pub mod log;
+pub mod parse;
 pub mod pool;
 pub mod rng;
 pub mod vecmath;

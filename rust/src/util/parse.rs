@@ -1,0 +1,70 @@
+//! One shared error type for every `name()`/`parse()` spec-string pair.
+//!
+//! `WaitPolicy`, `Fidelity`, `Topology`, `straggler::Dist`, and
+//! `data::Partition` all round-trip through short spec strings
+//! (`"dybw"`, `"timing"`, `"racks:8"`, `"sexp:0.08,25"`). Historically
+//! each type invented its own failure convention — `Option`, panic, or
+//! an ad hoc `anyhow!` at the call site — so callers could not render a
+//! uniform message or test the contract generically. [`ParseError`] is
+//! the single typed failure: which kind of spec was being parsed, the
+//! offending input, and the grammar it should have matched.
+//!
+//! The contract every participating type upholds (property-tested in each
+//! type's module): `T::parse(&t.name()) == Ok(t)` for every value `t`,
+//! and every rejected input yields a `ParseError` whose `what` names the
+//! type — never a panic.
+
+use std::fmt;
+
+/// A spec string that failed to parse.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    /// What was being parsed, e.g. `"wait policy"` / `"fidelity"` /
+    /// `"topology"`.
+    pub what: &'static str,
+    /// The rejected input, verbatim.
+    pub input: String,
+    /// The accepted grammar, e.g. `"full | static:<b> | dybw"`.
+    pub expected: &'static str,
+}
+
+impl ParseError {
+    pub fn new(what: &'static str, input: &str, expected: &'static str) -> ParseError {
+        ParseError {
+            what,
+            input: input.to_string(),
+            expected,
+        }
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "bad {} '{}' (expected {})",
+            self.what, self.input, self.expected
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_all_three_parts() {
+        let e = ParseError::new("topology", "dodecahedron", "ring | complete");
+        let s = e.to_string();
+        assert!(s.contains("topology") && s.contains("dodecahedron") && s.contains("ring"));
+    }
+
+    #[test]
+    fn is_a_std_error() {
+        let e = ParseError::new("fidelity", "x", "timing | full");
+        let boxed: Box<dyn std::error::Error> = Box::new(e);
+        assert!(boxed.to_string().contains("fidelity"));
+    }
+}
