@@ -1,0 +1,115 @@
+#!/usr/bin/env bash
+# Fault-tolerance smoke for the live TCP driver, two modes:
+#
+#   relaunch — kill -9 one worker right after its first checkpoint, then
+#              relaunch it with --resume: it restores its local state,
+#              re-runs the handshake, and the leader resyncs it with
+#              StateSync.
+#   chaos    — the leader injects a scheduled kill + recovery from
+#              scenarios/reconnect-smoke.json; the severed worker claims
+#              its slot back through its --rejoin-secs loop.
+#
+# Either way the run must complete and the exported history must be
+# byte-identical to the same-seed uninterrupted run (the reconnect-smoke
+# CI job asserts this): while a worker is down the leader computes that
+# slot's updates locally from the same seeded source, so losing and
+# regaining a worker never changes the recorded bytes.
+#
+# Only the history exports land in <out-dir>; the listen address,
+# checkpoints, and process logs go to <out-dir>.scratch.
+set -euo pipefail
+
+out_dir="${1:?usage: reconnect_smoke.sh <out-dir> <relaunch|chaos>}"
+mode="${2:?usage: reconnect_smoke.sh <out-dir> <relaunch|chaos>}"
+bin="${DYBW_BIN:-target/release/dybw}"
+scratch="${out_dir}.scratch"
+addr_file="$scratch/addr.txt"
+ckpt_dir="$scratch/ckpt"
+mkdir -p "$out_dir" "$scratch"
+rm -rf "$ckpt_dir"
+rm -f "$addr_file"
+
+setup=(--workers 3 --topology complete --model lrm_d16_c10_b64
+       --train-n 2000 --test-n 512 --iters 20 --eval-every 5 --seed 2021)
+
+leader_flags=(--time-scale 3 --watchdog 120 --heartbeat 1)
+if [ "$mode" = chaos ]; then
+  leader_flags+=(--chaos scenarios/reconnect-smoke.json)
+fi
+
+"$bin" live "${setup[@]}" "${leader_flags[@]}" \
+  --listen 127.0.0.1:0 --addr-file "$addr_file" \
+  --out-dir "$out_dir" --prefix reconnect > "$scratch/leader.log" 2>&1 &
+leader=$!
+
+# wait for the leader to bind and publish its ephemeral port
+for _ in $(seq 1 100); do
+  [ -s "$addr_file" ] && break
+  sleep 0.1
+done
+if [ ! -s "$addr_file" ]; then
+  echo "leader never published an address" >&2
+  cat "$scratch/leader.log" >&2
+  exit 1
+fi
+addr="$(cat "$addr_file")"
+
+worker() {
+  local id="$1"
+  shift
+  "$bin" worker --connect "$addr" --worker-id "$id" \
+    --retry-secs 30 --rejoin-secs 30 "$@"
+}
+
+worker 0 > "$scratch/worker0.log" 2>&1 &
+w0=$!
+worker 1 > "$scratch/worker1.log" 2>&1 &
+w1=$!
+worker 2 --ckpt-dir "$ckpt_dir" --ckpt-every 3 > "$scratch/worker2.log" 2>&1 &
+w2=$!
+
+w2b=""
+if [ "$mode" = relaunch ]; then
+  # wait for worker 2's first checkpoint, then kill it without ceremony
+  for _ in $(seq 1 200); do
+    ls "$ckpt_dir"/ckpt-*.dybw > /dev/null 2>&1 && break
+    sleep 0.1
+  done
+  if ! ls "$ckpt_dir"/ckpt-*.dybw > /dev/null 2>&1; then
+    echo "worker 2 never checkpointed" >&2
+    cat "$scratch/worker2.log" >&2
+    kill "$leader" "$w0" "$w1" "$w2" 2> /dev/null || true
+    exit 1
+  fi
+  kill -9 "$w2"
+  wait "$w2" || true
+  worker 2 --ckpt-dir "$ckpt_dir" --ckpt-every 3 --resume \
+    > "$scratch/worker2b.log" 2>&1 &
+  w2b=$!
+fi
+
+fail=0
+wait "$leader" || fail=1
+wait "$w0" || fail=1
+wait "$w1" || fail=1
+if [ "$mode" = relaunch ]; then
+  wait "$w2b" || fail=1
+else
+  wait "$w2" || fail=1
+fi
+if [ "$fail" -ne 0 ]; then
+  for log in "$scratch"/*.log; do
+    echo "--- $log" >&2
+    cat "$log" >&2
+  done
+  exit 1
+fi
+
+# the fault actually happened and was survived, not silently skipped
+grep -q 'degraded mode' "$scratch/leader.log"
+if [ "$mode" = relaunch ]; then
+  grep -q 'restored checkpoint' "$scratch/worker2b.log"
+else
+  grep -q 'rejoined at draw' "$scratch/worker1.log"
+fi
+echo "reconnect smoke ($mode) OK: $(ls "$out_dir" | tr '\n' ' ')"

@@ -74,6 +74,17 @@ pub enum Msg {
     Pong { nonce: u64 },
     /// Shut the worker down cleanly.
     Stop,
+    /// Coordinator -> worker liveness probe; the worker echoes it back
+    /// immediately (even while sleeping out a straggler delay).
+    Heartbeat { seq: u64 },
+    /// Worker -> coordinator on a *re*connection: re-claim slot `worker`.
+    /// `draws` is how many training batches the worker has already drawn
+    /// from its shard, so the leader can tell how far behind it is.
+    Rejoin { worker: u32, draws: u64 },
+    /// Coordinator -> worker rejoin answer: fast-forward your batch
+    /// source to `draws` total draws and overwrite local state with the
+    /// authoritative `w` / `wtilde` snapshots.
+    StateSync { draws: u64, w: Vec<f32>, wtilde: Vec<f32> },
 }
 
 impl Msg {
@@ -90,6 +101,9 @@ impl Msg {
             Msg::Ping { .. } => 8,
             Msg::Pong { .. } => 9,
             Msg::Stop => 10,
+            Msg::Heartbeat { .. } => 11,
+            Msg::Rejoin { .. } => 12,
+            Msg::StateSync { .. } => 13,
         }
     }
 
@@ -105,6 +119,9 @@ impl Msg {
             Msg::Ping { .. } => "Ping",
             Msg::Pong { .. } => "Pong",
             Msg::Stop => "Stop",
+            Msg::Heartbeat { .. } => "Heartbeat",
+            Msg::Rejoin { .. } => "Rejoin",
+            Msg::StateSync { .. } => "StateSync",
         }
     }
 }
@@ -228,6 +245,16 @@ fn encode_payload(msg: &Msg) -> Vec<u8> {
         }
         Msg::Ping { nonce } | Msg::Pong { nonce } => put_u64(&mut p, *nonce),
         Msg::Stop => {}
+        Msg::Heartbeat { seq } => put_u64(&mut p, *seq),
+        Msg::Rejoin { worker, draws } => {
+            put_u32(&mut p, *worker);
+            put_u64(&mut p, *draws);
+        }
+        Msg::StateSync { draws, w, wtilde } => {
+            put_u64(&mut p, *draws);
+            put_vec_f32(&mut p, w);
+            put_vec_f32(&mut p, wtilde);
+        }
     }
     p
 }
@@ -374,6 +401,9 @@ fn decode_payload(msg_type: u8, payload: &[u8]) -> Result<Msg, CodecError> {
         8 => Msg::Ping { nonce: r.u64()? },
         9 => Msg::Pong { nonce: r.u64()? },
         10 => Msg::Stop,
+        11 => Msg::Heartbeat { seq: r.u64()? },
+        12 => Msg::Rejoin { worker: r.u32()?, draws: r.u64()? },
+        13 => Msg::StateSync { draws: r.u64()?, w: r.vec_f32()?, wtilde: r.vec_f32()? },
         other => return Err(CodecError::BadMsgType { got: other }),
     };
     if r.remaining() != 0 {
@@ -504,6 +534,11 @@ mod tests {
             Msg::Ping { nonce: u64::MAX },
             Msg::Pong { nonce: 0 },
             Msg::Stop,
+            Msg::Heartbeat { seq: 42 },
+            Msg::Rejoin { worker: 2, draws: 17 },
+            Msg::Rejoin { worker: ANY_WORKER, draws: 0 },
+            Msg::StateSync { draws: 9, w: vec![0.5, -1.5], wtilde: vec![2.0, 0.0] },
+            Msg::StateSync { draws: 0, w: Vec::new(), wtilde: Vec::new() },
         ]
     }
 

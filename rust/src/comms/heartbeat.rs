@@ -1,0 +1,240 @@
+//! Heartbeat-driven failure detection for the live driver.
+//!
+//! The coordinator probes every live peer with [`Msg::Heartbeat`] at a
+//! fixed interval; workers echo each probe immediately (even while
+//! sleeping out a straggler delay). [`Liveness`] tracks, per peer, when
+//! it was last heard from and when the next probe is due. A peer is
+//! reported *expired* only once [`TIMEOUT_INTERVALS`] probes have gone
+//! unanswered **and** its silence exceeds the timeout — gating expiry on
+//! probes actually sent means a leader that was itself busy (a long
+//! held-out eval, say) cannot condemn peers it never asked after. The
+//! driver then severs the expired peer's connection, which collapses
+//! "suspended", "wedged", and "network-dead" into the single down-peer
+//! path that [`crate::comms::transport::TcpTransport`]'s rejoin flow
+//! recovers from.
+//!
+//! [`Msg::Heartbeat`]: crate::comms::codec::Msg::Heartbeat
+
+use std::time::{Duration, Instant};
+
+/// Unanswered probes (equivalently, silence as a multiple of the probe
+/// interval) tolerated before a peer is declared dead. Must exceed the
+/// worker's longest blocking gradient computation divided by the probe
+/// interval.
+pub const TIMEOUT_INTERVALS: u32 = 4;
+
+struct PeerState {
+    alive: bool,
+    last_seen: Instant,
+    next_probe: Instant,
+    /// Probes sent since the peer last spoke.
+    unanswered: u32,
+}
+
+/// Per-peer liveness deadlines. Purely a bookkeeping structure: the
+/// caller feeds in message arrivals (`touch`) and membership changes
+/// (`mark_down` / `mark_up`), and asks which peers to probe
+/// (`due_probes`) and which have gone silent (`expired`).
+pub struct Liveness {
+    interval: Duration,
+    timeout: Duration,
+    seq: u64,
+    peers: Vec<PeerState>,
+}
+
+impl Liveness {
+    /// A tracker probing every `interval`. `Duration::ZERO` disables
+    /// tracking entirely (the in-process default: threads don't die
+    /// silently, so no probes, no deadlines).
+    pub fn new(n: usize, interval: Duration, now: Instant) -> Liveness {
+        Liveness {
+            interval,
+            timeout: interval * TIMEOUT_INTERVALS,
+            seq: 0,
+            peers: (0..n)
+                .map(|_| PeerState {
+                    alive: true,
+                    last_seen: now,
+                    next_probe: now + interval,
+                    unanswered: 0,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.interval > Duration::ZERO
+    }
+
+    /// Any message from `j` proves it alive — heartbeat echoes are not
+    /// special, a Done counts just as well.
+    pub fn touch(&mut self, j: usize, now: Instant) {
+        if let Some(p) = self.peers.get_mut(j) {
+            p.last_seen = now;
+            p.unanswered = 0;
+        }
+    }
+
+    /// Stop tracking `j` (its connection is down; no probes, no expiry).
+    pub fn mark_down(&mut self, j: usize) {
+        if let Some(p) = self.peers.get_mut(j) {
+            p.alive = false;
+        }
+    }
+
+    /// Resume tracking `j` with a fresh deadline (it just rejoined).
+    pub fn mark_up(&mut self, j: usize, now: Instant) {
+        if let Some(p) = self.peers.get_mut(j) {
+            p.alive = true;
+            p.last_seen = now;
+            p.next_probe = now + self.interval;
+            p.unanswered = 0;
+        }
+    }
+
+    /// Peers whose probe is due, paired with the sequence number to
+    /// stamp into the Heartbeat. Schedules each one's next probe.
+    pub fn due_probes(&mut self, now: Instant) -> Vec<(usize, u64)> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        let mut due = Vec::new();
+        for (j, p) in self.peers.iter_mut().enumerate() {
+            if p.alive && p.next_probe <= now {
+                self.seq += 1;
+                p.next_probe = now + self.interval;
+                p.unanswered += 1;
+                due.push((j, self.seq));
+            }
+        }
+        due
+    }
+
+    /// Live peers that ignored [`TIMEOUT_INTERVALS`] probes and stayed
+    /// silent past the timeout.
+    pub fn expired(&self, now: Instant) -> Vec<usize> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        self.peers
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| {
+                p.alive
+                    && p.unanswered >= TIMEOUT_INTERVALS
+                    && now.duration_since(p.last_seen) > self.timeout
+            })
+            .map(|(j, _)| j)
+            .collect()
+    }
+
+    /// How long the driver may park in `recv` before the next probe or
+    /// expiry deadline. `None` when tracking is disabled (park for the
+    /// full watchdog slice).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        if !self.enabled() {
+            return None;
+        }
+        self.peers
+            .iter()
+            .filter(|p| p.alive)
+            .map(|p| {
+                let probe = p.next_probe.saturating_duration_since(now);
+                let expiry = (p.last_seen + self.timeout).saturating_duration_since(now);
+                probe.min(expiry)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TICK: Duration = Duration::from_millis(100);
+
+    #[test]
+    fn disabled_tracker_never_probes_or_expires() {
+        let t0 = Instant::now();
+        let mut lv = Liveness::new(3, Duration::ZERO, t0);
+        assert!(!lv.enabled());
+        assert!(lv.due_probes(t0 + Duration::from_secs(3600)).is_empty());
+        assert!(lv.expired(t0 + Duration::from_secs(3600)).is_empty());
+        assert!(lv.next_deadline(t0).is_none());
+    }
+
+    #[test]
+    fn probes_come_due_per_interval_with_fresh_seqs() {
+        let t0 = Instant::now();
+        let mut lv = Liveness::new(2, TICK, t0);
+        assert!(lv.due_probes(t0).is_empty(), "nothing due immediately");
+        let due = lv.due_probes(t0 + TICK);
+        assert_eq!(due.iter().map(|&(j, _)| j).collect::<Vec<_>>(), vec![0, 1]);
+        let seqs: Vec<u64> = due.iter().map(|&(_, s)| s).collect();
+        assert_eq!(seqs.len(), 2);
+        assert_ne!(seqs[0], seqs[1], "each probe gets its own seq");
+        // not due again until another interval passes
+        assert!(lv.due_probes(t0 + TICK).is_empty());
+        assert_eq!(lv.due_probes(t0 + 2 * TICK).len(), 2);
+    }
+
+    #[test]
+    fn silence_past_timeout_expires_only_the_silent_peer() {
+        let t0 = Instant::now();
+        let mut lv = Liveness::new(2, TICK, t0);
+        for s in 1..=TIMEOUT_INTERVALS {
+            lv.due_probes(t0 + s * TICK);
+        }
+        let late = t0 + TIMEOUT_INTERVALS * TICK + Duration::from_millis(1);
+        lv.touch(1, late); // peer 1 answered
+        assert_eq!(lv.expired(late), vec![0]);
+    }
+
+    /// Expiry is probe-gated: a leader that was away (long eval) and
+    /// sent no probes must not condemn peers on re-entry, no matter how
+    /// stale `last_seen` looks.
+    #[test]
+    fn leader_absence_alone_does_not_expire_peers() {
+        let t0 = Instant::now();
+        let mut lv = Liveness::new(1, TICK, t0);
+        let back = t0 + 100 * TICK;
+        assert!(lv.expired(back).is_empty());
+        // re-entry fires one probe, not a verdict
+        assert_eq!(lv.due_probes(back).len(), 1);
+        assert!(lv.expired(back + Duration::from_millis(1)).is_empty());
+    }
+
+    #[test]
+    fn down_peers_are_not_probed_or_expired_until_marked_up() {
+        let t0 = Instant::now();
+        let mut lv = Liveness::new(2, TICK, t0);
+        lv.mark_down(0);
+        for s in 1..=TIMEOUT_INTERVALS {
+            let due = lv.due_probes(t0 + s * TICK);
+            assert_eq!(due.iter().map(|&(j, _)| j).collect::<Vec<_>>(), vec![1], "round {s}");
+        }
+        let late = t0 + (TIMEOUT_INTERVALS + 1) * TICK;
+        assert_eq!(lv.expired(late), vec![1]);
+        // the rejoined peer gets a fresh deadline, not the stale one
+        lv.mark_up(0, late);
+        assert!(!lv.expired(late + TICK).contains(&0));
+        for s in 1..=TIMEOUT_INTERVALS {
+            lv.due_probes(late + s * TICK);
+        }
+        assert!(lv.expired(late + (TIMEOUT_INTERVALS + 1) * TICK).contains(&0));
+    }
+
+    #[test]
+    fn next_deadline_is_the_soonest_probe_or_expiry() {
+        let t0 = Instant::now();
+        let mut lv = Liveness::new(2, TICK, t0);
+        // soonest event is the first probe, one interval out
+        assert_eq!(lv.next_deadline(t0), Some(TICK));
+        let t1 = t0 + TICK / 2;
+        assert_eq!(lv.next_deadline(t1), Some(TICK / 2));
+        // with every peer down there is no deadline to honour
+        lv.mark_down(0);
+        lv.mark_down(1);
+        assert_eq!(lv.next_deadline(t1), None);
+    }
+}

@@ -13,15 +13,28 @@
 //!   [`transport::ChannelTransport`] (the degenerate transport — plain
 //!   channels, zero serialisation) and the [`transport::TcpTransport`]
 //!   (persistent per-worker connections, one reader thread per peer).
+//! - [`heartbeat`] — the failure-detection layer: per-peer probe and
+//!   expiry deadlines ([`heartbeat::Liveness`]) the live driver uses to
+//!   declare a silent peer dead. Peer death surfaces as a typed
+//!   [`TransportError::PeerDisconnected`] event, a dead worker rejoins
+//!   through the transport's background acceptor
+//!   ([`transport::rejoin_worker`]), and connection generations make
+//!   takeovers race-free.
 //!
 //! The equivalence guarantee: recorded training history is computed from
 //! virtual times on the coordinator (see `coordinator::live`), so a
 //! seeded run produces **bit-identical** history over either transport —
 //! asserted by `live_tcp_bit_identical_to_in_process` and the
-//! `socket-smoke` CI job.
+//! `socket-smoke` CI job. Fault tolerance preserves it: while a worker
+//! is down the coordinator computes that slot's contribution itself
+//! (same seeded batches, same f32 arithmetic), so a run that loses and
+//! regains a worker still exports the same bytes — asserted by the
+//! `reconnect-smoke` CI job.
 
 pub mod codec;
+pub mod heartbeat;
 pub mod transport;
 
 pub use codec::{CodecError, Msg};
+pub use heartbeat::Liveness;
 pub use transport::{Transport, TransportError};

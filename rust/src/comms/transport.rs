@@ -18,14 +18,29 @@
 //! id, or [`ANY_WORKER`] to be assigned one), the coordinator answers
 //! [`Msg::Init`] with the assigned id and the experiment setup JSON.
 //! Every failure is a typed [`TransportError`].
+//!
+//! Peers are mortal. A peer whose connection drops surfaces as a typed
+//! [`TransportError::PeerDisconnected`] on the coordinator's event
+//! stream (never a silently-dead reader thread), and the coordinator can
+//! cut a peer itself with [`Transport::sever`]. After the initial accept
+//! phase a [`TcpTransport`] keeps accepting: a worker that lost its
+//! connection re-claims its slot with [`Msg::Rejoin`] (or a restarted
+//! process re-handshakes with a specific-slot [`Msg::Hello`]), and the
+//! new connection *takes over* the slot. Every slot carries a
+//! generation counter, bumped on takeover/sever, and events from a
+//! replaced connection are dropped as stale — a half-open old socket can
+//! never speak for the slot's new owner.
 
 use std::collections::VecDeque;
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::codec::{read_frame, read_frame_opt, write_frame, CodecError, Msg};
+use crate::util::rng::Rng;
 
 pub use super::codec::ANY_WORKER;
 
@@ -36,6 +51,8 @@ pub enum TransportError {
     Closed { worker: usize },
     /// The event stream is gone: every peer hung up.
     Disconnected,
+    /// Worker `worker`'s connection dropped (EOF / reset mid-recv).
+    PeerDisconnected { worker: usize },
     /// No event arrived within the timeout.
     Timeout { secs: f64 },
     /// Worker `worker` sent bytes the codec rejected.
@@ -50,6 +67,9 @@ impl std::fmt::Display for TransportError {
         match self {
             TransportError::Closed { worker } => write!(f, "worker {worker} connection closed"),
             TransportError::Disconnected => write!(f, "all peers disconnected"),
+            TransportError::PeerDisconnected { worker } => {
+                write!(f, "worker {worker} disconnected")
+            }
             TransportError::Timeout { secs } => write!(f, "no message within {secs:.1}s"),
             TransportError::Codec { worker, err } => {
                 write!(f, "bad frame from worker {worker}: {err}")
@@ -62,8 +82,18 @@ impl std::fmt::Display for TransportError {
 
 impl std::error::Error for TransportError {}
 
-/// One received event: `(worker id, decoded message or codec failure)`.
-type Event = (usize, Result<Msg, CodecError>);
+/// What a reader observed on one connection.
+enum EventKind {
+    Msg(Msg),
+    Codec(CodecError),
+    /// The connection closed (clean EOF or reset).
+    Gone,
+}
+
+/// One event: `(worker id, connection generation, payload)`. The
+/// generation lets receivers drop events from a connection that has
+/// since been replaced by a rejoin takeover or cut by `sever`.
+type Event = (usize, u64, EventKind);
 
 /// Coordinator-side message fabric.
 pub trait Transport {
@@ -73,25 +103,17 @@ pub trait Transport {
     fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError>;
     /// Block for the next event from any worker (up to `timeout`).
     fn recv(&mut self, timeout: Duration) -> Result<(usize, Msg), TransportError>;
+    /// Cut worker `worker`'s connection. Subsequent events from the old
+    /// connection are dropped as stale; sends to the slot fail `Closed`
+    /// until (on TCP) a rejoin installs a new connection.
+    fn sever(&mut self, worker: usize);
 }
 
-fn map_event(ev: Event) -> Result<(usize, Msg), TransportError> {
-    match ev {
-        (j, Ok(msg)) => Ok((j, msg)),
-        (j, Err(err)) => Err(TransportError::Codec { worker: j, err }),
-    }
-}
-
-fn map_recv_timeout(
-    r: Result<Event, RecvTimeoutError>,
-    timeout: Duration,
-) -> Result<(usize, Msg), TransportError> {
-    match r {
-        Ok(ev) => map_event(ev),
-        Err(RecvTimeoutError::Timeout) => {
-            Err(TransportError::Timeout { secs: timeout.as_secs_f64() })
-        }
-        Err(RecvTimeoutError::Disconnected) => Err(TransportError::Disconnected),
+fn resolve_event(j: usize, kind: EventKind) -> Result<(usize, Msg), TransportError> {
+    match kind {
+        EventKind::Msg(m) => Ok((j, m)),
+        EventKind::Codec(err) => Err(TransportError::Codec { worker: j, err }),
+        EventKind::Gone => Err(TransportError::PeerDisconnected { worker: j }),
     }
 }
 
@@ -110,6 +132,16 @@ pub struct WorkerPort {
     rx: Receiver<Event>,
     tx: PortTx,
     pending: VecDeque<Msg>,
+}
+
+/// Map an event on the worker side: the only peer is the coordinator,
+/// so a dropped connection is `Disconnected` (the leader is gone).
+fn port_event(ev: Event) -> Result<Msg, TransportError> {
+    match ev.2 {
+        EventKind::Msg(m) => Ok(m),
+        EventKind::Codec(err) => Err(TransportError::Codec { worker: ev.0, err }),
+        EventKind::Gone => Err(TransportError::Disconnected),
+    }
 }
 
 impl WorkerPort {
@@ -131,7 +163,7 @@ impl WorkerPort {
             return Ok(m);
         }
         match self.rx.recv() {
-            Ok(ev) => map_event(ev).map(|(_, m)| m),
+            Ok(ev) => port_event(ev),
             Err(_) => Err(TransportError::Disconnected),
         }
     }
@@ -144,7 +176,7 @@ impl WorkerPort {
             return Ok(Some(m));
         }
         match self.rx.recv_timeout(timeout) {
-            Ok(ev) => map_event(ev).map(|(_, m)| Some(m)),
+            Ok(ev) => port_event(ev).map(Some),
             Err(RecvTimeoutError::Timeout) => Ok(None),
             Err(RecvTimeoutError::Disconnected) => Err(TransportError::Disconnected),
         }
@@ -155,7 +187,7 @@ impl WorkerPort {
         let id = self.id;
         match &mut self.tx {
             PortTx::Chan { tx, id: from } => tx
-                .send((*from, Ok(msg)))
+                .send((*from, 0, EventKind::Msg(msg)))
                 .map_err(|_| TransportError::Disconnected),
             PortTx::Tcp(stream) => write_frame(stream, &msg).map_err(|e| match e {
                 CodecError::Io(io) => TransportError::Io(io),
@@ -167,10 +199,17 @@ impl WorkerPort {
 
 impl Drop for WorkerPort {
     fn drop(&mut self) {
-        // Shutdown (not just drop) so the reader thread's blocked read —
-        // which holds its own clone of the socket — unblocks too.
-        if let PortTx::Tcp(stream) = &self.tx {
-            let _ = stream.shutdown(Shutdown::Both);
+        match &self.tx {
+            // Tell the coordinator this peer is gone — the channel
+            // transport has no socket EOF to observe.
+            PortTx::Chan { tx, id } => {
+                let _ = tx.send((*id, 0, EventKind::Gone));
+            }
+            // Shutdown (not just drop) so the reader thread's blocked
+            // read — which holds its own clone of the socket — unblocks.
+            PortTx::Tcp(stream) => {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
         }
     }
 }
@@ -179,8 +218,11 @@ impl Drop for WorkerPort {
 
 /// The degenerate transport: `mpsc` channels inside one process.
 pub struct ChannelTransport {
-    txs: Vec<Sender<Event>>,
+    txs: Vec<Option<Sender<Event>>>,
     rx: Receiver<Event>,
+    /// Per-slot generation; ports always stamp 0, so a sever (bump to
+    /// >= 1) makes every later event from that port stale.
+    gens: Vec<u64>,
 }
 
 impl ChannelTransport {
@@ -191,7 +233,7 @@ impl ChannelTransport {
         let mut ports = Vec::with_capacity(n);
         for j in 0..n {
             let (tx, rx) = channel::<Event>();
-            txs.push(tx);
+            txs.push(Some(tx));
             ports.push(WorkerPort {
                 id: j,
                 rx,
@@ -201,7 +243,7 @@ impl ChannelTransport {
         }
         // evt_tx is NOT retained here: once every port is gone the
         // coordinator's recv reports Disconnected instead of hanging.
-        (ChannelTransport { txs, rx: evt_rx }, ports)
+        (ChannelTransport { txs, rx: evt_rx, gens: vec![0; n] }, ports)
     }
 }
 
@@ -212,51 +254,200 @@ impl Transport for ChannelTransport {
 
     fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
         match self.txs.get(to) {
-            Some(tx) => tx
-                .send((to, Ok(msg)))
+            Some(Some(tx)) => tx
+                .send((to, 0, EventKind::Msg(msg)))
                 .map_err(|_| TransportError::Closed { worker: to }),
-            None => Err(TransportError::Closed { worker: to }),
+            _ => Err(TransportError::Closed { worker: to }),
         }
     }
 
     fn recv(&mut self, timeout: Duration) -> Result<(usize, Msg), TransportError> {
-        map_recv_timeout(self.rx.recv_timeout(timeout), timeout)
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(remaining) {
+                Ok((j, gen, kind)) => {
+                    if gen < self.gens[j] {
+                        continue; // stale: slot was severed
+                    }
+                    return resolve_event(j, kind);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(TransportError::Timeout { secs: timeout.as_secs_f64() })
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(TransportError::Disconnected),
+            }
+        }
+    }
+
+    fn sever(&mut self, worker: usize) {
+        if worker < self.txs.len() {
+            self.txs[worker] = None;
+            self.gens[worker] += 1;
+        }
     }
 }
 
 // ---------------------------------------------------------- tcp fabric
 
+/// How long a late (post-start) connection gets to produce its
+/// Rejoin/Hello frame before the acceptor drops it.
+const REJOIN_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Acceptor poll interval (nonblocking accept + stop-flag check).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
 /// Decode frames off one peer's socket into the shared event channel.
-fn reader_loop(id: usize, mut stream: TcpStream, tx: Sender<Event>) {
+/// Every exit posts a `Gone` event: EOF, reset, or shutdown from our
+/// own side all surface instead of a reader dying silently (stale-
+/// generation `Gone`s are dropped by the receiver).
+fn reader_loop(id: usize, gen: u64, mut stream: TcpStream, tx: Sender<Event>) {
     loop {
         match read_frame_opt(&mut stream) {
             Ok(Some(msg)) => {
-                if tx.send((id, Ok(msg))).is_err() {
+                if tx.send((id, gen, EventKind::Msg(msg))).is_err() {
                     return; // coordinator gone
                 }
             }
-            Ok(None) => return, // peer closed cleanly
+            Ok(None) => {
+                let _ = tx.send((id, gen, EventKind::Gone));
+                return;
+            }
+            // An io-level failure is connection death, not a protocol
+            // violation: report the peer gone. Real codec violations
+            // (bad magic/checksum/payload) stay typed.
+            Err(CodecError::Io(_)) => {
+                let _ = tx.send((id, gen, EventKind::Gone));
+                return;
+            }
             Err(err) => {
-                let _ = tx.send((id, Err(err)));
+                let _ = tx.send((id, gen, EventKind::Codec(err)));
                 return;
             }
         }
     }
 }
 
-/// Real-socket transport: one persistent connection per worker.
-pub struct TcpTransport {
-    streams: Vec<TcpStream>,
-    rx: Receiver<Event>,
+/// Per-slot connection table shared between the transport handle, its
+/// reader threads, and the background acceptor.
+struct TcpShared {
+    streams: Vec<Option<TcpStream>>,
+    gens: Vec<u64>,
     readers: Vec<JoinHandle<()>>,
+}
+
+impl TcpShared {
+    /// Install `stream` as slot `id`'s connection: bump the generation
+    /// (staling the old connection's events), shut the old socket down,
+    /// and spawn a reader for the new one. Returns the new generation.
+    fn install(
+        shared: &Arc<Mutex<TcpShared>>,
+        tx: &Sender<Event>,
+        id: usize,
+        stream: TcpStream,
+    ) -> std::io::Result<u64> {
+        let clone = stream.try_clone()?;
+        let mut sh = shared.lock().unwrap();
+        sh.gens[id] += 1;
+        let gen = sh.gens[id];
+        if let Some(old) = sh.streams[id].take() {
+            let _ = old.shutdown(Shutdown::Both);
+        }
+        sh.streams[id] = Some(stream);
+        let tx = tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("dybw-net-{id}-g{gen}"))
+            .spawn(move || reader_loop(id, gen, clone, tx))?;
+        sh.readers.push(handle);
+        Ok(gen)
+    }
+}
+
+/// Real-socket transport: one persistent connection per worker slot,
+/// with a background acceptor that lets dead workers rejoin.
+pub struct TcpTransport {
+    n: usize,
+    shared: Arc<Mutex<TcpShared>>,
+    rx: Receiver<Event>,
+    acceptor: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// One late connection: either a live worker re-claiming its slot after
+/// a connection loss (`Rejoin`) or a restarted process running the full
+/// handshake again (`Hello` with a specific slot id — it gets the setup
+/// JSON back via `Init`). Both forward a `Rejoin` event so the driver
+/// can answer with `StateSync`. Anything else is dropped.
+fn handle_late_connection(
+    mut stream: TcpStream,
+    n: usize,
+    setup: &str,
+    shared: &Arc<Mutex<TcpShared>>,
+    tx: &Sender<Event>,
+) {
+    if stream.set_nodelay(true).is_err()
+        || stream.set_read_timeout(Some(REJOIN_HANDSHAKE_TIMEOUT)).is_err()
+    {
+        return;
+    }
+    let (id, draws, needs_init) = match read_frame(&mut stream) {
+        Ok(Msg::Rejoin { worker, draws }) if (worker as usize) < n => {
+            (worker as usize, draws, false)
+        }
+        Ok(Msg::Hello { worker }) if worker != ANY_WORKER && (worker as usize) < n => {
+            (worker as usize, 0, true)
+        }
+        // out-of-range claim, ANY_WORKER after start, wrong message, or
+        // garbage: drop the connection (the peer sees EOF, a typed
+        // handshake error on its side — never a hang)
+        _ => {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+    };
+    if needs_init
+        && write_frame(&mut stream, &Msg::Init { worker: id as u32, setup: setup.to_string() })
+            .is_err()
+    {
+        return;
+    }
+    if stream.set_read_timeout(None).is_err() {
+        return;
+    }
+    let Ok(gen) = TcpShared::install(shared, tx, id, stream) else {
+        return;
+    };
+    // the driver answers this with StateSync before sending anything
+    // else to the slot
+    let _ = tx.send((id, gen, EventKind::Msg(Msg::Rejoin { worker: id as u32, draws })));
+}
+
+fn acceptor_loop(
+    listener: TcpListener,
+    n: usize,
+    setup: String,
+    shared: Arc<Mutex<TcpShared>>,
+    tx: Sender<Event>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => handle_late_connection(stream, n, &setup, &shared, &tx),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => std::thread::sleep(ACCEPT_POLL),
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
 }
 
 impl TcpTransport {
     /// Accept exactly `n` workers on `listener`, performing the
     /// Hello/Init handshake with each (`setup` is the experiment JSON
     /// handed to every worker). Slot ids: a worker may claim a specific
-    /// id in its Hello (duplicates and out-of-range ids are handshake
-    /// errors), or send [`ANY_WORKER`] to get the lowest free slot.
+    /// id in its Hello (out-of-range ids are handshake errors; a repeat
+    /// claim for a held slot is a takeover — the newer connection wins),
+    /// or send [`ANY_WORKER`] to get the lowest free slot. Once all `n`
+    /// slots are filled a background acceptor keeps the listener open so
+    /// workers can rejoin mid-run.
     pub fn accept(
         listener: &TcpListener,
         n: usize,
@@ -265,15 +456,14 @@ impl TcpTransport {
     ) -> Result<TcpTransport, TransportError> {
         let (tx, rx) = channel::<Event>();
         let mut slots: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
-        let mut accepted = 0usize;
-        while accepted < n {
+        while slots.iter().any(|s| s.is_none()) {
             let (mut stream, _peer) = listener.accept().map_err(TransportError::Io)?;
             stream.set_nodelay(true).map_err(TransportError::Io)?;
             stream
                 .set_read_timeout(Some(handshake_timeout))
                 .map_err(TransportError::Io)?;
             let hello = read_frame(&mut stream)
-                .map_err(|err| TransportError::Codec { worker: accepted, err })?;
+                .map_err(|err| TransportError::Codec { worker: 0, err })?;
             let Msg::Hello { worker } = hello else {
                 return Err(TransportError::Handshake(format!(
                     "expected Hello, got {}",
@@ -292,11 +482,6 @@ impl TcpTransport {
                         "worker id {id} out of range (n = {n})"
                     )));
                 }
-                if slots[id].is_some() {
-                    return Err(TransportError::Handshake(format!(
-                        "worker id {id} claimed twice"
-                    )));
-                }
                 id
             };
             write_frame(
@@ -308,64 +493,154 @@ impl TcpTransport {
                 other => TransportError::Codec { worker: id, err: other },
             })?;
             stream.set_read_timeout(None).map_err(TransportError::Io)?;
-            slots[id] = Some(stream);
-            accepted += 1;
+            // duplicate claim during startup: clean takeover, the old
+            // connection is cut and its (future) events are stale
+            if let Some(old) = slots[id].replace(stream) {
+                let _ = old.shutdown(Shutdown::Both);
+            }
         }
-        let streams: Vec<TcpStream> = slots.into_iter().flatten().collect();
-        let mut readers = Vec::with_capacity(n);
-        for (id, s) in streams.iter().enumerate() {
-            let clone = s.try_clone().map_err(TransportError::Io)?;
-            let tx = tx.clone();
-            readers.push(
-                std::thread::Builder::new()
-                    .name(format!("dybw-net-{id}"))
-                    .spawn(move || reader_loop(id, clone, tx))
-                    .map_err(TransportError::Io)?,
-            );
+        let shared = Arc::new(Mutex::new(TcpShared {
+            streams: (0..n).map(|_| None).collect(),
+            gens: vec![0; n],
+            readers: Vec::with_capacity(n),
+        }));
+        for (id, s) in slots.into_iter().enumerate() {
+            let s = s.expect("all slots filled");
+            TcpShared::install(&shared, &tx, id, s).map_err(TransportError::Io)?;
         }
-        Ok(TcpTransport { streams, rx, readers })
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_clone = listener.try_clone().map_err(TransportError::Io)?;
+        accept_clone.set_nonblocking(true).map_err(TransportError::Io)?;
+        let acceptor = std::thread::Builder::new()
+            .name("dybw-accept".into())
+            .spawn({
+                let shared = Arc::clone(&shared);
+                let tx = tx.clone();
+                let stop = Arc::clone(&stop);
+                let setup = setup.to_string();
+                move || acceptor_loop(accept_clone, n, setup, shared, tx, stop)
+            })
+            .map_err(TransportError::Io)?;
+        Ok(TcpTransport { n, shared, rx, acceptor: Some(acceptor), stop })
     }
 }
 
 impl Transport for TcpTransport {
     fn workers(&self) -> usize {
-        self.streams.len()
+        self.n
     }
 
     fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
-        match self.streams.get_mut(to) {
-            Some(stream) => write_frame(stream, &msg).map_err(|e| match e {
+        let mut sh = self.shared.lock().unwrap();
+        match sh.streams.get_mut(to) {
+            Some(Some(stream)) => write_frame(stream, &msg).map_err(|e| match e {
                 CodecError::Io(_) => TransportError::Closed { worker: to },
                 other => TransportError::Codec { worker: to, err: other },
             }),
-            None => Err(TransportError::Closed { worker: to }),
+            _ => Err(TransportError::Closed { worker: to }),
         }
     }
 
     fn recv(&mut self, timeout: Duration) -> Result<(usize, Msg), TransportError> {
-        map_recv_timeout(self.rx.recv_timeout(timeout), timeout)
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(remaining) {
+                Ok((j, gen, kind)) => {
+                    let current = self.shared.lock().unwrap().gens[j];
+                    if gen < current {
+                        continue; // stale: connection was replaced or severed
+                    }
+                    return resolve_event(j, kind);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(TransportError::Timeout { secs: timeout.as_secs_f64() })
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(TransportError::Disconnected),
+            }
+        }
+    }
+
+    fn sever(&mut self, worker: usize) {
+        let mut sh = self.shared.lock().unwrap();
+        if worker < self.n {
+            sh.gens[worker] += 1;
+            if let Some(s) = sh.streams[worker].take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
     }
 }
 
 impl Drop for TcpTransport {
     fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
         // Shutdown unblocks each reader thread's in-flight read (the
         // readers own clones of these sockets), then join them so no
         // thread outlives the transport.
-        for s in &self.streams {
-            let _ = s.shutdown(Shutdown::Both);
-        }
-        for h in self.readers.drain(..) {
+        let handles: Vec<JoinHandle<()>> = {
+            let mut sh = self.shared.lock().unwrap();
+            for s in sh.streams.iter().flatten() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            sh.readers.drain(..).collect()
+        };
+        for h in handles {
             let _ = h.join();
         }
     }
 }
 
+// ------------------------------------------------------------- backoff
+
+/// Decorrelated-jitter backoff: each delay is drawn uniformly from
+/// `[base, 3 * previous]` and clamped to `cap`. A rack of workers that
+/// all lost the same leader therefore spreads its reconnect attempts
+/// out instead of thundering in lockstep (plain doubling keeps every
+/// client on the same schedule; jittering around it breaks the herd).
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    prev: Duration,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff { base, cap, prev: base, rng: Rng::new(seed) }
+    }
+
+    /// Next sleep. Always within `[base, cap]` and at most
+    /// `3 * previous delay`.
+    pub fn next_delay(&mut self) -> Duration {
+        let lo = self.base.as_secs_f64();
+        let hi = (self.prev.as_secs_f64() * 3.0).max(lo);
+        let secs = self.rng.uniform_in(lo, hi);
+        let d = Duration::from_secs_f64(secs).min(self.cap).max(self.base);
+        self.prev = d;
+        d
+    }
+}
+
+/// Per-process backoff seed: wall-clock nanos XOR pid, so concurrently
+/// launched workers start from different points of the jitter stream.
+fn jitter_seed() -> u64 {
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0x9E37_79B9);
+    t ^ ((std::process::id() as u64) << 32)
+}
+
 /// Connect with retry/backoff until `timeout` elapses (the coordinator
-/// may come up after its workers in a launch script).
+/// may come up after its workers in a launch script, or be restarting).
 pub fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream, TransportError> {
     let deadline = Instant::now() + timeout;
-    let mut backoff = Duration::from_millis(50);
+    let mut backoff =
+        Backoff::new(Duration::from_millis(50), Duration::from_millis(500), jitter_seed());
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
@@ -377,11 +652,25 @@ pub fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream, Transpo
                         timeout.as_secs_f64()
                     )));
                 }
-                std::thread::sleep(backoff.min(deadline - now));
-                backoff = (backoff * 2).min(Duration::from_millis(500));
+                std::thread::sleep(backoff.next_delay().min(deadline - now));
             }
         }
     }
+}
+
+// ----------------------------------------------------- worker connects
+
+fn spawn_port_reader(
+    id: usize,
+    stream: &TcpStream,
+) -> Result<Receiver<Event>, TransportError> {
+    let (evt_tx, rx) = channel::<Event>();
+    let clone = stream.try_clone().map_err(TransportError::Io)?;
+    std::thread::Builder::new()
+        .name(format!("dybw-net-{id}"))
+        .spawn(move || reader_loop(id, 0, clone, evt_tx))
+        .map_err(TransportError::Io)?;
+    Ok(rx)
 }
 
 /// Worker-process entry: connect to the coordinator, run the Hello/Init
@@ -414,12 +703,7 @@ pub fn connect_worker(
     };
     stream.set_read_timeout(None).map_err(TransportError::Io)?;
     let id = worker as usize;
-    let (evt_tx, rx) = channel::<Event>();
-    let clone = stream.try_clone().map_err(TransportError::Io)?;
-    std::thread::Builder::new()
-        .name(format!("dybw-net-{id}"))
-        .spawn(move || reader_loop(id, clone, evt_tx))
-        .map_err(TransportError::Io)?;
+    let rx = spawn_port_reader(id, &stream)?;
     let port = WorkerPort {
         id,
         rx,
@@ -427,6 +711,49 @@ pub fn connect_worker(
         pending: VecDeque::new(),
     };
     Ok((worker, setup, port))
+}
+
+/// Worker-process re-entry after a lost leader connection: reconnect,
+/// re-claim `slot` with [`Msg::Rejoin`] (`draws` = training batches
+/// already drawn), and block for the leader's [`Msg::StateSync`]
+/// answer. Returns the sync message and a fresh port. Every failure —
+/// including the leader rejecting the claim by dropping the connection
+/// — is a typed error, never a hang (`timeout` bounds both the connect
+/// retries and the StateSync wait).
+pub fn rejoin_worker(
+    addr: &str,
+    slot: u32,
+    draws: u64,
+    timeout: Duration,
+) -> Result<(Msg, WorkerPort), TransportError> {
+    let mut stream = connect_retry(addr, timeout)?;
+    stream.set_nodelay(true).map_err(TransportError::Io)?;
+    write_frame(&mut stream, &Msg::Rejoin { worker: slot, draws }).map_err(|e| match e {
+        CodecError::Io(io) => TransportError::Io(io),
+        other => TransportError::Codec { worker: slot as usize, err: other },
+    })?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(TransportError::Io)?;
+    let sync = read_frame(&mut stream).map_err(|err| {
+        TransportError::Handshake(format!("no StateSync from coordinator at {addr}: {err}"))
+    })?;
+    if !matches!(sync, Msg::StateSync { .. }) {
+        return Err(TransportError::Handshake(format!(
+            "expected StateSync, got {}",
+            sync.name()
+        )));
+    }
+    stream.set_read_timeout(None).map_err(TransportError::Io)?;
+    let id = slot as usize;
+    let rx = spawn_port_reader(id, &stream)?;
+    let port = WorkerPort {
+        id,
+        rx,
+        tx: PortTx::Tcp(stream),
+        pending: VecDeque::new(),
+    };
+    Ok((sync, port))
 }
 
 #[cfg(test)]
@@ -478,9 +805,54 @@ mod tests {
     }
 
     #[test]
+    fn channel_port_drop_surfaces_as_peer_disconnected() {
+        let (mut t, mut ports) = ChannelTransport::pair(2);
+        ports.remove(0); // worker 0 dies
+        match t.recv(Duration::from_secs(1)) {
+            Err(TransportError::PeerDisconnected { worker: 0 }) => {}
+            other => panic!("expected PeerDisconnected, got {other:?}"),
+        }
+        // worker 1 unaffected
+        ports[0].send(Msg::Pong { nonce: 1 }).unwrap();
+        assert_eq!(t.recv(Duration::from_secs(1)).unwrap(), (1, Msg::Pong { nonce: 1 }));
+    }
+
+    #[test]
     fn channel_recv_disconnects_when_all_ports_dropped() {
         let (mut t, ports) = ChannelTransport::pair(2);
         drop(ports);
+        // each port's death is reported first, in drop order ...
+        for expect in 0..2usize {
+            match t.recv(Duration::from_secs(1)) {
+                Err(TransportError::PeerDisconnected { worker }) => assert_eq!(worker, expect),
+                other => panic!("expected PeerDisconnected, got {other:?}"),
+            }
+        }
+        // ... and only then is the stream itself gone
+        assert!(matches!(
+            t.recv(Duration::from_secs(1)),
+            Err(TransportError::Disconnected)
+        ));
+    }
+
+    #[test]
+    fn channel_sever_drops_stale_events() {
+        let (mut t, mut ports) = ChannelTransport::pair(2);
+        ports[0].send(Msg::Pong { nonce: 7 }).unwrap();
+        t.sever(0);
+        // the pre-sever Pong and worker 0's eventual Gone are both stale
+        ports[1].send(Msg::Pong { nonce: 8 }).unwrap();
+        assert_eq!(t.recv(Duration::from_secs(1)).unwrap(), (1, Msg::Pong { nonce: 8 }));
+        assert!(matches!(
+            t.send(0, Msg::Stop),
+            Err(TransportError::Closed { worker: 0 })
+        ));
+        drop(ports);
+        // worker 1's Gone is live; worker 0's is filtered
+        assert!(matches!(
+            t.recv(Duration::from_secs(1)),
+            Err(TransportError::PeerDisconnected { worker: 1 })
+        ));
         assert!(matches!(
             t.recv(Duration::from_secs(1)),
             Err(TransportError::Disconnected)
@@ -494,6 +866,39 @@ mod tests {
         ports[0].push_back(Msg::Ping { nonce: 1 });
         assert_eq!(ports[0].recv().unwrap(), Msg::Ping { nonce: 1 });
         assert_eq!(ports[0].recv().unwrap(), Msg::Stop);
+    }
+
+    #[test]
+    fn backoff_delays_stay_within_bounds() {
+        let base = Duration::from_millis(50);
+        let cap = Duration::from_millis(500);
+        for seed in [1u64, 7, 0xDEAD_BEEF] {
+            let mut b = Backoff::new(base, cap, seed);
+            let mut prev = base;
+            for step in 0..64 {
+                let d = b.next_delay();
+                assert!(d >= base, "seed {seed} step {step}: {d:?} below base");
+                assert!(d <= cap, "seed {seed} step {step}: {d:?} above cap");
+                // decorrelated-jitter bound: at most 3x the previous sleep
+                let limit = prev.mul_f64(3.0).max(base).min(cap);
+                assert!(
+                    d <= limit + Duration::from_micros(1),
+                    "seed {seed} step {step}: {d:?} exceeds 3x prev {prev:?}"
+                );
+                prev = d;
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_jitters_rather_than_doubling_in_lockstep() {
+        let base = Duration::from_millis(50);
+        let cap = Duration::from_secs(60); // high cap: watch the spread
+        let a: Vec<Duration> =
+            (0..16).scan(Backoff::new(base, cap, 11), |b, _| Some(b.next_delay())).collect();
+        let b: Vec<Duration> =
+            (0..16).scan(Backoff::new(base, cap, 22), |b, _| Some(b.next_delay())).collect();
+        assert_ne!(a, b, "two seeds produced identical sleep schedules");
     }
 
     #[test]
@@ -566,6 +971,223 @@ mod tests {
             other => panic!("expected Handshake error, got {:?}", other.err()),
         }
         h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_worker_death_mid_recv_is_peer_disconnected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        let h = std::thread::spawn(move || {
+            let (_, _, mut port) = connect_worker(&addr, Some(0), timeout).unwrap();
+            // wait for the go signal, then die with the leader mid-recv
+            assert_eq!(port.recv().unwrap(), Msg::Ping { nonce: 1 });
+            drop(port);
+        });
+        let mut t = TcpTransport::accept(&listener, 1, "", timeout).unwrap();
+        t.send(0, Msg::Ping { nonce: 1 }).unwrap();
+        // leader is parked in recv when the peer's socket dies
+        match t.recv(timeout) {
+            Err(TransportError::PeerDisconnected { worker: 0 }) => {}
+            other => panic!("expected PeerDisconnected, got {other:?}"),
+        }
+        h.join().unwrap();
+        drop(t);
+    }
+
+    /// Satellite: duplicate claims at startup are a clean takeover.
+    /// Worker A claims slot 0 and completes its handshake; worker B then
+    /// claims slot 0 too. B wins, A's connection is cut (it observes
+    /// Disconnected, i.e. "go rejoin"), and nobody hangs.
+    #[test]
+    fn tcp_duplicate_startup_claim_is_clean_takeover() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        let (a_done_tx, a_done_rx) = channel::<()>();
+        let a = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let (_, _, mut port) = connect_worker(&addr, Some(0), timeout).unwrap();
+                a_done_tx.send(()).unwrap();
+                // the takeover cuts this connection
+                assert!(matches!(port.recv(), Err(TransportError::Disconnected)));
+            })
+        };
+        let b = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                // strictly after A finished its handshake
+                a_done_rx.recv().unwrap();
+                std::thread::sleep(Duration::from_millis(20));
+                let (_, _, mut port) = connect_worker(&addr, Some(0), timeout).unwrap();
+                let (_, _, mut p1) = connect_worker(&addr, Some(1), timeout).unwrap();
+                assert_eq!(port.recv().unwrap(), Msg::Ping { nonce: 5 });
+                port.send(Msg::Pong { nonce: 5 }).unwrap();
+                drop(p1.recv()); // leader teardown
+            })
+        };
+        let mut t = TcpTransport::accept(&listener, 2, "", timeout).unwrap();
+        // slot 0 now belongs to B
+        t.send(0, Msg::Ping { nonce: 5 }).unwrap();
+        assert_eq!(t.recv(timeout).unwrap(), (0, Msg::Pong { nonce: 5 }));
+        drop(t);
+        a.join().unwrap();
+        b.join().unwrap();
+    }
+
+    /// Satellite: a worker rejoining while the leader still holds the
+    /// old (half-open) connection takes the slot over; the old
+    /// connection's events are stale and the new one round-trips.
+    #[test]
+    fn tcp_rejoin_half_open_takeover() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        let old = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let (_, _, mut port) = connect_worker(&addr, Some(0), timeout).unwrap();
+                // keep the old connection half-open until it is cut
+                assert!(matches!(port.recv(), Err(TransportError::Disconnected)));
+            })
+        };
+        let mut t = TcpTransport::accept(&listener, 1, "", timeout).unwrap();
+        let rejoiner = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let (sync, mut port) = rejoin_worker(&addr, 0, 3, timeout).unwrap();
+                assert_eq!(sync, Msg::StateSync { draws: 9, w: vec![1.0], wtilde: vec![2.0] });
+                assert_eq!(port.recv().unwrap(), Msg::Stop);
+            })
+        };
+        // leader: the rejoin surfaces as an event; answer with StateSync
+        let (j, msg) = t.recv(timeout).unwrap();
+        assert_eq!((j, &msg), (0, &Msg::Rejoin { worker: 0, draws: 3 }));
+        t.send(0, Msg::StateSync { draws: 9, w: vec![1.0], wtilde: vec![2.0] }).unwrap();
+        t.send(0, Msg::Stop).unwrap();
+        rejoiner.join().unwrap();
+        old.join().unwrap();
+        drop(t);
+    }
+
+    /// Satellite: a stale/out-of-range slot claim on rejoin is a typed
+    /// handshake error on the worker side, never a hang.
+    #[test]
+    fn tcp_rejoin_out_of_range_claim_is_typed_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        let w = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let (_, _, port) = connect_worker(&addr, Some(0), timeout).unwrap();
+                port
+            })
+        };
+        let t = TcpTransport::accept(&listener, 1, "", timeout).unwrap();
+        let _port = w.join().unwrap();
+        let err = rejoin_worker(&addr, 9, 0, Duration::from_secs(3)).unwrap_err();
+        assert!(
+            matches!(err, TransportError::Handshake(_)),
+            "expected Handshake error, got {err:?}"
+        );
+        drop(t);
+    }
+
+    /// Satellite: duplicate simultaneous rejoin claims for one slot —
+    /// the last installed connection wins, the loser sees a typed
+    /// error/EOF, and neither side hangs.
+    #[test]
+    fn tcp_duplicate_rejoin_claims_never_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        let w = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let (_, _, port) = connect_worker(&addr, Some(0), timeout).unwrap();
+                drop(port); // dies immediately: slot 0 is now claimable
+            })
+        };
+        let mut t = TcpTransport::accept(&listener, 1, "", timeout).unwrap();
+        w.join().unwrap();
+        let claims: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || rejoin_worker(&addr, 0, 0, Duration::from_secs(5)))
+            })
+            .collect();
+        // answer every surviving Rejoin event until both claimants
+        // resolved; ignore the dead worker's PeerDisconnected
+        let deadline = Instant::now() + timeout;
+        loop {
+            let finished = claims.iter().filter(|h| h.is_finished()).count();
+            if finished == 2 || Instant::now() >= deadline {
+                break;
+            }
+            match t.recv(Duration::from_millis(200)) {
+                Ok((0, Msg::Rejoin { .. })) => {
+                    let _ = t.send(
+                        0,
+                        Msg::StateSync { draws: 0, w: vec![0.0], wtilde: vec![0.0] },
+                    );
+                }
+                Ok(other) => panic!("unexpected event {other:?}"),
+                Err(TransportError::PeerDisconnected { .. })
+                | Err(TransportError::Timeout { .. }) => {}
+                Err(other) => panic!("unexpected error {other:?}"),
+            }
+        }
+        let results: Vec<_> = claims.into_iter().map(|h| h.join().unwrap()).collect();
+        let won = results.iter().filter(|r| r.is_ok()).count();
+        assert!(won >= 1, "no rejoin claim succeeded: {results:?}");
+        for r in results {
+            if let Err(e) = r {
+                assert!(
+                    matches!(
+                        e,
+                        TransportError::Handshake(_)
+                            | TransportError::Io(_)
+                            | TransportError::Disconnected
+                    ),
+                    "loser got untyped failure: {e:?}"
+                );
+            }
+        }
+        drop(t);
+    }
+
+    /// Leader-initiated sever cuts the connection (the worker observes
+    /// Disconnected) and stales any in-flight events from it.
+    #[test]
+    fn tcp_sever_cuts_worker_and_stales_events() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(10);
+        let w = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let (_, _, mut port) = connect_worker(&addr, Some(0), timeout).unwrap();
+                port.send(Msg::Pong { nonce: 1 }).unwrap();
+                assert!(matches!(port.recv(), Err(TransportError::Disconnected)));
+            })
+        };
+        let mut t = TcpTransport::accept(&listener, 1, "", timeout).unwrap();
+        // let the worker's Pong land in the event channel first
+        std::thread::sleep(Duration::from_millis(100));
+        t.sever(0);
+        w.join().unwrap();
+        // pre-sever Pong and the reader's Gone are both stale now
+        assert!(matches!(
+            t.recv(Duration::from_millis(300)),
+            Err(TransportError::Timeout { .. })
+        ));
+        assert!(matches!(
+            t.send(0, Msg::Stop),
+            Err(TransportError::Closed { worker: 0 })
+        ));
+        drop(t);
     }
 
     #[test]

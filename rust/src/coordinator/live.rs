@@ -28,11 +28,25 @@
 //! A seeded run therefore produces bit-identical [`RunHistory`] over any
 //! transport and any machine, which is what the `socket-smoke` CI job
 //! and `live_tcp_bit_identical_to_in_process` assert.
+//!
+//! **Fault tolerance.** Workers are mortal: [`drive_resilient`] keeps
+//! the same contract when peers die and rejoin. The leader detects a
+//! dead peer (connection drop, or [`Liveness`] heartbeat expiry) and
+//! *ghosts* the slot — it computes the Done/MixAck the worker would have
+//! sent from its own copy of that worker's seeded batch source, with the
+//! identical f32 arithmetic — so the surviving neighbours proceed under
+//! the paper's dynamic-backup-worker rule and the recorded history never
+//! notices. A rejoining worker re-claims its slot ([`Msg::Rejoin`]) and
+//! is answered with [`Msg::StateSync`] (authoritative parameters plus
+//! the draw count that realigns its source), re-entering at the current
+//! iteration. A [`ChaosPlan`] injects kill/recover events on the virtual
+//! clock, mirroring the DES `FaultPlan` kinds, which is what the
+//! `reconnect-smoke` CI job and the `live_tcp_worker_*` tests drive.
 
 use std::time::{Duration, Instant};
 
 use crate::comms::transport::{ChannelTransport, Transport, TransportError, WorkerPort};
-use crate::comms::Msg;
+use crate::comms::{Liveness, Msg};
 use crate::consensus::ConsensusMatrix;
 use crate::engine::server::ComputeClient;
 use crate::engine::{AnyBatch, BatchSource};
@@ -43,6 +57,8 @@ use crate::straggler::StragglerModel;
 use crate::util::rng::Rng;
 
 use super::algorithm::{plan, Algorithm};
+use super::checkpoint::Checkpoint;
+use super::ckpt_manager::CkptManager;
 use super::dtur::Dtur;
 use super::sim::TrainConfig;
 
@@ -107,6 +123,16 @@ pub struct LiveOptions {
     /// How long the leader waits for any worker message before declaring
     /// the run wedged (previously hardcoded to 180 s).
     pub watchdog: Duration,
+    /// Heartbeat probe interval for liveness tracking; `Duration::ZERO`
+    /// (the default) disables probing — right for in-process transports,
+    /// whose peers cannot die silently. A peer that ignores
+    /// [`TIMEOUT_INTERVALS`](crate::comms::heartbeat::TIMEOUT_INTERVALS)
+    /// probes is severed and treated as down.
+    pub heartbeat: Duration,
+    /// How long a disconnected worker process keeps retrying its rejoin
+    /// before giving up. A worker-side knob, carried here so a scenario
+    /// configures both sides in one place.
+    pub rejoin_timeout: Duration,
 }
 
 impl Default for LiveOptions {
@@ -114,6 +140,8 @@ impl Default for LiveOptions {
         LiveOptions {
             time_scale: 1.0,
             watchdog: Duration::from_secs(180),
+            heartbeat: Duration::ZERO,
+            rejoin_timeout: Duration::from_secs(60),
         }
     }
 }
@@ -128,6 +156,11 @@ pub struct LiveOutcome {
     /// `Done{terminated}` answer (one entry per terminated worker per
     /// iteration; empty for algorithms that never terminate).
     pub term_ack_latencies: Vec<f64>,
+    /// Done stand-ins the leader computed for down workers (gradient
+    /// ghosts only, mix ghosts not counted; 0 in a fault-free run).
+    pub ghost_dones: usize,
+    /// Successful worker rejoins (StateSync answered).
+    pub rejoins: usize,
 }
 
 impl LiveOutcome {
@@ -271,14 +304,171 @@ fn recv_watchdogged(
     }
 }
 
+/// Fault schedule for the live driver, mirroring the DES `FaultPlan`
+/// event kinds over *virtual* time: at `t` a worker is killed (its
+/// connection severed, its slot held down) or allowed back. Events fire
+/// at iteration boundaries once the virtual clock passes them — the
+/// same discretisation the recorded history uses, so a chaos scenario
+/// replays identically on the simulator and the live cluster.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChaosPlan {
+    /// `(worker, virtual time)` kill events.
+    pub downs: Vec<(usize, f64)>,
+    /// `(worker, virtual time)` recovery events: the slot becomes
+    /// admissible again (the worker still has to rejoin; a rejoin that
+    /// arrived during the down-window is answered at this point).
+    pub ups: Vec<(usize, f64)>,
+}
+
+impl ChaosPlan {
+    pub fn is_empty(&self) -> bool {
+        self.downs.is_empty() && self.ups.is_empty()
+    }
+
+    /// The merged schedule `(time, worker, is_down)`, time-ordered with
+    /// downs before ups at equal times.
+    fn schedule(&self) -> Vec<(f64, usize, bool)> {
+        let mut ev: Vec<(f64, usize, bool)> = self
+            .downs
+            .iter()
+            .map(|&(j, t)| (t, j, true))
+            .chain(self.ups.iter().map(|&(j, t)| (t, j, false)))
+            .collect();
+        ev.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.2.cmp(&a.2)).then(a.1.cmp(&b.1)));
+        ev
+    }
+}
+
+/// What [`drive_resilient`] needs beyond the no-fault driver: one ghost
+/// batch source per worker, seeded identically to the real worker's, so
+/// the leader can stand in for a down worker bit-exactly — plus an
+/// optional chaos schedule. With no ghost sources a lost peer stays
+/// fatal (the pre-fault-tolerance behavior [`drive`] keeps).
+#[derive(Default)]
+pub struct LiveResilience {
+    pub ghost_sources: Vec<Box<dyn BatchSource>>,
+    pub chaos: ChaosPlan,
+}
+
+/// What the resilient receive loop hands the driver: a worker message,
+/// a peer-down verdict (connection dropped, codec-poisoned, or probe
+/// deadline blown — the caller decides whether that is fatal), or a
+/// rejoin claim forwarded by the transport's background acceptor.
+enum LiveEvent {
+    Msg(usize, Msg),
+    Down(usize),
+    Rejoin { worker: usize, draws: u64 },
+}
+
+/// One receive step with heartbeat upkeep: fire due probes, swallow
+/// heartbeat echoes (they are pure liveness signal), translate liveness
+/// expiry and connection loss into [`LiveEvent::Down`], and enforce the
+/// watchdog. In a non-resilient run with heartbeats disabled this
+/// reduces exactly to the old single `recv` park — no hot-path cost.
+fn recv_live_event(
+    transport: &mut dyn Transport,
+    liveness: &mut Liveness,
+    opts: &LiveOptions,
+    resilient: bool,
+    at: &str,
+) -> Result<LiveEvent, LiveError> {
+    let deadline = Instant::now() + opts.watchdog;
+    loop {
+        let now = Instant::now();
+        for (j, seq) in liveness.due_probes(now) {
+            if transport.send(j, Msg::Heartbeat { seq }).is_err() {
+                liveness.mark_down(j);
+                return Ok(LiveEvent::Down(j));
+            }
+        }
+        if let Some(&j) = liveness.expired(now).first() {
+            liveness.mark_down(j);
+            return Ok(LiveEvent::Down(j));
+        }
+        if now >= deadline {
+            return Err(LiveError::Watchdog {
+                secs: opts.watchdog.as_secs_f64(),
+                at: at.to_string(),
+            });
+        }
+        let mut slice = deadline - now;
+        if let Some(d) = liveness.next_deadline(now) {
+            slice = slice.min(d.max(Duration::from_millis(1)));
+        }
+        match transport.recv(slice) {
+            Ok((j, msg)) => {
+                liveness.touch(j, Instant::now());
+                match msg {
+                    Msg::Heartbeat { .. } => {} // echo: bookkeeping only
+                    Msg::Rejoin { worker, draws } => {
+                        return Ok(LiveEvent::Rejoin { worker: worker as usize, draws })
+                    }
+                    m => return Ok(LiveEvent::Msg(j, m)),
+                }
+            }
+            Err(TransportError::Timeout { .. }) => {} // probe/expiry recheck
+            Err(TransportError::PeerDisconnected { worker }) => {
+                liveness.mark_down(worker);
+                return Ok(LiveEvent::Down(worker));
+            }
+            Err(TransportError::Codec { worker, err }) if resilient => {
+                crate::util::log::log(
+                    crate::util::log::Level::Warn,
+                    "live",
+                    &format!("worker {worker} poisoned its connection ({err}); severing"),
+                );
+                liveness.mark_down(worker);
+                return Ok(LiveEvent::Down(worker));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Compute the Done a down worker would have sent, bit-exactly: fast-
+/// forward the ghost source to this iteration's batch (same seed, same
+/// draw count as the real worker), take the gradient at the slot's
+/// board value (the worker's post-mix w), and apply eq. (5) with the
+/// same f32 arithmetic the worker uses. Returns the training loss.
+fn ghost_done(
+    j: usize,
+    ku: u64,
+    eta: f32,
+    cfg: &TrainConfig,
+    compute: &ComputeClient,
+    ghost_sources: &mut [Box<dyn BatchSource>],
+    ghost_draws: &mut [u64],
+    board_j: &mut Vec<f32>,
+    grad: &mut [f32],
+) -> Result<f32, LiveError> {
+    let batch = loop {
+        let b = ghost_sources[j].next_train(cfg.batch_size);
+        ghost_draws[j] += 1;
+        if ghost_draws[j] >= ku {
+            break b;
+        }
+    };
+    let loss = match compute.grad_into(board_j, &batch, grad) {
+        Ok(l) => l,
+        Err(e) => {
+            crate::util::log::log(
+                crate::util::log::Level::Error,
+                "live",
+                &format!("ghost compute for worker {j} failed: {e}"),
+            );
+            return Err(LiveError::ComputeFailed { worker: j, k: ku });
+        }
+    };
+    let mut wt = board_j.clone();
+    crate::util::vecmath::axpy(&mut wt, -eta, grad);
+    *board_j = wt;
+    Ok(loss)
+}
+
 /// The leader side of the protocol, generic over the transport.
-///
-/// The recorded history is a pure function of the seed: straggler times
-/// are sampled virtually, the plan (participation, θ, duration) is
-/// computed *before* the iteration is dispatched, and workers only
-/// contribute deterministic floats (losses, parameter vectors). Real
-/// time decides nothing but `wall_seconds` and the termination-ack
-/// latencies.
+/// Equivalent to [`drive_resilient`] with no ghost sources and no
+/// chaos: any lost peer is a fatal
+/// [`TransportError::PeerDisconnected`].
 pub fn drive(
     transport: &mut dyn Transport,
     graph: &Graph,
@@ -289,6 +479,39 @@ pub fn drive(
     eval_batches: &[AnyBatch],
     initial: Vec<f32>,
     opts: &LiveOptions,
+) -> Result<LiveOutcome, LiveError> {
+    drive_resilient(
+        transport,
+        graph,
+        algo,
+        cfg,
+        straggler,
+        compute,
+        eval_batches,
+        initial,
+        opts,
+        &mut LiveResilience::default(),
+    )
+}
+
+/// [`drive`] with fault tolerance. When `res.ghost_sources` is
+/// populated (one per worker, seeded like the real ones) a down peer is
+/// no longer fatal: the leader ghosts the slot — recomputing its Done
+/// and mix updates locally, bit-exactly — until the worker rejoins and
+/// is resynchronised with [`Msg::StateSync`]. The recorded history is
+/// identical to the uninterrupted run. `res.chaos` additionally injects
+/// kill/recover events on the virtual clock.
+pub fn drive_resilient(
+    transport: &mut dyn Transport,
+    graph: &Graph,
+    algo: Algorithm,
+    cfg: &TrainConfig,
+    straggler: &StragglerModel,
+    compute: &ComputeClient,
+    eval_batches: &[AnyBatch],
+    initial: Vec<f32>,
+    opts: &LiveOptions,
+    res: &mut LiveResilience,
 ) -> Result<LiveOutcome, LiveError> {
     if !matches!(algo, Algorithm::CbDybw | Algorithm::CbFull) {
         return Err(LiveError::Unsupported(format!(
@@ -304,12 +527,38 @@ pub fn drive(
             straggler.n()
         )));
     }
+    let resilient = !res.ghost_sources.is_empty();
+    if resilient && res.ghost_sources.len() != n {
+        return Err(LiveError::Unsupported(format!(
+            "need one ghost source per worker ({} != {n})",
+            res.ghost_sources.len()
+        )));
+    }
+    if !resilient && !res.chaos.is_empty() {
+        return Err(LiveError::Unsupported(
+            "a chaos schedule needs ghost sources for degraded-mode continuation".to_string(),
+        ));
+    }
+    if res
+        .chaos
+        .downs
+        .iter()
+        .chain(res.chaos.ups.iter())
+        .any(|&(j, _)| j >= n)
+    {
+        return Err(LiveError::Unsupported(format!(
+            "chaos schedule names a worker outside 0..{n}"
+        )));
+    }
     let run_start = Instant::now();
 
     // Leader's view of the network: slot j holds worker j's latest
     // announced parameters (w̃_j after Done, w_j after MixAck). Plain
     // owned vectors — no shared-memory mutexes to poison.
     let mut board: Vec<Vec<f32>> = vec![initial; n];
+    // Mix results stage here: ghost mixes read the *pre-mix* board, so
+    // `board` must stay untouched until the whole phase has resolved.
+    let mut new_board: Vec<Vec<f32>> = vec![Vec::new(); n];
 
     let mut history = RunHistory::new(&algo.name(), "live", "synthetic", n);
     let mut dtur = algo.needs_dtur().then(|| Dtur::new(graph));
@@ -317,96 +566,270 @@ pub fn drive(
     let mut clock = 0.0f64;
     let mut term_ack_latencies: Vec<f64> = Vec::new();
 
+    // Membership. `live[j]`: connection believed usable. `excluded[j]`:
+    // a chaos down-window holds the slot down regardless of rejoins;
+    // rejoins that arrive meanwhile are `parked` and answered when the
+    // window lifts. `draws[j]`: batches worker j has consumed (== its
+    // iteration count); `ghost_draws[j]` tracks the leader's own copy of
+    // that worker's source so a ghost can fast-forward to the right
+    // batch.
+    let mut liveness = Liveness::new(n, opts.heartbeat, run_start);
+    let mut live = vec![true; n];
+    let mut excluded = vec![false; n];
+    let mut parked = vec![false; n];
+    let mut draws: Vec<u64> = vec![0; n];
+    let mut ghost_draws: Vec<u64> = vec![0; n];
+    let mut ghost_grad: Vec<f32> = vec![0.0; compute.param_count()];
+    let mut ghost_dones = 0usize;
+    let mut rejoins = 0usize;
+    let schedule = res.chaos.schedule();
+    let mut chaos_at = 0usize;
+
     history
         .evals
         .push(eval_board(&board, eval_batches, compute, 0, clock)?);
 
     for k in 1..=cfg.iters {
+        // Chaos events fire at iteration boundaries once the virtual
+        // clock passes them: the same discretisation the DES uses, so
+        // the schedule is transport- and wall-clock-independent.
+        while chaos_at < schedule.len() && schedule[chaos_at].0 <= clock {
+            let (_, cj, is_down) = schedule[chaos_at];
+            chaos_at += 1;
+            if is_down {
+                transport.sever(cj);
+                liveness.mark_down(cj);
+                live[cj] = false;
+                excluded[cj] = true;
+                parked[cj] = false;
+            } else {
+                excluded[cj] = false;
+                if parked[cj] {
+                    parked[cj] = false;
+                    let x = board[cj].clone();
+                    let sync = Msg::StateSync {
+                        draws: draws[cj],
+                        w: x.clone(),
+                        wtilde: x,
+                    };
+                    if transport.send(cj, sync).is_ok() {
+                        live[cj] = true;
+                        liveness.mark_up(cj, Instant::now());
+                        rejoins += 1;
+                    } else {
+                        transport.sever(cj);
+                    }
+                }
+            }
+        }
+
         // Virtual plan first: participation and timing are sealed before
         // any real message is sent, so the history cannot depend on
-        // scheduling or network jitter.
+        // scheduling, network jitter — or membership.
         let t = straggler.sample_iteration(&mut rng);
         let iter_plan = plan(algo, &t, dtur.as_mut());
         let ku = k as u64;
+        let eta = cfg.lr(k as usize) as f32;
 
         for j in 0..n {
-            transport.send(
+            if !live[j] {
+                continue;
+            }
+            if let Err(e) = transport.send(
                 j,
                 Msg::Start {
                     k: ku,
                     delay_s: t[j] * opts.time_scale,
                 },
-            )?;
+            ) {
+                if !resilient {
+                    return Err(e.into());
+                }
+                transport.sever(j);
+                liveness.mark_down(j);
+                live[j] = false;
+            }
         }
 
         // Collect every worker's Done. Once all planned participants
         // have reported, fire the real termination command at the
-        // stragglers still waiting out their delay.
+        // stragglers still waiting out their delay. Down workers are
+        // ghosted up front so the barrier still resolves.
         let mut done = vec![false; n];
         let mut losses = vec![0.0f32; n];
         let mut active_pending = iter_plan.active_count();
         let mut fired = iter_plan.active.iter().all(|&a| a); // all active: nothing to cut
         let mut fired_at: Option<Instant> = None;
         let mut pending = n;
-        while pending > 0 {
-            let (j, msg) = recv_watchdogged(transport, opts, "Done")?;
-            match msg {
-                Msg::Done {
-                    k: mk,
-                    loss,
-                    terminated,
-                    failed,
-                    wtilde,
-                } => {
-                    if mk != ku || done[j] {
-                        return Err(LiveError::Protocol {
-                            worker: j,
-                            detail: format!("Done for iteration {mk} while collecting {ku}"),
-                        });
-                    }
-                    if failed {
-                        return Err(LiveError::ComputeFailed { worker: j, k: ku });
-                    }
-                    if wtilde.len() != board[j].len() {
-                        return Err(LiveError::Protocol {
-                            worker: j,
-                            detail: format!(
-                                "Done carried {} params, expected {}",
-                                wtilde.len(),
-                                board[j].len()
-                            ),
-                        });
-                    }
-                    board[j] = wtilde;
-                    losses[j] = loss;
-                    done[j] = true;
+
+        // Stand in for a down worker's Done. A terminated straggler
+        // keeps its local update, so the ghost Done is the same whether
+        // the round would have cut it off or not.
+        macro_rules! ghost_done_for {
+            ($gj:expr) => {{
+                let gj = $gj;
+                if !done[gj] {
+                    losses[gj] = ghost_done(
+                        gj,
+                        ku,
+                        eta,
+                        cfg,
+                        compute,
+                        &mut res.ghost_sources,
+                        &mut ghost_draws,
+                        &mut board[gj],
+                        &mut ghost_grad,
+                    )?;
+                    done[gj] = true;
                     pending -= 1;
-                    if iter_plan.active[j] {
+                    if iter_plan.active[gj] {
                         active_pending -= 1;
                     }
-                    if terminated {
-                        // shutdown-ack latency: command fired -> this ack
-                        if let Some(t0) = fired_at {
-                            term_ack_latencies.push(t0.elapsed().as_secs_f64());
-                        }
-                    }
-                    if !fired && active_pending == 0 {
-                        fired = true;
-                        let waiting: Vec<usize> = (0..n).filter(|&i| !done[i]).collect();
-                        if !waiting.is_empty() {
-                            fired_at = Some(Instant::now());
-                            for i in waiting {
-                                transport.send(i, Msg::Terminate { k: ku })?;
+                    draws[gj] = ku;
+                    ghost_dones += 1;
+                }
+            }};
+        }
+        macro_rules! fire_check {
+            () => {
+                if !fired && active_pending == 0 {
+                    fired = true;
+                    let waiting: Vec<usize> = (0..n).filter(|&i| !done[i]).collect();
+                    if !waiting.is_empty() {
+                        fired_at = Some(Instant::now());
+                        for i in waiting {
+                            if let Err(e) = transport.send(i, Msg::Terminate { k: ku }) {
+                                if !resilient {
+                                    return Err(e.into());
+                                }
+                                transport.sever(i);
+                                liveness.mark_down(i);
+                                live[i] = false;
+                                ghost_done_for!(i);
                             }
                         }
                     }
                 }
-                Msg::Pong { .. } => {} // stale measurement reply
-                other => {
-                    return Err(LiveError::Protocol {
-                        worker: j,
-                        detail: format!("unexpected {} while collecting Done", other.name()),
-                    })
+            };
+        }
+
+        for j in 0..n {
+            if !live[j] {
+                ghost_done_for!(j);
+            }
+        }
+        fire_check!();
+
+        while pending > 0 {
+            match recv_live_event(transport, &mut liveness, opts, resilient, "Done")? {
+                LiveEvent::Msg(j, msg) => match msg {
+                    Msg::Done {
+                        k: mk,
+                        loss,
+                        terminated,
+                        failed,
+                        wtilde,
+                    } => {
+                        if mk != ku || done[j] {
+                            return Err(LiveError::Protocol {
+                                worker: j,
+                                detail: format!("Done for iteration {mk} while collecting {ku}"),
+                            });
+                        }
+                        if failed {
+                            return Err(LiveError::ComputeFailed { worker: j, k: ku });
+                        }
+                        if wtilde.len() != board[j].len() {
+                            return Err(LiveError::Protocol {
+                                worker: j,
+                                detail: format!(
+                                    "Done carried {} params, expected {}",
+                                    wtilde.len(),
+                                    board[j].len()
+                                ),
+                            });
+                        }
+                        board[j] = wtilde;
+                        losses[j] = loss;
+                        done[j] = true;
+                        pending -= 1;
+                        draws[j] = ku;
+                        if iter_plan.active[j] {
+                            active_pending -= 1;
+                        }
+                        if terminated {
+                            // shutdown-ack latency: command fired -> this ack
+                            if let Some(t0) = fired_at {
+                                term_ack_latencies.push(t0.elapsed().as_secs_f64());
+                            }
+                        }
+                        fire_check!();
+                    }
+                    Msg::Pong { .. } => {} // stale measurement reply
+                    other => {
+                        return Err(LiveError::Protocol {
+                            worker: j,
+                            detail: format!("unexpected {} while collecting Done", other.name()),
+                        })
+                    }
+                },
+                LiveEvent::Down(j) => {
+                    if !resilient {
+                        return Err(TransportError::PeerDisconnected { worker: j }.into());
+                    }
+                    transport.sever(j);
+                    parked[j] = false;
+                    if live[j] {
+                        live[j] = false;
+                        ghost_done_for!(j);
+                        fire_check!();
+                    }
+                }
+                LiveEvent::Rejoin { worker: j, draws: wdraws } => {
+                    if !resilient {
+                        return Err(LiveError::Protocol {
+                            worker: j,
+                            detail: "rejoin without ghost sources configured".to_string(),
+                        });
+                    }
+                    if j >= n {
+                        return Err(LiveError::Protocol {
+                            worker: j,
+                            detail: format!("rejoin for unknown slot {j}"),
+                        });
+                    }
+                    if wdraws > draws[j] {
+                        return Err(LiveError::Protocol {
+                            worker: j,
+                            detail: format!(
+                                "rejoin claims {wdraws} draws but the leader recorded {}",
+                                draws[j]
+                            ),
+                        });
+                    }
+                    if excluded[j] {
+                        parked[j] = true;
+                    } else {
+                        // The fresh connection supersedes whatever was
+                        // there; finish the slot's round as a ghost, then
+                        // hand the worker the authoritative state.
+                        live[j] = false;
+                        ghost_done_for!(j);
+                        fire_check!();
+                        let x = board[j].clone();
+                        let sync = Msg::StateSync {
+                            draws: draws[j],
+                            w: x.clone(),
+                            wtilde: x,
+                        };
+                        if transport.send(j, sync).is_ok() {
+                            live[j] = true;
+                            liveness.mark_up(j, Instant::now());
+                            rejoins += 1;
+                        } else {
+                            transport.sever(j);
+                        }
+                    }
                 }
             }
         }
@@ -414,8 +837,38 @@ pub fn drive(
         // Mixing: each participant gets its Metropolis row plus the
         // neighbour parameters in row order (the order fixes the f32
         // accumulation, keeping the result transport-independent).
+        // Results stage into `new_board`: ghost mixes must read the
+        // pre-mix board, so it may not change until the phase resolves.
         let p = ConsensusMatrix::metropolis(graph, &iter_plan.active);
+        let mut acked = vec![false; n];
+        let mut pending = n;
+
+        // Stand in for a down worker's MixAck: eq. (6) with the same
+        // row-order f32 accumulation the worker uses.
+        macro_rules! ghost_mix_for {
+            ($gj:expr) => {{
+                let gj = $gj;
+                if !acked[gj] {
+                    new_board[gj] = if iter_plan.active[gj] {
+                        let mut buf = vec![0.0f32; board[gj].len()];
+                        for &(i, wt) in p.row(gj) {
+                            crate::util::vecmath::axpy(&mut buf, wt as f32, &board[i]);
+                        }
+                        buf
+                    } else {
+                        board[gj].clone()
+                    };
+                    acked[gj] = true;
+                    pending -= 1;
+                }
+            }};
+        }
+
         for j in 0..n {
+            if !live[j] {
+                ghost_mix_for!(j);
+                continue;
+            }
             let msg = if iter_plan.active[j] {
                 let row = p.row(j);
                 Msg::Mix {
@@ -432,35 +885,98 @@ pub fn drive(
                     peers: Vec::new(),
                 }
             };
-            transport.send(j, msg)?;
+            if let Err(e) = transport.send(j, msg) {
+                if !resilient {
+                    return Err(e.into());
+                }
+                transport.sever(j);
+                liveness.mark_down(j);
+                live[j] = false;
+                ghost_mix_for!(j);
+            }
         }
-        let mut acked = vec![false; n];
-        let mut pending = n;
         while pending > 0 {
-            let (j, msg) = recv_watchdogged(transport, opts, "MixAck")?;
-            match msg {
-                Msg::MixAck { k: mk, w } => {
-                    if mk != ku || acked[j] || w.len() != board[j].len() {
+            match recv_live_event(transport, &mut liveness, opts, resilient, "MixAck")? {
+                LiveEvent::Msg(j, msg) => match msg {
+                    Msg::MixAck { k: mk, w } => {
+                        if mk != ku || acked[j] || w.len() != board[j].len() {
+                            return Err(LiveError::Protocol {
+                                worker: j,
+                                detail: format!(
+                                    "bad MixAck (iteration {mk}/{ku}, {} params)",
+                                    w.len()
+                                ),
+                            });
+                        }
+                        new_board[j] = w;
+                        acked[j] = true;
+                        pending -= 1;
+                    }
+                    Msg::Pong { .. } => {}
+                    other => {
+                        return Err(LiveError::Protocol {
+                            worker: j,
+                            detail: format!("unexpected {} while collecting MixAck", other.name()),
+                        })
+                    }
+                },
+                LiveEvent::Down(j) => {
+                    if !resilient {
+                        return Err(TransportError::PeerDisconnected { worker: j }.into());
+                    }
+                    transport.sever(j);
+                    parked[j] = false;
+                    if live[j] {
+                        live[j] = false;
+                        ghost_mix_for!(j);
+                    }
+                }
+                LiveEvent::Rejoin { worker: j, draws: wdraws } => {
+                    if !resilient {
+                        return Err(LiveError::Protocol {
+                            worker: j,
+                            detail: "rejoin without ghost sources configured".to_string(),
+                        });
+                    }
+                    if j >= n {
+                        return Err(LiveError::Protocol {
+                            worker: j,
+                            detail: format!("rejoin for unknown slot {j}"),
+                        });
+                    }
+                    if wdraws > draws[j] {
                         return Err(LiveError::Protocol {
                             worker: j,
                             detail: format!(
-                                "bad MixAck (iteration {mk}/{ku}, {} params)",
-                                w.len()
+                                "rejoin claims {wdraws} draws but the leader recorded {}",
+                                draws[j]
                             ),
                         });
                     }
-                    board[j] = w;
-                    acked[j] = true;
-                    pending -= 1;
-                }
-                Msg::Pong { .. } => {}
-                other => {
-                    return Err(LiveError::Protocol {
-                        worker: j,
-                        detail: format!("unexpected {} while collecting MixAck", other.name()),
-                    })
+                    if excluded[j] {
+                        parked[j] = true;
+                    } else {
+                        live[j] = false;
+                        ghost_mix_for!(j);
+                        let x = new_board[j].clone();
+                        let sync = Msg::StateSync {
+                            draws: draws[j],
+                            w: x.clone(),
+                            wtilde: x,
+                        };
+                        if transport.send(j, sync).is_ok() {
+                            live[j] = true;
+                            liveness.mark_up(j, Instant::now());
+                            rejoins += 1;
+                        } else {
+                            transport.sever(j);
+                        }
+                    }
                 }
             }
+        }
+        for j in 0..n {
+            board[j] = std::mem::take(&mut new_board[j]);
         }
 
         clock += iter_plan.duration;
@@ -488,38 +1004,151 @@ pub fn drive(
         history,
         wall_seconds: run_start.elapsed().as_secs_f64(),
         term_ack_latencies,
+        ghost_dones,
+        rejoins,
     })
+}
+
+/// The training state a worker carries across connections: rejoining
+/// after a leader loss means handing this back to [`worker_loop_opts`]
+/// after [`apply_state_sync`] reconciles it with the leader's view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerState {
+    /// Post-mix parameters (the point gradients are taken at).
+    pub w: Vec<f32>,
+    /// Post-local-update parameters (eq. (5) result).
+    pub wtilde: Vec<f32>,
+    /// Batches consumed from the seeded source so far.
+    pub draws: u64,
+}
+
+impl WorkerState {
+    pub fn fresh(initial: Vec<f32>) -> WorkerState {
+        WorkerState {
+            wtilde: initial.clone(),
+            w: initial,
+            draws: 0,
+        }
+    }
+}
+
+/// Why [`worker_loop_opts`] returned: a clean shutdown command, or the
+/// leader connection died — in which case the worker gets its state
+/// back to attempt a rejoin
+/// ([`rejoin_worker`](crate::comms::transport::rejoin_worker) +
+/// [`apply_state_sync`]).
+#[derive(Debug)]
+pub enum WorkerExit {
+    Stopped,
+    LeaderLost(WorkerState),
+}
+
+/// Worker-side knobs beyond the protocol itself.
+#[derive(Default)]
+pub struct WorkerOpts {
+    /// Checkpoint sink; `None` disables checkpointing.
+    pub ckpt: Option<CkptManager>,
+    /// Save every this-many iterations (0 disables).
+    pub ckpt_every: usize,
+    /// Model tag stamped into saved checkpoints.
+    pub model: String,
+}
+
+/// Reconcile a rejoining worker's state with the leader's
+/// [`Msg::StateSync`]: fast-forward the seeded batch source to the
+/// leader-recorded draw count (the draws the leader's ghost made on the
+/// worker's behalf) and adopt the authoritative parameters.
+pub fn apply_state_sync(
+    state: &mut WorkerState,
+    source: &mut dyn BatchSource,
+    batch_size: usize,
+    sync: &Msg,
+    j: usize,
+) -> Result<(), LiveError> {
+    let Msg::StateSync { draws, w, wtilde } = sync else {
+        return Err(LiveError::Protocol {
+            worker: j,
+            detail: format!("expected StateSync after rejoin, got {}", sync.name()),
+        });
+    };
+    if *draws < state.draws {
+        return Err(LiveError::Protocol {
+            worker: j,
+            detail: format!("StateSync rewinds draws ({} -> {draws})", state.draws),
+        });
+    }
+    while state.draws < *draws {
+        let _ = source.next_train(batch_size);
+        state.draws += 1;
+    }
+    state.w = w.clone();
+    state.wtilde = wtilde.clone();
+    Ok(())
 }
 
 /// The worker side of the protocol: runs against a [`WorkerPort`] from
 /// either transport (in a spawned thread, or as the whole body of a
-/// `dybw worker` process).
+/// `dybw worker` process). Leader loss is a clean exit here; use
+/// [`worker_loop_opts`] to observe it and rejoin.
 pub fn worker_loop(
     j: usize,
     cfg: TrainConfig,
     compute: ComputeClient,
     mut source: Box<dyn BatchSource>,
     initial: Vec<f32>,
-    mut port: WorkerPort,
+    port: WorkerPort,
 ) -> Result<(), LiveError> {
-    let mut w = initial;
-    let mut wtilde = w.clone();
+    worker_loop_opts(
+        j,
+        &cfg,
+        &compute,
+        source.as_mut(),
+        WorkerState::fresh(initial),
+        port,
+        &mut WorkerOpts::default(),
+    )
+    .map(|_| ())
+}
+
+/// [`worker_loop`] with explicit state and [`WorkerOpts`], returning a
+/// typed [`WorkerExit`] so the caller can distinguish "leader said
+/// stop" from "leader vanished" and drive the rejoin loop.
+pub fn worker_loop_opts(
+    j: usize,
+    cfg: &TrainConfig,
+    compute: &ComputeClient,
+    source: &mut dyn BatchSource,
+    state: WorkerState,
+    mut port: WorkerPort,
+    wopts: &mut WorkerOpts,
+) -> Result<WorkerExit, LiveError> {
+    let WorkerState {
+        mut w,
+        mut wtilde,
+        mut draws,
+    } = state;
     // Leased buffers: the gradient is written in place by the engine pool
     // every iteration, the mix accumulator swaps with `w` every round —
     // neither is ever reallocated.
     let mut grad: Vec<f32> = vec![0.0; compute.param_count()];
     let mut mix_buf: Vec<f32> = vec![0.0; w.len()];
+    macro_rules! leader_lost {
+        () => {
+            return Ok(WorkerExit::LeaderLost(WorkerState { w, wtilde, draws }))
+        };
+    }
     loop {
         let cmd = match port.recv() {
             Ok(m) => m,
-            Err(TransportError::Disconnected) => return Ok(()),
+            Err(TransportError::Disconnected) => leader_lost!(),
             Err(e) => return Err(e.into()),
         };
         match cmd {
-            Msg::Stop => return Ok(()),
+            Msg::Stop => return Ok(WorkerExit::Stopped),
             Msg::Start { k, delay_s } => {
                 let start = Instant::now();
                 let batch = source.next_train(cfg.batch_size);
+                draws += 1;
                 let loss = match compute.grad_into(&w, &batch, &mut grad) {
                     Ok(r) => r,
                     Err(e) => {
@@ -535,7 +1164,7 @@ pub fn worker_loop(
                             failed: true,
                             wtilde: Vec::new(),
                         });
-                        return Ok(());
+                        return Ok(WorkerExit::Stopped);
                     }
                 };
                 // Straggler injection: wait out the remaining virtual
@@ -558,8 +1187,15 @@ pub fn worker_loop(
                             }
                             // stale command from an earlier iteration
                         }
+                        Ok(Some(Msg::Heartbeat { seq })) => {
+                            // echo immediately, never stash: a straggler
+                            // sleeping out its delay must not look dead
+                            if port.send(Msg::Heartbeat { seq }).is_err() {
+                                leader_lost!();
+                            }
+                        }
                         Ok(Some(other)) => stash.push(other),
-                        Err(TransportError::Disconnected) => return Ok(()),
+                        Err(TransportError::Disconnected) => leader_lost!(),
                         Err(e) => return Err(e.into()),
                     }
                 }
@@ -580,7 +1216,7 @@ pub fn worker_loop(
                     })
                     .is_err()
                 {
-                    return Ok(());
+                    leader_lost!();
                 }
             }
             Msg::Mix {
@@ -617,12 +1253,69 @@ pub fn worker_loop(
                     w.copy_from_slice(&wtilde);
                 }
                 if port.send(Msg::MixAck { k, w: w.clone() }).is_err() {
-                    return Ok(());
+                    leader_lost!();
                 }
+                if wopts.ckpt_every > 0 && (k as usize) % wopts.ckpt_every == 0 {
+                    if let Some(mgr) = &wopts.ckpt {
+                        let ckpt = Checkpoint {
+                            iteration: k as usize,
+                            clock: 0.0,
+                            model: wopts.model.clone(),
+                            params: vec![w.clone(), wtilde.clone()],
+                            history: RunHistory::default(),
+                        };
+                        if let Err(e) = mgr.save(&ckpt) {
+                            crate::util::log::log(
+                                crate::util::log::Level::Warn,
+                                "live",
+                                &format!("worker {j} checkpoint at k={k} failed: {e}"),
+                            );
+                        }
+                    }
+                }
+            }
+            Msg::Heartbeat { seq } => {
+                // liveness probe: echo it straight back
+                if port.send(Msg::Heartbeat { seq }).is_err() {
+                    leader_lost!();
+                }
+            }
+            Msg::StateSync {
+                draws: synced,
+                w: sw,
+                wtilde: swt,
+            } => {
+                // The leader answers a mid-run (re)claim with its view of
+                // this slot before anything else: a restarted process that
+                // re-ran the full handshake lands here. Same reconciliation
+                // as [`apply_state_sync`], on the loop's own state.
+                if synced < draws {
+                    return Err(LiveError::Protocol {
+                        worker: j,
+                        detail: format!("StateSync rewinds draws ({draws} -> {synced})"),
+                    });
+                }
+                while draws < synced {
+                    let _ = source.next_train(cfg.batch_size);
+                    draws += 1;
+                }
+                if sw.len() != w.len() || swt.len() != w.len() {
+                    return Err(LiveError::Protocol {
+                        worker: j,
+                        detail: format!(
+                            "StateSync carried {}/{} params, expected {}",
+                            sw.len(),
+                            swt.len(),
+                            w.len()
+                        ),
+                    });
+                }
+                w = sw;
+                wtilde = swt;
             }
             Msg::Ping { nonce } => {
                 if port.send(Msg::Pong { nonce }).is_err() {
-                    return Ok(());
+                    leader_lost!();
                 }
             }
             // a termination command that raced the Done we already sent
@@ -718,7 +1411,7 @@ fn eval_board(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comms::transport::{connect_worker, TcpTransport};
+    use crate::comms::transport::{connect_worker, rejoin_worker, TcpTransport};
     use crate::coordinator::setup::Setup;
     use crate::data::batch::BatchSampler;
     use crate::data::partition::{split, Partition};
@@ -1038,6 +1731,7 @@ mod tests {
         let opts = LiveOptions {
             time_scale: 1.0,
             watchdog: Duration::from_secs(watchdog_secs()),
+            ..Default::default()
         };
         run_live_opts(
             g,
@@ -1205,6 +1899,352 @@ mod tests {
         assert!(
             matches!(err, LiveError::ComputeFailed { .. }),
             "expected the typed variant, got: {err:?}"
+        );
+    }
+
+    #[test]
+    fn chaos_schedule_merges_time_ordered_downs_first() {
+        assert!(ChaosPlan::default().is_empty());
+        let plan = ChaosPlan {
+            downs: vec![(1, 5.0), (0, 1.0)],
+            ups: vec![(1, 9.0), (0, 1.0)],
+        };
+        assert!(!plan.is_empty());
+        assert_eq!(
+            plan.schedule(),
+            vec![
+                (1.0, 0, true),
+                (1.0, 0, false),
+                (5.0, 1, true),
+                (9.0, 1, false)
+            ]
+        );
+    }
+
+    #[test]
+    fn chaos_without_ghost_sources_is_rejected() {
+        let p = test_parts(2);
+        let (mut transport, _ports) = ChannelTransport::pair(4);
+        let mut res = LiveResilience {
+            ghost_sources: Vec::new(),
+            chaos: ChaosPlan {
+                downs: vec![(0, 0.0)],
+                ups: Vec::new(),
+            },
+        };
+        let err = drive_resilient(
+            &mut transport,
+            &p.g,
+            Algorithm::CbDybw,
+            &p.cfg,
+            &p.straggler,
+            &p.client,
+            &p.eval,
+            p.init.clone(),
+            &LiveOptions::default(),
+            &mut res,
+        )
+        .unwrap_err();
+        assert!(matches!(err, LiveError::Unsupported(_)), "{err:?}");
+    }
+
+    /// Heartbeats are pure liveness signal: enabling them must not move
+    /// a single bit of the recorded history, and nobody gets ghosted.
+    #[test]
+    fn live_heartbeats_do_not_perturb_history() {
+        let reference = run(Algorithm::CbDybw, 4);
+        let p = test_parts(4);
+        let opts = LiveOptions {
+            heartbeat: Duration::from_millis(100),
+            ..Default::default()
+        };
+        let out = run_live_opts(
+            p.g,
+            Algorithm::CbDybw,
+            p.cfg,
+            p.straggler,
+            p.client,
+            p.sources,
+            p.eval,
+            p.init,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(out.ghost_dones, 0, "heartbeats alone must not ghost anyone");
+        assert_eq!(out.rejoins, 0);
+        assert!(out.history.bits_eq(&reference.history));
+    }
+
+    /// A straggler sleeping out its delay still answers probes — and the
+    /// echo does not eat its termination command.
+    #[test]
+    fn worker_echoes_heartbeats_mid_straggler_wait() {
+        let p = test_parts(1);
+        let (mut transport, ports) = ChannelTransport::pair(4);
+        let handles = spawn_workers(&p.cfg, &p.client, p.sources, &p.init, ports).unwrap();
+        transport
+            .send(0, Msg::Start { k: 1, delay_s: 30.0 })
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        transport.send(0, Msg::Heartbeat { seq: 7 }).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let wait = deadline.saturating_duration_since(Instant::now());
+            let (j, msg) = transport.recv(wait).unwrap();
+            if let Msg::Heartbeat { seq } = msg {
+                assert_eq!((j, seq), (0, 7));
+                break;
+            }
+        }
+        transport.send(0, Msg::Terminate { k: 1 }).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let wait = deadline.saturating_duration_since(Instant::now());
+            let (j, msg) = transport.recv(wait).unwrap();
+            if let Msg::Done { k, terminated, .. } = msg {
+                assert_eq!((j, k, terminated), (0, 1, true));
+                break;
+            }
+        }
+        for j in 0..4 {
+            transport.send(j, Msg::Stop).unwrap();
+        }
+        drop(transport);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// The worker-side checkpoint hook: milestones land after the mix,
+    /// carry the post-mix parameters, and honour `ckpt_every`.
+    #[test]
+    fn worker_checkpoints_at_milestones() {
+        let dir = std::env::temp_dir().join("dybw_live_worker_ckpt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = test_parts(1);
+        let (mut transport, mut ports) = ChannelTransport::pair(1);
+        let port = ports.pop().unwrap();
+        let mut source = p.sources.into_iter().next().unwrap();
+        let cfg = p.cfg.clone();
+        let client = p.client.clone();
+        let init = p.init.clone();
+        let mgr = CkptManager::new(&dir, 0).unwrap();
+        let mgr_probe = mgr.clone();
+        let h = std::thread::spawn(move || {
+            let mut wopts = WorkerOpts {
+                ckpt: Some(mgr),
+                ckpt_every: 2,
+                model: "lrm".to_string(),
+            };
+            worker_loop_opts(
+                0,
+                &cfg,
+                &client,
+                source.as_mut(),
+                WorkerState::fresh(init),
+                port,
+                &mut wopts,
+            )
+            .unwrap()
+        });
+        let mut last_w: Vec<f32> = Vec::new();
+        for k in 1..=4u64 {
+            transport.send(0, Msg::Start { k, delay_s: 0.0 }).unwrap();
+            loop {
+                let (_, msg) = transport.recv(Duration::from_secs(20)).unwrap();
+                if let Msg::Done { k: mk, failed, .. } = msg {
+                    assert_eq!(mk, k);
+                    assert!(!failed);
+                    break;
+                }
+            }
+            transport
+                .send(
+                    0,
+                    Msg::Mix {
+                        k,
+                        active: false,
+                        row: Vec::new(),
+                        peers: Vec::new(),
+                    },
+                )
+                .unwrap();
+            loop {
+                let (_, msg) = transport.recv(Duration::from_secs(20)).unwrap();
+                if let Msg::MixAck { k: mk, w } = msg {
+                    assert_eq!(mk, k);
+                    last_w = w;
+                    break;
+                }
+            }
+        }
+        transport.send(0, Msg::Stop).unwrap();
+        assert!(matches!(h.join().unwrap(), WorkerExit::Stopped));
+        let ids: Vec<usize> = mgr_probe
+            .list()
+            .unwrap()
+            .into_iter()
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(ids, vec![2, 4]);
+        let (ckpt, _) = mgr_probe.latest().unwrap().unwrap();
+        assert_eq!(ckpt.iteration, 4);
+        assert_eq!(ckpt.model, "lrm");
+        assert_eq!(ckpt.params[0], last_w);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Degraded-mode continuation: kill one TCP worker at t=0 and never
+    /// let it back. The leader ghosts the slot every iteration and the
+    /// history stays bit-identical to the uninterrupted run.
+    #[test]
+    fn live_tcp_worker_death_degrades_bit_identical() {
+        let reference = run(Algorithm::CbDybw, 5);
+
+        let p = test_parts(5);
+        let ghosts = test_parts(5).sources;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(20);
+        let mut joins = Vec::new();
+        for (j, source) in p.sources.into_iter().enumerate() {
+            let addr = addr.clone();
+            let cfg = p.cfg.clone();
+            let client = p.client.clone();
+            let init = p.init.clone();
+            joins.push(std::thread::spawn(move || {
+                let (id, _setup, port) = connect_worker(&addr, Some(j as u32), timeout).unwrap();
+                worker_loop(id as usize, cfg, client, source, init, port).unwrap();
+            }));
+        }
+        let mut transport = TcpTransport::accept(&listener, 4, "", timeout).unwrap();
+        let opts = LiveOptions::default();
+        let mut res = LiveResilience {
+            ghost_sources: ghosts,
+            chaos: ChaosPlan {
+                downs: vec![(3, 0.0)],
+                ups: Vec::new(),
+            },
+        };
+        let out = drive_resilient(
+            &mut transport,
+            &p.g,
+            Algorithm::CbDybw,
+            &p.cfg,
+            &p.straggler,
+            &p.client,
+            &p.eval,
+            p.init.clone(),
+            &opts,
+            &mut res,
+        )
+        .unwrap();
+        drop(transport);
+        for h in joins {
+            h.join().unwrap();
+        }
+        assert_eq!(out.ghost_dones, 5, "worker 3 ghosted every iteration");
+        assert_eq!(out.rejoins, 0);
+        assert!(
+            out.history.bits_eq(&reference.history),
+            "degraded run diverged from the uninterrupted run"
+        );
+    }
+
+    /// The full failure/rejoin cycle over TCP: worker 3 is killed at
+    /// t=0, allowed back at t=0.01, rejoins via `rejoin_worker` +
+    /// `apply_state_sync`, and finishes the run — with the recorded
+    /// history bit-identical to the uninterrupted reference.
+    #[test]
+    fn live_tcp_worker_rejoins_bit_identical() {
+        let reference = run(Algorithm::CbDybw, 5);
+
+        let p = test_parts(5);
+        let ghosts = test_parts(5).sources;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let timeout = Duration::from_secs(20);
+        let mut joins = Vec::new();
+        for (j, mut source) in p.sources.into_iter().enumerate() {
+            let addr = addr.clone();
+            let cfg = p.cfg.clone();
+            let client = p.client.clone();
+            let init = p.init.clone();
+            joins.push(std::thread::spawn(move || {
+                let (id, _setup, mut port) =
+                    connect_worker(&addr, Some(j as u32), timeout).unwrap();
+                let jd = id as usize;
+                let mut state = WorkerState::fresh(init);
+                let mut wopts = WorkerOpts::default();
+                loop {
+                    match worker_loop_opts(
+                        jd,
+                        &cfg,
+                        &client,
+                        source.as_mut(),
+                        state,
+                        port,
+                        &mut wopts,
+                    )
+                    .unwrap()
+                    {
+                        WorkerExit::Stopped => break,
+                        WorkerExit::LeaderLost(s) => {
+                            state = s;
+                            let Ok((sync, fresh)) =
+                                rejoin_worker(&addr, jd as u32, state.draws, timeout)
+                            else {
+                                break; // leader already gone: clean exit
+                            };
+                            apply_state_sync(
+                                &mut state,
+                                source.as_mut(),
+                                cfg.batch_size,
+                                &sync,
+                                jd,
+                            )
+                            .unwrap();
+                            port = fresh;
+                        }
+                    }
+                }
+            }));
+        }
+        let mut transport = TcpTransport::accept(&listener, 4, "", timeout).unwrap();
+        let opts = LiveOptions::default();
+        let mut res = LiveResilience {
+            ghost_sources: ghosts,
+            chaos: ChaosPlan {
+                downs: vec![(3, 0.0)],
+                ups: vec![(3, 0.01)],
+            },
+        };
+        let out = drive_resilient(
+            &mut transport,
+            &p.g,
+            Algorithm::CbDybw,
+            &p.cfg,
+            &p.straggler,
+            &p.client,
+            &p.eval,
+            p.init.clone(),
+            &opts,
+            &mut res,
+        )
+        .unwrap();
+        drop(transport);
+        for h in joins {
+            h.join().unwrap();
+        }
+        assert_eq!(out.rejoins, 1, "worker 3 rejoined exactly once");
+        assert!(
+            out.ghost_dones >= 1 && out.ghost_dones < 5,
+            "ghosted only while down, got {}",
+            out.ghost_dones
+        );
+        assert!(
+            out.history.bits_eq(&reference.history),
+            "failure/rejoin run diverged from the uninterrupted run"
         );
     }
 }

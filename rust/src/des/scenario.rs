@@ -151,6 +151,14 @@ pub struct Scenario {
     pub name: String,
     pub workers: usize,
     pub topology: Topology,
+    /// Live-driver liveness probe interval in seconds (0 = the driver's
+    /// default). The DES schedules faults at known virtual times and so
+    /// detects them instantly; this knob shapes the live mirror of the
+    /// scenario (`dybw live --chaos`), kept here so one file configures
+    /// both worlds.
+    pub heartbeat_secs: f64,
+    /// How long a disconnected live worker keeps retrying its rejoin.
+    pub rejoin_timeout_secs: f64,
     pub iters: usize,
     pub seed: u64,
     pub fidelity: Fidelity,
@@ -189,6 +197,8 @@ impl Default for Scenario {
             name: "ring-1k".into(),
             workers: 1000,
             topology: Topology::Ring,
+            heartbeat_secs: 0.0,
+            rejoin_timeout_secs: 60.0,
             iters: 30,
             seed: 2021,
             fidelity: Fidelity::Timing,
@@ -235,7 +245,8 @@ impl Scenario {
     /// ```text
     /// { "name": ..., "iters": ..., "seed": ..., "fidelity": ...,
     ///   "policies": [...],
-    ///   "cluster":  { "workers", "topology" },
+    ///   "cluster":  { "workers", "topology", "heartbeat_secs",
+    ///                 "rejoin_timeout_secs" },
     ///   "timing":   { "compute", "hetero", "transient_prob",
     ///                 "transient_factor", "diurnal_amp",
     ///                 "diurnal_period", "persistent", "trace_file" },
@@ -323,7 +334,11 @@ impl Scenario {
         apply_timing(&mut s, j)?;
         apply_links(&mut s, j, "link_base", "link_jitter")?;
         apply_training(&mut s, j)?;
-        if let Some(sec) = section(j, "cluster", &["workers", "topology"])? {
+        if let Some(sec) = section(
+            j,
+            "cluster",
+            &["workers", "topology", "heartbeat_secs", "rejoin_timeout_secs"],
+        )? {
             apply_cluster(&mut s, sec)?;
         }
         if let Some(sec) = section(
@@ -388,6 +403,14 @@ impl Scenario {
             "link_base must be >= 0"
         );
         anyhow::ensure!(
+            self.heartbeat_secs.is_finite() && self.heartbeat_secs >= 0.0,
+            "heartbeat_secs must be >= 0"
+        );
+        anyhow::ensure!(
+            self.rejoin_timeout_secs.is_finite() && self.rejoin_timeout_secs >= 0.0,
+            "rejoin_timeout_secs must be >= 0"
+        );
+        anyhow::ensure!(
             self.compute.nonnegative(),
             "compute dist can sample negative times: {}",
             self.compute.spec()
@@ -422,7 +445,9 @@ impl Scenario {
         let mut cluster = Json::obj();
         cluster
             .set("workers", self.workers.into())
-            .set("topology", self.topology.name().into());
+            .set("topology", self.topology.name().into())
+            .set("heartbeat_secs", self.heartbeat_secs.into())
+            .set("rejoin_timeout_secs", self.rejoin_timeout_secs.into());
 
         let mut timing = Json::obj();
         timing
@@ -820,6 +845,12 @@ fn apply_cluster(s: &mut Scenario, j: &Json) -> anyhow::Result<()> {
     if let Some(v) = field(j, "topology", Json::as_str, "a topology name")? {
         s.topology = Topology::parse(v)?;
     }
+    if let Some(v) = field(j, "heartbeat_secs", Json::as_f64, "a number")? {
+        s.heartbeat_secs = v;
+    }
+    if let Some(v) = field(j, "rejoin_timeout_secs", Json::as_f64, "a number")? {
+        s.rejoin_timeout_secs = v;
+    }
     Ok(())
 }
 
@@ -1041,6 +1072,8 @@ mod tests {
         s.persistent = vec![(3, 5.0)];
         s.slow_links = vec![(0, 1, 4.0)];
         s.link_jitter = None;
+        s.heartbeat_secs = 2.5;
+        s.rejoin_timeout_secs = 30.0;
         // above 2^53: must survive exactly (seeds travel as strings)
         s.seed = (1u64 << 60) + 3;
         let j = s.to_json();
@@ -1052,6 +1085,8 @@ mod tests {
         assert_eq!(s2.slow_links, s.slow_links);
         assert_eq!(s2.link_jitter, None);
         assert_eq!(s2.compute, s.compute);
+        assert_eq!(s2.heartbeat_secs, 2.5);
+        assert_eq!(s2.rejoin_timeout_secs, 30.0);
         assert_eq!(s2.seed, (1u64 << 60) + 3);
     }
 
@@ -1096,6 +1131,11 @@ mod tests {
             r#"{"cluster": {"wrokers": 6}}"#,
             r#"{"cluster": 5}"#,
             r#"{"cluster": {"topology": "racks:0"}}"#,
+            r#"{"cluster": {"heartbeat_secs": "fast"}}"#,
+            r#"{"cluster": {"heartbeat_secs": -1}}"#,
+            r#"{"cluster": {"rejoin_timeout_secs": -0.5}}"#,
+            // liveness knobs are cluster-section only, never flat
+            r#"{"heartbeat_secs": 2}"#,
             r#"{"links": {"link_base": 0.001}}"#,
             r#"{"links": {"base": -0.002}}"#,
             r#"{"timing": {"compute": "nope:1"}}"#,

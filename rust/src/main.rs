@@ -18,12 +18,13 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use dybw::comms::transport::{connect_worker, ChannelTransport, TcpTransport};
+use dybw::comms::transport::{connect_worker, rejoin_worker, ChannelTransport, TcpTransport};
 use dybw::comms::Transport;
-use dybw::coordinator::live::{self, LiveOptions};
+use dybw::coordinator::live::{self, LiveOptions, WorkerExit, WorkerOpts, WorkerState};
 use dybw::coordinator::setup::{Backend, DatasetProfile, Setup};
 use dybw::coordinator::Algorithm;
 use dybw::data::partition::Partition;
+use dybw::engine::BatchSource;
 use dybw::experiments;
 use dybw::graph::topology::{self, Topology};
 use dybw::metrics::export;
@@ -551,28 +552,88 @@ fn cmd_live(argv: &[String]) -> anyhow::Result<()> {
     .opt("addr-file", "", "write the bound listen address to this file (launch scripts)")
     .opt("time-scale", "1", "multiply injected straggler sleeps (0 = no real sleeping)")
     .opt("watchdog", "180", "seconds without protocol progress before the leader aborts")
+    .opt("heartbeat", "", "liveness probe interval in seconds (empty = 2 over TCP, off in-process)")
+    .opt("rejoin-timeout", "", "seconds a lost worker keeps retrying its rejoin (empty = 60)")
+    .opt("chaos", "", "DES scenario JSON whose faults section injects worker kills/recoveries (TCP only)")
     .opt("measure-links", "0", "Ping/Pong rounds before training; calibrates a DES LinkModel")
     .opt("out-dir", "results", "where to write CSV/JSON histories")
     .opt("prefix", "live", "history file name prefix");
     let a = parse_or_exit(&cmd, argv)?;
     let s = setup_from_args(&a)?;
+    let tcp = !a.get("listen").is_empty();
+    let n = s.workers;
+
+    // Fault injection + liveness knobs. Precedence for the durations:
+    // explicit flag > the --chaos scenario's cluster section > built-in
+    // defaults (2s heartbeat over TCP, disabled in-process, 60s rejoin).
+    let mut res = live::LiveResilience::default();
+    let mut scenario_hb = None;
+    let mut scenario_rj = None;
+    let chaos_path = a.get("chaos");
+    if !chaos_path.is_empty() {
+        anyhow::ensure!(tcp, "--chaos injects faults on the TCP transport; add --listen");
+        let sc = dybw::des::Scenario::load(&PathBuf::from(chaos_path))?;
+        anyhow::ensure!(
+            sc.workers == n,
+            "chaos scenario is for {} workers, this run has {n}",
+            sc.workers
+        );
+        let fp = sc.faults.compile(sc.topology, n)?;
+        anyhow::ensure!(
+            fp.link_downs.is_empty() && fp.link_ups.is_empty(),
+            "live chaos supports worker churn only — drop the faults.partitions section"
+        );
+        res.chaos.downs = fp.downs;
+        res.chaos.ups = fp.ups;
+        // A worker that is down from t = 0 still connects (the leader
+        // needs all n slots to start); model it as a kill at t = 0.
+        for j in fp.initially_down {
+            res.chaos.downs.push((j, 0.0));
+        }
+        if sc.heartbeat_secs > 0.0 {
+            scenario_hb = Some(Duration::from_secs_f64(sc.heartbeat_secs));
+        }
+        scenario_rj = Some(Duration::from_secs_f64(sc.rejoin_timeout_secs));
+    }
+    let secs_flag = |key: &str| -> anyhow::Result<Option<Duration>> {
+        match a.get(key) {
+            "" => Ok(None),
+            v => {
+                let secs: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--{key} expects seconds, got '{v}'"))?;
+                anyhow::ensure!(secs.is_finite() && secs >= 0.0, "--{key} must be >= 0");
+                Ok(Some(Duration::from_secs_f64(secs)))
+            }
+        }
+    };
     let opts = LiveOptions {
         time_scale: a.get_f64("time-scale")?,
         watchdog: Duration::from_secs(a.get_u64("watchdog")?),
+        heartbeat: secs_flag("heartbeat")?.or(scenario_hb).unwrap_or(if tcp {
+            Duration::from_secs(2)
+        } else {
+            Duration::ZERO
+        }),
+        rejoin_timeout: secs_flag("rejoin-timeout")?
+            .or(scenario_rj)
+            .unwrap_or(Duration::from_secs(60)),
     };
     let measure_rounds = a.get_usize("measure-links")?;
-    let n = s.workers;
     let mut parts = s.build_live()?;
-    let mode = if a.get("listen").is_empty() {
-        "in-process"
-    } else {
-        "tcp"
-    };
+    let mode = if tcp { "tcp" } else { "in-process" };
     let algo = s.algo.name();
     let lanes = parts.server.lanes();
     println!("# dybw live: {algo} / {} / {n} workers / {lanes} pool lanes / {mode}", s.model);
+    if !res.chaos.is_empty() {
+        println!(
+            "# chaos: {} kill / {} recovery events from {chaos_path}",
+            res.chaos.downs.len(),
+            res.chaos.ups.len()
+        );
+    }
 
-    let outcome = if a.get("listen").is_empty() {
+    let outcome = if !tcp {
         let (mut transport, ports) = ChannelTransport::pair(n);
         let sources = std::mem::take(&mut parts.sources);
         let handles =
@@ -610,7 +671,12 @@ fn cmd_live(argv: &[String]) -> anyhow::Result<()> {
         if measure_rounds > 0 {
             run_measure(&mut transport, measure_rounds, &opts, parts.cfg.seed)?;
         }
-        live::drive(
+        // The leader's own copies of the seeded per-worker sources go
+        // unused for dispatch over TCP (each worker rebuilds its own) —
+        // they become the ghost sources, so a dead worker's slot is
+        // computed locally, bit-exactly, until the worker rejoins.
+        res.ghost_sources = std::mem::take(&mut parts.sources);
+        live::drive_resilient(
             &mut transport,
             &parts.graph,
             s.algo,
@@ -620,6 +686,7 @@ fn cmd_live(argv: &[String]) -> anyhow::Result<()> {
             &parts.eval_batches,
             parts.init.clone(),
             &opts,
+            &mut res,
         )?
     };
 
@@ -629,6 +696,12 @@ fn cmd_live(argv: &[String]) -> anyhow::Result<()> {
     export::write_json(&outcome.history, &out_dir, prefix)?;
     print_history_summary(&outcome.history);
     println!("  wall-clock          : {:.1}s", outcome.wall_seconds);
+    if outcome.ghost_dones > 0 || outcome.rejoins > 0 {
+        println!(
+            "  degraded mode       : {} ghosted worker-iterations / {} rejoins",
+            outcome.ghost_dones, outcome.rejoins
+        );
+    }
     if let Some((min, med, max)) = outcome.term_ack_summary() {
         println!(
             "  term-ack latency    : min {:.1}ms / median {:.1}ms / max {:.1}ms",
@@ -667,6 +740,11 @@ fn cmd_worker(argv: &[String]) -> anyhow::Result<()> {
     .req("connect", "leader address, e.g. 127.0.0.1:4040")
     .opt("worker-id", "", "claim a specific worker slot (empty = any free slot)")
     .opt("retry-secs", "30", "keep retrying the initial connection for this long")
+    .opt("rejoin-secs", "0", "on leader loss, keep retrying a rejoin for this long (0 = exit)")
+    .opt("ckpt-dir", "", "checkpoint directory (worker-side state snapshots)")
+    .opt("ckpt-every", "0", "checkpoint every k iterations (needs --ckpt-dir)")
+    .opt("ckpt-retain", "3", "keep only the newest k checkpoints (0 = keep all)")
+    .flag("resume", "restore the latest checkpoint in --ckpt-dir (for relaunching into a live run)")
     .opt("threads", "0", "engine-pool lanes override (0 = keep the leader's setting)");
     let a = parse_or_exit(&cmd, argv)?;
     let worker_id = a.get("worker-id");
@@ -680,7 +758,7 @@ fn cmd_worker(argv: &[String]) -> anyhow::Result<()> {
     };
     let addr = a.get("connect");
     let timeout = Duration::from_secs(a.get_u64("retry-secs")?);
-    let (slot, setup_json, port) = connect_worker(addr, requested, timeout)?;
+    let (slot, setup_json, mut port) = connect_worker(addr, requested, timeout)?;
     anyhow::ensure!(
         !setup_json.trim().is_empty(),
         "leader sent an empty setup — is it a `dybw live --listen` process?"
@@ -701,7 +779,7 @@ fn cmd_worker(argv: &[String]) -> anyhow::Result<()> {
         "leader assigned slot {id}, but the setup has only {} workers",
         parts.sources.len()
     );
-    let source = std::mem::take(&mut parts.sources)
+    let mut source = std::mem::take(&mut parts.sources)
         .into_iter()
         .nth(id)
         .expect("bounds checked above");
@@ -710,7 +788,104 @@ fn cmd_worker(argv: &[String]) -> anyhow::Result<()> {
         parts.client.param_count(),
         parts.server.lanes()
     );
-    live::worker_loop(id, parts.cfg, parts.client, source, parts.init, port)?;
+
+    let mut wopts = WorkerOpts::default();
+    let ckpt_dir = a.get("ckpt-dir");
+    if ckpt_dir.is_empty() {
+        anyhow::ensure!(
+            !a.flag("resume") && a.get_usize("ckpt-every")? == 0,
+            "--resume/--ckpt-every need --ckpt-dir"
+        );
+    } else {
+        let every = a.get_usize("ckpt-every")?;
+        anyhow::ensure!(every > 0, "--ckpt-dir needs --ckpt-every > 0");
+        wopts.ckpt = Some(dybw::coordinator::ckpt_manager::CkptManager::new(
+            &PathBuf::from(ckpt_dir),
+            a.get_usize("ckpt-retain")?,
+        )?);
+        wopts.ckpt_every = every;
+        wopts.model = s.model.clone();
+    }
+    let mut state = WorkerState::fresh(parts.init.clone());
+    if a.flag("resume") {
+        let mgr = wopts.ckpt.as_ref().expect("ensured above");
+        match mgr.latest()? {
+            Some((ckpt, path)) => {
+                anyhow::ensure!(
+                    ckpt.params.len() == 2
+                        && ckpt.params.iter().all(|p| p.len() == state.w.len()),
+                    "checkpoint {} does not fit this setup",
+                    path.display()
+                );
+                state.draws = ckpt.iteration as u64;
+                // replay the seeded source up to the checkpoint so later
+                // draws stay aligned with the uninterrupted run
+                for _ in 0..state.draws {
+                    let _ = source.next_train(parts.cfg.batch_size);
+                }
+                let mut params = ckpt.params;
+                state.wtilde = params.pop().expect("len checked above");
+                state.w = params.pop().expect("len checked above");
+                println!(
+                    "worker {id}: restored checkpoint k={} from {}",
+                    ckpt.iteration,
+                    path.display()
+                );
+            }
+            None => {
+                println!("worker {id}: --resume: no intact checkpoint under {ckpt_dir}; starting fresh")
+            }
+        }
+    }
+
+    // Leader loss is survivable: keep the training state, re-claim the
+    // slot, reconcile with the leader's StateSync, and carry on.
+    let rejoin = Duration::from_secs(a.get_u64("rejoin-secs")?);
+    loop {
+        match live::worker_loop_opts(
+            id,
+            &parts.cfg,
+            &parts.client,
+            source.as_mut(),
+            state,
+            port,
+            &mut wopts,
+        )? {
+            WorkerExit::Stopped => break,
+            WorkerExit::LeaderLost(st) => {
+                state = st;
+                if rejoin.is_zero() {
+                    anyhow::bail!(
+                        "worker {id}: leader connection lost (run with --rejoin-secs to retry)"
+                    );
+                }
+                println!(
+                    "worker {id}: leader connection lost at draw {} — rejoining for up to {}s",
+                    state.draws,
+                    rejoin.as_secs()
+                );
+                match rejoin_worker(addr, slot, state.draws, rejoin) {
+                    Ok((sync, fresh)) => {
+                        live::apply_state_sync(
+                            &mut state,
+                            source.as_mut(),
+                            parts.cfg.batch_size,
+                            &sync,
+                            id,
+                        )?;
+                        println!("worker {id}: rejoined at draw {}", state.draws);
+                        port = fresh;
+                    }
+                    Err(e) => {
+                        // the run finished or the leader is gone for good —
+                        // a clean exit, not a failure
+                        println!("worker {id}: rejoin failed ({e}); exiting");
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
     println!("worker {id}: done");
     Ok(())
 }
