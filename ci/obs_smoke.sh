@@ -1,0 +1,134 @@
+#!/usr/bin/env bash
+# Observability smoke: exercise `--obs-dir` end to end on both drivers
+# and hold the telemetry contract — attaching an observer must never
+# change a run's exported history.
+#
+#   1. DES: the committed ring scenario runs twice with the same seed,
+#      once plain and once with `--obs-dir`; the event logs, reports
+#      (minus the telemetry pointer line) and summary JSONs must match
+#      byte for byte, and the recorded trace must parse (JSONL line by
+#      line, Chrome trace.json, metrics.json) and feed `dybw obs report`.
+#   2. Live: a 4-worker in-process reference vs a 4-worker TCP cluster
+#      (one leader + four `dybw worker` processes, leader and worker 0
+#      both recording telemetry); exported histories must match byte for
+#      byte and both obs dirs must validate.
+#
+# Deterministic exports land under <out-dir>; logs, addresses, and obs
+# dirs (which contain wall-clock timings) go to <out-dir>.scratch.
+set -euo pipefail
+
+out_dir="${1:?usage: obs_smoke.sh <out-dir>}"
+bin="${DYBW_BIN:-target/release/dybw}"
+scratch="${out_dir}.scratch"
+mkdir -p "$out_dir" "$scratch"
+
+check_jsonl() {
+  python3 - "$1" <<'EOF'
+import json, sys
+n = 0
+with open(sys.argv[1]) as f:
+    for line in f:
+        line = line.strip()
+        if line:
+            json.loads(line)
+            n += 1
+assert n > 0, "empty " + sys.argv[1]
+EOF
+}
+
+check_chrome() {
+  python3 - "$1" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    j = json.load(f)
+ev = j.get("traceEvents")
+assert isinstance(ev, list) and ev, "no traceEvents in " + sys.argv[1]
+EOF
+}
+
+check_obs_dir() {
+  check_jsonl "$1/trace.jsonl"
+  check_chrome "$1/trace.json"
+  python3 -c "import json,sys; json.load(open(sys.argv[1]))" "$1/metrics.json"
+}
+
+# --- 1. DES: plain vs --obs-dir, byte-identical artifacts -------------
+"$bin" des run --scenario scenarios/ring-smoke.json \
+  --out-dir "$out_dir/des_plain" --export-events "$scratch/des_plain.log" \
+  > "$scratch/des_plain.txt"
+"$bin" des run --scenario scenarios/ring-smoke.json \
+  --out-dir "$out_dir/des_obs" --export-events "$scratch/des_obs.log" \
+  --obs-dir "$scratch/obs_des" > "$scratch/des_obs.txt"
+
+cmp "$scratch/des_plain.log" "$scratch/des_obs.log"
+diff -r "$out_dir/des_plain" "$out_dir/des_obs"
+# the observed run's report differs only by the telemetry pointer line
+diff <(grep -v telemetry "$scratch/des_plain.txt") \
+     <(grep -v telemetry "$scratch/des_obs.txt")
+
+check_obs_dir "$scratch/obs_des"
+"$bin" obs report "$scratch/obs_des" > "$scratch/report_des.txt"
+grep -q 'dybw/worker-' "$scratch/report_des.txt"
+
+# --- 2. Live: in-process reference vs observed 4-worker TCP cluster ---
+live_flags=(--workers 4 --topology complete --model lrm_d16_c10_b64
+  --train-n 2000 --test-n 512 --iters 8 --eval-every 4 --seed 2021
+  --time-scale 0.05 --watchdog 120 --prefix obs)
+
+"$bin" live "${live_flags[@]}" --out-dir "$out_dir/live_ref" \
+  > "$scratch/live_ref.log" 2>&1
+
+addr_file="$scratch/addr.txt"
+rm -f "$addr_file"
+"$bin" live "${live_flags[@]}" --out-dir "$out_dir/live_obs" \
+  --listen 127.0.0.1:0 --addr-file "$addr_file" \
+  --obs-dir "$scratch/obs_live" > "$scratch/leader.log" 2>&1 &
+leader=$!
+
+for _ in $(seq 1 100); do
+  [ -s "$addr_file" ] && break
+  sleep 0.1
+done
+if [ ! -s "$addr_file" ]; then
+  echo "leader never published an address" >&2
+  cat "$scratch/leader.log" >&2
+  exit 1
+fi
+addr="$(cat "$addr_file")"
+
+pids=()
+for j in 0 1 2 3; do
+  extra=()
+  if [ "$j" -eq 0 ]; then
+    extra=(--obs-dir "$scratch/obs_w0")
+  fi
+  "$bin" worker --connect "$addr" --retry-secs 30 "${extra[@]}" \
+    > "$scratch/worker$j.log" 2>&1 &
+  pids+=($!)
+done
+
+fail=0
+wait "$leader" || fail=1
+for p in "${pids[@]}"; do
+  wait "$p" || fail=1
+done
+if [ "$fail" -ne 0 ]; then
+  for log in leader worker0 worker1 worker2 worker3; do
+    echo "--- $log.log" >&2
+    cat "$scratch/$log.log" >&2
+  done
+  exit 1
+fi
+
+cmp "$out_dir/live_ref/obs.iters.csv" "$out_dir/live_obs/obs.iters.csv"
+cmp "$out_dir/live_ref/obs.evals.csv" "$out_dir/live_obs/obs.evals.csv"
+diff "$out_dir/live_ref/obs.json" "$out_dir/live_obs/obs.json"
+
+check_obs_dir "$scratch/obs_live"
+check_obs_dir "$scratch/obs_w0"
+"$bin" obs report "$scratch/obs_live" > "$scratch/report_live.txt"
+grep -q 'leader' "$scratch/report_live.txt"
+"$bin" obs report "$scratch/obs_w0" > "$scratch/report_w0.txt"
+grep -q 'worker-0' "$scratch/report_w0.txt"
+
+echo "obs smoke OK: telemetry recorded, histories unchanged"

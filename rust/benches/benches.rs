@@ -17,6 +17,9 @@
 //!                    bit-identical counter-based substream fan-out)
 //!   des/*          — event-driven simulator throughput (10k/100k/1M-worker
 //!                    rings, timing-only, events/second)
+//!   obs/*          — telemetry overhead: the 10k-worker DES with a
+//!                    registry-only observer attached vs none (CI gates
+//!                    the ratio at < 2%)
 //!
 //! end-to-end (figure-scale workloads, small iteration counts):
 //!   iter/cb-dybw, iter/cb-full — one full training iteration
@@ -124,7 +127,51 @@ fn main() {
     bench_pool(&filter);
     bench_synth(&filter);
     bench_des(&filter);
+    bench_obs_overhead(&filter);
     bench_end_to_end(&filter);
+}
+
+/// The observability price tag: the 10k-worker DES case from
+/// `bench_des`, run with a registry-only observer attached vs none.
+/// The printed ratio is what `figure speedup` measures and the CI
+/// `des-bench` job gates (registry live must cost < 2%).
+fn bench_obs_overhead(filter: &Option<String>) {
+    use dybw::des::{ClusterSim, ComputeTimes, NoHooks, WaitPolicy};
+    use dybw::straggler::link::LinkModel;
+    if !wants(filter, "obs/overhead") {
+        return;
+    }
+    let (n, iters, samples) = (10_000usize, 10usize, 5usize);
+    let times = ComputeTimes::PerWorker {
+        dist: Dist::ShiftedExp { base: 0.08, rate: 25.0 },
+        scale: vec![1.0; n],
+        seed: 11,
+    };
+    let link = LinkModel::new(0.002, Some(Dist::ShiftedExp { base: 0.0, rate: 800.0 }), 12);
+    let mut means = [0.0f64; 2];
+    for (slot, case) in [(0usize, "obs/overhead-des-10k-off"), (1, "obs/overhead-des-10k-on")] {
+        let obs = (slot == 1).then(dybw::obs::Obs::registry_only);
+        let r = bench(case, samples, || {
+            let mut sim = ClusterSim::new(
+                topology::ring(n),
+                WaitPolicy::Dybw,
+                iters,
+                times.clone(),
+                link.clone(),
+            )
+            .unwrap();
+            sim.set_obs(obs.clone());
+            let stats = sim.run(&mut NoHooks).unwrap();
+            std::hint::black_box(stats.events);
+        });
+        means[slot] = r.mean_ns;
+        print_result(&r);
+    }
+    println!(
+        "{:<34} {:.4}x registry-on vs off (CI gates <= 1.02)",
+        "obs/overhead-ratio",
+        means[1] / means[0]
+    );
 }
 
 /// The event-driven core at scale: dybw-policy rings, timing-only.

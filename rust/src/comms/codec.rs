@@ -456,12 +456,25 @@ pub fn decode(buf: &[u8]) -> Result<(Msg, usize), CodecError> {
 
 /// Write one message as a frame.
 pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> Result<(), CodecError> {
-    w.write_all(&encode(msg)).map_err(CodecError::Io)
+    write_frame_counted(w, msg).map(|_| ())
+}
+
+/// Write one message as a frame, returning the frame size in bytes
+/// (telemetry: per-peer wire-byte counters).
+pub fn write_frame_counted<W: Write>(w: &mut W, msg: &Msg) -> Result<usize, CodecError> {
+    let buf = encode(msg);
+    w.write_all(&buf).map_err(CodecError::Io)?;
+    Ok(buf.len())
 }
 
 /// Read one frame, returning `Ok(None)` on a clean EOF at a frame
 /// boundary (the peer closed the connection between messages).
 pub fn read_frame_opt<R: Read>(r: &mut R) -> Result<Option<Msg>, CodecError> {
+    Ok(read_frame_opt_counted(r)?.map(|(msg, _)| msg))
+}
+
+/// [`read_frame_opt`] plus the frame size in bytes.
+pub fn read_frame_opt_counted<R: Read>(r: &mut R) -> Result<Option<(Msg, usize)>, CodecError> {
     let mut header = [0u8; HEADER_LEN];
     let mut filled = 0usize;
     while filled < HEADER_LEN {
@@ -491,7 +504,8 @@ pub fn read_frame_opt<R: Read>(r: &mut R) -> Result<Option<Msg>, CodecError> {
     if stored != computed {
         return Err(CodecError::BadChecksum { want: computed, got: stored });
     }
-    Ok(Some(decode_payload(msg_type, payload)?))
+    let total = HEADER_LEN + len as usize + TRAILER_LEN;
+    Ok(Some((decode_payload(msg_type, payload)?, total)))
 }
 
 /// Read one frame; EOF before a complete frame is an error.

@@ -29,6 +29,10 @@ struct PeerState {
     next_probe: Instant,
     /// Probes sent since the peer last spoke.
     unanswered: u32,
+    /// Latest probe awaiting its echo: `(seq, sent_at)`. Telemetry-only
+    /// bookkeeping — [`Liveness::probe_rtt`] matches echoes against it
+    /// to measure round-trip time; expiry never reads it.
+    inflight: Option<(u64, Instant)>,
 }
 
 /// Per-peer liveness deadlines. Purely a bookkeeping structure: the
@@ -57,6 +61,7 @@ impl Liveness {
                     last_seen: now,
                     next_probe: now + interval,
                     unanswered: 0,
+                    inflight: None,
                 })
                 .collect(),
         }
@@ -79,6 +84,7 @@ impl Liveness {
     pub fn mark_down(&mut self, j: usize) {
         if let Some(p) = self.peers.get_mut(j) {
             p.alive = false;
+            p.inflight = None;
         }
     }
 
@@ -89,7 +95,23 @@ impl Liveness {
             p.last_seen = now;
             p.next_probe = now + self.interval;
             p.unanswered = 0;
+            p.inflight = None;
         }
+    }
+
+    /// Round-trip time of an answered probe: matches an echoed `seq`
+    /// against the peer's in-flight probe and consumes it. `None` for
+    /// stale echoes (a newer probe superseded the one echoed). Pure
+    /// measurement — expiry and probing never depend on it.
+    pub fn probe_rtt(&mut self, j: usize, seq: u64, now: Instant) -> Option<Duration> {
+        let p = self.peers.get_mut(j)?;
+        if let Some((s, sent)) = p.inflight {
+            if s == seq {
+                p.inflight = None;
+                return Some(now.duration_since(sent));
+            }
+        }
+        None
     }
 
     /// Peers whose probe is due, paired with the sequence number to
@@ -104,6 +126,7 @@ impl Liveness {
                 self.seq += 1;
                 p.next_probe = now + self.interval;
                 p.unanswered += 1;
+                p.inflight = Some((self.seq, now));
                 due.push((j, self.seq));
             }
         }
@@ -222,6 +245,26 @@ mod tests {
             lv.due_probes(late + s * TICK);
         }
         assert!(lv.expired(late + (TIMEOUT_INTERVALS + 1) * TICK).contains(&0));
+    }
+
+    #[test]
+    fn probe_rtt_matches_echoes_and_rejects_stale_seqs() {
+        let t0 = Instant::now();
+        let mut lv = Liveness::new(1, TICK, t0);
+        let due = lv.due_probes(t0 + TICK);
+        let (j, seq) = due[0];
+        // echo of the live probe: RTT is echo time minus probe time
+        let echo_at = t0 + TICK + Duration::from_millis(7);
+        assert_eq!(lv.probe_rtt(j, seq, echo_at), Some(Duration::from_millis(7)));
+        // consumed: a duplicate echo measures nothing
+        assert_eq!(lv.probe_rtt(j, seq, echo_at), None);
+        // a superseded probe's echo is stale
+        let due2 = lv.due_probes(t0 + 2 * TICK);
+        let due3 = lv.due_probes(t0 + 3 * TICK);
+        assert_eq!(lv.probe_rtt(j, due2[0].1, t0 + 3 * TICK), None);
+        assert!(lv.probe_rtt(j, due3[0].1, t0 + 3 * TICK + TICK / 2).is_some());
+        // out-of-range peer is a no-op
+        assert_eq!(lv.probe_rtt(99, 1, echo_at), None);
     }
 
     #[test]

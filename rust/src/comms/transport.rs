@@ -39,7 +39,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::codec::{read_frame, read_frame_opt, write_frame, CodecError, Msg};
+use super::codec::{
+    read_frame, read_frame_opt_counted, write_frame, write_frame_counted, CodecError, Msg,
+};
 use crate::util::rng::Rng;
 
 pub use super::codec::ANY_WORKER;
@@ -253,6 +255,11 @@ impl Transport for ChannelTransport {
     }
 
     fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        if crate::obs::enabled() {
+            if let Some(o) = crate::obs::active() {
+                o.registry.counter(&format!("net/peer-{to}/tx_frames")).inc();
+            }
+        }
         match self.txs.get(to) {
             Some(Some(tx)) => tx
                 .send((to, 0, EventKind::Msg(msg)))
@@ -302,9 +309,19 @@ const ACCEPT_POLL: Duration = Duration::from_millis(25);
 /// own side all surface instead of a reader dying silently (stale-
 /// generation `Gone`s are dropped by the receiver).
 fn reader_loop(id: usize, gen: u64, mut stream: TcpStream, tx: Sender<Event>) {
+    // Telemetry names resolved once per connection; instruments are
+    // fetched per frame only while an observer is installed.
+    let rx_frames = format!("net/peer-{id}/rx_frames");
+    let rx_bytes = format!("net/peer-{id}/rx_bytes");
     loop {
-        match read_frame_opt(&mut stream) {
-            Ok(Some(msg)) => {
+        match read_frame_opt_counted(&mut stream) {
+            Ok(Some((msg, bytes))) => {
+                if crate::obs::enabled() {
+                    if let Some(o) = crate::obs::active() {
+                        o.registry.counter(&rx_frames).inc();
+                        o.registry.counter(&rx_bytes).add(bytes as u64);
+                    }
+                }
                 if tx.send((id, gen, EventKind::Msg(msg))).is_err() {
                     return; // coordinator gone
                 }
@@ -359,6 +376,14 @@ impl TcpShared {
             .name(format!("dybw-net-{id}-g{gen}"))
             .spawn(move || reader_loop(id, gen, clone, tx))?;
         sh.readers.push(handle);
+        // gen 1 is the slot's first connection; anything later is a
+        // replacement — the reconnect counter the obs report surfaces.
+        if gen > 1 && crate::obs::enabled() {
+            if let Some(o) = crate::obs::active() {
+                o.registry.counter("net/reconnects").inc();
+                o.registry.counter(&format!("net/peer-{id}/reconnects")).inc();
+            }
+        }
         Ok(gen)
     }
 }
@@ -531,14 +556,26 @@ impl Transport for TcpTransport {
     }
 
     fn send(&mut self, to: usize, msg: Msg) -> Result<(), TransportError> {
+        let obs = if crate::obs::enabled() { crate::obs::active() } else { None };
+        let t0 = obs.as_ref().map(|_| Instant::now());
         let mut sh = self.shared.lock().unwrap();
-        match sh.streams.get_mut(to) {
-            Some(Some(stream)) => write_frame(stream, &msg).map_err(|e| match e {
+        let sent = match sh.streams.get_mut(to) {
+            Some(Some(stream)) => write_frame_counted(stream, &msg).map_err(|e| match e {
                 CodecError::Io(_) => TransportError::Closed { worker: to },
                 other => TransportError::Codec { worker: to, err: other },
             }),
             _ => Err(TransportError::Closed { worker: to }),
+        };
+        drop(sh);
+        let bytes = sent?;
+        if let (Some(o), Some(t0)) = (&obs, t0) {
+            o.registry.counter(&format!("net/peer-{to}/tx_frames")).inc();
+            o.registry.counter(&format!("net/peer-{to}/tx_bytes")).add(bytes as u64);
+            o.registry
+                .histogram("net/send_secs")
+                .record_secs(t0.elapsed().as_secs_f64());
         }
+        Ok(())
     }
 
     fn recv(&mut self, timeout: Duration) -> Result<(usize, Msg), TransportError> {

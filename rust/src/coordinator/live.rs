@@ -399,7 +399,21 @@ fn recv_live_event(
             Ok((j, msg)) => {
                 liveness.touch(j, Instant::now());
                 match msg {
-                    Msg::Heartbeat { .. } => {} // echo: bookkeeping only
+                    Msg::Heartbeat { seq } => {
+                        // echo: pure liveness signal — but it closes the
+                        // probe's round trip, which is the one clean RTT
+                        // measurement the protocol gives us for free.
+                        if crate::obs::enabled() {
+                            if let (Some(obs), Some(rtt)) = (
+                                crate::obs::active(),
+                                liveness.probe_rtt(j, seq, Instant::now()),
+                            ) {
+                                obs.registry
+                                    .histogram("net/heartbeat_rtt_secs")
+                                    .record_secs(rtt.as_secs_f64());
+                            }
+                        }
+                    }
                     Msg::Rejoin { worker, draws } => {
                         return Ok(LiveEvent::Rejoin { worker: worker as usize, draws })
                     }
@@ -551,6 +565,7 @@ pub fn drive_resilient(
         )));
     }
     let run_start = Instant::now();
+    crate::obs::span::set_track("leader");
 
     // Leader's view of the network: slot j holds worker j's latest
     // announced parameters (w̃_j after Done, w_j after MixAck). Plain
@@ -585,9 +600,11 @@ pub fn drive_resilient(
     let schedule = res.chaos.schedule();
     let mut chaos_at = 0usize;
 
-    history
-        .evals
-        .push(eval_board(&board, eval_batches, compute, 0, clock)?);
+    let ev0 = {
+        let _s = crate::obs::span::enter(crate::obs::span::Phase::Eval);
+        eval_board(&board, eval_batches, compute, 0, clock)?
+    };
+    history.evals.push(ev0);
 
     for k in 1..=cfg.iters {
         // Chaos events fire at iteration boundaries once the virtual
@@ -720,6 +737,7 @@ pub fn drive_resilient(
         }
         fire_check!();
 
+        let wait_span = crate::obs::span::enter(crate::obs::span::Phase::Wait);
         while pending > 0 {
             match recv_live_event(transport, &mut liveness, opts, resilient, "Done")? {
                 LiveEvent::Msg(j, msg) => match msg {
@@ -834,11 +852,14 @@ pub fn drive_resilient(
             }
         }
 
+        drop(wait_span);
+
         // Mixing: each participant gets its Metropolis row plus the
         // neighbour parameters in row order (the order fixes the f32
         // accumulation, keeping the result transport-independent).
         // Results stage into `new_board`: ghost mixes must read the
         // pre-mix board, so it may not change until the phase resolves.
+        let mix_span = crate::obs::span::enter(crate::obs::span::Phase::Mix);
         let p = ConsensusMatrix::metropolis(graph, &iter_plan.active);
         let mut acked = vec![false; n];
         let mut pending = n;
@@ -975,6 +996,7 @@ pub fn drive_resilient(
                 }
             }
         }
+        drop(mix_span);
         for j in 0..n {
             board[j] = std::mem::take(&mut new_board[j]);
         }
@@ -991,14 +1013,24 @@ pub fn drive_resilient(
         });
 
         if cfg.eval_every > 0 && k % cfg.eval_every == 0 {
-            history
-                .evals
-                .push(eval_board(&board, eval_batches, compute, k, clock)?);
+            let ev = {
+                let _s = crate::obs::span::enter(crate::obs::span::Phase::Eval);
+                eval_board(&board, eval_batches, compute, k, clock)?
+            };
+            history.evals.push(ev);
         }
     }
 
     for j in 0..n {
         let _ = transport.send(j, Msg::Stop);
+    }
+    if let Some(obs) = crate::obs::active() {
+        obs.registry.counter("live/ghost_dones").add(ghost_dones as u64);
+        obs.registry.counter("live/rejoins").add(rejoins as u64);
+        let h = obs.registry.histogram("live/term_ack_secs");
+        for &l in &term_ack_latencies {
+            h.record_secs(l);
+        }
     }
     Ok(LiveOutcome {
         history,
@@ -1127,6 +1159,7 @@ pub fn worker_loop_opts(
         mut wtilde,
         mut draws,
     } = state;
+    crate::obs::span::set_track(&format!("worker-{j}"));
     // Leased buffers: the gradient is written in place by the engine pool
     // every iteration, the mix accumulator swaps with `w` every round —
     // neither is ever reallocated.
@@ -1149,6 +1182,7 @@ pub fn worker_loop_opts(
                 let start = Instant::now();
                 let batch = source.next_train(cfg.batch_size);
                 draws += 1;
+                let compute_span = crate::obs::span::enter(crate::obs::span::Phase::Compute);
                 let loss = match compute.grad_into(&w, &batch, &mut grad) {
                     Ok(r) => r,
                     Err(e) => {
@@ -1167,11 +1201,13 @@ pub fn worker_loop_opts(
                         return Ok(WorkerExit::Stopped);
                     }
                 };
+                drop(compute_span);
                 // Straggler injection: wait out the remaining virtual
                 // compute time parked on the port (no polling), abortable
                 // by this iteration's termination command.
                 let mut terminated = false;
                 let mut stash: Vec<Msg> = Vec::new();
+                let wait_span = crate::obs::span::enter(crate::obs::span::Phase::Wait);
                 loop {
                     let elapsed = start.elapsed().as_secs_f64();
                     if delay_s.is_nan() || elapsed >= delay_s {
@@ -1199,6 +1235,7 @@ pub fn worker_loop_opts(
                         Err(e) => return Err(e.into()),
                     }
                 }
+                drop(wait_span);
                 for m in stash {
                     port.push_back(m);
                 }
@@ -1231,6 +1268,7 @@ pub fn worker_loop_opts(
                         detail: format!("Mix with {} rows but {} peers", row.len(), peers.len()),
                     });
                 }
+                let mix_span = crate::obs::span::enter(crate::obs::span::Phase::Mix);
                 if active {
                     // eq. (6) over the active neighbourhood, accumulated
                     // in row order (deterministic) into the leased buffer.
@@ -1252,11 +1290,13 @@ pub fn worker_loop_opts(
                 } else {
                     w.copy_from_slice(&wtilde);
                 }
+                drop(mix_span);
                 if port.send(Msg::MixAck { k, w: w.clone() }).is_err() {
                     leader_lost!();
                 }
                 if wopts.ckpt_every > 0 && (k as usize) % wopts.ckpt_every == 0 {
                     if let Some(mgr) = &wopts.ckpt {
+                        let _s = crate::obs::span::enter(crate::obs::span::Phase::Ckpt);
                         let ckpt = Checkpoint {
                             iteration: k as usize,
                             clock: 0.0,
@@ -1556,6 +1596,35 @@ mod tests {
             a.history.bits_eq(&b.history),
             "two same-seed live runs diverged"
         );
+    }
+
+    /// Telemetry byte-identity at the live layer: a full observer
+    /// (registry + spans + streamed trace) installed process-wide must
+    /// leave the recorded history bit-identical to the same-seed run
+    /// without one — spans read clocks, never the RNG. Nothing else in
+    /// this test binary installs a global observer, so no cross-test
+    /// serialisation is needed.
+    #[test]
+    fn live_history_identical_with_obs_installed() {
+        let plain = run(Algorithm::CbDybw, 6);
+        let dir = std::env::temp_dir().join(format!("dybw-live-obs-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let obs = crate::obs::Obs::to_dir(&dir).unwrap();
+        crate::obs::install(obs.clone());
+        let observed = run(Algorithm::CbDybw, 6);
+        crate::obs::uninstall();
+        obs.finish().unwrap();
+        assert!(
+            observed.history.bits_eq(&plain.history),
+            "telemetry perturbed the live run"
+        );
+        // and the observer really recorded: leader + worker tracks
+        // streamed to the JSONL trace
+        let jsonl =
+            std::fs::read_to_string(dir.join(crate::obs::trace::TRACE_JSONL)).unwrap();
+        assert!(jsonl.lines().any(|l| l.contains("leader")), "no leader track in trace");
+        assert!(jsonl.lines().any(|l| l.contains("worker-")), "no worker tracks in trace");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// The tentpole guarantee: the same seeded run over real TCP sockets

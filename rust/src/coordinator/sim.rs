@@ -304,6 +304,7 @@ impl SimTrainer {
     /// Run the full training loop, returning the recorded history.
     pub fn run(&mut self) -> anyhow::Result<RunHistory> {
         let n = self.graph.n();
+        crate::obs::span::set_track("sim");
         let mut history = match self.resume_history.take() {
             // restored mid-run: the series (including the k = start eval
             // and any eval already due at the checkpoint boundary) was
@@ -313,7 +314,10 @@ impl SimTrainer {
                 let mut h =
                     RunHistory::new(&self.algo.name(), self.pool.backend(), "synthetic", n);
                 // initial eval (k = start)
-                let e0 = self.evaluate(self.start_k)?;
+                let e0 = {
+                    let _s = crate::obs::span::enter(crate::obs::span::Phase::Eval);
+                    self.evaluate(self.start_k)?
+                };
                 h.evals.push(e0);
                 h
             }
@@ -348,6 +352,7 @@ impl SimTrainer {
                 None => self.sources.iter_mut().map(|s| s.next_train(bsz)).collect(),
             };
             let prefetch_now = self.cfg.prefetch && k < self.start_k + self.cfg.iters;
+            let compute_span = crate::obs::span::enter(crate::obs::span::Phase::Compute);
             let ws: Vec<&[f32]> = (0..n).map(|j| self.params.get(j)).collect();
             let losses = if prefetch_now {
                 let mut slots: Vec<Option<AnyBatch>> = (0..n).map(|_| None).collect();
@@ -384,8 +389,10 @@ impl SimTrainer {
                     vecmath::axpy(self.params.get_mut(j), -eta, &self.grad_bufs[j]);
                 }
             }
+            drop(compute_span);
 
             // --- eq. (6): mixing ----------------------------------------
+            let mix_span = crate::obs::span::enter(crate::obs::span::Phase::Mix);
             if iter_plan.ps_style {
                 // Exact averaging of participants, broadcast to everyone —
                 // the dimension chunked across the pool's lanes
@@ -417,6 +424,7 @@ impl SimTrainer {
                     None => self.params.mix_pooled(&p, &self.pool)?,
                 }
             }
+            drop(mix_span);
 
             // --- bookkeeping --------------------------------------------
             self.clock += iter_plan.duration;
@@ -436,12 +444,14 @@ impl SimTrainer {
             history.iters.push(rec);
 
             if self.cfg.eval_every > 0 && k % self.cfg.eval_every == 0 {
+                let _s = crate::obs::span::enter(crate::obs::span::Phase::Eval);
                 let e = self.evaluate(k)?;
                 history.evals.push(e);
             }
 
             if self.ckpt_every > 0 && k % self.ckpt_every == 0 {
                 if let Some(mgr) = self.ckpt_mgr.as_ref() {
+                    let _s = crate::obs::span::enter(crate::obs::span::Phase::Ckpt);
                     let mut c = super::checkpoint::Checkpoint::from_buffers(
                         k,
                         self.clock,

@@ -39,8 +39,10 @@
 use std::collections::HashMap;
 use std::io::Write;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::graph::Graph;
+use crate::obs::registry::{Counter, Gauge, Histogram};
 use crate::straggler::link::LinkModel;
 use crate::straggler::trace::Trace;
 use crate::straggler::Dist;
@@ -113,8 +115,12 @@ pub struct MixInfo<'a> {
     pub nbrs: &'a [usize],
     /// counted[j] ⇔ nbrs[j]'s iteration-k estimate is in the mix.
     pub counted: &'a [bool],
-    /// b_i(k) = deg(i) − |counted|.
+    /// b_i(k) = deg(i) − |counted| (the realised backup count).
     pub backup: usize,
+    /// The backup allowance the wait policy granted this iteration:
+    /// 0 for full, min(b, deg−1) for static-b, and deg−1 for dybw
+    /// (which mixes on the first fresh arrival). Always ≥ `backup`.
+    pub chosen_b: usize,
     /// Iterations completed by EVERY worker after this mix (the global
     /// frontier — full fidelity evaluates when it crosses milestones).
     pub min_done: usize,
@@ -463,6 +469,17 @@ impl WorkerBank {
         }
     }
 
+    /// The policy's backup allowance for worker `i` right now (see
+    /// [`MixInfo::chosen_b`]).
+    fn chosen_b(&self, i: usize) -> usize {
+        let live = self.live_deg[i] as usize;
+        match self.policy {
+            WaitPolicy::Full => 0,
+            WaitPolicy::Static { .. } => live.saturating_sub(self.needed[i] as usize),
+            WaitPolicy::Dybw => live.saturating_sub(1),
+        }
+    }
+
     /// May worker `i` mix now? O(1) from the maintained counts.
     #[inline]
     fn ready(&self, i: usize) -> bool {
@@ -643,6 +660,19 @@ impl WorkerBank {
     }
 }
 
+/// Pre-resolved telemetry instruments for one [`ClusterSim::run`] —
+/// looked up once so the hot loop never touches the registry's name
+/// map.
+struct DesObsHandles {
+    wait: Arc<Histogram>,
+    compute: Arc<Histogram>,
+    iter: Arc<Histogram>,
+    backup: Arc<Histogram>,
+    mixes: Arc<Counter>,
+    events: Arc<Counter>,
+    qdepth: Arc<Gauge>,
+}
+
 /// The event-driven cluster simulator.
 pub struct ClusterSim {
     graph: Graph,
@@ -654,6 +684,11 @@ pub struct ClusterSim {
     faults: FaultPlan,
     /// When set, every processed event is appended as one log line.
     log: Option<LogSink>,
+    /// Telemetry observer (captured from [`crate::obs::active`] at
+    /// construction; override with [`Self::set_obs`]). Observational
+    /// only: it reads the virtual clock and event counts, never the RNG
+    /// — the recorded history is identical with or without it.
+    obs: Option<Arc<crate::obs::Obs>>,
 }
 
 impl ClusterSim {
@@ -685,7 +720,14 @@ impl ClusterSim {
             link,
             faults: FaultPlan::default(),
             log: None,
+            obs: crate::obs::active(),
         })
+    }
+
+    /// Override the telemetry observer (`None` disables it). Benches
+    /// use this to price instrumentation without installing a global.
+    pub fn set_obs(&mut self, obs: Option<Arc<crate::obs::Obs>>) {
+        self.obs = obs;
     }
 
     /// Inject a churn/failure schedule (see [`FaultPlan`]). Indices and
@@ -830,7 +872,29 @@ impl ClusterSim {
         // bit-identical reference anyway)
         let wants_batch = hooks.wants_compute_batch() && !faults_on;
 
+        // Telemetry handles resolved once up front: with an observer the
+        // per-event cost is a few relaxed atomic adds; without one, a
+        // single branch on a local Option. Reads the virtual clock and
+        // event counts only — never the RNG — so the recorded history is
+        // identical either way (pinned by bit-identity tests).
+        let wall_start = Instant::now();
+        let obs = self.obs.clone();
+        let oh = obs.as_ref().map(|o| DesObsHandles {
+            wait: o.registry.histogram("des/wait_secs"),
+            compute: o.registry.histogram("des/compute_secs"),
+            iter: o.registry.histogram("des/iter_secs"),
+            backup: o.registry.histogram("des/backup"),
+            mixes: o.registry.counter("des/mixes"),
+            events: o.registry.counter("des/events"),
+            qdepth: o.registry.gauge("des/queue_depth_max"),
+        });
+        let policy_name = self.policy.name();
+
         while q.drain_simultaneous(&mut batch) > 0 {
+            if let Some(h) = &oh {
+                h.events.add(batch.len() as u64);
+                h.qdepth.max(q.len() as i64);
+            }
             if wants_batch {
                 // hand all simultaneous compute completions to the hook
                 // first (a gradient-prefetch window; see the trait docs),
@@ -997,6 +1061,7 @@ impl ClusterSim {
                         nbr_scratch.push(bank.nbrs[slot] as usize);
                         counted_scratch.push(bank.arrived.get(slot));
                     }
+                    let chosen_b = bank.chosen_b(i);
                     let backup =
                         bank.commit(i, if faults_on { Some(&fstate) } else { None });
                     let iter_duration = now - bank.last_mix_at[i];
@@ -1023,9 +1088,53 @@ impl ClusterSim {
                         nbrs: &nbr_scratch,
                         counted: &counted_scratch,
                         backup,
+                        chosen_b,
                         min_done,
                     };
                     hooks.on_mix(&info)?;
+
+                    if let Some(h) = &oh {
+                        let compute_t = bank.compute_done_at[i] - bank.last_mix_at[i];
+                        h.wait.record_secs(wait);
+                        h.compute.record_secs(compute_t);
+                        h.iter.record_secs(iter_duration);
+                        h.backup.record(backup as u64);
+                        h.mixes.inc();
+                        if let Some(sink) = obs.as_ref().and_then(|o| o.trace()) {
+                            // DES trace timestamps are VIRTUAL seconds
+                            // scaled to microseconds (one track per
+                            // worker, prefixed by policy so multi-policy
+                            // scenario runs stay separable).
+                            let track = format!("{policy_name}/worker-{i}");
+                            let mix_us = (now * 1e6) as u64;
+                            let cstart = (bank.last_mix_at[i] * 1e6) as u64;
+                            sink.complete(
+                                &track,
+                                "compute",
+                                cstart,
+                                (compute_t * 1e6) as u64,
+                                &[("k", k as f64)],
+                            );
+                            sink.complete(
+                                &track,
+                                "wait",
+                                (bank.compute_done_at[i] * 1e6) as u64,
+                                (wait * 1e6) as u64,
+                                &[("k", k as f64)],
+                            );
+                            sink.complete(
+                                &track,
+                                "mix",
+                                mix_us,
+                                0,
+                                &[
+                                    ("k", k as f64),
+                                    ("b", backup as f64),
+                                    ("b_chosen", chosen_b as f64),
+                                ],
+                            );
+                        }
+                    }
 
                     // advance to iteration k+1 (or finish)
                     bank.k[i] += 1;
@@ -1048,6 +1157,16 @@ impl ClusterSim {
         }
         if let Some(LogSink::Writer(w)) = &mut self.log {
             w.flush()?;
+        }
+
+        if let Some(o) = &obs {
+            let wall = wall_start.elapsed().as_secs_f64();
+            o.registry.gauge("des/events_total").set(q.processed() as i64);
+            if wall > 0.0 {
+                o.registry
+                    .gauge("des/events_per_sec")
+                    .set((q.processed() as f64 / wall) as i64);
+            }
         }
 
         anyhow::ensure!(

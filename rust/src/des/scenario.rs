@@ -285,8 +285,9 @@ impl Scenario {
             .filter(|k| map.contains_key(*k))
             .collect();
         if !legacy.is_empty() {
-            eprintln!(
-                "warning: scenario uses legacy flat fields {legacy:?}; nest them under \
+            crate::warn_!(
+                "scenario",
+                "legacy flat fields {legacy:?}; nest them under \
                  cluster/timing/links/training (run `dybw des template` for the schema)"
             );
         }

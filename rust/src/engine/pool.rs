@@ -34,6 +34,7 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use super::{AnyBatch, GradEngine};
 
@@ -154,6 +155,9 @@ struct Job {
     idx: usize,
     kind: JobKind,
     reply: Sender<Done>,
+    /// Submission timestamp, stamped only while a telemetry observer is
+    /// installed ([`crate::obs`]) — feeds the queue-wait histogram.
+    queued_at: Option<Instant>,
 }
 
 struct Done {
@@ -200,7 +204,7 @@ impl EnginePool {
             let shared_rx = Arc::clone(&shared_rx);
             let spawned = std::thread::Builder::new()
                 .name(format!("dybw-lane-{lane}"))
-                .spawn(move || lane_loop(factory, init_tx, shared_rx, kernel_cap));
+                .spawn(move || lane_loop(lane, factory, init_tx, shared_rx, kernel_cap));
             match spawned {
                 Ok(h) => handles.push(h),
                 Err(e) => {
@@ -485,9 +489,16 @@ impl EnginePool {
         }
         let queue = self.queue.as_ref().expect("engine pool queue alive");
         let (reply, results_rx) = channel::<Done>();
+        // Telemetry (observational only): stamp submission time and bump
+        // the shared queue-depth gauge; each lane decrements on pull.
+        let obs = crate::obs::active();
+        let queued_at = obs.as_ref().map(|o| {
+            o.registry.gauge("pool/queue_depth").add(expected as i64);
+            Instant::now()
+        });
         let mut all_sent = true;
         for (idx, kind) in kinds.into_iter().enumerate() {
-            let job = Job { idx, kind, reply: reply.clone() };
+            let job = Job { idx, kind, reply: reply.clone(), queued_at };
             if queue.send(job).is_err() {
                 // every lane is gone; the failed send returned (and
                 // dropped) this job, and the remaining kinds are dropped
@@ -543,6 +554,7 @@ impl Drop for EnginePool {
 }
 
 fn lane_loop(
+    lane: usize,
     factory: EngineFactory,
     init_tx: Sender<anyhow::Result<(usize, &'static str)>>,
     queue: Arc<Mutex<Receiver<Job>>>,
@@ -561,7 +573,16 @@ fn lane_loop(
         }
     };
     drop(init_tx);
+    // Telemetry names resolved once per lane; the instruments themselves
+    // are fetched per job because an observer may be installed or torn
+    // down while the pool is alive. With no observer the per-job cost is
+    // one relaxed atomic load (`obs::enabled`).
+    let track = format!("lane-{lane}");
+    let busy_name = format!("pool/{track}/busy_us");
+    let idle_name = format!("pool/{track}/idle_us");
+    crate::obs::span::set_track(&track);
     loop {
+        let idle_start = crate::obs::enabled().then(Instant::now);
         // Pull the next job from the shared queue. Holding the lock
         // across the blocking recv is deliberate: an idle lane parks
         // inside recv with the lock held, peers park on the mutex, and
@@ -574,9 +595,22 @@ fn lane_loop(
             };
             rx.recv()
         };
-        let Ok(Job { idx, kind, reply }) = job else {
+        let Ok(Job { idx, kind, reply, queued_at }) = job else {
             break; // pool hung up
         };
+        let obs = if crate::obs::enabled() { crate::obs::active() } else { None };
+        if let Some(o) = &obs {
+            if let Some(t0) = idle_start {
+                o.registry.counter(&idle_name).add(t0.elapsed().as_micros() as u64);
+            }
+            o.registry.gauge("pool/queue_depth").add(-1);
+            if let Some(t) = queued_at {
+                o.registry
+                    .histogram("pool/job_wait_secs")
+                    .record_secs(t.elapsed().as_secs_f64());
+            }
+        }
+        let busy_start = obs.as_ref().map(|o| (Instant::now(), o.now_us()));
         // SAFETY: the submitting pool call blocks until this job's
         // `reply` clone is dropped, so every raw pointer in `kind` is
         // live for the duration of this dereference.
@@ -591,6 +625,14 @@ fn lane_loop(
                 JobKind::Task(task) => task.invoke().map(|_| JobOut::Unit),
             }
         };
+        if let (Some(o), Some((t0, start_us))) = (&obs, busy_start) {
+            let busy = t0.elapsed();
+            o.registry.counter(&busy_name).add(busy.as_micros() as u64);
+            o.registry.histogram("pool/job_secs").record_secs(busy.as_secs_f64());
+            if let Some(sink) = o.trace() {
+                sink.complete(&track, "job", start_us, busy.as_micros() as u64, &[]);
+            }
+        }
         let _ = reply.send(Done { idx, out });
     }
 }

@@ -48,6 +48,7 @@ pub mod experiments;
 pub mod graph;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod straggler;

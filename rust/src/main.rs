@@ -10,6 +10,7 @@
 //! - `live`     — real-worker driver: in-process threads or a TCP leader
 //! - `worker`   — one worker process that joins a `live --listen` leader
 //! - `bench`    — perf-trajectory tooling (regression gate vs baseline)
+//! - `obs`      — inspect telemetry recorded with `--obs-dir` (straggler report)
 
 // Same rationale as the crate-level allows in lib.rs (config structs are
 // mutated field-by-field after `Default::default()`).
@@ -64,6 +65,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "live" => cmd_live(rest),
         "worker" => cmd_worker(rest),
         "bench" => cmd_bench(rest),
+        "obs" => cmd_obs(rest),
         "help" | "--help" | "-h" => {
             print_global_help();
             Ok(())
@@ -89,6 +91,7 @@ fn print_global_help() {
          \x20 live       real-worker driver: in-process threads, or a TCP leader (--listen)\n\
          \x20 worker     one worker process: `dybw worker --connect <addr>`\n\
          \x20 bench      perf-trajectory gate: compare BENCH_speedup.json vs baseline\n\
+         \x20 obs        straggler telemetry report from a --obs-dir recording\n\
          \n\
          Run `dybw <subcommand> --help` for options."
     );
@@ -169,9 +172,11 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         .opt("ckpt-every", "0", "checkpoint every k iterations (needs --ckpt-dir)")
         .opt("ckpt-retain", "3", "keep only the newest k checkpoints (0 = keep all)")
         .opt("kill-at", "0", "abort right after checkpointing iteration k (fault injection)")
-        .flag("resume", "restore the latest intact checkpoint in --ckpt-dir, then continue");
+        .flag("resume", "restore the latest intact checkpoint in --ckpt-dir, then continue")
+        .opt("obs-dir", "", "record telemetry (trace + metrics) under this directory");
     let a = parse_or_exit(&cmd, argv)?;
     let s = setup_from_args(&a)?;
+    let obs = obs_from_args(&a)?;
     let out_dir = PathBuf::from(a.get("out-dir"));
 
     println!(
@@ -240,6 +245,7 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         let c = Comparison::new(&h, &hb, a.get_f64("target-loss")?);
         println!("\n## comparison vs cb-Full\n{}", c.render());
     }
+    obs_finish(&a, &obs)?;
     println!("(histories written under {})", out_dir.display());
     Ok(())
 }
@@ -471,7 +477,8 @@ fn cmd_des(argv: &[String]) -> anyhow::Result<()> {
     .opt("ckpt-every", "0", "checkpoint every k frontier iterations (needs --ckpt-dir)")
     .opt("ckpt-retain", "3", "keep only the newest k checkpoints (0 = keep all)")
     .opt("kill-at", "0", "abort right after the milestone-k checkpoint (fault injection)")
-    .flag("resume", "verified replay against the latest checkpoint in --ckpt-dir");
+    .flag("resume", "verified replay against the latest checkpoint in --ckpt-dir")
+    .opt("obs-dir", "", "record telemetry (trace + metrics) under this directory");
     let a = parse_or_exit(&cmd, argv)?;
     let action = a.positionals.first().map(String::as_str).unwrap_or("run");
     match action {
@@ -531,12 +538,14 @@ fn cmd_des(argv: &[String]) -> anyhow::Result<()> {
                     })
                 }
             };
+            let obs = obs_from_args(&a)?;
             let report = scenario.run_with_recovery(
                 &PathBuf::from(a.get("out-dir")),
                 events.as_deref(),
                 recovery,
             )?;
             println!("{report}");
+            obs_finish(&a, &obs)?;
             Ok(())
         }
         other => anyhow::bail!("unknown des action '{other}' (run | template)\n\n{}", cmd.usage()),
@@ -557,9 +566,11 @@ fn cmd_live(argv: &[String]) -> anyhow::Result<()> {
     .opt("chaos", "", "DES scenario JSON whose faults section injects worker kills/recoveries (TCP only)")
     .opt("measure-links", "0", "Ping/Pong rounds before training; calibrates a DES LinkModel")
     .opt("out-dir", "results", "where to write CSV/JSON histories")
-    .opt("prefix", "live", "history file name prefix");
+    .opt("prefix", "live", "history file name prefix")
+    .opt("obs-dir", "", "record telemetry (trace + metrics) under this directory");
     let a = parse_or_exit(&cmd, argv)?;
     let s = setup_from_args(&a)?;
+    let obs = obs_from_args(&a)?;
     let tcp = !a.get("listen").is_empty();
     let n = s.workers;
 
@@ -710,6 +721,7 @@ fn cmd_live(argv: &[String]) -> anyhow::Result<()> {
             max * 1e3
         );
     }
+    obs_finish(&a, &obs)?;
     println!("(histories written under {})", out_dir.display());
     Ok(())
 }
@@ -745,8 +757,10 @@ fn cmd_worker(argv: &[String]) -> anyhow::Result<()> {
     .opt("ckpt-every", "0", "checkpoint every k iterations (needs --ckpt-dir)")
     .opt("ckpt-retain", "3", "keep only the newest k checkpoints (0 = keep all)")
     .flag("resume", "restore the latest checkpoint in --ckpt-dir (for relaunching into a live run)")
-    .opt("threads", "0", "engine-pool lanes override (0 = keep the leader's setting)");
+    .opt("threads", "0", "engine-pool lanes override (0 = keep the leader's setting)")
+    .opt("obs-dir", "", "record telemetry (trace + metrics) under this directory");
     let a = parse_or_exit(&cmd, argv)?;
+    let obs = obs_from_args(&a)?;
     let worker_id = a.get("worker-id");
     let requested = if worker_id.is_empty() {
         None
@@ -880,12 +894,14 @@ fn cmd_worker(argv: &[String]) -> anyhow::Result<()> {
                         // the run finished or the leader is gone for good —
                         // a clean exit, not a failure
                         println!("worker {id}: rejoin failed ({e}); exiting");
+                        obs_finish(&a, &obs)?;
                         return Ok(());
                     }
                 }
             }
         }
     }
+    obs_finish(&a, &obs)?;
     println!("worker {id}: done");
     Ok(())
 }
@@ -920,6 +936,60 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
         }
         _ => anyhow::bail!("bench action: gate\n\n{}", cmd.usage()),
     }
+}
+
+fn cmd_obs(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("dybw obs", "inspect telemetry recorded with --obs-dir")
+        .positional("action", "report")
+        .positional("dir", "obs directory (the --obs-dir of a finished run)")
+        .opt("top", "5", "stragglers to list in the report");
+    let a = parse_or_exit(&cmd, argv)?;
+    match a.positionals.first().map(String::as_str) {
+        Some("report") => {
+            let dir = a.positionals.get(1).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "which directory? (e.g. `dybw obs report results/obs`)\n\n{}",
+                    cmd.usage()
+                )
+            })?;
+            print!(
+                "{}",
+                dybw::obs::report::report(&PathBuf::from(dir), a.get_usize("top")?)?
+            );
+            Ok(())
+        }
+        _ => anyhow::bail!("obs action: report <dir>\n\n{}", cmd.usage()),
+    }
+}
+
+/// Honour `--obs-dir`: install a process-wide observer streaming a
+/// trace + metric registry under the directory. Telemetry never touches
+/// the RNG or the parameters, so the recorded history is byte-identical
+/// with or without this flag.
+fn obs_from_args(a: &Args) -> anyhow::Result<Option<std::sync::Arc<dybw::obs::Obs>>> {
+    match a.get("obs-dir") {
+        "" => Ok(None),
+        dir => {
+            let obs = dybw::obs::Obs::to_dir(&PathBuf::from(dir))?;
+            dybw::obs::install(obs.clone());
+            Ok(Some(obs))
+        }
+    }
+}
+
+/// Flush the `--obs-dir` observer: uninstall it, export the Chrome
+/// trace, and write `metrics.json`.
+fn obs_finish(
+    a: &Args,
+    obs: &Option<std::sync::Arc<dybw::obs::Obs>>,
+) -> anyhow::Result<()> {
+    if let Some(o) = obs {
+        dybw::obs::uninstall();
+        o.finish()?;
+        let dir = a.get("obs-dir");
+        println!("(telemetry written under {dir} — inspect with `dybw obs report {dir}`)");
+    }
+    Ok(())
 }
 
 fn parse_or_exit(cmd: &Command, argv: &[String]) -> anyhow::Result<Args> {

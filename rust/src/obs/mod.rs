@@ -1,0 +1,169 @@
+//! Straggler-centric telemetry: metric registry, phase spans, and trace
+//! export.
+//!
+//! The paper's whole argument is a time decomposition — each iteration
+//! is the wait for the `n_i − b_i` fastest neighbours plus compute plus
+//! mixing — and this module makes that decomposition observable across
+//! every layer: the engine pool, the live TCP driver, the comms
+//! transport, and the DES.
+//!
+//! Three pieces:
+//! - [`registry`] — process-wide counters / gauges / log-bucketed
+//!   histograms (relaxed atomics; cheap enough for hot paths).
+//! - [`span`] — RAII phase spans (`wait`, `compute`, `mix`, `comms`,
+//!   `eval`, `ckpt`) recording into the registry and, when a trace sink
+//!   is attached, into:
+//! - [`trace`] — a streamed JSONL event file exported as a Chrome
+//!   `trace_event` (Perfetto-loadable) timeline, one track per
+//!   worker/lane.
+//!
+//! **Hard invariant:** telemetry reads clocks but never the RNG or the
+//! parameters. An instrumented run's exported history is byte-identical
+//! to the uninstrumented run (pinned by tests and the `obs-smoke` CI
+//! job), and with no observer installed the per-sample cost is one
+//! relaxed atomic load.
+
+pub mod registry;
+pub mod report;
+pub mod span;
+pub mod trace;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use registry::Registry;
+use trace::TraceSink;
+
+use crate::util::json::Json;
+
+/// Metrics snapshot file name inside the obs dir.
+pub const METRICS_JSON: &str = "metrics.json";
+
+/// One observation context: a registry plus an optional trace sink.
+pub struct Obs {
+    pub registry: Arc<Registry>,
+    trace: Option<TraceSink>,
+    dir: Option<PathBuf>,
+    t0: Instant,
+}
+
+impl Obs {
+    /// Full observer: registry + streamed trace under `dir` (created if
+    /// missing). `finish` writes `metrics.json` and `trace.json` there.
+    pub fn to_dir(dir: &Path) -> anyhow::Result<Arc<Obs>> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("create obs dir {}: {e}", dir.display()))?;
+        Ok(Arc::new(Obs {
+            registry: Arc::new(Registry::new()),
+            trace: Some(TraceSink::create(dir)?),
+            dir: Some(dir.to_path_buf()),
+            t0: Instant::now(),
+        }))
+    }
+
+    /// Registry only — no trace I/O. Used by the `obs/overhead` bench
+    /// to price the hot-path instrumentation itself.
+    pub fn registry_only() -> Arc<Obs> {
+        Arc::new(Obs {
+            registry: Arc::new(Registry::new()),
+            trace: None,
+            dir: None,
+            t0: Instant::now(),
+        })
+    }
+
+    /// The trace sink, when this observer records one.
+    pub fn trace(&self) -> Option<&TraceSink> {
+        self.trace.as_ref()
+    }
+
+    /// Wall-clock microseconds since this observer was created (the
+    /// trace time base for live runs).
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// Registry snapshot as JSON (exposed for tests and `finish`).
+    pub fn snapshot(&self) -> Json {
+        self.registry.snapshot()
+    }
+
+    /// Flush everything: write `metrics.json` and export the Chrome
+    /// trace next to the JSONL stream. No-op without a directory.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let Some(dir) = &self.dir else {
+            return Ok(());
+        };
+        if let Some(sink) = &self.trace {
+            sink.finish()?;
+        }
+        let path = dir.join(METRICS_JSON);
+        std::fs::write(&path, self.snapshot().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Fast-path switch: a single relaxed load answers "is anyone
+/// watching?" before any instrumentation work happens.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: Mutex<Option<Arc<Obs>>> = Mutex::new(None);
+
+/// Install `obs` as the process-wide observer.
+pub fn install(obs: Arc<Obs>) {
+    *GLOBAL.lock().unwrap_or_else(|e| e.into_inner()) = Some(obs);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Remove and return the process-wide observer (if any).
+pub fn uninstall() -> Option<Arc<Obs>> {
+    ENABLED.store(false, Ordering::Release);
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner()).take()
+}
+
+/// Is a process-wide observer installed? One relaxed atomic load —
+/// this is the entire cost of instrumentation when observability is
+/// off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The process-wide observer, if installed.
+pub fn active() -> Option<Arc<Obs>> {
+    if !enabled() {
+        return None;
+    }
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_only_finish_is_noop() {
+        let obs = Obs::registry_only();
+        obs.registry.counter("x").inc();
+        obs.finish().unwrap(); // no dir: nothing written, no error
+        assert!(obs.trace().is_none());
+    }
+
+    #[test]
+    fn to_dir_writes_metrics_and_trace() {
+        let dir = std::env::temp_dir().join(format!("dybw-obs-mod-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let obs = Obs::to_dir(&dir).unwrap();
+        obs.registry.counter("events").add(3);
+        obs.trace().unwrap().complete("worker-0", "compute", 0, 10, &[]);
+        obs.finish().unwrap();
+        let metrics = Json::parse(&std::fs::read_to_string(dir.join(METRICS_JSON)).unwrap()).unwrap();
+        assert_eq!(metrics.path("counters.events").and_then(Json::as_f64), Some(3.0));
+        let chrome =
+            Json::parse(&std::fs::read_to_string(dir.join(trace::TRACE_JSON)).unwrap()).unwrap();
+        assert!(chrome.get("traceEvents").and_then(Json::as_arr).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,446 @@
+//! Process-wide metric registry: counters, gauges, and log-bucketed
+//! histograms cheap enough to live on hot paths.
+//!
+//! Everything here is lock-free after creation: recording is relaxed
+//! atomic arithmetic, and the only lock (the name → instrument map) is
+//! taken once per instrument handle, never per sample. Counters are
+//! sharded across cache-padded slots so concurrent lanes do not bounce
+//! one cache line; shards are merged at scrape time. Histograms are
+//! HDR-style: power-of-2 exponent buckets split into 16 sub-buckets,
+//! which bounds relative quantile error at ~6% with a fixed 1008-slot
+//! table covering the full `u64` range.
+//!
+//! The registry is observational only — it reads clocks and event
+//! counts, never the RNG or model parameters — so recording can never
+//! perturb a run's history (pinned by bit-identity tests).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Counter shards. 8 padded slots is enough to keep the bench pools
+/// (≤ hardware parallelism lanes) from contending measurably.
+const SHARDS: usize = 8;
+
+/// One cache line per shard so two lanes bumping the same counter never
+/// write-share a line.
+#[repr(align(64))]
+struct PaddedU64(AtomicU64);
+
+impl PaddedU64 {
+    fn new() -> Self {
+        PaddedU64(AtomicU64::new(0))
+    }
+}
+
+/// Round-robin shard assignment: each thread gets a stable slot index
+/// the first time it touches any counter.
+fn shard_index() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SLOT: usize = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+    }
+    SLOT.with(|s| *s)
+}
+
+/// Monotone event counter, sharded per thread, merged at scrape.
+pub struct Counter {
+    shards: [PaddedU64; SHARDS],
+}
+
+impl Counter {
+    fn new() -> Self {
+        Counter {
+            shards: std::array::from_fn(|_| PaddedU64::new()),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.shards[shard_index()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Merged total across all shards.
+    pub fn value(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.0.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depths, rates).
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    fn new() -> Self {
+        Gauge {
+            v: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.v.store(v as u64, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d as u64, Ordering::Relaxed);
+    }
+
+    /// Keep the running maximum (high-water marks).
+    #[inline]
+    pub fn max(&self, v: i64) {
+        self.v.fetch_max(v as u64, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.v.load(Ordering::Relaxed) as i64
+    }
+}
+
+/// Sub-bucket resolution: each power-of-2 range splits into
+/// `1 << SUB_BITS` linear sub-buckets.
+const SUB_BITS: u32 = 4;
+const SUB: u64 = 1 << SUB_BITS;
+const SUB_MASK: u64 = SUB - 1;
+/// Max bucket index for `u64::MAX` (exp = 63): `(63 - 4 + 1) * 16 + 15`.
+const BUCKETS: usize = ((64 - SUB_BITS as usize) << SUB_BITS as usize) + SUB as usize;
+
+/// Log-bucketed histogram over `u64` sample values (nanoseconds for
+/// durations). Recording is two relaxed `fetch_add`s plus a
+/// `fetch_max`; quantiles are estimated from bucket lower bounds at
+/// scrape time (≤ 1/16 relative error by construction).
+pub struct Histogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+/// Bucket index for a sample value.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < SUB {
+        v as usize
+    } else {
+        let exp = 63 - v.leading_zeros(); // >= SUB_BITS
+        let shift = exp - SUB_BITS;
+        (((shift as usize + 1) << SUB_BITS) | ((v >> shift) & SUB_MASK) as usize)
+            .min(BUCKETS - 1)
+    }
+}
+
+/// Smallest value that lands in bucket `b` (the quantile estimate).
+fn bucket_lower(b: usize) -> u64 {
+    if b < SUB as usize {
+        b as u64
+    } else {
+        let shift = (b >> SUB_BITS) as u32 - 1;
+        let sub = (b as u64) & SUB_MASK;
+        (SUB | sub) << shift
+    }
+}
+
+impl Histogram {
+    fn new() -> Self {
+        // `AtomicU64` is not Copy; build the boxed array in place.
+        let buckets: Box<[AtomicU64; BUCKETS]> = (0..BUCKETS)
+            .map(|_| AtomicU64::new(0))
+            .collect::<Vec<_>>()
+            .try_into()
+            .unwrap_or_else(|_| unreachable!("length fixed at BUCKETS"));
+        Histogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one raw sample.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in seconds (stored as integer nanoseconds).
+    /// Rejects NaN and negative values — telemetry must never panic a
+    /// run; a nonsense clock reading is dropped, not recorded.
+    #[inline]
+    pub fn record_secs(&self, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        // Saturate rather than wrap for absurdly long durations.
+        let ns = (secs * 1e9).min(u64::MAX as f64) as u64;
+        self.record(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max_value(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Estimated q-quantile (q in [0, 1]) from bucket lower bounds.
+    /// Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, slot) in self.buckets.iter().enumerate() {
+            seen += slot.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_lower(b);
+            }
+        }
+        self.max_value()
+    }
+
+    /// Summary snapshot as deterministic JSON.
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        let count = self.count();
+        o.set("count", Json::from(count));
+        o.set("sum_ns", Json::from(self.sum()));
+        if count > 0 {
+            o.set("mean_ns", Json::from(self.sum() as f64 / count as f64));
+            o.set("p50_ns", Json::from(self.quantile(0.50)));
+            o.set("p95_ns", Json::from(self.quantile(0.95)));
+            o.set("p99_ns", Json::from(self.quantile(0.99)));
+            o.set("max_ns", Json::from(self.max_value()));
+        }
+        o
+    }
+}
+
+/// Name → instrument maps. Handles are `Arc`s so hot paths resolve a
+/// name once and record lock-free forever after.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Get or create the named counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        match m.get(name) {
+            Some(c) => c.clone(),
+            None => {
+                let c = Arc::new(Counter::new());
+                m.insert(name.to_string(), c.clone());
+                c
+            }
+        }
+    }
+
+    /// Get or create the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+        match m.get(name) {
+            Some(g) => g.clone(),
+            None => {
+                let g = Arc::new(Gauge::new());
+                m.insert(name.to_string(), g.clone());
+                g
+            }
+        }
+    }
+
+    /// Get or create the named histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.hists.lock().unwrap_or_else(|e| e.into_inner());
+        match m.get(name) {
+            Some(h) => h.clone(),
+            None => {
+                let h = Arc::new(Histogram::new());
+                m.insert(name.to_string(), h.clone());
+                h
+            }
+        }
+    }
+
+    /// Full snapshot: `{"counters": {...}, "gauges": {...},
+    /// "histograms": {...}}`, deterministically ordered (BTreeMap).
+    pub fn snapshot(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, c) in self.counters.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            counters.set(name, Json::from(c.value()));
+        }
+        let mut gauges = Json::obj();
+        for (name, g) in self.gauges.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            gauges.set(name, Json::from(g.value() as f64));
+        }
+        let mut hists = Json::obj();
+        for (name, h) in self.hists.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            hists.set(name, h.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("counters", counters);
+        o.set("gauges", gauges);
+        o.set("histograms", hists);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sharded_totals_exact() {
+        // N threads hammer one counter; the merged total is exact.
+        let reg = Registry::new();
+        let c = reg.counter("hits");
+        let threads = 8;
+        let per = 50_000u64;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..per {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.value(), threads * per);
+        // the registry hands back the same instrument
+        assert_eq!(reg.counter("hits").value(), threads * per);
+    }
+
+    #[test]
+    fn histogram_concurrent_totals_exact() {
+        let reg = Registry::new();
+        let h = reg.histogram("lat");
+        let threads = 8u64;
+        let per = 20_000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        h.record(t * per + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), threads * per);
+        let expect_sum: u64 = (0..threads * per).sum();
+        assert_eq!(h.sum(), expect_sum);
+        assert_eq!(h.max_value(), threads * per - 1);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // exact below SUB; every value maps into a bucket whose lower
+        // bound is <= v and within 1/16 relative error above.
+        for v in 0..SUB {
+            assert_eq!(bucket_of(v), v as usize);
+            assert_eq!(bucket_lower(bucket_of(v)), v);
+        }
+        for &v in &[
+            SUB,
+            SUB + 1,
+            255,
+            256,
+            257,
+            1 << 20,
+            (1 << 20) + 12_345,
+            u64::MAX / 2,
+            u64::MAX,
+        ] {
+            let b = bucket_of(v);
+            assert!(b < BUCKETS, "bucket {b} out of range for {v}");
+            let lo = bucket_lower(b);
+            assert!(lo <= v, "lower bound {lo} above sample {v}");
+            // next bucket starts above v
+            if b + 1 < BUCKETS {
+                assert!(bucket_lower(b + 1) > v, "value {v} misfiled in bucket {b}");
+            }
+        }
+        // zero lands in bucket 0 with lower bound 0
+        let h = Histogram::new();
+        h.record(0);
+        assert_eq!(h.quantile(0.5), 0);
+        // u64::MAX saturates into the last bucket without panicking
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn histogram_rejects_nan_and_negative() {
+        let h = Histogram::new();
+        h.record_secs(f64::NAN);
+        h.record_secs(-1.0);
+        h.record_secs(f64::NEG_INFINITY);
+        h.record_secs(f64::INFINITY);
+        assert_eq!(h.count(), 0, "invalid durations must be dropped");
+        h.record_secs(0.5);
+        assert_eq!(h.count(), 1);
+        assert!(h.sum() >= 499_000_000 && h.sum() <= 501_000_000);
+    }
+
+    #[test]
+    fn quantiles_land_near_true_values() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        for &(q, expect) in &[(0.5, 5_000.0), (0.95, 9_500.0), (0.99, 9_900.0)] {
+            let got = h.quantile(q) as f64;
+            let rel = (got - expect).abs() / expect;
+            assert!(rel < 0.08, "q{q}: got {got}, want ~{expect} (rel {rel:.3})");
+        }
+    }
+
+    #[test]
+    fn snapshot_deterministic_and_complete() {
+        let reg = Registry::new();
+        reg.counter("b").add(2);
+        reg.counter("a").add(1);
+        reg.gauge("depth").set(7);
+        reg.histogram("lat").record(1_000);
+        let a = reg.snapshot().to_string();
+        let b = reg.snapshot().to_string();
+        assert_eq!(a, b);
+        assert!(a.find("\"a\"").unwrap() < a.find("\"b\"").unwrap(), "sorted keys");
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(parsed.path("counters.a").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(parsed.path("gauges.depth").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(
+            parsed.path("histograms.lat.count").and_then(Json::as_f64),
+            Some(1.0)
+        );
+    }
+}

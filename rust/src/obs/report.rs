@@ -1,0 +1,298 @@
+//! `dybw obs report` — the straggler decomposition table.
+//!
+//! Reads a recorded obs directory (`trace.jsonl` + `metrics.json`) and
+//! prints, per track (worker), the p50/p95/p99 of the paper's three
+//! phases — wait, compute, mix — the worker's share of total wait time,
+//! and the realised backup counts `b_i(k)` against the policy's chosen
+//! allowance. This is the observable the whole DBW argument rests on:
+//! the wait term is what dynamic backup workers exist to shrink.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Default)]
+struct TrackStats {
+    wait_us: Vec<f64>,
+    compute_us: Vec<f64>,
+    mix_us: Vec<f64>,
+    b: Vec<f64>,
+    b_chosen: Vec<f64>,
+}
+
+impl TrackStats {
+    fn samples(&self) -> usize {
+        self.wait_us
+            .len()
+            .max(self.compute_us.len())
+            .max(self.mix_us.len())
+    }
+}
+
+/// Exact quantile of an unsorted sample set (sorts a copy).
+fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let idx = ((q * (v.len() - 1) as f64).round() as usize).min(v.len() - 1);
+    v[idx]
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+fn fmt_ms(us: f64) -> String {
+    format!("{:.2}", us / 1e3)
+}
+
+fn p_cell(xs: &[f64]) -> String {
+    if xs.is_empty() {
+        return "-".into();
+    }
+    format!(
+        "{}/{}/{}",
+        fmt_ms(quantile(xs, 0.50)),
+        fmt_ms(quantile(xs, 0.95)),
+        fmt_ms(quantile(xs, 0.99))
+    )
+}
+
+/// Build the report text for a recorded obs directory.
+pub fn report(dir: &Path, top_k: usize) -> anyhow::Result<String> {
+    let jsonl = dir.join(super::trace::TRACE_JSONL);
+    let mut tracks: BTreeMap<String, TrackStats> = BTreeMap::new();
+    if jsonl.exists() {
+        let f = File::open(&jsonl)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", jsonl.display()))?;
+        for (lineno, line) in BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            if line.is_empty() {
+                continue;
+            }
+            let ev = Json::parse(&line).map_err(|e| {
+                anyhow::anyhow!("{}:{}: bad trace line: {e:?}", jsonl.display(), lineno + 1)
+            })?;
+            let (Some(track), Some(name)) = (
+                ev.get("cat").and_then(Json::as_str),
+                ev.get("name").and_then(Json::as_str),
+            ) else {
+                continue;
+            };
+            let dur = ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
+            let st = tracks.entry(track.to_string()).or_default();
+            match name {
+                "wait" => st.wait_us.push(dur),
+                "compute" => st.compute_us.push(dur),
+                "mix" => {
+                    st.mix_us.push(dur);
+                    if let Some(b) = ev.path("args.b").and_then(Json::as_f64) {
+                        st.b.push(b);
+                    }
+                    if let Some(bc) = ev.path("args.b_chosen").and_then(Json::as_f64) {
+                        st.b_chosen.push(bc);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("obs report: {}\n", dir.display()));
+
+    let decomposed: Vec<(&String, &TrackStats)> = tracks
+        .iter()
+        .filter(|(_, st)| st.samples() > 0)
+        .collect();
+    if decomposed.is_empty() {
+        out.push_str("no phase events recorded (was the run traced with --obs-dir?)\n");
+    } else {
+        let name_w = decomposed
+            .iter()
+            .map(|(t, _)| t.len())
+            .max()
+            .unwrap()
+            .max("track".len());
+        let total_wait: f64 = decomposed.iter().map(|(_, st)| st.wait_us.iter().sum::<f64>()).sum();
+        out.push_str("\nper-track phase decomposition (p50/p95/p99, ms):\n");
+        out.push_str(&format!(
+            "{:<name_w$}  {:>5}  {:>20}  {:>20}  {:>20}  {:>6}  {:>11}\n",
+            "track", "n", "wait", "compute", "mix", "wait%", "b mean/max"
+        ));
+        for (track, st) in &decomposed {
+            let wait_sum: f64 = st.wait_us.iter().sum();
+            let share = if total_wait > 0.0 {
+                100.0 * wait_sum / total_wait
+            } else {
+                0.0
+            };
+            let b_cell = if st.b.is_empty() {
+                "-".into()
+            } else {
+                format!(
+                    "{:.2}/{:.0}",
+                    mean(&st.b),
+                    st.b.iter().cloned().fold(0.0, f64::max)
+                )
+            };
+            out.push_str(&format!(
+                "{:<name_w$}  {:>5}  {:>20}  {:>20}  {:>20}  {:>5.1}%  {:>11}\n",
+                track,
+                st.samples(),
+                p_cell(&st.wait_us),
+                p_cell(&st.compute_us),
+                p_cell(&st.mix_us),
+                share,
+                b_cell
+            ));
+        }
+
+        // top-k stragglers: the tracks the cluster waits on the least —
+        // i.e. the SLOW workers, which show up as everyone else's wait.
+        // A worker's own wait being small means it finished late; rank
+        // by (high compute, low wait share).
+        let mut by_compute: Vec<(&String, f64, f64)> = decomposed
+            .iter()
+            .map(|(t, st)| {
+                let c: f64 = st.compute_us.iter().sum();
+                let w: f64 = st.wait_us.iter().sum();
+                (*t, c, w)
+            })
+            .collect();
+        by_compute.sort_by(|a, b| f64::total_cmp(&b.1, &a.1));
+        out.push_str(&format!("\ntop-{top_k} stragglers (by total compute time):\n"));
+        for (t, c, w) in by_compute.iter().take(top_k) {
+            out.push_str(&format!(
+                "  {:<name_w$}  compute {:>10.2}ms  own-wait {:>10.2}ms\n",
+                t,
+                c / 1e3,
+                w / 1e3
+            ));
+        }
+
+        let all_b: Vec<f64> = decomposed.iter().flat_map(|(_, st)| st.b.iter().cloned()).collect();
+        let all_bc: Vec<f64> = decomposed
+            .iter()
+            .flat_map(|(_, st)| st.b_chosen.iter().cloned())
+            .collect();
+        if !all_b.is_empty() {
+            out.push_str(&format!(
+                "\nrealised backup counts b_i(k): mean {:.3}  p95 {:.0}  max {:.0}  (n={})\n",
+                mean(&all_b),
+                quantile(&all_b, 0.95),
+                all_b.iter().cloned().fold(0.0, f64::max),
+                all_b.len()
+            ));
+            if !all_bc.is_empty() {
+                out.push_str(&format!(
+                    "policy's chosen allowance b*: mean {:.3}  (realised/chosen = {:.2})\n",
+                    mean(&all_bc),
+                    if mean(&all_bc) > 0.0 {
+                        mean(&all_b) / mean(&all_bc)
+                    } else {
+                        0.0
+                    }
+                ));
+            }
+        }
+    }
+
+    // registry snapshot summary, when present
+    let metrics = dir.join(super::METRICS_JSON);
+    if metrics.exists() {
+        let j = Json::parse(
+            &std::fs::read_to_string(&metrics)
+                .map_err(|e| anyhow::anyhow!("read {}: {e}", metrics.display()))?,
+        )
+        .map_err(|e| anyhow::anyhow!("{}: bad JSON: {e:?}", metrics.display()))?;
+        out.push_str("\nregistry snapshot (metrics.json):\n");
+        for section in ["counters", "gauges"] {
+            if let Some(Json::Obj(m)) = j.get(section) {
+                for (k, v) in m {
+                    if let Some(n) = v.as_f64() {
+                        out.push_str(&format!("  {k:<32} {n}\n"));
+                    }
+                }
+            }
+        }
+        if let Some(Json::Obj(m)) = j.get("histograms") {
+            for (k, v) in m {
+                let count = v.get("count").and_then(Json::as_f64).unwrap_or(0.0);
+                if count == 0.0 {
+                    continue;
+                }
+                let ms = |f: &str| v.get(f).and_then(Json::as_f64).unwrap_or(0.0) / 1e6;
+                out.push_str(&format!(
+                    "  {k:<32} n={count}  p50 {:.3}ms  p95 {:.3}ms  p99 {:.3}ms  max {:.3}ms\n",
+                    ms("p50_ns"),
+                    ms("p95_ns"),
+                    ms("p99_ns"),
+                    ms("max_ns"),
+                ));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceSink;
+
+    #[test]
+    fn report_decomposes_per_worker() {
+        let dir = std::env::temp_dir().join(format!("dybw-obs-report-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let sink = TraceSink::create(&dir).unwrap();
+        for k in 1..=20u64 {
+            for w in 0..3u64 {
+                let base = k * 1000;
+                sink.complete(&format!("dybw/worker-{w}"), "compute", base, 400 + w * 100, &[]);
+                sink.complete(&format!("dybw/worker-{w}"), "wait", base + 500, 300 - w * 100, &[]);
+                sink.complete(
+                    &format!("dybw/worker-{w}"),
+                    "mix",
+                    base + 900,
+                    0,
+                    &[("k", k as f64), ("b", w as f64), ("b_chosen", 2.0)],
+                );
+            }
+        }
+        sink.finish().unwrap();
+        let text = report(&dir, 2).unwrap();
+        for w in 0..3 {
+            assert!(text.contains(&format!("dybw/worker-{w}")), "missing worker {w}:\n{text}");
+        }
+        assert!(text.contains("wait"), "{text}");
+        assert!(text.contains("realised backup counts"), "{text}");
+        assert!(text.contains("chosen allowance"), "{text}");
+        assert!(text.contains("top-2 stragglers"), "{text}");
+        // worker-2 has the longest compute => ranked first straggler
+        let straggler_section = text.split("stragglers").nth(1).unwrap();
+        let first = straggler_section.lines().nth(1).unwrap();
+        assert!(first.contains("worker-2"), "expected worker-2 first: {first}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn report_on_empty_dir_is_graceful() {
+        let dir = std::env::temp_dir().join(format!("dybw-obs-report-empty-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = report(&dir, 5).unwrap();
+        assert!(text.contains("no phase events recorded"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,154 @@
+//! Lightweight phase spans: RAII guards that time a phase of work and
+//! record it into the registry (histogram per phase) and, when a trace
+//! sink is attached, as one Chrome event on the current thread's track.
+//!
+//! Tracks are thread-local (`set_track("worker-3")`); spans nest via a
+//! thread-local depth counter, so `DYBW_LOG=trace` renders an indented
+//! open/close mirror of the span stack without any trace file.
+
+use std::cell::{Cell, RefCell};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::Obs;
+
+/// The phases of one training iteration, as the paper decomposes them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting on the `n_i − b_i` fastest neighbours (the term DBW shrinks).
+    Wait,
+    /// Local gradient computation.
+    Compute,
+    /// Consensus mixing (eq. 6).
+    Mix,
+    /// Wire time: sends, receives, heartbeats.
+    Comms,
+    /// Test-loss evaluation.
+    Eval,
+    /// Checkpointing.
+    Ckpt,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Wait => "wait",
+            Phase::Compute => "compute",
+            Phase::Mix => "mix",
+            Phase::Comms => "comms",
+            Phase::Eval => "eval",
+            Phase::Ckpt => "ckpt",
+        }
+    }
+}
+
+thread_local! {
+    static TRACK: RefCell<Arc<str>> = RefCell::new(Arc::from(""));
+    static DEPTH: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Name this thread's trace track (e.g. `worker-3`, `lane-0`,
+/// `leader`). Spans opened on this thread land on that track.
+pub fn set_track(name: &str) {
+    TRACK.with(|t| *t.borrow_mut() = Arc::from(name));
+}
+
+fn track() -> Arc<str> {
+    TRACK.with(|t| t.borrow().clone())
+}
+
+/// An open phase span; recording happens on drop.
+pub struct Span {
+    obs: Arc<Obs>,
+    phase: Phase,
+    start: Instant,
+    start_us: u64,
+    track: Arc<str>,
+}
+
+/// Open a span against the process-wide observer. Returns `None` (one
+/// relaxed load, no allocation) when no observer is installed.
+#[inline]
+pub fn enter(phase: Phase) -> Option<Span> {
+    if !super::enabled() {
+        return None;
+    }
+    super::active().map(|obs| enter_with(&obs, phase))
+}
+
+/// Open a span against an explicit observer.
+pub fn enter_with(obs: &Arc<Obs>, phase: Phase) -> Span {
+    let track = track();
+    let depth = DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v + 1);
+        v
+    });
+    crate::trace_!("obs", "{:indent$}open {} [{}]", "", phase.name(), track, indent = depth * 2);
+    Span {
+        obs: obs.clone(),
+        phase,
+        start: Instant::now(),
+        start_us: obs.now_us(),
+        track,
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let secs = self.start.elapsed().as_secs_f64();
+        let depth = DEPTH.with(|d| {
+            let v = d.get().saturating_sub(1);
+            d.set(v);
+            v
+        });
+        crate::trace_!(
+            "obs",
+            "{:indent$}close {} [{}] {:.3}ms",
+            "",
+            self.phase.name(),
+            self.track,
+            secs * 1e3,
+            indent = depth * 2
+        );
+        self.obs
+            .registry
+            .histogram(&format!("span/{}_secs", self.phase.name()))
+            .record_secs(secs);
+        if let Some(sink) = self.obs.trace() {
+            let dur_us = (secs * 1e6) as u64;
+            sink.complete(&self.track, self.phase.name(), self.start_us, dur_us, &[]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn span_records_into_registry_histogram() {
+        let obs = Obs::registry_only();
+        set_track("worker-0");
+        {
+            let _outer = enter_with(&obs, Phase::Compute);
+            let _inner = enter_with(&obs, Phase::Mix); // nests cleanly
+        }
+        let snap = obs.snapshot();
+        for h in ["span/compute_secs", "span/mix_secs"] {
+            let hist = snap.get("histograms").and_then(|v| v.get(h)).unwrap();
+            assert_eq!(hist.get("count").and_then(Json::as_f64), Some(1.0), "{h}");
+        }
+        DEPTH.with(|d| assert_eq!(d.get(), 0, "span stack unwinds to empty"));
+    }
+
+    #[test]
+    fn enter_without_observer_is_none() {
+        // (another test may have installed a global observer; this only
+        // checks the disabled fast path when nothing is installed)
+        if !super::super::enabled() {
+            assert!(enter(Phase::Wait).is_none());
+        }
+    }
+}

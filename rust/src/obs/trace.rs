@@ -1,0 +1,235 @@
+//! Streamed trace sink: one JSONL event per line while the run is
+//! live, exported as a Chrome `trace_event` file (loadable in
+//! about://tracing or Perfetto) at shutdown.
+//!
+//! Every line is itself a complete Chrome event object — "X" (complete)
+//! events with microsecond `ts`/`dur`, one `tid` per track (worker,
+//! lane, leader…) — so `trace.json` is just the lines joined inside
+//! `{"traceEvents": [...]}` plus thread-name metadata. Timestamps come
+//! from the wall clock for live runs and from the DES virtual clock for
+//! simulated runs; either way they are *read-only* observations, so the
+//! sink can never perturb the run it is recording.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Streaming JSONL file name inside the obs dir.
+pub const TRACE_JSONL: &str = "trace.jsonl";
+/// Chrome `trace_event` export file name inside the obs dir.
+pub const TRACE_JSON: &str = "trace.json";
+
+struct Inner {
+    w: BufWriter<File>,
+    /// Track name → Chrome tid, in first-seen order.
+    tids: HashMap<String, u64>,
+    /// (tid, name) pairs in assignment order, for metadata export.
+    names: Vec<(u64, String)>,
+}
+
+/// Append-only trace event writer. All methods take `&self`; the file
+/// is behind one mutex (trace volume is per-iteration, not per-sample,
+/// so contention is negligible and the sink stays `Sync`).
+pub struct TraceSink {
+    inner: Mutex<Inner>,
+    path: PathBuf,
+}
+
+impl TraceSink {
+    /// Create (truncate) `dir/trace.jsonl`.
+    pub fn create(dir: &Path) -> anyhow::Result<TraceSink> {
+        let path = dir.join(TRACE_JSONL);
+        let f = File::create(&path)
+            .map_err(|e| anyhow::anyhow!("create {}: {e}", path.display()))?;
+        Ok(TraceSink {
+            inner: Mutex::new(Inner {
+                w: BufWriter::new(f),
+                tids: HashMap::new(),
+                names: Vec::new(),
+            }),
+            path,
+        })
+    }
+
+    /// Emit one complete ("X") event on `track`. `ts_us`/`dur_us` are
+    /// microseconds; `args` become the Chrome `args` object.
+    pub fn complete(&self, track: &str, name: &str, ts_us: u64, dur_us: u64, args: &[(&str, f64)]) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let next = inner.tids.len() as u64;
+        let tid = match inner.tids.get(track) {
+            Some(&t) => t,
+            None => {
+                inner.tids.insert(track.to_string(), next);
+                inner.names.push((next, track.to_string()));
+                next
+            }
+        };
+        let mut ev = Json::obj();
+        ev.set("name", Json::from(name));
+        // `cat` carries the track name on every line so JSONL consumers
+        // (`dybw obs report`) can group without the tid metadata table.
+        ev.set("cat", Json::from(track));
+        ev.set("ph", Json::from("X"));
+        ev.set("ts", Json::from(ts_us));
+        ev.set("dur", Json::from(dur_us));
+        ev.set("pid", Json::from(0u64));
+        ev.set("tid", Json::from(tid));
+        if !args.is_empty() {
+            let mut a = Json::obj();
+            for (k, v) in args {
+                a.set(k, Json::from(*v));
+            }
+            ev.set("args", a);
+        }
+        // Telemetry IO failures must never abort the run they observe.
+        let line = ev.to_string();
+        let _ = inner.w.write_all(line.as_bytes());
+        let _ = inner.w.write_all(b"\n");
+    }
+
+    /// Emit an instant ("i") event — a point in time with no duration
+    /// (worker down, reconnect, rejoin…).
+    pub fn instant(&self, track: &str, name: &str, ts_us: u64) {
+        self.complete(track, name, ts_us, 0, &[]);
+    }
+
+    /// Flush the JSONL stream and write the Chrome `trace_event` export
+    /// next to it: thread-name metadata events followed by every
+    /// streamed line, wrapped in `{"traceEvents": [...]}`.
+    pub fn finish(&self) -> anyhow::Result<PathBuf> {
+        let (names, jsonl_path) = {
+            let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            inner.w.flush()?;
+            (inner.names.clone(), self.path.clone())
+        };
+        let out_path = jsonl_path.with_file_name(TRACE_JSON);
+        let out = File::create(&out_path)
+            .map_err(|e| anyhow::anyhow!("create {}: {e}", out_path.display()))?;
+        let mut w = BufWriter::new(out);
+        w.write_all(b"{\"traceEvents\":[")?;
+        let mut first = true;
+        for (tid, track) in &names {
+            let mut md = Json::obj();
+            md.set("name", Json::from("thread_name"));
+            md.set("ph", Json::from("M"));
+            md.set("pid", Json::from(0u64));
+            md.set("tid", Json::from(*tid));
+            let mut a = Json::obj();
+            a.set("name", Json::from(track.as_str()));
+            md.set("args", a);
+            if !first {
+                w.write_all(b",")?;
+            }
+            first = false;
+            w.write_all(md.to_string().as_bytes())?;
+        }
+        let f = File::open(&jsonl_path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", jsonl_path.display()))?;
+        for line in BufReader::new(f).lines() {
+            let line = line?;
+            if line.is_empty() {
+                continue;
+            }
+            if !first {
+                w.write_all(b",")?;
+            }
+            first = false;
+            w.write_all(line.as_bytes())?;
+        }
+        w.write_all(b"]}")?;
+        w.flush()?;
+        Ok(out_path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dybw-obs-trace-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_chrome_export_is_valid() {
+        let dir = tmpdir("basic");
+        let sink = TraceSink::create(&dir).unwrap();
+        sink.complete("worker-0", "compute", 10, 90, &[("k", 1.0)]);
+        sink.complete("worker-1", "wait", 100, 25, &[]);
+        sink.instant("leader", "reconnect", 130);
+        let out = sink.finish().unwrap();
+
+        let jsonl = std::fs::read_to_string(dir.join(TRACE_JSONL)).unwrap();
+        for line in jsonl.lines() {
+            let ev = Json::parse(line).expect("every JSONL line parses");
+            assert!(ev.get("name").is_some() && ev.get("ts").is_some());
+        }
+        assert_eq!(jsonl.lines().count(), 3);
+
+        let chrome = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let events = chrome.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 3 thread_name metadata events + 3 recorded events
+        assert_eq!(events.len(), 6);
+        let md: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .collect();
+        assert_eq!(md.len(), 3);
+        assert!(md.iter().any(|e| {
+            e.path("args.name").and_then(Json::as_str) == Some("worker-0")
+        }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_names_json_escaped() {
+        // Hostile track/arg names must escape cleanly (quotes,
+        // backslashes, control characters).
+        let dir = tmpdir("escape");
+        let sink = TraceSink::create(&dir).unwrap();
+        let evil = "worker \"7\"\\rack\nA\tend";
+        sink.complete(evil, "compute", 0, 5, &[]);
+        let out = sink.finish().unwrap();
+
+        let jsonl = std::fs::read_to_string(dir.join(TRACE_JSONL)).unwrap();
+        for line in jsonl.lines() {
+            Json::parse(line).expect("escaped line parses");
+        }
+        let chrome = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let events = chrome.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let roundtrip = events
+            .iter()
+            .find_map(|e| {
+                (e.get("ph").and_then(Json::as_str) == Some("M"))
+                    .then(|| e.path("args.name").and_then(Json::as_str))
+                    .flatten()
+            })
+            .unwrap();
+        assert_eq!(roundtrip, evil, "track name survives escaping round-trip");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stable_tids_per_track() {
+        let dir = tmpdir("tids");
+        let sink = TraceSink::create(&dir).unwrap();
+        sink.complete("a", "x", 0, 1, &[]);
+        sink.complete("b", "x", 1, 1, &[]);
+        sink.complete("a", "y", 2, 1, &[]);
+        sink.finish().unwrap();
+        let jsonl = std::fs::read_to_string(dir.join(TRACE_JSONL)).unwrap();
+        let tids: Vec<f64> = jsonl
+            .lines()
+            .map(|l| Json::parse(l).unwrap().get("tid").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(tids, vec![0.0, 1.0, 0.0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -387,6 +387,11 @@ impl From<i64> for Json {
         Json::Num(v as f64)
     }
 }
+impl From<u64> for Json {
+    fn from(v: u64) -> Self {
+        Json::Num(v as f64)
+    }
+}
 impl From<bool> for Json {
     fn from(v: bool) -> Self {
         Json::Bool(v)

@@ -1,53 +1,91 @@
 //! Minimal leveled logger (env-controlled, thread-safe).
 //!
-//! `DYBW_LOG=debug|info|warn|error` (default `info`). Timestamps are
-//! millis since process start — enough to correlate worker events in live
-//! mode without pulling in a clock formatting dependency.
+//! `DYBW_LOG=trace|debug|info|warn|error` (default `info`). Timestamps
+//! are millis since process start — enough to correlate worker events in
+//! live mode without pulling in a clock formatting dependency. `trace`
+//! additionally mirrors obs span open/close events (see [`crate::obs`])
+//! for quick console debugging without a trace file.
+//!
+//! Initialisation is lazy: the first `log`/`enabled` call parses the
+//! environment if [`init`] was never called, so library users get
+//! correct levels without a mandatory setup step. An unrecognised
+//! `DYBW_LOG` value warns once and falls back to `info` instead of
+//! being silently swallowed.
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
-    Debug = 0,
-    Info = 1,
-    Warn = 2,
-    Error = 3,
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialised
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static INIT: Once = Once::new();
 
 fn start() -> Instant {
     static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
     *START.get_or_init(Instant::now)
 }
 
-pub fn init() {
-    let lvl = match std::env::var("DYBW_LOG").as_deref() {
-        Ok("debug") => Level::Debug,
-        Ok("warn") => Level::Warn,
-        Ok("error") => Level::Error,
-        _ => Level::Info,
-    };
-    LEVEL.store(lvl as u8, Ordering::Relaxed);
-    start();
+/// Parse a `DYBW_LOG` value. Returns the level plus a warning message
+/// when the value is present but unrecognised (in which case the level
+/// falls back to `info`).
+fn parse_level(v: Option<&str>) -> (Level, Option<String>) {
+    match v {
+        None => (Level::Info, None),
+        Some("trace") => (Level::Trace, None),
+        Some("debug") => (Level::Debug, None),
+        Some("info") => (Level::Info, None),
+        Some("warn") => (Level::Warn, None),
+        Some("error") => (Level::Error, None),
+        Some(bad) => (
+            Level::Info,
+            Some(format!(
+                "unrecognised DYBW_LOG value {bad:?} (valid: trace|debug|info|warn|error); using info"
+            )),
+        ),
+    }
 }
 
+/// Idempotent: parses `DYBW_LOG` exactly once (also runs lazily from
+/// the first `log`/`enabled` call). Warns once on unrecognised values.
+pub fn init() {
+    INIT.call_once(|| {
+        let (lvl, warning) = parse_level(std::env::var("DYBW_LOG").ok().as_deref());
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+        let t = start().elapsed().as_millis();
+        if let Some(msg) = warning {
+            // Written directly (not via `log`) — `Once::call_once` is
+            // not re-entrant.
+            let mut err = std::io::stderr().lock();
+            let _ = writeln!(err, "[{t:>8}ms WARN  log] {msg}");
+        }
+    });
+}
+
+/// Override the level programmatically (tests, CLI flags). Marks the
+/// logger initialised so a later lazy [`init`] cannot clobber it with
+/// the environment value.
 pub fn set_level(l: Level) {
+    INIT.call_once(|| {
+        start();
+    });
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
 #[inline]
 pub fn enabled(l: Level) -> bool {
-    let cur = LEVEL.load(Ordering::Relaxed);
-    let cur = if cur == 255 {
+    if !INIT.is_completed() {
         init();
-        LEVEL.load(Ordering::Relaxed)
-    } else {
-        cur
-    };
-    l as u8 >= cur
+    }
+    l as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 
 pub fn log(l: Level, target: &str, msg: &str) {
@@ -56,6 +94,7 @@ pub fn log(l: Level, target: &str, msg: &str) {
     }
     let t = start().elapsed().as_millis();
     let tag = match l {
+        Level::Trace => "TRACE",
         Level::Debug => "DEBUG",
         Level::Info => "INFO ",
         Level::Warn => "WARN ",
@@ -63,6 +102,15 @@ pub fn log(l: Level, target: &str, msg: &str) {
     };
     let mut err = std::io::stderr().lock();
     let _ = writeln!(err, "[{t:>8}ms {tag} {target}] {msg}");
+}
+
+#[macro_export]
+macro_rules! trace_ {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Trace) {
+            $crate::util::log::log($crate::util::log::Level::Trace, $target, &format!($($arg)*))
+        }
+    };
 }
 
 #[macro_export]
@@ -99,10 +147,41 @@ mod tests {
     #[test]
     fn level_ordering() {
         set_level(Level::Warn);
+        assert!(!enabled(Level::Trace));
         assert!(!enabled(Level::Debug));
         assert!(!enabled(Level::Info));
         assert!(enabled(Level::Warn));
         assert!(enabled(Level::Error));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn parse_recognises_all_levels() {
+        assert_eq!(parse_level(None), (Level::Info, None));
+        assert_eq!(parse_level(Some("trace")), (Level::Trace, None));
+        assert_eq!(parse_level(Some("debug")), (Level::Debug, None));
+        assert_eq!(parse_level(Some("info")), (Level::Info, None));
+        assert_eq!(parse_level(Some("warn")), (Level::Warn, None));
+        assert_eq!(parse_level(Some("error")), (Level::Error, None));
+    }
+
+    #[test]
+    fn parse_warns_on_unrecognised_value() {
+        // the historical bug: DYBW_LOG=inof silently meant info
+        let (lvl, warning) = parse_level(Some("inof"));
+        assert_eq!(lvl, Level::Info, "invalid value still falls back to info");
+        let msg = warning.expect("unrecognised value must produce a warning");
+        assert!(msg.contains("inof") && msg.contains("DYBW_LOG"), "{msg}");
+        // case-sensitive on purpose: "INFO" is not a documented value
+        assert!(parse_level(Some("INFO")).1.is_some());
+    }
+
+    #[test]
+    fn lazy_init_never_leaves_sentinel() {
+        // `enabled` must work without `init()` — no uninitialised
+        // sentinel value can leak into the comparison.
+        assert!(enabled(Level::Error));
+        let raw = LEVEL.load(Ordering::Relaxed);
+        assert!(raw <= Level::Error as u8, "LEVEL holds a real level, got {raw}");
     }
 }

@@ -327,6 +327,77 @@ fn des_build_from_setup_is_policy_fair() {
 }
 
 #[test]
+fn des_scenario_artifacts_identical_with_obs_installed() {
+    // Telemetry byte-identity sentinel: an installed observer may read
+    // clocks but never the RNG or the parameters, so every artifact a
+    // DES scenario exports (per-policy summary JSON + streamed event
+    // log) must be byte-identical to the same-seed run without one —
+    // with and without injected churn/partition faults (the `--chaos`
+    // shape). This test is the only obs::install caller in this binary,
+    // so the process-wide observer needs no cross-test serialisation.
+    use dybw::des::{Scenario, ScenarioFaults};
+
+    let artifacts = |sc: &Scenario, tag: &str, observe: bool| -> (Vec<u8>, Vec<u8>) {
+        let base = std::env::temp_dir().join(format!(
+            "dybw_obs_ident_{tag}_{}_{}",
+            if observe { "on" } else { "off" },
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&base);
+        let events = base.join("events.log");
+        let obs = observe.then(|| {
+            let o = dybw::obs::Obs::to_dir(&base.join("obs")).unwrap();
+            dybw::obs::install(o.clone());
+            o
+        });
+        let run = sc.run(&base, Some(&events));
+        if let Some(o) = &obs {
+            dybw::obs::uninstall();
+            o.finish().unwrap();
+        }
+        run.unwrap();
+        if observe {
+            // the observer really recorded: DES mix spans on per-policy
+            // worker tracks, and the straggler report reads them back
+            let jsonl =
+                std::fs::read_to_string(base.join("obs").join("trace.jsonl")).unwrap();
+            assert!(
+                jsonl.lines().any(|l| l.contains("dybw/worker-")),
+                "{tag}: no dybw worker tracks in the trace"
+            );
+            let report = dybw::obs::report::report(&base.join("obs"), 3).unwrap();
+            assert!(report.contains("worker"), "{tag}: empty report:\n{report}");
+        }
+        let summary =
+            std::fs::read(base.join(format!("des.{}.summary.json", sc.name))).unwrap();
+        let log = std::fs::read(&events).unwrap();
+        let _ = std::fs::remove_dir_all(&base);
+        (summary, log)
+    };
+
+    let mut clean = Scenario::default();
+    clean.name = "obs-ident".into();
+    clean.workers = 64;
+    clean.iters = 10;
+    let mut chaos = clean.clone();
+    chaos.name = "obs-ident-chaos".into();
+    chaos.faults = ScenarioFaults {
+        initially_down: vec![5],
+        joins: vec![(5, 1.0), (3, 2.5)],
+        leaves: vec![(3, 0.8)],
+        partitions: vec![(0, 1, 0.2, 1.5)],
+        rack_outages: Vec::new(),
+    };
+    for (sc, tag) in [(&clean, "clean"), (&chaos, "chaos")] {
+        let (sum_off, log_off) = artifacts(sc, tag, false);
+        let (sum_on, log_on) = artifacts(sc, tag, true);
+        assert_eq!(sum_off, sum_on, "{tag}: observer changed the summary JSON");
+        assert_eq!(log_off, log_on, "{tag}: observer changed the event log");
+        assert!(!log_off.is_empty(), "{tag}: empty event log");
+    }
+}
+
+#[test]
 fn lr_schedule_matches_paper_form() {
     let cfg = TrainConfig {
         lr0: 0.2,
